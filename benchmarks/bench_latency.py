@@ -1,0 +1,102 @@
+"""Paper Fig. 1 / Fig. 9 / Tables 2-3 (latency columns): end-to-end latency
+and per-stage breakdown of WARP vs the XTR-reference and PLAID-style
+baselines, across three dataset tiers.
+
+Stages (paper Fig. 4): query encoding | candidate generation (WARP_SELECT)
+| decompression (implicit, selective-sum) | scoring (two-stage reduction).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, get_setup, time_fn
+from repro.core import WarpSearchConfig, plaid_style_search, search, xtr_reference
+from repro.core.engine import gather_candidates, resolve_config
+from repro.core.reduction import two_stage_reduce
+from repro.core.warpselect import warp_select
+from repro.kernels import ops
+from repro.models.encoder import EncoderConfig, TokenEncoder
+
+_ENC = EncoderConfig(n_layers=4, d_model=256, n_heads=4, d_ff=512, vocab=32128)
+
+
+def _stage_fns(index, config):
+    config = resolve_config(index, config)
+
+    @jax.jit
+    def stage_select(q, qmask):
+        return warp_select(
+            q, index.centroids, index.cluster_sizes,
+            nprobe=config.nprobe, t_prime=config.t_prime,
+            k_impute=config.k_impute, qmask=qmask,
+        )
+
+    @jax.jit
+    def stage_decompress(q, probe_scores, probe_cids):
+        packed, doc_ids, valid = gather_candidates(index, probe_cids)
+        qm, p, cap = packed.shape[0], config.nprobe, index.cap
+        v = q[:, :, None] * index.bucket_weights[None, None, :]
+        scores = ops.selective_sum(
+            packed.reshape(qm, p * cap, -1), v,
+            nbits=index.nbits, dim=index.dim, use_kernel=False,
+        ).reshape(qm, p, cap) + probe_scores[..., None]
+        return scores, doc_ids, valid
+
+    @functools.partial(jax.jit, static_argnames=())
+    def stage_reduce(scores, doc_ids, valid, mse, qmask):
+        qm, p, cap = scores.shape
+        valid = valid & qmask[:, None, None]
+        qtok = jnp.broadcast_to(
+            jnp.arange(qm, dtype=jnp.int32)[:, None, None], (qm, p, cap)
+        )
+        return two_stage_reduce(
+            doc_ids.reshape(-1), qtok.reshape(-1), scores.reshape(-1),
+            valid.reshape(-1), mse, q_max=qm, k=config.k,
+        )
+
+    return stage_select, stage_decompress, stage_reduce
+
+
+def run() -> None:
+    enc_params = TokenEncoder.init(jax.random.PRNGKey(0), _ENC)
+    enc = jax.jit(lambda t, m: TokenEncoder.encode(enc_params, _ENC, t, m))
+    tok = jnp.zeros((1, 32), jnp.int32)
+    tok_mask = jnp.ones((1, 32), bool)
+    t_enc = time_fn(enc, tok, tok_mask)
+
+    for tier in ("nfcorpus_like", "lifestyle_like", "pooled_like"):
+        corpus, index, q, qmask, rel = get_setup(tier)
+        cfg = WarpSearchConfig(nprobe=32, k=100, t_prime=2000, k_impute=64)
+        q0, m0 = jnp.asarray(q[0]), jnp.asarray(qmask[0])
+
+        # --- stage breakdown (Fig. 9) ---
+        s_sel, s_dec, s_red = _stage_fns(index, cfg)
+        sel = s_sel(q0, m0)
+        t_sel = time_fn(s_sel, q0, m0)
+        dec = s_dec(q0, sel.probe_scores, sel.probe_cids)
+        t_dec = time_fn(s_dec, q0, sel.probe_scores, sel.probe_cids)
+        t_red = time_fn(s_red, dec[0], dec[1], dec[2], sel.mse, m0)
+        emit(f"latency/{tier}/query_encoding", t_enc, "stage")
+        emit(f"latency/{tier}/candidate_generation", t_sel, "stage=warpselect")
+        emit(f"latency/{tier}/decompression", t_dec, "stage=implicit")
+        emit(f"latency/{tier}/scoring", t_red, "stage=two_stage_reduce")
+
+        # --- end-to-end engines (Fig. 1 / Tables 2-3) ---
+        f_warp = lambda: search(index, q0, m0, cfg)
+        t_warp = time_fn(lambda: f_warp())
+        f_plaid = lambda: plaid_style_search(index, q0, m0, cfg)
+        t_plaid = time_fn(lambda: f_plaid())
+        emb = jnp.asarray(corpus.emb)
+        tdi = jnp.asarray(corpus.token_doc_ids)
+        kp = min(corpus.n_tokens, 4000)
+        f_xtr = lambda: xtr_reference(q0, m0, emb, tdi, k_prime=kp, k=100)
+        t_xtr = time_fn(lambda: f_xtr())
+        emit(f"latency/{tier}/warp_e2e", t_enc + t_warp, "retrieval_only=%.1f" % (t_warp * 1e6))
+        emit(f"latency/{tier}/plaid_style_e2e", t_enc + t_plaid,
+             f"speedup_vs_warp={t_plaid / t_warp:.2f}x")
+        emit(f"latency/{tier}/xtr_reference_e2e", t_enc + t_xtr,
+             f"speedup_warp_over_xtr={t_xtr / t_warp:.2f}x")

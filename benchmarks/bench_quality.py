@@ -1,0 +1,71 @@
+"""Paper Figs. 6-7 + Tables 2-3 (quality): retrieval quality vs
+hyperparameters, measured as nRecall@k against the exact-MaxSim oracle
+(real qrels are unavailable offline; the oracle plays 'gold', exactly the
+normalization role the paper's nRecall uses)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, get_setup, time_fn
+from repro.core import WarpSearchConfig, maxsim_bruteforce, search
+
+
+def _recall_at(k: int, got: np.ndarray, gold: np.ndarray, gold_k: int = 10) -> float:
+    """Fraction of the oracle's top-``gold_k`` found in our top-k (the
+    paper's nRecall role: did the engine keep the truly-best docs)."""
+    return len(set(got[:k].tolist()) & set(gold[:gold_k].tolist())) / gold_k
+
+
+def _gold(corpus, q, qmask, k):
+    emb = corpus.emb / np.linalg.norm(corpus.emb, axis=-1, keepdims=True)
+    out = maxsim_bruteforce(
+        jnp.asarray(q), jnp.asarray(qmask), jnp.asarray(emb),
+        jnp.asarray(corpus.token_doc_ids), n_docs=corpus.n_docs, k=k,
+    )
+    return np.asarray(out.doc_ids)
+
+
+def run() -> None:
+    # ---- Fig. 6: nRecall@100 vs t' x nprobe ----
+    corpus, index, q, qmask, rel = get_setup("lifestyle_like")
+    n_q = 8
+    golds = [_gold(corpus, q[i], qmask[i], 100) for i in range(n_q)]
+    best = {}
+    for nprobe in (1, 2, 4, 8, 16, 32, 64):
+        for tp in (200, 1000, 4000):
+            cfg = WarpSearchConfig(nprobe=nprobe, k=100, t_prime=tp, k_impute=128)
+            rec = float(np.mean([
+                _recall_at(100, np.asarray(search(index, q[i], jnp.asarray(qmask[i]), cfg).doc_ids), golds[i])
+                for i in range(n_q)
+            ]))
+            best[(nprobe, tp)] = rec
+            emit(f"quality/nrecall100/nprobe={nprobe}/tprime={tp}", 0.0, f"recall={rec:.4f}")
+    # Consistency with Fig. 6: recall should rise with nprobe then saturate.
+    m1 = max(v for (np_, _), v in best.items() if np_ == 1)
+    m16 = max(v for (np_, _), v in best.items() if np_ == 16)
+    m64 = max(v for (np_, _), v in best.items() if np_ == 64)
+    emit("quality/fig6_monotonicity", 0.0,
+         f"nprobe1={m1:.3f}<nprobe16={m16:.3f}<=nprobe64={m64:.3f}")
+
+    # ---- Fig. 7: nRecall@k vs b ----
+    for nbits in (2, 4, 8):
+        _, index_b, *_ = get_setup("lifestyle_like", nbits=nbits)
+        for k in (10, 100):
+            cfg = WarpSearchConfig(nprobe=32, k=100, t_prime=2000, k_impute=128)
+            goldk = [_gold(corpus, q[i], qmask[i], k) for i in range(n_q)]
+            rec = float(np.mean([
+                _recall_at(k, np.asarray(search(index_b, q[i], jnp.asarray(qmask[i]), cfg).doc_ids), goldk[i])
+                for i in range(n_q)
+            ]))
+            emit(f"quality/nrecall{k}/b={nbits}", 0.0, f"recall={rec:.4f}")
+
+    # ---- Tables 2-3 shape: success@5 of the relevant doc, engines agree ----
+    cfg = WarpSearchConfig(nprobe=32, k=100, t_prime=2000, k_impute=128)
+    hits = sum(
+        int(rel[i] in np.asarray(search(index, q[i], jnp.asarray(qmask[i]), cfg).doc_ids)[:5])
+        for i in range(n_q)
+    )
+    gold_hits = sum(int(rel[i] in golds[i][:5]) for i in range(n_q))
+    emit("quality/success5", 0.0, f"warp={hits}/{n_q};gold={gold_hits}/{n_q}")

@@ -1,0 +1,46 @@
+"""§Roofline deliverable: render the roofline table from the dry-run
+artifacts (experiments/dryrun/<mesh>/*.json). Requires the dry-run to have
+been executed (PYTHONPATH=src python -m repro.launch.dryrun --all)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_records(mesh: str) -> list[dict]:
+    d = os.path.join(ART_DIR, mesh)
+    if not os.path.isdir(d):
+        return []
+    out = []
+    for name in sorted(os.listdir(d)):
+        if name.endswith(".json"):
+            with open(os.path.join(d, name)) as f:
+                out.append(json.load(f))
+    return out
+
+
+def run() -> None:
+    for mesh in ("single", "multi"):
+        records = load_records(mesh)
+        ok = [r for r in records if r.get("ok")]
+        bad = [r for r in records if not r.get("ok")]
+        emit(f"roofline/{mesh}/cells_ok", 0.0, f"{len(ok)}/{len(records)}")
+        for r in bad:
+            emit(f"roofline/{mesh}/FAILED/{r['arch']}/{r['shape']}", 0.0,
+                 r.get("error", "?")[:80])
+        for r in ok:
+            t = r["roofline"]
+            emit(
+                f"roofline/{mesh}/{r['arch']}/{r['shape']}",
+                t["step_lower_bound_s"],
+                f"bottleneck={t['bottleneck']};compute_ms={t['compute_s']*1e3:.3f};"
+                f"memory_ms={t['memory_s']*1e3:.3f};collective_ms={t['collective_s']*1e3:.3f};"
+                f"mfu_at_bound={t.get('model_mfu_at_bound', 0):.4f};"
+                f"useful_flops={r.get('useful_flops_ratio', 0):.3f};"
+                f"mem_gib_per_dev={r['memory']['total_per_device']/2**30:.1f}",
+            )

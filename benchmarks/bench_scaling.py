@@ -1,0 +1,62 @@
+"""Paper Fig. 8: (a) end-to-end latency vs dataset size — WARP's latency
+should scale ~ sqrt(N) because n_centroids ∝ sqrt(N); (b) latency vs
+n_probe. The paper's 8b is thread-count scaling; on TPU the analogue axes
+are the mesh (dry-run) and the query batch (bench here)."""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import (
+    IndexBuildConfig,
+    WarpSearchConfig,
+    build_index,
+    search,
+    search_batch,
+)
+from repro.data import make_corpus, make_queries
+
+
+def run() -> None:
+    # ---- (a) latency vs dataset size ----
+    sizes = [200, 500, 1200, 3000]
+    lats, toks = [], []
+    for n_docs in sizes:
+        corpus = make_corpus(n_docs, mean_doc_len=20, seed=0)
+        c = max(16, 1 << int(math.ceil(math.log2(4 * math.sqrt(corpus.n_tokens)))))
+        index = build_index(
+            corpus.emb, corpus.token_doc_ids, corpus.n_docs,
+            IndexBuildConfig(n_centroids=c, nbits=4, kmeans_iters=3),
+        )
+        q, qmask, _ = make_queries(corpus, n_queries=2, seed=1)
+        cfg = WarpSearchConfig(nprobe=16, k=50, t_prime=1000, k_impute=64)
+        q0, m0 = jnp.asarray(q[0]), jnp.asarray(qmask[0])
+        t = time_fn(lambda: search(index, q0, m0, cfg))
+        lats.append(t)
+        toks.append(corpus.n_tokens)
+        emit(f"scaling/dataset/n_tokens={corpus.n_tokens}", t, f"n_centroids={c}")
+    # log-log slope: sqrt scaling -> ~0.5 (sublinear < 1.0 is the claim)
+    slope = np.polyfit(np.log(toks), np.log(lats), 1)[0]
+    emit("scaling/dataset/loglog_slope", 0.0, f"slope={slope:.3f};sublinear={slope < 1.0}")
+
+    # ---- (b) latency vs nprobe + query-batch throughput ----
+    corpus = make_corpus(1200, mean_doc_len=20, seed=0)
+    index = build_index(
+        corpus.emb, corpus.token_doc_ids, corpus.n_docs,
+        IndexBuildConfig(n_centroids=128, nbits=4, kmeans_iters=3),
+    )
+    q, qmask, _ = make_queries(corpus, n_queries=8, seed=1)
+    q0, m0 = jnp.asarray(q[0]), jnp.asarray(qmask[0])
+    for nprobe in (8, 16, 32, 64):
+        cfg = WarpSearchConfig(nprobe=nprobe, k=50, t_prime=1000, k_impute=64)
+        t = time_fn(lambda: search(index, q0, m0, cfg))
+        emit(f"scaling/nprobe={nprobe}", t, "")
+    for b in (1, 4, 8):
+        cfg = WarpSearchConfig(nprobe=16, k=50, t_prime=1000, k_impute=64)
+        qb, mb = jnp.asarray(q[:b]), jnp.asarray(qmask[:b])
+        t = time_fn(lambda: search_batch(index, qb, mb, cfg))
+        emit(f"scaling/batch={b}", t, f"per_query_us={t / b * 1e6:.1f}")

@@ -1,0 +1,65 @@
+"""Shared benchmark utilities: timing, corpora, CSV emission.
+
+Wall-clock here is single-core CPU — meaningful only for *relative*
+comparisons between our own implementations (paper-shaped breakdowns);
+the TPU performance story lives in the dry-run roofline artifacts.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import IndexBuildConfig, build_index
+from repro.data import make_corpus, make_queries
+
+__all__ = ["time_fn", "emit", "get_setup", "SETUPS"]
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5, **kwargs) -> float:
+    """Median wall time (seconds) of a jit'd callable, post-warmup."""
+    for _ in range(warmup):
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+# Synthetic stand-ins for the paper's dataset tiers (CPU-feasible sizes;
+# names keep the paper's dataset identity for table alignment).
+SETUPS = {
+    "nfcorpus_like": dict(n_docs=250, mean_doc_len=16, n_centroids=64),
+    "lifestyle_like": dict(n_docs=800, mean_doc_len=20, n_centroids=128),
+    "pooled_like": dict(n_docs=2000, mean_doc_len=24, n_centroids=256),
+}
+
+_CACHE: dict = {}
+
+
+def get_setup(name: str, nbits: int = 4):
+    key = (name, nbits)
+    if key in _CACHE:
+        return _CACHE[key]
+    cfg = SETUPS[name]
+    corpus = make_corpus(cfg["n_docs"], mean_doc_len=cfg["mean_doc_len"], seed=0)
+    index = build_index(
+        corpus.emb,
+        corpus.token_doc_ids,
+        corpus.n_docs,
+        IndexBuildConfig(n_centroids=cfg["n_centroids"], nbits=nbits, kmeans_iters=4),
+    )
+    q, qmask, rel = make_queries(corpus, n_queries=16, seed=1)
+    _CACHE[key] = (corpus, index, q, qmask, rel)
+    return _CACHE[key]

@@ -1,0 +1,38 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only latency,quality,...]
+
+Prints ``name,us_per_call,derived`` CSV lines. Wall-clock numbers are
+single-core CPU (relative comparisons only); TPU roofline numbers come
+from bench_roofline over the dry-run artifacts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+SUITES = ["index_size", "quality", "latency", "scaling", "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated suite names")
+    args = ap.parse_args()
+    wanted = args.only.split(",") if args.only else SUITES
+
+    print("name,us_per_call,derived")
+    for name in wanted:
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+        t0 = time.perf_counter()
+        try:
+            mod.run()
+        except Exception as e:  # noqa: BLE001
+            print(f"bench/{name}/ERROR,0.0,{type(e).__name__}: {e}", flush=True)
+            raise
+        print(f"bench/{name}/wall,{(time.perf_counter() - t0) * 1e6:.0f},suite_total",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""End-to-end training driver: train a small token encoder with the XTR
+in-batch objective for a few hundred steps, with checkpoint/auto-resume,
+then build a WARP index from the trained encoder and verify retrieval
+improves over the untrained encoder.
+
+  PYTHONPATH=src python examples/train_encoder.py [--steps 200]
+"""
+
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import IndexBuildConfig, WarpSearchConfig, build_index, search
+from repro.models.encoder import EncoderConfig, TokenEncoder
+from repro.train import AdamWConfig, train_loop
+
+CFG = EncoderConfig(n_layers=2, d_model=64, n_heads=4, d_ff=128, vocab=512, out_dim=32)
+DOC_LEN, Q_LEN, BATCH = 12, 6, 16
+
+
+def xtr_inbatch_loss(params, batch):
+    """XTR training objective: in-batch cross-entropy over sum-of-MaxSim
+    scores between each query and every document in the batch."""
+    q_emb = TokenEncoder.encode(params, CFG, batch["q_tok"], batch["q_mask"])
+    d_emb = TokenEncoder.encode(params, CFG, batch["d_tok"], batch["d_mask"])
+    # scores[i, j] = sum_t max_s <q_emb[i, t], d_emb[j, s]>
+    sim = jnp.einsum("iqd,jsd->ijqs", q_emb, d_emb)
+    sim = jnp.where(batch["d_mask"][None, :, None, :] > 0, sim, -1e30)
+    maxsim = jnp.max(sim, axis=-1)  # [B, B, Q]
+    scores = jnp.sum(maxsim * batch["q_mask"][:, None, :], axis=-1)  # [B, B]
+    labels = jnp.arange(scores.shape[0])
+    logp = jax.nn.log_softmax(scores, axis=-1)
+    loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+    return loss, {"xtr_ce": loss}
+
+
+def make_batch(step: int):
+    rng = np.random.default_rng(step)
+    d_tok = rng.integers(0, CFG.vocab, (BATCH, DOC_LEN))
+    # queries are noisy sub-sequences of their positive document
+    starts = rng.integers(0, DOC_LEN - Q_LEN, BATCH)
+    q_tok = np.stack([d_tok[i, s : s + Q_LEN] for i, s in enumerate(starts)])
+    flip = rng.random((BATCH, Q_LEN)) < 0.1
+    q_tok = np.where(flip, rng.integers(0, CFG.vocab, (BATCH, Q_LEN)), q_tok)
+    return {
+        "q_tok": jnp.asarray(q_tok),
+        "q_mask": jnp.ones((BATCH, Q_LEN), jnp.float32),
+        "d_tok": jnp.asarray(d_tok),
+        "d_mask": jnp.ones((BATCH, DOC_LEN), jnp.float32),
+    }
+
+
+def retrieval_success(params, n_docs=64, k=5, seed=123) -> float:
+    rng = np.random.default_rng(seed)
+    d_tok = rng.integers(0, CFG.vocab, (n_docs, DOC_LEN))
+    d_emb = TokenEncoder.encode(
+        params, CFG, jnp.asarray(d_tok), jnp.ones((n_docs, DOC_LEN), jnp.float32)
+    )
+    emb = np.asarray(d_emb).reshape(-1, CFG.out_dim)
+    ids = np.repeat(np.arange(n_docs, dtype=np.int32), DOC_LEN)
+    index = build_index(emb, ids, n_docs, IndexBuildConfig(n_centroids=16, kmeans_iters=3))
+    hits = 0
+    for i in range(16):
+        q_tok = d_tok[i, 2 : 2 + Q_LEN]
+        q_emb = TokenEncoder.encode(
+            params, CFG, jnp.asarray(q_tok)[None], jnp.ones((1, Q_LEN), jnp.float32)
+        )[0]
+        res = search(index, q_emb, jnp.ones((Q_LEN,), bool), WarpSearchConfig(nprobe=8, k=k))
+        hits += int(i in np.asarray(res.doc_ids))
+    return hits / 16
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    init = lambda: TokenEncoder.init(jax.random.PRNGKey(0), CFG)
+    base_succ = retrieval_success(init())
+    print(f"untrained encoder success@5: {base_succ:.2f}")
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        state, hist = train_loop(
+            init_params_fn=init,
+            loss_fn=xtr_inbatch_loss,
+            batch_iter=make_batch,
+            opt_cfg=AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=args.steps),
+            n_steps=args.steps,
+            ckpt_dir=ckpt_dir,
+            ckpt_every=50,
+            log_every=25,
+        )
+    trained_succ = retrieval_success(state.params)
+    print(f"trained encoder success@5: {trained_succ:.2f} (loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f})")
+    assert trained_succ >= base_succ, "training should not hurt retrieval"
+
+
+if __name__ == "__main__":
+    main()

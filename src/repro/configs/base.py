@@ -1,0 +1,32 @@
+"""ArchDef: one selectable architecture (--arch <id>) + its shape cells."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+__all__ = ["ArchDef", "ShapeCell"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    """One (architecture x input-shape) dry-run cell."""
+
+    name: str
+    kind: str  # train | prefill | decode | serve | retrieval
+    meta: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchDef:
+    name: str
+    family: Any  # family class from configs.families
+    config: Any  # full-scale model config (public-literature dims)
+    reduced: Any  # small config for CPU smoke tests
+    shapes: tuple[str, ...]
+    source: str = ""  # citation tag from the assignment
+    train_microbatches: int = 1
+    notes: str = ""
+
+    def cell(self, shape_name: str) -> ShapeCell:
+        return self.family.shape_cell(self, shape_name)

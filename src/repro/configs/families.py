@@ -1,0 +1,557 @@
+"""Family runners: per-family implementations of the uniform cell protocol.
+
+Every family class provides (static methods, ``arch`` is an ArchDef):
+  shape_cell(arch, shape)        -> ShapeCell metadata
+  abstract_state(arch, shape)    -> ShapeDtypeStruct pytree (params/TrainState)
+  input_specs(arch, shape)       -> dict[str, ShapeDtypeStruct]
+  step_fn(arch, shape)           -> f(state, batch) (jit-able, lowerable)
+  state_pspec(arch, shape, mesh) -> PartitionSpec tree for the state
+  input_pspec(arch, shape, mesh) -> PartitionSpec tree for the batch
+  smoke(arch, shape, key)        -> run the reduced config for real on CPU;
+                                    returns dict of output arrays (asserted
+                                    finite/shaped by tests)
+
+The dry-run lowers  jit(step, in_shardings=...) .lower(state, batch)
+.compile()  for every (arch x shape x mesh) — params never materialize.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchDef, ShapeCell
+from repro.launch import sharding as shd
+from repro.launch.mesh import data_axes
+from repro.models.gnn import GIN, GINConfig
+from repro.models.recsys import (
+    DIN,
+    DINConfig,
+    SASRec,
+    SASRecConfig,
+    TwoTower,
+    TwoTowerConfig,
+    XDeepFM,
+    XDeepFMConfig,
+)
+from repro.models.transformer import KVCache, TransformerConfig, TransformerLM
+from repro.train.loop import TrainState, make_train_step
+from repro.train.optimizer import AdamWConfig
+
+_OPT = AdamWConfig()
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _abstract(fn):
+    return jax.eval_shape(fn)
+
+
+def _state_pspec_from_params(pspec_params):
+    return TrainState(
+        params=pspec_params,
+        opt={"m": pspec_params, "v": pspec_params, "step": P()},
+        error_fb=None,
+    )
+
+
+# ======================================================================= LM
+@dataclasses.dataclass(frozen=True)
+class LMShape:
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+LM_SHAPES = {
+    "train_4k": LMShape(4096, 256, "train"),
+    "prefill_32k": LMShape(32768, 32, "prefill"),
+    "decode_32k": LMShape(32768, 128, "decode"),
+    "long_500k": LMShape(524288, 1, "decode"),
+}
+
+# Reduced geometry used by smoke tests (same kind, tiny sizes).
+LM_SHAPES_REDUCED = {
+    "train_4k": LMShape(64, 4, "train"),
+    "prefill_32k": LMShape(128, 2, "prefill"),
+    "decode_32k": LMShape(128, 4, "decode"),
+    "long_500k": LMShape(256, 1, "decode"),
+}
+
+
+class LMFamily:
+    name = "lm"
+
+    @staticmethod
+    def shape_cell(arch: ArchDef, shape: str) -> ShapeCell:
+        s = LM_SHAPES[shape]
+        return ShapeCell(shape, s.kind, dataclasses.asdict(s))
+
+    # ----- state -----
+    @staticmethod
+    def abstract_state(arch: ArchDef, shape: str, *, reduced: bool = False):
+        cfg: TransformerConfig = arch.reduced if reduced else arch.config
+        s = (LM_SHAPES_REDUCED if reduced else LM_SHAPES)[shape]
+        params = _abstract(lambda: TransformerLM.init(jax.random.PRNGKey(0), cfg))
+        if s.kind == "train":
+            return _abstract(lambda: TrainState.create(
+                TransformerLM.init(jax.random.PRNGKey(0), cfg)))
+        # Serving state: bf16 params.
+        return jax.tree.map(lambda l: _sds(l.shape, jnp.bfloat16), params)
+
+    # ----- inputs -----
+    @staticmethod
+    def input_specs(arch: ArchDef, shape: str, *, reduced: bool = False):
+        cfg: TransformerConfig = arch.reduced if reduced else arch.config
+        s = (LM_SHAPES_REDUCED if reduced else LM_SHAPES)[shape]
+        b, sl = s.global_batch, s.seq_len
+        if s.kind == "train":
+            return {
+                "tokens": _sds((b, sl), jnp.int32),
+                "labels": _sds((b, sl), jnp.int32),
+            }
+        if s.kind == "prefill":
+            cache = _abstract(lambda: KVCache.empty(cfg, b, sl))
+            return {"tokens": _sds((b, sl), jnp.int32), "cache": cache}
+        # decode: one new token against a cache of length seq_len
+        cache = _abstract(lambda: KVCache.empty(cfg, b, sl))
+        return {"tokens": _sds((b,), jnp.int32), "cache": cache}
+
+    # ----- step -----
+    @staticmethod
+    def step_fn(arch: ArchDef, shape: str, *, reduced: bool = False):
+        cfg: TransformerConfig = arch.reduced if reduced else arch.config
+        s = (LM_SHAPES_REDUCED if reduced else LM_SHAPES)[shape]
+        if s.kind == "train":
+            loss_fn = lambda p, b: TransformerLM.loss(p, cfg, b["tokens"], b["labels"])
+            return make_train_step(
+                loss_fn, _OPT, microbatches=arch.train_microbatches
+            )
+        if s.kind == "prefill":
+            def prefill_step(params, batch):
+                return TransformerLM.prefill(params, cfg, batch["tokens"], batch["cache"])
+            return prefill_step
+
+        def decode_step(params, batch):
+            return TransformerLM.decode_step(params, cfg, batch["tokens"], batch["cache"])
+        return decode_step
+
+    # ----- shardings -----
+    @staticmethod
+    def state_pspec(arch: ArchDef, shape: str, mesh):
+        s = LM_SHAPES[shape]
+        params_abs = _abstract(lambda: TransformerLM.init(jax.random.PRNGKey(0), arch.config))
+        pp = shd.lm_param_pspec(
+            params_abs,
+            mesh,
+            embed_shard=getattr(arch.config, "embed_shard", "d"),
+            moe_weight_mode=getattr(arch.config, "moe_weight_mode", "fsdp"),
+        )
+        if s.kind == "train":
+            state = _state_pspec_from_params(pp)
+            if getattr(arch.config, "moe_weight_mode", "fsdp") == "tp_only":
+                opt_pp = shd.zero1_opt_pspec(pp, params_abs, mesh)
+                state = TrainState(
+                    params=pp,
+                    opt={"m": opt_pp, "v": opt_pp, "step": P()},
+                    error_fb=None,
+                )
+            return state
+        return pp
+
+    @staticmethod
+    def input_pspec(arch: ArchDef, shape: str, mesh):
+        s = LM_SHAPES[shape]
+        fsdp = data_axes(mesh)
+        if s.kind == "train":
+            return {"tokens": P(fsdp, None), "labels": P(fsdp, None)}
+        cache_abs = _abstract(lambda: KVCache.empty(arch.config, s.global_batch, s.seq_len))
+        shard_seq = s.global_batch == 1  # long_500k: sequence-sharded cache
+        cache_ps = shd.kv_cache_pspec(cache_abs, mesh, shard_seq=shard_seq)
+        tok_ps = P(fsdp, None) if s.kind == "prefill" else (P() if shard_seq else P(fsdp))
+        return {"tokens": tok_ps, "cache": cache_ps}
+
+    # ----- smoke -----
+    @staticmethod
+    def smoke(arch: ArchDef, shape: str, key):
+        cfg: TransformerConfig = arch.reduced
+        s = LM_SHAPES_REDUCED[shape]
+        params = TransformerLM.init(key, cfg)
+        b, sl = s.global_batch, s.seq_len
+        tokens = jax.random.randint(key, (b, sl), 0, cfg.vocab)
+        if s.kind == "train":
+            state = TrainState.create(params)
+            step = jax.jit(LMFamily.step_fn(arch, shape, reduced=True))
+            state, metrics = step(state, {"tokens": tokens, "labels": tokens})
+            return {"loss": metrics["loss"]}
+        cache = KVCache.empty(cfg, b, sl, jnp.float32)
+        if s.kind == "prefill":
+            logits, cache = TransformerLM.prefill(params, cfg, tokens, cache)
+            return {"logits": logits}
+        # decode: prefill a short prompt then decode one token
+        logits, cache = TransformerLM.prefill(params, cfg, tokens[:, : sl // 2], cache)
+        step = jax.jit(LMFamily.step_fn(arch, shape, reduced=True))
+        logits, cache = step(params, {"tokens": tokens[:, 0], "cache": cache})
+        return {"logits": logits}
+
+
+# ====================================================================== GNN
+@dataclasses.dataclass(frozen=True)
+class GNNShape:
+    kind: str
+    n_nodes: int
+    n_edges: int
+    d_feat: int
+    n_classes: int
+    n_graphs: int | None = None  # molecule batching
+    batch_nodes: int | None = None  # minibatch seeds
+
+
+# Node/edge counts are the assigned sizes padded UP to multiples of 512 so
+# the leading axis shards evenly on both production meshes (16 and 32-way
+# data axes); validity masks cover the padding (Cora 2708->2816 nodes,
+# 10556->10752 edges; ogbn-products 2449029->2449408 / 61859140->61859840).
+GNN_SHAPES = {
+    "full_graph_sm": GNNShape("train", 2816, 10752, 1433, 7),
+    "minibatch_lg": GNNShape("train", 170240, 169984, 602, 41, batch_nodes=1024),
+    "ogb_products": GNNShape("train", 2449408, 61859840, 100, 47),
+    "molecule": GNNShape("train", 30 * 128, 64 * 128, 16, 2, n_graphs=128),
+}
+
+GNN_SHAPES_REDUCED = {
+    "full_graph_sm": GNNShape("train", 120, 480, 16, 7),
+    "minibatch_lg": GNNShape("train", 512, 960, 16, 8, batch_nodes=32),
+    "ogb_products": GNNShape("train", 256, 1024, 16, 8),
+    "molecule": GNNShape("train", 10 * 8, 16 * 8, 8, 2, n_graphs=8),
+}
+
+
+class GNNFamily:
+    name = "gnn"
+
+    @staticmethod
+    def _cfg_for(arch: ArchDef, s: GNNShape, reduced: bool) -> GINConfig:
+        base: GINConfig = arch.reduced if reduced else arch.config
+        return dataclasses.replace(
+            base,
+            d_feat=s.d_feat,
+            n_classes=s.n_classes,
+            readout="graph" if s.n_graphs else "node",
+        )
+
+    @staticmethod
+    def shape_cell(arch: ArchDef, shape: str) -> ShapeCell:
+        s = GNN_SHAPES[shape]
+        return ShapeCell(shape, s.kind, dataclasses.asdict(s))
+
+    @staticmethod
+    def abstract_state(arch: ArchDef, shape: str, *, reduced: bool = False):
+        s = (GNN_SHAPES_REDUCED if reduced else GNN_SHAPES)[shape]
+        cfg = GNNFamily._cfg_for(arch, s, reduced)
+        return _abstract(
+            lambda: TrainState.create(GIN.init(jax.random.PRNGKey(0), cfg))
+        )
+
+    @staticmethod
+    def input_specs(arch: ArchDef, shape: str, *, reduced: bool = False):
+        s = (GNN_SHAPES_REDUCED if reduced else GNN_SHAPES)[shape]
+        spec = {
+            "x": _sds((s.n_nodes, s.d_feat), jnp.float32),
+            "edge_src": _sds((s.n_edges,), jnp.int32),
+            "edge_dst": _sds((s.n_edges,), jnp.int32),
+            "labels": _sds((s.n_graphs or s.n_nodes,), jnp.int32),
+        }
+        if s.batch_nodes:  # sampled subgraph: padded edges + seed-only labels
+            spec["edge_mask"] = _sds((s.n_edges,), jnp.float32)
+            spec["label_mask"] = _sds((s.n_nodes,), jnp.float32)
+            spec["labels"] = _sds((s.n_nodes,), jnp.int32)
+        if s.n_graphs:
+            spec["graph_ids"] = _sds((s.n_nodes,), jnp.int32)
+        return spec
+
+    @staticmethod
+    def step_fn(arch: ArchDef, shape: str, *, reduced: bool = False):
+        s = (GNN_SHAPES_REDUCED if reduced else GNN_SHAPES)[shape]
+        cfg = GNNFamily._cfg_for(arch, s, reduced)
+        n_graphs = s.n_graphs
+
+        def loss_fn(params, batch):
+            batch = dict(batch)
+            if n_graphs:
+                batch["n_graphs"] = n_graphs
+            return GIN.loss(params, cfg, batch)
+
+        return make_train_step(loss_fn, _OPT)
+
+    @staticmethod
+    def state_pspec(arch: ArchDef, shape: str, mesh):
+        s = GNN_SHAPES[shape]
+        cfg = GNNFamily._cfg_for(arch, s, reduced=False)
+        params_abs = _abstract(lambda: GIN.init(jax.random.PRNGKey(0), cfg))
+        return _state_pspec_from_params(shd.replicated(params_abs))
+
+    @staticmethod
+    def input_pspec(arch: ArchDef, shape: str, mesh):
+        specs = GNNFamily.input_specs(arch, shape)
+        return shd.batch_pspec(specs, mesh)
+
+    @staticmethod
+    def smoke(arch: ArchDef, shape: str, key):
+        s = GNN_SHAPES_REDUCED[shape]
+        cfg = GNNFamily._cfg_for(arch, s, reduced=True)
+        rng = np.random.default_rng(0)
+        batch = {
+            "x": jnp.asarray(rng.standard_normal((s.n_nodes, s.d_feat)), jnp.float32),
+            "edge_src": jnp.asarray(rng.integers(0, s.n_nodes, s.n_edges), jnp.int32),
+            "edge_dst": jnp.asarray(rng.integers(0, s.n_nodes, s.n_edges), jnp.int32),
+            "labels": jnp.asarray(
+                rng.integers(0, s.n_classes, s.n_graphs or s.n_nodes), jnp.int32
+            ),
+        }
+        if s.batch_nodes:
+            batch["edge_mask"] = jnp.ones((s.n_edges,), jnp.float32)
+            lm = np.zeros((s.n_nodes,), np.float32)
+            lm[: s.batch_nodes] = 1.0
+            batch["label_mask"] = jnp.asarray(lm)
+            batch["labels"] = jnp.asarray(rng.integers(0, s.n_classes, s.n_nodes), jnp.int32)
+        if s.n_graphs:
+            batch["graph_ids"] = jnp.asarray(
+                np.repeat(np.arange(s.n_graphs), s.n_nodes // s.n_graphs), jnp.int32
+            )
+        state = TrainState.create(GIN.init(key, cfg))
+        step = jax.jit(GNNFamily.step_fn(arch, shape, reduced=True))
+        state, metrics = step(state, batch)
+        return {"loss": metrics["loss"]}
+
+
+# =================================================================== RecSys
+@dataclasses.dataclass(frozen=True)
+class RecsysShape:
+    kind: str
+    batch: int
+    n_candidates: int | None = None
+
+
+RECSYS_SHAPES = {
+    "train_batch": RecsysShape("train", 65536),
+    "serve_p99": RecsysShape("serve", 512),
+    "serve_bulk": RecsysShape("serve", 262144),
+    "retrieval_cand": RecsysShape("retrieval", 1, n_candidates=1_000_000),
+}
+
+RECSYS_SHAPES_REDUCED = {
+    "train_batch": RecsysShape("train", 64),
+    "serve_p99": RecsysShape("serve", 16),
+    "serve_bulk": RecsysShape("serve", 128),
+    "retrieval_cand": RecsysShape("retrieval", 1, n_candidates=512),
+}
+
+
+class RecsysFamily:
+    name = "recsys"
+
+    @staticmethod
+    def shape_cell(arch: ArchDef, shape: str) -> ShapeCell:
+        s = RECSYS_SHAPES[shape]
+        return ShapeCell(shape, s.kind, dataclasses.asdict(s))
+
+    # -- model-kind dispatch helpers --
+    @staticmethod
+    def _model(cfg):
+        return {
+            TwoTowerConfig: TwoTower,
+            SASRecConfig: SASRec,
+            XDeepFMConfig: XDeepFM,
+            DINConfig: DIN,
+        }[type(cfg)]
+
+    @staticmethod
+    def abstract_state(arch: ArchDef, shape: str, *, reduced: bool = False):
+        cfg = arch.reduced if reduced else arch.config
+        s = (RECSYS_SHAPES_REDUCED if reduced else RECSYS_SHAPES)[shape]
+        model = RecsysFamily._model(cfg)
+        if s.kind == "train":
+            return _abstract(lambda: TrainState.create(model.init(jax.random.PRNGKey(0), cfg)))
+        return _abstract(lambda: model.init(jax.random.PRNGKey(0), cfg))
+
+    @staticmethod
+    def input_specs(arch: ArchDef, shape: str, *, reduced: bool = False):
+        cfg = arch.reduced if reduced else arch.config
+        s = (RECSYS_SHAPES_REDUCED if reduced else RECSYS_SHAPES)[shape]
+        b = s.batch
+        nc = s.n_candidates
+        if isinstance(cfg, TwoTowerConfig):
+            if s.kind == "retrieval":
+                return {
+                    "user_ids": _sds((b, cfg.user_fields), jnp.int32),
+                    "user_mask": _sds((b, cfg.user_fields), jnp.float32),
+                    "cand_emb": _sds((nc, cfg.tower_mlp[-1]), jnp.float32),
+                }
+            out = {
+                "user_ids": _sds((b, cfg.user_fields), jnp.int32),
+                "user_mask": _sds((b, cfg.user_fields), jnp.float32),
+                "item_ids": _sds((b, cfg.item_fields), jnp.int32),
+                "item_mask": _sds((b, cfg.item_fields), jnp.float32),
+            }
+            if s.kind == "train":
+                out["log_q"] = _sds((b,), jnp.float32)
+            return out
+        if isinstance(cfg, SASRecConfig):
+            base = {
+                "seq_ids": _sds((b, cfg.seq_len), jnp.int32),
+                "seq_mask": _sds((b, cfg.seq_len), jnp.float32),
+            }
+            if s.kind == "train":
+                base["pos_ids"] = _sds((b, cfg.seq_len), jnp.int32)
+                base["neg_ids"] = _sds((b, cfg.seq_len), jnp.int32)
+            elif s.kind == "serve":
+                base["target_ids"] = _sds((b,), jnp.int32)
+            else:
+                base["cand_ids"] = _sds((nc,), jnp.int32)
+            return base
+        if isinstance(cfg, XDeepFMConfig):
+            rows = nc if s.kind == "retrieval" else b
+            out = {"field_ids": _sds((rows, cfg.n_fields), jnp.int32)}
+            if s.kind == "train":
+                out["labels"] = _sds((rows,), jnp.float32)
+            return out
+        if isinstance(cfg, DINConfig):
+            if s.kind == "retrieval":
+                return {
+                    "target_ids": _sds((nc,), jnp.int32),
+                    "hist_ids": _sds((1, cfg.seq_len), jnp.int32),
+                    "hist_mask": _sds((1, cfg.seq_len), jnp.float32),
+                }
+            out = {
+                "target_ids": _sds((b,), jnp.int32),
+                "hist_ids": _sds((b, cfg.seq_len), jnp.int32),
+                "hist_mask": _sds((b, cfg.seq_len), jnp.float32),
+            }
+            if s.kind == "train":
+                out["labels"] = _sds((b,), jnp.float32)
+            return out
+        raise TypeError(type(cfg))
+
+    @staticmethod
+    def step_fn(arch: ArchDef, shape: str, *, reduced: bool = False):
+        cfg = arch.reduced if reduced else arch.config
+        s = (RECSYS_SHAPES_REDUCED if reduced else RECSYS_SHAPES)[shape]
+        model = RecsysFamily._model(cfg)
+        if s.kind == "train":
+            return make_train_step(lambda p, b: model.loss(p, cfg, b), _OPT)
+
+        if isinstance(cfg, TwoTowerConfig):
+            if s.kind == "retrieval":
+                def step(params, batch):
+                    return TwoTower.retrieval_scores(
+                        params, cfg, batch["user_ids"], batch["user_mask"], batch["cand_emb"]
+                    )
+                return step
+
+            def step(params, batch):
+                u = TwoTower.user_embed(params, cfg, batch["user_ids"], batch["user_mask"])
+                v = TwoTower.item_embed(params, cfg, batch["item_ids"], batch["item_mask"])
+                return jnp.sum(u * v, axis=-1)
+            return step
+        if isinstance(cfg, SASRecConfig):
+            if s.kind == "retrieval":
+                def step(params, batch):
+                    return SASRec.score_candidates(
+                        params, cfg, batch["seq_ids"], batch["seq_mask"], batch["cand_ids"]
+                    )
+                return step
+
+            def step(params, batch):
+                hid = SASRec.hidden(params, cfg, batch["seq_ids"], batch["seq_mask"])
+                tgt = jnp.take(params["item_table"], batch["target_ids"], axis=0)
+                return jnp.sum(hid[:, -1, :] * tgt, axis=-1)
+            return step
+        if isinstance(cfg, XDeepFMConfig):
+            def step(params, batch):
+                return XDeepFM.logits(params, cfg, batch["field_ids"])
+            return step
+        if isinstance(cfg, DINConfig):
+            def step(params, batch):
+                hist = batch["hist_ids"]
+                mask = batch["hist_mask"]
+                tgt = batch["target_ids"]
+                if s.kind == "retrieval":
+                    hist = jnp.broadcast_to(hist, (tgt.shape[0], hist.shape[1]))
+                    mask = jnp.broadcast_to(mask, (tgt.shape[0], mask.shape[1]))
+                return DIN.logits(params, cfg, tgt, hist, mask)
+            return step
+        raise TypeError(type(cfg))
+
+    @staticmethod
+    def state_pspec(arch: ArchDef, shape: str, mesh):
+        s = RECSYS_SHAPES[shape]
+        model = RecsysFamily._model(arch.config)
+        params_abs = _abstract(lambda: model.init(jax.random.PRNGKey(0), arch.config))
+        pp = shd.recsys_param_pspec(params_abs, mesh)
+        if s.kind == "train":
+            return _state_pspec_from_params(pp)
+        return pp
+
+    @staticmethod
+    def input_pspec(arch: ArchDef, shape: str, mesh):
+        specs = RecsysFamily.input_specs(arch, shape)
+        ps = shd.batch_pspec(specs, mesh)
+        s = RECSYS_SHAPES[shape]
+        if s.kind == "retrieval":
+            fsdp = data_axes(mesh)
+            # The 1M-candidate axis is the parallel axis, not the batch=1 axis.
+            if "cand_emb" in specs:
+                ps["cand_emb"] = P(fsdp, None)
+                ps["user_ids"] = P(None, None)
+                ps["user_mask"] = P(None, None)
+            if "cand_ids" in specs:
+                ps["cand_ids"] = P(fsdp)
+                ps["seq_ids"] = P(None, None)
+                ps["seq_mask"] = P(None, None)
+            if "target_ids" in specs and "hist_ids" in specs:
+                ps["target_ids"] = P(fsdp)
+                ps["hist_ids"] = P(None, None)
+                ps["hist_mask"] = P(None, None)
+            if "field_ids" in specs:
+                ps["field_ids"] = P(fsdp, None)
+        return ps
+
+    @staticmethod
+    def smoke(arch: ArchDef, shape: str, key):
+        cfg = arch.reduced
+        s = RECSYS_SHAPES_REDUCED[shape]
+        specs = RecsysFamily.input_specs(arch, shape, reduced=True)
+        rng = np.random.default_rng(0)
+
+        def realize(name, spec):
+            if spec.dtype == jnp.int32:
+                vocabs = [
+                    getattr(cfg, a)
+                    for a in ("user_vocab", "item_vocab", "vocab")
+                    if hasattr(cfg, a)
+                ]
+                hi = min(vocabs) if vocabs else 8
+                return jnp.asarray(rng.integers(0, hi, spec.shape), jnp.int32)
+            if "mask" in name:
+                return jnp.ones(spec.shape, jnp.float32)
+            if name == "labels":
+                return jnp.asarray(rng.integers(0, 2, spec.shape), jnp.float32)
+            return jnp.asarray(rng.standard_normal(spec.shape), jnp.float32)
+
+        batch = {k: realize(k, v) for k, v in specs.items()}
+        model = RecsysFamily._model(cfg)
+        step = jax.jit(RecsysFamily.step_fn(arch, shape, reduced=True))
+        if s.kind == "train":
+            state = TrainState.create(model.init(key, cfg))
+            state, metrics = step(state, batch)
+            return {"loss": metrics["loss"]}
+        params = model.init(key, cfg)
+        out = step(params, batch)
+        return {"scores": out}

@@ -1,0 +1,18 @@
+"""gin-tu [arXiv:1810.00826; paper]: GIN, 5 layers, d_hidden=64,
+sum aggregator, learnable eps. Input dim / classes are per-shape
+(Cora / Reddit-sampled / ogbn-products / molecule batches)."""
+from repro.configs.base import ArchDef
+from repro.configs.families import GNNFamily
+from repro.models.gnn import GINConfig
+
+CONFIG = GINConfig(n_layers=5, d_hidden=64, learnable_eps=True)
+REDUCED = GINConfig(n_layers=2, d_hidden=16, learnable_eps=True)
+
+def get_def() -> ArchDef:
+    return ArchDef(
+        name="gin-tu", family=GNNFamily, config=CONFIG, reduced=REDUCED,
+        shapes=("full_graph_sm", "minibatch_lg", "ogb_products", "molecule"),
+        source="arXiv:1810.00826; paper",
+        notes="WARP technique inapplicable (no embedding retrieval); shares "
+              "segment-reduce substrate. See DESIGN §Arch-applicability.",
+    )

@@ -1,0 +1,22 @@
+"""qwen2-0.5b [arXiv:2407.10671; hf]: 24L d896 14H (GQA kv=2) d_ff=4864
+vocab=151936, QKV bias, tied embeddings."""
+from repro.configs.base import ArchDef
+from repro.configs.families import LMFamily
+from repro.models.transformer import TransformerConfig
+
+CONFIG = TransformerConfig(
+    n_layers=24, d_model=896, n_heads=14, n_kv_heads=2, d_ff=4864,
+    vocab=151936, head_dim=64, qkv_bias=True, tie_embeddings=True,
+    rope_theta=1e6, remat=True,
+)
+REDUCED = TransformerConfig(
+    n_layers=2, d_model=56, n_heads=7, n_kv_heads=1, d_ff=128, vocab=256,
+    head_dim=8, qkv_bias=True, tie_embeddings=True, compute_dtype="float32",
+)
+
+def get_def() -> ArchDef:
+    return ArchDef(
+        name="qwen2-0.5b", family=LMFamily, config=CONFIG, reduced=REDUCED,
+        shapes=("train_4k", "prefill_32k", "decode_32k", "long_500k"),
+        source="arXiv:2407.10671; hf",
+    )

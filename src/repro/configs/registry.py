@@ -1,0 +1,57 @@
+"""--arch <id> registry: all assigned architectures + the paper's engine."""
+
+from __future__ import annotations
+
+from repro.configs import (
+    din,
+    dbrx_132b,
+    gin_tu,
+    mixtral_8x7b,
+    qwen2_0_5b,
+    qwen3_4b,
+    sasrec,
+    two_tower_retrieval,
+    warp_xtr,
+    xdeepfm,
+    yi_6b,
+)
+from repro.configs.base import ArchDef
+
+_MODULES = [
+    mixtral_8x7b,
+    dbrx_132b,
+    qwen2_0_5b,
+    yi_6b,
+    qwen3_4b,
+    gin_tu,
+    two_tower_retrieval,
+    sasrec,
+    xdeepfm,
+    din,
+    warp_xtr,
+]
+
+ARCHS: dict[str, ArchDef] = {m.get_def().name: m.get_def() for m in _MODULES}
+
+# The 40 assigned cells exclude warp-xtr (which adds 3 more of its own).
+ASSIGNED = [n for n in ARCHS if n != "warp-xtr"]
+
+
+def get_arch(name: str) -> ArchDef:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def list_archs() -> list[str]:
+    return sorted(ARCHS)
+
+
+def all_cells(include_warp: bool = True) -> list[tuple[str, str]]:
+    out = []
+    for name, arch in ARCHS.items():
+        if not include_warp and name == "warp-xtr":
+            continue
+        for s in arch.shapes:
+            out.append((name, s))
+    return out

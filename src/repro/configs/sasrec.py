@@ -1,0 +1,17 @@
+"""sasrec [arXiv:1808.09781; paper]: embed_dim=50, 2 blocks, 1 head,
+seq_len=50, self-attentive sequential recommendation."""
+from repro.configs.base import ArchDef
+from repro.configs.families import RecsysFamily
+from repro.models.recsys import SASRecConfig
+
+CONFIG = SASRecConfig(embed_dim=50, n_blocks=2, n_heads=1, seq_len=50,
+                      item_vocab=500_000)
+REDUCED = SASRecConfig(embed_dim=16, n_blocks=2, n_heads=1, seq_len=16,
+                       item_vocab=1000)
+
+def get_def() -> ArchDef:
+    return ArchDef(
+        name="sasrec", family=RecsysFamily, config=CONFIG, reduced=REDUCED,
+        shapes=("train_batch", "serve_p99", "serve_bulk", "retrieval_cand"),
+        source="arXiv:1808.09781; paper",
+    )

@@ -1,0 +1,23 @@
+"""two-tower-retrieval [RecSys'19 (YouTube); unverified]: embed_dim=256,
+tower MLP 1024-512-256, dot interaction, sampled softmax w/ logQ."""
+from repro.configs.base import ArchDef
+from repro.configs.families import RecsysFamily
+from repro.models.recsys import TwoTowerConfig
+
+CONFIG = TwoTowerConfig(
+    embed_dim=256, tower_mlp=(1024, 512, 256),
+    user_vocab=5_000_000, item_vocab=2_000_000,
+)
+REDUCED = TwoTowerConfig(
+    embed_dim=32, tower_mlp=(64, 32), user_vocab=1000, item_vocab=1000,
+)
+
+def get_def() -> ArchDef:
+    return ArchDef(
+        name="two-tower-retrieval", family=RecsysFamily, config=CONFIG,
+        reduced=REDUCED,
+        shapes=("train_batch", "serve_p99", "serve_bulk", "retrieval_cand"),
+        source="RecSys'19 (YouTube); unverified",
+        notes="retrieval_cand is the WARP integration point "
+              "(examples/serve_retrieval.py serves it through a WARP index).",
+    )

@@ -1,0 +1,186 @@
+"""WARP engine as a dry-run arch ("warp-xtr"): the paper's own workload at
+LoTTE scale, document-sharded over the data (and pod) mesh axes.
+
+Unlike the assigned architectures, the step here is a shard_map program
+(distributed IVF search), so the family builds the callable against a mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchDef, ShapeCell
+from repro.core.distributed import ShardedWarpIndex, make_sharded_search_fn
+from repro.core.types import WarpSearchConfig
+from repro.launch.mesh import data_axes
+
+
+@dataclasses.dataclass(frozen=True)
+class WarpArchConfig:
+    dim: int = 128
+    nbits: int = 4
+    query_maxlen: int = 32
+    nprobe: int = 32
+    k: int = 100
+    k_impute: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class WarpShape:
+    kind: str
+    n_tokens: int
+    n_docs: int
+    n_centroids: int
+    cap: int
+    batch: int  # concurrent queries
+
+
+WARP_SHAPES = {
+    # LoTTE Lifestyle test: 23.71M tokens (paper Table 4).
+    "search_lifestyle": WarpShape("serve", 23_710_000, 119_461, 1 << 17, 1024, 1),
+    # LoTTE Pooled test: 660.04M tokens, 2.8M passages.
+    "search_pooled": WarpShape("serve", 660_040_000, 2_819_103, 1 << 19, 2048, 1),
+    # Pooled with a batch of 8 concurrent queries (throughput cell).
+    "qps_pooled_b8": WarpShape("serve", 660_040_000, 2_819_103, 1 << 19, 2048, 8),
+}
+
+WARP_SHAPES_REDUCED = {
+    "search_lifestyle": WarpShape("serve", 6000, 300, 64, 128, 1),
+    "search_pooled": WarpShape("serve", 8000, 400, 64, 128, 1),
+    "qps_pooled_b8": WarpShape("serve", 8000, 400, 64, 128, 4),
+}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _n_shards(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in data_axes(mesh)]))
+
+
+def _index_specs(cfg: WarpArchConfig, s: WarpShape, n_shards: int) -> ShardedWarpIndex:
+    c_local = max(1, s.n_centroids // n_shards)
+    n_local = -(-s.n_tokens // n_shards)
+    pb = cfg.dim * cfg.nbits // 8
+    return ShardedWarpIndex(
+        centroids=_sds((n_shards, c_local, cfg.dim), jnp.float32),
+        packed_codes=_sds((n_shards, n_local, pb), jnp.uint8),
+        token_doc_ids=_sds((n_shards, n_local), jnp.int32),
+        cluster_offsets=_sds((n_shards, c_local + 1), jnp.int32),
+        cluster_sizes=_sds((n_shards, c_local), jnp.int32),
+        bucket_weights=_sds((n_shards, 1 << cfg.nbits), jnp.float32),
+        doc_start=_sds((n_shards,), jnp.int32),
+        dim=cfg.dim,
+        nbits=cfg.nbits,
+        cap=s.cap,
+        n_docs=s.n_docs,
+        n_tokens_padded=n_local,
+    )
+
+
+class WarpFamily:
+    name = "warp"
+    needs_mesh = True
+
+    @staticmethod
+    def shape_cell(arch: ArchDef, shape: str) -> ShapeCell:
+        s = WARP_SHAPES[shape]
+        return ShapeCell(shape, s.kind, dataclasses.asdict(s))
+
+    @staticmethod
+    def abstract_state(arch: ArchDef, shape: str, *, reduced: bool = False, mesh=None):
+        cfg: WarpArchConfig = arch.reduced if reduced else arch.config
+        s = (WARP_SHAPES_REDUCED if reduced else WARP_SHAPES)[shape]
+        n_shards = _n_shards(mesh) if mesh is not None else 1
+        return _index_specs(cfg, s, n_shards)
+
+    @staticmethod
+    def input_specs(arch: ArchDef, shape: str, *, reduced: bool = False, mesh=None):
+        cfg: WarpArchConfig = arch.reduced if reduced else arch.config
+        s = (WARP_SHAPES_REDUCED if reduced else WARP_SHAPES)[shape]
+        qm = cfg.query_maxlen
+        if s.batch > 1:
+            return {
+                "q": _sds((s.batch, qm, cfg.dim), jnp.float32),
+                "qmask": _sds((s.batch, qm), jnp.bool_),
+            }
+        return {"q": _sds((qm, cfg.dim), jnp.float32), "qmask": _sds((qm,), jnp.bool_)}
+
+    @staticmethod
+    def search_config(arch: ArchDef, shape: str, *, reduced: bool = False) -> WarpSearchConfig:
+        cfg: WarpArchConfig = arch.reduced if reduced else arch.config
+        s = (WARP_SHAPES_REDUCED if reduced else WARP_SHAPES)[shape]
+        base = WarpSearchConfig(
+            nprobe=min(cfg.nprobe, max(4, s.n_centroids // 2)),
+            k=min(cfg.k, s.n_docs),
+            k_impute=min(cfg.k_impute, max(4, s.n_centroids // 2)),
+        )
+        return dataclasses.replace(
+            base,
+            t_prime=base.resolved_t_prime(s.n_tokens),
+            k_impute=base.resolved_k_impute(max(4, s.n_centroids)),
+        )
+
+    @staticmethod
+    def step_fn(arch: ArchDef, shape: str, *, reduced: bool = False, mesh=None):
+        cfg: WarpArchConfig = arch.reduced if reduced else arch.config
+        s = (WARP_SHAPES_REDUCED if reduced else WARP_SHAPES)[shape]
+        assert mesh is not None, "WarpFamily.step_fn requires a mesh"
+        scfg = WarpFamily.search_config(arch, shape, reduced=reduced)
+        template = WarpFamily.abstract_state(arch, shape, reduced=reduced, mesh=mesh)
+        fn = make_sharded_search_fn(
+            template, scfg, mesh, shard_axes=data_axes(mesh), query_batch=s.batch > 1
+        )
+
+        def step(state, batch):
+            return fn(state, batch["q"], batch["qmask"])
+
+        return step
+
+    @staticmethod
+    def state_pspec(arch: ArchDef, shape: str, mesh):
+        axes = data_axes(mesh)
+        spec = ShardedWarpIndex(
+            centroids=P(axes),
+            packed_codes=P(axes),
+            token_doc_ids=P(axes),
+            cluster_offsets=P(axes),
+            cluster_sizes=P(axes),
+            bucket_weights=P(axes),
+            doc_start=P(axes),
+        )
+        return spec
+
+    @staticmethod
+    def input_pspec(arch: ArchDef, shape: str, mesh):
+        s = WARP_SHAPES[shape]
+        if s.batch > 1:
+            return {"q": P(None, None, None), "qmask": P(None, None)}
+        return {"q": P(None, None), "qmask": P(None)}
+
+    @staticmethod
+    def smoke(arch: ArchDef, shape: str, key):
+        """Build a real (tiny) sharded index and search it."""
+        from repro.core import IndexBuildConfig, build_sharded_index, sharded_search
+        from repro.data import make_corpus, make_queries
+        from repro.launch.mesh import make_mesh
+
+        s = WARP_SHAPES_REDUCED[shape]
+        corpus = make_corpus(n_docs=s.n_docs, mean_doc_len=max(4, s.n_tokens // s.n_docs), seed=0)
+        sidx = build_sharded_index(
+            corpus.emb,
+            corpus.token_doc_ids,
+            corpus.n_docs,
+            n_shards=len(jax.devices()),
+            config=IndexBuildConfig(n_centroids=s.n_centroids, nbits=4, kmeans_iters=2),
+        )
+        q, qmask, rel = make_queries(corpus, n_queries=max(2, s.batch), seed=1)
+        scfg = WarpFamily.search_config(arch, shape, reduced=True)
+        res = sharded_search(sidx, q[0], jnp.asarray(qmask[0]), scfg)
+        return {"scores": res.scores}

@@ -1,0 +1,15 @@
+"""warp-xtr: the paper's own engine at LoTTE scale (document-sharded
+distributed search). Not part of the assigned pool; included so the
+paper's workload itself is dry-run + roofline'd like every other arch."""
+from repro.configs.base import ArchDef
+from repro.configs.warp_family import WarpArchConfig, WarpFamily
+
+CONFIG = WarpArchConfig(nprobe=32, k=100)
+REDUCED = WarpArchConfig(nprobe=8, k=10, k_impute=16)
+
+def get_def() -> ArchDef:
+    return ArchDef(
+        name="warp-xtr", family=WarpFamily, config=CONFIG, reduced=REDUCED,
+        shapes=("search_lifestyle", "search_pooled", "qps_pooled_b8"),
+        source="this paper (SIGIR'25)",
+    )

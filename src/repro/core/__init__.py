@@ -1,0 +1,47 @@
+"""WARP engine core: the paper's primary contribution, in JAX.
+
+Public API:
+  build_index / WarpIndex / IndexBuildConfig     — §4.1 index construction
+  search / search_batch / WarpSearchConfig       — §4.2 retrieval
+  warp_select                                    — §4.3 WARP_SELECT
+  two_stage_reduce                               — §4.5 scoring reduction
+  baselines (maxsim_bruteforce, xtr_reference, plaid_style_search)
+  build_sharded_index / sharded_search           — distributed engine
+"""
+
+from repro.core.baselines import (
+    maxsim_bruteforce,
+    plaid_style_search,
+    xtr_reference,
+)
+from repro.core.distributed import (
+    ShardedWarpIndex,
+    build_sharded_index,
+    make_sharded_search_fn,
+    sharded_search,
+)
+from repro.core.engine import search, search_batch
+from repro.core.index import build_index, index_stats
+from repro.core.reduction import TopKResult, two_stage_reduce
+from repro.core.types import IndexBuildConfig, WarpIndex, WarpSearchConfig
+from repro.core.warpselect import warp_select
+
+__all__ = [
+    "IndexBuildConfig",
+    "ShardedWarpIndex",
+    "TopKResult",
+    "WarpIndex",
+    "WarpSearchConfig",
+    "build_index",
+    "build_sharded_index",
+    "index_stats",
+    "make_sharded_search_fn",
+    "maxsim_bruteforce",
+    "plaid_style_search",
+    "search",
+    "search_batch",
+    "sharded_search",
+    "two_stage_reduce",
+    "warp_select",
+    "xtr_reference",
+]

@@ -1,0 +1,284 @@
+"""Distributed WARP: document-sharded indexes + shard_map search (DESIGN §5).
+
+Real multi-vector deployments shard the *corpus by document*: every
+document's tokens live entirely inside one shard, so token-level max and
+document-level sum both stay local and the only cross-device traffic is the
+final top-k merge — O(k · devices), independent of corpus size.
+
+Imputation is globally aligned: each shard contributes its top-``k_impute``
+(centroid score, cluster size) pairs; an all_gather + merged cumulative-size
+threshold yields a single global m_i used by every shard, so cross-shard
+score comparison is consistent (see DESIGN.md for why per-shard m_i would
+bias the merge).
+
+The same code runs on 1 CPU device (tests) and on the (pod, data, model)
+production mesh (dry-run): shard over the flattened data axes, replicate
+over ``model``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import index as index_mod
+from repro.core.engine import gather_candidates, score_probed_clusters
+from repro.core.reduction import TopKResult, two_stage_reduce
+from repro.core.types import IndexBuildConfig, WarpIndex, WarpSearchConfig
+from repro.core.warpselect import warp_select
+from repro.kernels import ops
+
+__all__ = ["ShardedWarpIndex", "build_sharded_index", "sharded_search", "make_sharded_search_fn"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ShardedWarpIndex:
+    """Per-shard WarpIndex arrays stacked on a leading shard axis.
+
+    All shards are padded to identical geometry (n_centroids, n_tokens,
+    cap) so the stack is rectangular; padding clusters have size 0 and
+    padding tokens carry doc id ``local_docs`` (never surfaced: size-0
+    clusters are never probed... they are, via top-k, but contribute no
+    valid candidates).
+    """
+
+    centroids: jax.Array  # f32[S, C, D]
+    packed_codes: jax.Array  # u8[S, N, PB]
+    token_doc_ids: jax.Array  # i32[S, N] (shard-local ids)
+    cluster_offsets: jax.Array  # i32[S, C+1]
+    cluster_sizes: jax.Array  # i32[S, C]
+    bucket_weights: jax.Array  # f32[S, 2^b]
+    doc_start: jax.Array  # i32[S] global id of shard's first document
+
+    dim: int = dataclasses.field(metadata=dict(static=True), default=128)
+    nbits: int = dataclasses.field(metadata=dict(static=True), default=4)
+    cap: int = dataclasses.field(metadata=dict(static=True), default=0)
+    n_docs: int = dataclasses.field(metadata=dict(static=True), default=0)
+    n_tokens_padded: int = dataclasses.field(metadata=dict(static=True), default=0)
+
+    @property
+    def n_shards(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def n_centroids(self) -> int:
+        return self.centroids.shape[1]
+
+
+def build_sharded_index(
+    embeddings: jax.Array,
+    token_doc_ids: jax.Array,
+    n_docs: int,
+    n_shards: int,
+    config: IndexBuildConfig = IndexBuildConfig(),
+) -> ShardedWarpIndex:
+    """Partition docs into contiguous, token-balanced ranges; build one
+    WarpIndex per shard; pad + stack."""
+    emb = np.asarray(embeddings, np.float32)
+    tdi = np.asarray(token_doc_ids, np.int32)
+    n_tokens = emb.shape[0]
+
+    # Token-balanced contiguous doc ranges.
+    doc_tok_counts = np.bincount(tdi, minlength=n_docs)
+    csum = np.concatenate([[0], np.cumsum(doc_tok_counts)])
+    targets = np.linspace(0, n_tokens, n_shards + 1)
+    bounds = np.searchsorted(csum, targets[1:-1], side="left")
+    doc_bounds = np.concatenate([[0], bounds, [n_docs]]).astype(np.int64)
+    # Guarantee monotonically increasing, each shard non-empty in docs.
+    for s in range(1, n_shards + 1):
+        doc_bounds[s] = max(doc_bounds[s], doc_bounds[s - 1] + (1 if s < n_shards + 1 else 0))
+    doc_bounds = np.minimum(doc_bounds, n_docs)
+    doc_bounds[-1] = n_docs
+
+    shards: list[WarpIndex] = []
+    for s in range(n_shards):
+        lo, hi = int(doc_bounds[s]), int(doc_bounds[s + 1])
+        sel = (tdi >= lo) & (tdi < hi)
+        sub_cfg = dataclasses.replace(config, seed=config.seed + s)
+        shards.append(
+            index_mod.build_index(emb[sel], tdi[sel] - lo, max(1, hi - lo), sub_cfg)
+        )
+
+    c_max = max(s.n_centroids for s in shards)
+    n_max = max(s.n_tokens for s in shards)
+    cap = max(s.cap for s in shards)
+    local_docs_max = max(s.n_docs for s in shards)
+
+    def pad_to(arr, target_len, fill):
+        pad = target_len - arr.shape[0]
+        if pad == 0:
+            return arr
+        cfg = [(0, pad)] + [(0, 0)] * (arr.ndim - 1)
+        return jnp.pad(arr, cfg, constant_values=fill)
+
+    cents, codes, tdis, offs, sizes, weights = [], [], [], [], [], []
+    for s in shards:
+        cents.append(pad_to(s.centroids, c_max, 0.0))
+        codes.append(pad_to(s.packed_codes, n_max, 0))
+        # Padding tokens point at an out-of-range local doc: masked later.
+        tdis.append(pad_to(s.token_doc_ids, n_max, local_docs_max))
+        # Padding clusters: offset = n_tokens (clamped in gather), size 0.
+        off = pad_to(s.cluster_offsets, c_max + 1, s.n_tokens)
+        offs.append(off)
+        sizes.append(pad_to(s.cluster_sizes, c_max, 0))
+        weights.append(s.bucket_weights)
+
+    return ShardedWarpIndex(
+        centroids=jnp.stack(cents),
+        packed_codes=jnp.stack(codes),
+        token_doc_ids=jnp.stack(tdis),
+        cluster_offsets=jnp.stack(offs),
+        cluster_sizes=jnp.stack(sizes),
+        bucket_weights=jnp.stack(weights),
+        doc_start=jnp.asarray(doc_bounds[:-1], jnp.int32),
+        dim=shards[0].dim,
+        nbits=shards[0].nbits,
+        cap=cap,
+        n_docs=int(n_docs),
+        n_tokens_padded=int(n_max),
+    )
+
+
+def make_sharded_search_fn(
+    sidx_template: ShardedWarpIndex,
+    config: WarpSearchConfig,
+    mesh: jax.sharding.Mesh,
+    shard_axes: tuple[str, ...] = ("data",),
+    *,
+    query_batch: bool = False,
+):
+    """Build the shard_map'd search callable for a given mesh.
+
+    The index is sharded over ``shard_axes`` (their total size must equal
+    n_shards); queries are replicated. Returns f(sidx, q, qmask) ->
+    TopKResult with *global* doc ids. With ``query_batch`` the query takes
+    a leading batch axis (vmapped inside the shard)."""
+    idx_spec = ShardedWarpIndex(
+        centroids=P(shard_axes),
+        packed_codes=P(shard_axes),
+        token_doc_ids=P(shard_axes),
+        cluster_offsets=P(shard_axes),
+        cluster_sizes=P(shard_axes),
+        bucket_weights=P(shard_axes),
+        doc_start=P(shard_axes),
+        dim=sidx_template.dim,
+        nbits=sidx_template.nbits,
+        cap=sidx_template.cap,
+        n_docs=sidx_template.n_docs,
+        n_tokens_padded=sidx_template.n_tokens_padded,
+    )
+    cfg = config
+    axis_name = shard_axes if len(shard_axes) > 1 else shard_axes[0]
+
+    def local_search(sidx: ShardedWarpIndex, q: jax.Array, qmask: jax.Array):
+        qm = q.shape[0]
+        local = WarpIndex(
+            centroids=sidx.centroids[0],
+            packed_codes=sidx.packed_codes[0],
+            token_doc_ids=sidx.token_doc_ids[0],
+            cluster_offsets=sidx.cluster_offsets[0],
+            cluster_sizes=sidx.cluster_sizes[0],
+            bucket_weights=sidx.bucket_weights[0],
+            bucket_cutoffs=jnp.zeros(((1 << sidx.nbits) - 1,), jnp.float32),
+            dim=sidx.dim,
+            nbits=sidx.nbits,
+            cap=sidx.cap,
+            n_docs=sidx.n_docs,
+            n_tokens=sidx.n_tokens_padded,
+        )
+        # Local centroid scoring + probe selection (one top-k pass).
+        kk = max(cfg.nprobe, cfg.k_impute)
+        s_cq = q @ local.centroids.T
+        top_scores, top_cids = jax.lax.top_k(s_cq, kk)
+        probe_scores = top_scores[:, : cfg.nprobe]
+        probe_cids = top_cids[:, : cfg.nprobe].astype(jnp.int32)
+        # ---- globally aligned imputation ----
+        top_sizes = local.cluster_sizes[top_cids]
+        g_scores = jax.lax.all_gather(top_scores, axis_name, tiled=False)  # [S, Q, kk]
+        g_sizes = jax.lax.all_gather(top_sizes, axis_name, tiled=False)
+        s_all = jnp.swapaxes(g_scores, 0, 1).reshape(qm, -1)  # [Q, S*kk]
+        z_all = jnp.swapaxes(g_sizes, 0, 1).reshape(qm, -1)
+        order = jnp.argsort(-s_all, axis=-1)
+        s_sorted = jnp.take_along_axis(s_all, order, axis=-1)
+        z_sorted = jnp.take_along_axis(z_all, order, axis=-1)
+        csum = jnp.cumsum(z_sorted, axis=-1)
+        crossed = csum > jnp.asarray(cfg.t_prime, csum.dtype)
+        first = jnp.where(
+            jnp.any(crossed, axis=-1), jnp.argmax(crossed, axis=-1), s_all.shape[-1] - 1
+        )
+        mse = jnp.take_along_axis(s_sorted, first[:, None], axis=-1)[:, 0]
+        mse = jnp.where(qmask, mse, 0.0)
+
+        # ---- local decompression + reduction with the global m ----
+        p, cap = cfg.nprobe, local.cap
+        cand_scores, doc_ids, valid = score_probed_clusters(
+            local, q, probe_scores, probe_cids, cfg
+        )
+        valid = valid & qmask[:, None, None]
+        qtok = jnp.broadcast_to(
+            jnp.arange(qm, dtype=jnp.int32)[:, None, None], (qm, p, cap)
+        )
+        local_top = two_stage_reduce(
+            doc_ids.reshape(-1),
+            qtok.reshape(-1),
+            cand_scores.reshape(-1),
+            valid.reshape(-1),
+            mse,
+            q_max=qm,
+            k=cfg.k,
+            impl=cfg.reduce_impl,
+        )
+        # ---- global top-k merge (O(k * devices) traffic) ----
+        gdocs = jnp.where(
+            local_top.doc_ids >= 0, local_top.doc_ids + sidx.doc_start[0], -1
+        )
+        all_scores = jax.lax.all_gather(local_top.scores, axis_name, tiled=True)
+        all_docs = jax.lax.all_gather(gdocs, axis_name, tiled=True)
+        top_scores, top_idx = jax.lax.top_k(all_scores, cfg.k)
+        return TopKResult(scores=top_scores, doc_ids=all_docs[top_idx])
+
+    if query_batch:
+        body = lambda sidx, q, qmask: jax.vmap(
+            lambda qq, mm: local_search(sidx, qq, mm)
+        )(q, qmask)
+    else:
+        body = local_search
+    fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(idx_spec, P(), P()),
+        out_specs=TopKResult(scores=P(), doc_ids=P()),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def sharded_search(
+    sidx: ShardedWarpIndex,
+    q: jax.Array,
+    qmask: jax.Array | None = None,
+    config: WarpSearchConfig = WarpSearchConfig(),
+    mesh: jax.sharding.Mesh | None = None,
+    shard_axes: tuple[str, ...] = ("data",),
+) -> TopKResult:
+    """Convenience one-shot sharded search (builds mesh over all devices)."""
+    import dataclasses as dc
+
+    if mesh is None:
+        mesh = jax.make_mesh((sidx.n_shards,), ("data",))
+        shard_axes = ("data",)
+    config = dc.replace(
+        config,
+        t_prime=config.resolved_t_prime(sidx.n_tokens_padded * sidx.n_shards),
+        k_impute=config.resolved_k_impute(sidx.n_centroids),
+    )
+    if qmask is None:
+        qmask = jnp.ones((q.shape[0],), bool)
+    fn = make_sharded_search_fn(sidx, config, mesh, shard_axes)
+    return fn(sidx, jnp.asarray(q, jnp.float32), qmask)

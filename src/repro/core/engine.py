@@ -1,0 +1,168 @@
+"""End-to-end WARP retrieval (paper §4.2): one jit'd search step.
+
+Pipeline per query: WARP_SELECT (centroid matmul + top-nprobe + missing
+similarity) -> static-capacity CSR gather of packed codes -> implicit
+decompression selective-sum (Pallas kernel or jnp ref) -> two-stage
+reduction -> top-k.
+
+All shapes are static: the candidate set is [Q, nprobe, cap] where ``cap``
+is the index's max cluster size, masked by true cluster sizes. This is the
+jit/TPU replacement for the paper's pointer-chasing inverted lists.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.reduction import TopKResult, two_stage_reduce
+from repro.core.types import WarpIndex, WarpSearchConfig
+from repro.core.warpselect import warp_select
+from repro.kernels import ops
+
+__all__ = ["search", "search_batch", "gather_candidates", "resolve_config"]
+
+
+def resolve_config(index: WarpIndex, config: WarpSearchConfig) -> WarpSearchConfig:
+    """Materialize data-dependent defaults (t', k_impute) to static values."""
+    import dataclasses
+
+    return dataclasses.replace(
+        config,
+        t_prime=config.resolved_t_prime(index.n_tokens),
+        k_impute=config.resolved_k_impute(index.n_centroids),
+    )
+
+
+def gather_candidates(index: WarpIndex, probe_cids: jax.Array):
+    """CSR gather with static capacity.
+
+    probe_cids i32[Q, P] -> (packed u8[Q, P, cap, PB], doc_ids i32[Q, P, cap],
+    valid bool[Q, P, cap]).
+    """
+    cap = index.cap
+    starts = index.cluster_offsets[probe_cids]  # [Q, P]
+    sizes = index.cluster_sizes[probe_cids]  # [Q, P]
+    pos = starts[..., None] + jnp.arange(cap, dtype=jnp.int32)  # [Q, P, cap]
+    valid = jnp.arange(cap, dtype=jnp.int32) < sizes[..., None]
+    pos = jnp.minimum(pos, index.n_tokens - 1)
+    packed = index.packed_codes[pos]
+    doc_ids = index.token_doc_ids[pos]
+    return packed, doc_ids, valid
+
+
+def score_probed_clusters(
+    index: WarpIndex,
+    q: jax.Array,
+    probe_scores: jax.Array,
+    probe_cids: jax.Array,
+    config: WarpSearchConfig,
+):
+    """Implicit decompression (Eq. 5) over the probed clusters.
+
+    Returns (cand_scores f32[Q, P, cap], doc_ids i32[Q, P, cap],
+    valid bool[Q, P, cap]). With ``config.scan_qtokens`` the gather +
+    selective-sum runs one query token per scan step, bounding the live
+    packed-code working set by a factor of Q.
+    """
+    p, cap = config.nprobe, index.cap
+
+    def one(q_i, scores_i, cids_i):
+        packed, doc_ids, valid = gather_candidates(index, cids_i[None])
+        v = q_i[None, :, None] * index.bucket_weights[None, None, :]
+        res = ops.selective_sum(
+            packed.reshape(1, p * cap, -1),
+            v,
+            nbits=index.nbits,
+            dim=index.dim,
+            use_kernel=config.use_kernel,
+            impl=config.sum_impl,
+        ).reshape(1, p, cap)
+        return (res + scores_i[None, :, None])[0], doc_ids[0], valid[0]
+
+    if config.scan_qtokens:
+        _, (cand, dids, valid) = jax.lax.scan(
+            lambda c, x: (c, one(*x)), None, (q, probe_scores, probe_cids)
+        )
+        return cand, dids, valid
+
+    qm = q.shape[0]
+    packed, doc_ids, valid = gather_candidates(index, probe_cids)
+    v = q[:, :, None] * index.bucket_weights[None, None, :]  # [Q, D, 2^b]
+    res_scores = ops.selective_sum(
+        packed.reshape(qm, p * cap, -1),
+        v,
+        nbits=index.nbits,
+        dim=index.dim,
+        use_kernel=config.use_kernel,
+        impl=config.sum_impl,
+    ).reshape(qm, p, cap)
+    return res_scores + probe_scores[..., None], doc_ids, valid
+
+
+@functools.partial(jax.jit, static_argnames=("config",))
+def _search_one(index: WarpIndex, q: jax.Array, qmask: jax.Array, config: WarpSearchConfig) -> TopKResult:
+    qm = q.shape[0]
+    sel = warp_select(
+        q,
+        index.centroids,
+        index.cluster_sizes,
+        nprobe=config.nprobe,
+        t_prime=config.t_prime,
+        k_impute=config.k_impute,
+        qmask=qmask,
+    )
+    p, cap = config.nprobe, index.cap
+    cand_scores, doc_ids, valid = score_probed_clusters(
+        index, q, sel.probe_scores, sel.probe_cids, config
+    )
+
+    # Candidates of masked query tokens are dropped here.
+    valid = valid & qmask[:, None, None]
+
+    qtok = jnp.broadcast_to(
+        jnp.arange(qm, dtype=jnp.int32)[:, None, None], (qm, p, cap)
+    )
+    return two_stage_reduce(
+        doc_ids.reshape(-1),
+        qtok.reshape(-1),
+        cand_scores.reshape(-1),
+        valid.reshape(-1),
+        sel.mse,
+        q_max=qm,
+        k=config.k,
+        impl=config.reduce_impl,
+    )
+
+
+def search(
+    index: WarpIndex,
+    q: jax.Array,
+    qmask: jax.Array | None = None,
+    config: WarpSearchConfig = WarpSearchConfig(),
+) -> TopKResult:
+    """Single query: q f32[Q, D] (rows L2-normalized by caller or encoder)."""
+    config = resolve_config(index, config)
+    if qmask is None:
+        qmask = jnp.ones((q.shape[0],), bool)
+    return _search_one(index, jnp.asarray(q, jnp.float32), qmask, config)
+
+
+@functools.partial(jax.jit, static_argnames=("config",))
+def _search_many(index, q, qmask, config):
+    return jax.vmap(lambda qq, mm: _search_one(index, qq, mm, config))(q, qmask)
+
+
+def search_batch(
+    index: WarpIndex,
+    q: jax.Array,
+    qmask: jax.Array | None = None,
+    config: WarpSearchConfig = WarpSearchConfig(),
+) -> TopKResult:
+    """Batched queries: q f32[B, Q, D] -> TopKResult with leading batch dim."""
+    config = resolve_config(index, config)
+    if qmask is None:
+        qmask = jnp.ones(q.shape[:2], bool)
+    return _search_many(index, jnp.asarray(q, jnp.float32), qmask, config)

@@ -1,0 +1,98 @@
+"""Index construction (paper §4.1): cluster, quantize, lay out CSR-by-cluster.
+
+Build runs on host (a few jit'd stages); the result is a ``WarpIndex``
+pytree ready for the jit'd search path. Geometry (cap = max cluster size)
+is materialized to Python ints so the search can use static shapes.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kmeans, quantization
+from repro.core.types import IndexBuildConfig, WarpIndex
+
+__all__ = ["build_index", "index_stats"]
+
+
+def build_index(
+    embeddings: jax.Array,
+    token_doc_ids: jax.Array,
+    n_docs: int,
+    config: IndexBuildConfig = IndexBuildConfig(),
+) -> WarpIndex:
+    """embeddings f32[N, D] (any scale; normalized internally),
+    token_doc_ids i32[N] mapping each token embedding to its document.
+    """
+    emb = kmeans.l2_normalize(jnp.asarray(embeddings, jnp.float32))
+    n_tokens, dim = emb.shape
+    token_doc_ids = jnp.asarray(token_doc_ids, jnp.int32)
+    if token_doc_ids.shape != (n_tokens,):
+        raise ValueError("token_doc_ids must align with embeddings")
+
+    key = jax.random.PRNGKey(config.seed)
+    c = config.resolved_n_centroids(n_tokens)
+
+    # --- k-means on a sqrt(N)-proportional sample (paper §4.1) ---
+    sample_n = int(min(n_tokens, max(4 * c, config.sample_factor * 4 * math.sqrt(n_tokens))))
+    k_sample, k_fit = jax.random.split(key)
+    sample_idx = jax.random.choice(k_sample, n_tokens, (sample_n,), replace=False)
+    centroids = kmeans.spherical_kmeans(
+        k_fit, emb[sample_idx], c, iters=config.kmeans_iters
+    )
+
+    # --- assign all tokens, quantize residuals ---
+    assign = kmeans.assign_clusters(emb, centroids)
+    residuals = emb - centroids[assign]
+    # Bucket stats from a bounded residual sample.
+    flat = residuals.reshape(-1)
+    stats_n = min(flat.shape[0], 1 << 22)
+    cutoffs, weights = quantization.compute_buckets(flat[:stats_n], config.nbits)
+    codes = quantization.encode_residuals(residuals, cutoffs)
+    packed = quantization.pack_codes(codes, config.nbits)
+
+    # --- CSR-by-cluster layout ---
+    order = jnp.argsort(assign, stable=True)
+    packed = packed[order]
+    doc_ids_sorted = token_doc_ids[order]
+    sizes = jax.ops.segment_sum(
+        jnp.ones((n_tokens,), jnp.int32), assign, num_segments=c
+    )
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(sizes)]).astype(
+        jnp.int32
+    )
+    cap = int(jnp.max(sizes))
+
+    return WarpIndex(
+        centroids=centroids,
+        packed_codes=packed,
+        token_doc_ids=doc_ids_sorted,
+        cluster_offsets=offsets,
+        cluster_sizes=sizes.astype(jnp.int32),
+        bucket_weights=weights,
+        bucket_cutoffs=cutoffs,
+        dim=dim,
+        nbits=config.nbits,
+        cap=cap,
+        n_docs=int(n_docs),
+        n_tokens=int(n_tokens),
+    )
+
+
+def index_stats(index: WarpIndex) -> dict:
+    sizes = np.asarray(index.cluster_sizes)
+    return {
+        "n_tokens": index.n_tokens,
+        "n_docs": index.n_docs,
+        "n_centroids": index.n_centroids,
+        "nbits": index.nbits,
+        "cap": index.cap,
+        "mean_cluster": float(sizes.mean()),
+        "p99_cluster": float(np.percentile(sizes, 99)),
+        "bytes": index.nbytes(),
+        "bytes_per_token": index.nbytes() / max(1, index.n_tokens),
+    }

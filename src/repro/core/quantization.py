@@ -1,0 +1,105 @@
+"""Quantile-based b-bit residual codec (paper §4.1).
+
+Residuals (token embedding minus assigned centroid) are quantized per
+dimension into 2^b buckets whose boundaries are *quantiles of the empirical
+residual distribution* — more levels where the mass is — and whose
+representative values are the within-bucket quantile midpoints. Codes are
+packed little-end-first into uint8: b=4 -> 2 codes/byte, b=2 -> 4 codes/byte,
+b=8 -> identity.
+
+The packed layout convention (shared with the Pallas kernel): dimension
+``d`` lives in byte ``d // per_byte`` at bit offset ``(d % per_byte) * b``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "compute_buckets",
+    "encode_residuals",
+    "pack_codes",
+    "unpack_codes",
+    "decompress",
+]
+
+_SUPPORTED_NBITS = (2, 4, 8)
+
+
+def _check_nbits(nbits: int) -> None:
+    if nbits not in _SUPPORTED_NBITS:
+        raise ValueError(f"nbits must be one of {_SUPPORTED_NBITS}, got {nbits}")
+
+
+def compute_buckets(residuals: jax.Array, nbits: int):
+    """Quantile bucket boundaries + representative weights.
+
+    Returns (cutoffs f32[2^b - 1], weights f32[2^b]). Cutoffs are the
+    k/2^b quantiles; weights are the (k + 0.5)/2^b quantiles (bucket
+    medians), matching ColBERTv2's residual codec.
+    """
+    _check_nbits(nbits)
+    nb = 1 << nbits
+    flat = residuals.reshape(-1).astype(jnp.float32)
+    cut_q = jnp.arange(1, nb, dtype=jnp.float32) / nb
+    w_q = (jnp.arange(nb, dtype=jnp.float32) + 0.5) / nb
+    cutoffs = jnp.quantile(flat, cut_q)
+    weights = jnp.quantile(flat, w_q)
+    return cutoffs, weights
+
+
+@jax.jit
+def encode_residuals(residuals: jax.Array, cutoffs: jax.Array) -> jax.Array:
+    """Bucket index per dimension: u8[N, D] in [0, 2^b)."""
+    return jnp.searchsorted(cutoffs, residuals, side="left").astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("nbits",))
+def pack_codes(codes: jax.Array, nbits: int) -> jax.Array:
+    """u8[N, D] bucket indices -> u8[N, D * nbits // 8] packed bytes."""
+    _check_nbits(nbits)
+    if nbits == 8:
+        return codes
+    per_byte = 8 // nbits
+    n, d = codes.shape
+    if d % per_byte:
+        raise ValueError(f"dim {d} not divisible by {per_byte}")
+    grouped = codes.reshape(n, d // per_byte, per_byte).astype(jnp.uint32)
+    shifts = (jnp.arange(per_byte, dtype=jnp.uint32) * nbits)[None, None, :]
+    return jnp.sum(grouped << shifts, axis=-1).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("nbits", "dim"))
+def unpack_codes(packed: jax.Array, nbits: int, dim: int) -> jax.Array:
+    """u8[..., D * nbits // 8] packed bytes -> u8[..., D] bucket indices."""
+    _check_nbits(nbits)
+    if nbits == 8:
+        return packed
+    per_byte = 8 // nbits
+    mask = jnp.uint8((1 << nbits) - 1)
+    shifts = (jnp.arange(per_byte, dtype=jnp.uint8) * nbits)
+    # [..., PB] -> [..., PB, per_byte] -> [..., D]
+    expanded = (packed[..., None] >> shifts) & mask
+    return expanded.reshape(*packed.shape[:-1], dim)
+
+
+@functools.partial(jax.jit, static_argnames=("nbits", "dim"))
+def decompress(
+    packed: jax.Array,
+    centroid_vecs: jax.Array,
+    weights: jax.Array,
+    *,
+    nbits: int,
+    dim: int,
+) -> jax.Array:
+    """Explicit decompression (Eq. 3): centroid + bucket weight per dim.
+
+    This is the PLAID-style path; WARP's engine never calls it on the hot
+    path (implicit decompression, Eq. 4-5) — it exists as the baseline and
+    as the oracle the implicit path is tested against.
+    """
+    codes = unpack_codes(packed, nbits, dim)
+    return centroid_vecs + weights[codes.astype(jnp.int32)]

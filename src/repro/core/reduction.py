@@ -1,0 +1,122 @@
+"""Two-stage reduction (paper §4.5), TPU-shaped.
+
+The paper merges per-(query-token, cluster) "strides" with a binary tree of
+sorted-run merges in C++. On TPU the same computation maps onto one global
+``lax.sort`` plus two segmented scans:
+
+  stage 1 (token-level): sort all candidate entries by the composite key
+      ``doc_id * Q + qtoken``; an inclusive segmented *max* scan computes,
+      at each run end, max over retrieved scores of that (doc, qtoken) —
+      exactly the implicit score-matrix fill of Eq. (1)'s alignment term.
+      (The paper's "inner-cluster max during decompression" special case is
+      subsumed: all duplicates collapse in one pass.)
+
+  stage 2 (document-level): the row-wise sum with missing-similarity
+      imputation uses the identity
+          S_d = sum_i m_i + sum_{(i,d) present} (max_score_{i,d} - m_i)
+      so a segmented *sum* scan over doc runs of the adjusted run-end
+      values, plus one constant, realizes Eq. (8) without materializing the
+      score matrix — this is the paper's prefix-sum trick in TPU form.
+
+Padding entries carry key == SENTINEL and sort to the back. Top-k runs over
+run-end positions only (others are -inf).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["TopKResult", "two_stage_reduce", "KEY_SENTINEL"]
+
+KEY_SENTINEL = jnp.iinfo(jnp.int32).max
+
+
+class TopKResult(NamedTuple):
+    scores: jax.Array  # f32[k], -inf padded
+    doc_ids: jax.Array  # i32[k], -1 padded
+
+
+def _segmented_scan(op, flags: jax.Array, values: jax.Array) -> jax.Array:
+    """Inclusive segmented scan; segment starts where ``flags`` is True."""
+
+    def combine(a, b):
+        fa, va = a
+        fb, vb = b
+        return fa | fb, jnp.where(fb, vb, op(va, vb))
+
+    _, out = jax.lax.associative_scan(combine, (flags, values))
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("q_max", "k", "impl"))
+def two_stage_reduce(
+    doc_ids: jax.Array,
+    qtok_ids: jax.Array,
+    scores: jax.Array,
+    valid: jax.Array,
+    mse: jax.Array,
+    *,
+    q_max: int,
+    k: int,
+    impl: str = "scan",
+) -> TopKResult:
+    """Reduce flat candidate entries to top-k document scores.
+
+    doc_ids:  i32[N] candidate document ids.
+    qtok_ids: i32[N] query-token id of each candidate.
+    scores:   f32[N] token-level scores (centroid + selective residual sum).
+    valid:    bool[N] padding / masked-query-token indicator.
+    mse:      f32[q_max] missing similarity estimates (0 at masked tokens).
+
+    impl: "scan" — tuple segmented scans (baseline; O(log N) full passes);
+          "segment" — cumsum run indices + segment_max/segment_sum scatters
+          (§Perf hillclimb: ~3x fewer memory passes on TPU).
+
+    Requires doc_id * q_max + q_max < int32 max for valid entries.
+    """
+    n = doc_ids.shape[0]
+    if k > n:
+        raise ValueError(f"k={k} > candidate count {n}")
+
+    key = jnp.where(
+        valid, doc_ids * q_max + qtok_ids, KEY_SENTINEL
+    ).astype(jnp.int32)
+    key_sorted, scores_sorted = jax.lax.sort((key, scores), num_keys=1)
+
+    valid_sorted = key_sorted != KEY_SENTINEL
+    qtok = jnp.where(valid_sorted, key_sorted % q_max, 0)
+    docid = jnp.where(valid_sorted, key_sorted // q_max, jnp.int32(2**30))
+
+    prev_key = jnp.concatenate([jnp.full((1,), -1, jnp.int32), key_sorted[:-1]])
+    next_key = jnp.concatenate([key_sorted[1:], jnp.full((1,), -2, jnp.int32)])
+    run_start = key_sorted != prev_key
+    run_end = key_sorted != next_key
+
+    prev_doc = jnp.concatenate([jnp.full((1,), -1, jnp.int32), docid[:-1]])
+    next_doc = jnp.concatenate([docid[1:], jnp.full((1,), -2, jnp.int32)])
+    doc_start = docid != prev_doc
+    doc_end = (docid != next_doc) & valid_sorted
+
+    if impl == "segment":
+        run_idx = jnp.cumsum(run_start.astype(jnp.int32)) - 1
+        run_max = jax.ops.segment_max(scores_sorted, run_idx, num_segments=n)
+        adj = jnp.where(run_end & valid_sorted, run_max[run_idx] - mse[qtok], 0.0)
+        doc_idx = jnp.cumsum(doc_start.astype(jnp.int32)) - 1
+        doc_sum = jax.ops.segment_sum(adj, doc_idx, num_segments=n)
+        total = doc_sum[doc_idx] + jnp.sum(mse)
+    else:
+        runmax = _segmented_scan(jnp.maximum, run_start, scores_sorted)
+        adj = jnp.where(run_end & valid_sorted, runmax - mse[qtok], 0.0)
+        dsum = _segmented_scan(jnp.add, doc_start, adj)
+        total = dsum + jnp.sum(mse)
+
+    final = jnp.where(doc_end, total, -jnp.inf)
+    top_scores, top_idx = jax.lax.top_k(final, k)
+    top_docs = jnp.where(
+        jnp.isfinite(top_scores), docid[top_idx], jnp.int32(-1)
+    )
+    return TopKResult(scores=top_scores, doc_ids=top_docs)

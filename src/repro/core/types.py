@@ -1,0 +1,139 @@
+"""Core datatypes for the WARP engine.
+
+A ``WarpIndex`` is the on-device index: centroids, packed residual codes in
+CSR-by-cluster order, per-token document ids, and the quantile codec tables.
+It is registered as a JAX pytree so it can be passed straight through
+``jax.jit`` / ``shard_map`` boundaries; the static geometry (dim, nbits,
+max cluster size) rides along as aux data.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["WarpIndex", "WarpSearchConfig", "IndexBuildConfig"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class WarpIndex:
+    """Compressed multi-vector index (ColBERTv2-style residual codec).
+
+    Array fields (pytree leaves):
+      centroids:       f32[C, D]     L2-normalized cluster centroids.
+      packed_codes:    u8[N, D*b/8]  b-bit residual codes, CSR-by-cluster order.
+      token_doc_ids:   i32[N]        owning document of each token (CSR order).
+      cluster_offsets: i32[C + 1]    CSR offsets into packed_codes/token_doc_ids.
+      cluster_sizes:   i32[C]        offsets[c+1] - offsets[c].
+      bucket_weights:  f32[2^b]      representative residual value per bucket.
+      bucket_cutoffs:  f32[2^b - 1]  bucket boundaries (for encoding only).
+
+    Static fields (aux data):
+      dim, nbits, cap (max cluster size, the static gather capacity),
+      n_docs, n_tokens.
+    """
+
+    centroids: jax.Array
+    packed_codes: jax.Array
+    token_doc_ids: jax.Array
+    cluster_offsets: jax.Array
+    cluster_sizes: jax.Array
+    bucket_weights: jax.Array
+    bucket_cutoffs: jax.Array
+
+    dim: int = dataclasses.field(metadata=dict(static=True), default=128)
+    nbits: int = dataclasses.field(metadata=dict(static=True), default=4)
+    cap: int = dataclasses.field(metadata=dict(static=True), default=0)
+    n_docs: int = dataclasses.field(metadata=dict(static=True), default=0)
+    n_tokens: int = dataclasses.field(metadata=dict(static=True), default=0)
+
+    @property
+    def n_centroids(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def n_buckets(self) -> int:
+        return 1 << self.nbits
+
+    def nbytes(self) -> int:
+        """Total index footprint in bytes (paper Table 4 analogue)."""
+        return sum(
+            leaf.size * leaf.dtype.itemsize
+            for leaf in jax.tree_util.tree_leaves(self)
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class WarpSearchConfig:
+    """Hyperparameters of WARP retrieval (paper §4.6).
+
+    nprobe:   number of probed centroids per query token (paper default 32).
+    t_prime:  cumulative-cluster-size threshold for WARP_SELECT missing
+              similarity imputation. ``None`` -> sqrt(n_tokens), bounded by
+              ``t_prime_max`` (paper: t' ∝ sqrt(dataset size), capped).
+    k:        number of documents returned.
+    k_impute: how many score-sorted centroids to consider when locating the
+              cumulative-size crossing point. Must be >= nprobe.
+    use_kernel: route the selective-sum through the Pallas kernel
+              (interpret=True off-TPU) instead of the pure-jnp reference.
+    scan_qtokens: decompress/score one query token at a time (lax.scan)
+              instead of materializing all [Q, nprobe, cap] packed codes at
+              once — bounds peak memory by ~Q (§Perf hillclimb, warp-xtr).
+    """
+
+    nprobe: int = 32
+    t_prime: int | None = None
+    t_prime_max: int = 1 << 16
+    k: int = 100
+    k_impute: int = 64
+    use_kernel: bool = False
+    scan_qtokens: bool = False
+    reduce_impl: str = "scan"  # "scan" | "segment" (see reduction.py)
+    sum_impl: str = "gather"  # "gather" | "lut" (byte-LUT; see kernels/ref.py)
+
+    def resolved_t_prime(self, n_tokens: int) -> int:
+        if self.t_prime is not None:
+            return int(self.t_prime)
+        return int(min(max(1.0, n_tokens**0.5), float(self.t_prime_max)))
+
+    def resolved_k_impute(self, n_centroids: int) -> int:
+        return int(min(n_centroids, max(self.k_impute, self.nprobe)))
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexBuildConfig:
+    """Index-construction hyperparameters (paper §4.1).
+
+    n_centroids: ``None`` -> 2^ceil(log2(16 * sqrt(n_tokens))) as in
+                 ColBERTv2/PLAID, clamped to [8, n_tokens // 4].
+    nbits:       bits per residual dimension (paper: 4 default, 2 compact).
+    kmeans_iters: Lloyd iterations for spherical k-means.
+    sample_factor: k-means runs on ~sample_factor * sqrt(n_tokens) *
+                 tokens-per-doc sampled tokens (paper: sample of passages
+                 proportional to sqrt of collection size).
+    """
+
+    n_centroids: int | None = None
+    nbits: int = 4
+    kmeans_iters: int = 8
+    sample_factor: float = 16.0
+    seed: int = 0
+
+    def resolved_n_centroids(self, n_tokens: int) -> int:
+        if self.n_centroids is not None:
+            return int(self.n_centroids)
+        import math
+
+        target = 16.0 * math.sqrt(max(1, n_tokens))
+        c = 1 << max(3, math.ceil(math.log2(target)))
+        return int(max(8, min(c, max(8, n_tokens // 4))))
+
+
+def tree_size_bytes(tree: Any) -> int:
+    return sum(
+        leaf.size * leaf.dtype.itemsize for leaf in jax.tree_util.tree_leaves(tree)
+    )

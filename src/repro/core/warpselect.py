@@ -1,0 +1,65 @@
+"""WARP_SELECT: fused candidate generation + missing similarity imputation
+(paper §4.3).
+
+Centroid relevance ``S_cq = q @ Cᵀ`` is computed once (MXU matmul). The
+top-``nprobe`` centroids per query token become the probe set; the missing
+similarity estimate ``m_i`` is the centroid score at the first position —
+in score-descending order — where the cumulative cluster size exceeds the
+threshold ``t'``. Both reuse the same top-k pass, so imputation is free.
+
+If the cumulative size never crosses ``t'`` within ``k_impute`` sorted
+centroids, we fall back to the last (smallest) retained score — a
+conservative (lower) estimate; widen ``k_impute`` to tighten it.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["WarpSelectOut", "warp_select"]
+
+
+class WarpSelectOut(NamedTuple):
+    probe_scores: jax.Array  # f32[Q, nprobe]  S_cq of probed centroids
+    probe_cids: jax.Array  # i32[Q, nprobe]  probed centroid ids
+    mse: jax.Array  # f32[Q]          missing similarity estimate m_i
+
+
+@functools.partial(jax.jit, static_argnames=("nprobe", "k_impute"))
+def warp_select(
+    q: jax.Array,
+    centroids: jax.Array,
+    cluster_sizes: jax.Array,
+    *,
+    nprobe: int,
+    t_prime: jax.Array | int,
+    k_impute: int,
+    qmask: jax.Array | None = None,
+) -> WarpSelectOut:
+    """q f32[Q, D], centroids f32[C, D], cluster_sizes i32[C].
+
+    qmask (optional bool[Q]): masked query tokens get m_i = 0 and their
+    probe entries are still emitted (the engine drops their candidates).
+    """
+    kk = max(nprobe, k_impute)
+    s_cq = q @ centroids.T  # [Q, C]
+    top_scores, top_cids = jax.lax.top_k(s_cq, kk)  # [Q, kk] desc
+
+    sizes = cluster_sizes[top_cids]  # [Q, kk]
+    csum = jnp.cumsum(sizes, axis=-1)
+    crossed = csum > jnp.asarray(t_prime, csum.dtype)
+    # First crossing; argmax of all-False is 0, so guard with any().
+    first = jnp.argmax(crossed, axis=-1)
+    first = jnp.where(jnp.any(crossed, axis=-1), first, kk - 1)
+    mse = jnp.take_along_axis(top_scores, first[:, None], axis=-1)[:, 0]
+    if qmask is not None:
+        mse = jnp.where(qmask, mse, 0.0)
+    return WarpSelectOut(
+        probe_scores=top_scores[:, :nprobe],
+        probe_cids=top_cids[:, :nprobe].astype(jnp.int32),
+        mse=mse,
+    )

@@ -1,0 +1,3 @@
+from repro.data.synth import SynthCorpus, make_corpus, make_queries
+
+__all__ = ["SynthCorpus", "make_corpus", "make_queries"]

@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: EmbeddingBag(sum) as a one-hot MXU contraction.
+
+JAX has no native EmbeddingBag; the generic path is gather + segment_sum
+(see ref.py). On TPU, random-row gathers from a large table defeat the
+vector unit, but for tables (or table *shards* — the usual case once the
+vocab is sharded over the `model` axis) that fit VMEM block-by-block, the
+lookup can be reformulated as a dense contraction the MXU is built for:
+
+    out[s] = sum_l w[s,l] * table[idx[s,l]]
+           = sum_{v in block} (sum_l w[s,l] * 1[idx[s,l] == v]) @ table[v]
+
+Grid: (S / TILE_S, V / BLK_V); the vocab axis is the sequential minor grid
+dimension so each output stripe accumulates across vocab blocks in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["embedding_bag_kernel_call"]
+
+
+def _embedding_bag_kernel(idx_ref, w_ref, table_ref, out_ref, *, blk_v: int):
+    j = pl.program_id(1)
+    idx = idx_ref[...]  # [TILE_S, L] int32
+    w = w_ref[...]  # [TILE_S, L] f32
+    table_blk = table_ref[...]  # [BLK_V, D] f32
+    tile_s, l = idx.shape
+
+    local = idx - j * blk_v
+    onehot = (local[..., None] == jnp.arange(blk_v, dtype=jnp.int32)).astype(
+        jnp.float32
+    ) * w[..., None]
+    contrib = onehot.reshape(tile_s * l, blk_v) @ table_blk
+    contrib = contrib.reshape(tile_s, l, -1).sum(axis=1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = contrib
+
+    @pl.when(j > 0)
+    def _acc():
+        out_ref[...] += contrib
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile_s", "blk_v", "interpret")
+)
+def embedding_bag_kernel_call(
+    table: jax.Array,
+    indices: jax.Array,
+    weights: jax.Array,
+    *,
+    tile_s: int = 8,
+    blk_v: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """table f32[V, D], indices i32[S, L], weights f32[S, L] -> f32[S, D].
+
+    Padding entries are expressed with weight 0 (index value is then
+    irrelevant as long as it is in range). S % tile_s == 0 and
+    V % blk_v == 0 are required (ops.py pads).
+    """
+    v_rows, d = table.shape
+    s, l = indices.shape
+    if s % tile_s or v_rows % blk_v:
+        raise ValueError(f"S={s} % {tile_s} or V={v_rows} % {blk_v} nonzero")
+
+    grid = (s // tile_s, v_rows // blk_v)
+    return pl.pallas_call(
+        functools.partial(_embedding_bag_kernel, blk_v=blk_v),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_s, l), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_s, l), lambda i, j: (i, 0)),
+            pl.BlockSpec((blk_v, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_s, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, d), jnp.float32),
+        interpret=interpret,
+    )(indices.astype(jnp.int32), weights.astype(jnp.float32), table.astype(jnp.float32))

@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: flash-attention forward (causal / sliding-window).
+
+§Perf motivation (EXPERIMENTS.md, qwen2/mixtral cells): after the sharding
+fixes, the LM memory roofline is dominated by per-chunk softmax traffic —
+[B, H, Sq, Tk] logits/probs tensors crossing HBM several times per layer.
+This kernel keeps the entire softmax in VMEM: per (batch, head, q-block)
+it streams KV blocks, maintaining running (max, denom, unnormalized acc)
+in the revisited output block — the standard flash-attention recurrence,
+with masking derived from absolute positions (causal + optional window).
+
+Grid: (B, H, Sq/Tq, Skv/Tk), KV innermost (sequential accumulation).
+VMEM per step: q/k/v tiles + [Tq, Tk] scores ≈ (3·T·Dh + T²)·4 B
+(Tq=Tk=128, Dh=128 → ~260 KiB).
+
+Forward only: serving/prefill use it directly; training would need the
+flash backward pair (documented as projection in EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_attention_kernel_call"]
+
+
+def _flash_fwd_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, tq: int, tk: int, causal: bool,
+    window: int | None, scale: float, n_kv: int
+):
+    j = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # [Tq, Dh]
+    k = k_ref[0, 0].astype(jnp.float32)  # [Tk, Dh]
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = (q @ k.T) * scale  # [Tq, Tk]
+    q_pos = iq * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
+    k_pos = j * tk + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+    rel = q_pos - k_pos
+    mask = jnp.ones((tq, tk), jnp.bool_)
+    if causal:
+        mask &= rel >= 0
+    if window is not None:
+        mask &= rel < window
+    s = jnp.where(mask, s, -1e30)
+
+    m_new = jnp.max(s, axis=1)  # [Tq]
+    p = jnp.exp(s - m_new[:, None])
+    l_new = jnp.sum(p, axis=1)
+    acc_new = p @ v  # [Tq, Dh]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[0, 0] = m_new
+        l_ref[0, 0] = l_new
+        o_ref[0, 0] = acc_new
+
+    @pl.when(j > 0)
+    def _accumulate():
+        m_prev = m_ref[0, 0]
+        l_prev = l_ref[0, 0]
+        m_tot = jnp.maximum(m_prev, m_new)
+        a_prev = jnp.exp(m_prev - m_tot)
+        a_new = jnp.exp(m_new - m_tot)
+        m_ref[0, 0] = m_tot
+        l_ref[0, 0] = l_prev * a_prev + l_new * a_new
+        o_ref[0, 0] = o_ref[0, 0] * a_prev[:, None] + acc_new * a_new[:, None]
+
+    @pl.when(j == n_kv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[0, 0], 1e-30)
+        o_ref[0, 0] = o_ref[0, 0] / denom[:, None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "tq", "tk", "interpret"),
+)
+def flash_attention_kernel_call(
+    q: jax.Array,  # [B, H, Sq, Dh]
+    k: jax.Array,  # [B, H, Skv, Dh]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    tq: int = 128,
+    tk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, sq, dh = q.shape
+    skv = k.shape[2]
+    if sq % tq or skv % tk:
+        raise ValueError(f"Sq={sq} % {tq} or Skv={skv} % {tk} nonzero")
+    scale = 1.0 / math.sqrt(dh)
+    n_kv = skv // tk
+
+    grid = (b, h, sq // tq, n_kv)
+    out, _, _ = pl.pallas_call(
+        functools.partial(
+            _flash_fwd_kernel, tq=tq, tk=tk, causal=causal, window=window,
+            scale=scale, n_kv=n_kv,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, tq, dh), lambda bb, hh, qq, jj: (bb, hh, qq, 0)),
+            pl.BlockSpec((1, 1, tk, dh), lambda bb, hh, qq, jj: (bb, hh, jj, 0)),
+            pl.BlockSpec((1, 1, tk, dh), lambda bb, hh, qq, jj: (bb, hh, jj, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, tq, dh), lambda bb, hh, qq, jj: (bb, hh, qq, 0)),
+            pl.BlockSpec((1, 1, tq), lambda bb, hh, qq, jj: (bb, hh, qq)),
+            pl.BlockSpec((1, 1, tq), lambda bb, hh, qq, jj: (bb, hh, qq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, sq, dh), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, sq), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, sq), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out.astype(q.dtype)

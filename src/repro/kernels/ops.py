@@ -1,0 +1,142 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Each op pads inputs to the kernel's tiling, runs interpret=True off-TPU
+(this container is CPU-only; interpret mode executes the kernel body in
+Python for correctness validation), and slices the result back. Callers can
+force the pure-jnp reference with ``use_kernel=False``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decompress_score import selective_sum_kernel_call
+from repro.kernels.embedding_bag import embedding_bag_kernel_call
+
+__all__ = ["selective_sum", "embedding_bag", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def selective_sum(
+    packed: jax.Array,
+    v: jax.Array,
+    *,
+    nbits: int,
+    dim: int,
+    use_kernel: bool = True,
+    tile_n: int | None = None,
+    impl: str = "gather",
+) -> jax.Array:
+    """Dispatch implicit-decompression scoring to the Pallas kernel or ref.
+
+    packed u8[Q, N, PB], v f32[Q, D, 2^b] -> f32[Q, N].
+    impl (non-kernel path): "gather" (per-dim) | "lut" (byte-LUT, §Perf).
+    """
+    if not use_kernel or nbits == 8:
+        # b=8 means 256 select-accumulate unrolls; the gather-based ref is
+        # the better lowering there.
+        if impl == "lut":
+            return ref.selective_sum_lut(packed, v, nbits=nbits, dim=dim)
+        return ref.selective_sum(packed, v, nbits=nbits, dim=dim)
+    q, n, pb = packed.shape
+    tile = tile_n or min(512, max(8, 1 << (n - 1).bit_length() if n else 8))
+    tile = min(tile, _round_up(n, 8))
+    n_pad = _round_up(max(n, tile), tile)
+    if n_pad != n:
+        packed = jnp.pad(packed, ((0, 0), (0, n_pad - n), (0, 0)))
+    out = selective_sum_kernel_call(
+        packed, v, nbits=nbits, dim=dim, tile_n=tile, interpret=not on_tpu()
+    )
+    return out[:, :n]
+
+
+def embedding_bag(
+    table: jax.Array,
+    indices: jax.Array,
+    segment_ids: jax.Array | None = None,
+    *,
+    num_segments: int | None = None,
+    weights: jax.Array | None = None,
+    use_kernel: bool = False,
+    bag_indices: jax.Array | None = None,
+    bag_weights: jax.Array | None = None,
+) -> jax.Array:
+    """EmbeddingBag(sum).
+
+    Two call forms:
+      - flat: (table, indices[N], segment_ids[N], num_segments) -> ref path
+        (gather + segment_sum) — arbitrary vocab size, the production path.
+      - padded: (table, bag_indices[S, L], bag_weights[S, L]) -> Pallas
+        one-hot MXU kernel when ``use_kernel`` (vocab must be modest or a
+        shard); falls back to a dense jnp computation of the same layout.
+    """
+    if bag_indices is not None:
+        assert bag_weights is not None
+        s, l = bag_indices.shape
+        v_rows, d = table.shape
+        if use_kernel:
+            tile_s = min(8, s)
+            blk_v = min(512, v_rows)
+            s_pad = _round_up(s, tile_s)
+            v_pad = _round_up(v_rows, blk_v)
+            tbl = jnp.pad(table, ((0, v_pad - v_rows), (0, 0)))
+            idx = jnp.pad(bag_indices, ((0, s_pad - s), (0, 0)))
+            w = jnp.pad(bag_weights, ((0, s_pad - s), (0, 0)))
+            out = embedding_bag_kernel_call(
+                tbl, idx, w, tile_s=tile_s, blk_v=blk_v, interpret=not on_tpu()
+            )
+            return out[:s]
+        rows = jnp.take(table, bag_indices.reshape(-1), axis=0).reshape(s, l, -1)
+        return jnp.sum(rows * bag_weights[..., None], axis=1)
+
+    assert segment_ids is not None and num_segments is not None
+    return ref.embedding_bag(
+        table, indices, segment_ids, num_segments=num_segments, weights=weights
+    )
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    tq: int = 128,
+    tk: int = 128,
+) -> jax.Array:
+    """Flash-attention forward. q/k/v [B, S, H(kv), Dh] (layers.py layout);
+    GQA handled by repeating KV heads. Pads S to the tile size."""
+    from repro.kernels.flash_attention import flash_attention_kernel_call
+
+    b, sq, hq, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    if hq != hkv:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    tq = min(tq, max(8, sq))
+    tk = min(tk, max(8, skv))
+    sq_p = _round_up(sq, tq)
+    skv_p = _round_up(skv, tk)
+    if skv_p != skv and not causal:
+        # Padded key positions (> sq-1) are masked by causality; without
+        # causality they would contribute — caller must pre-pad instead.
+        raise ValueError("non-causal flash_attention requires Skv % tk == 0")
+    qt = jnp.moveaxis(jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0))), 1, 2)
+    kt = jnp.moveaxis(jnp.pad(k, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0))), 1, 2)
+    vt = jnp.moveaxis(jnp.pad(v, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0))), 1, 2)
+    out = flash_attention_kernel_call(
+        qt, kt, vt, causal=causal, window=window, tq=tq, tk=tk,
+        interpret=not on_tpu(),
+    )
+    return jnp.moveaxis(out, 1, 2)[:, :sq]

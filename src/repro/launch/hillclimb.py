@@ -1,0 +1,123 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ must precede any jax import (same contract as dryrun.py).
+
+"""§Perf hillclimb harness: lower one cell with config overrides and
+record the roofline delta vs baseline.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb --arch qwen2-0.5b \
+      --shape train_4k --variant fused_ce --set fused_ce=True
+
+Records land in experiments/perf/<mesh>/<arch>__<shape>__<variant>.json and
+EXPERIMENTS.md §Perf documents the hypothesis -> change -> delta chain.
+"""
+
+import argparse
+import ast
+import dataclasses
+import json
+
+from repro.configs.registry import get_arch
+from repro.launch import dryrun
+
+
+def parse_overrides(pairs: list[str]) -> dict:
+    out = {}
+    for p in pairs:
+        k, v = p.split("=", 1)
+        try:
+            out[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            out[k] = v
+    return out
+
+
+def run_variant(
+    arch_name: str,
+    shape: str,
+    variant: str,
+    overrides: dict,
+    *,
+    multi_pod: bool = False,
+    search_overrides: dict | None = None,
+    out_dir: str = "experiments/perf",
+) -> dict:
+    import repro.configs.registry as registry
+
+    arch = get_arch(arch_name)
+    overrides = dict(overrides)
+    # Nested dataclass overrides (e.g. moe={'local_dispatch': True}).
+    for key, val in list(overrides.items()):
+        cur = getattr(arch.config, key, None)
+        if isinstance(val, dict) and dataclasses.is_dataclass(cur):
+            overrides[key] = dataclasses.replace(cur, **val)
+    new_cfg = dataclasses.replace(arch.config, **overrides) if overrides else arch.config
+    new_arch = dataclasses.replace(arch, config=new_cfg)
+    if search_overrides:
+        # warp-xtr: overrides apply to the search config built by the family.
+        from repro.configs import warp_family
+
+        orig = warp_family.WarpFamily.search_config
+
+        def patched(a, s, *, reduced=False):
+            base = orig(a, s, reduced=reduced)
+            return dataclasses.replace(base, **search_overrides)
+
+        warp_family.WarpFamily.search_config = staticmethod(patched)
+    registry.ARCHS[arch_name] = new_arch
+    try:
+        rec = dryrun.run_cell(arch_name, shape, multi_pod)
+    finally:
+        registry.ARCHS[arch_name] = arch
+        if search_overrides:
+            warp_family.WarpFamily.search_config = orig
+    rec["variant"] = variant
+    rec["overrides"] = {
+        k: repr(v) for k, v in {**overrides, **(search_overrides or {})}.items()
+    }
+    mesh_name = "multi" if multi_pod else "single"
+    d = os.path.join(out_dir, mesh_name)
+    os.makedirs(d, exist_ok=True)
+    with open(os.path.join(d, f"{arch_name}__{shape}__{variant}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--set", nargs="*", default=[], help="config overrides k=v")
+    ap.add_argument("--search-set", nargs="*", default=[], help="WarpSearchConfig overrides")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+    rec = run_variant(
+        args.arch,
+        args.shape,
+        args.variant,
+        parse_overrides(args.set),
+        search_overrides=parse_overrides(args.search_set) or None,
+        multi_pod=args.mesh == "multi",
+        out_dir=args.out,
+    )
+    t = rec["roofline"]
+    print(
+        json.dumps(
+            {
+                "variant": args.variant,
+                "bound_ms": t["step_lower_bound_s"] * 1e3,
+                "compute_ms": t["compute_s"] * 1e3,
+                "memory_ms": t["memory_s"] * 1e3,
+                "collective_ms": t["collective_s"] * 1e3,
+                "mfu_at_bound": t.get("model_mfu_at_bound"),
+                "mem_gib": rec["memory"]["total_per_device"] / 2**30,
+            },
+            indent=1,
+        )
+    )
+
+
+if __name__ == "__main__":
+    main()

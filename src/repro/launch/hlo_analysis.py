@@ -1,0 +1,106 @@
+"""Parse collective traffic out of optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` has FLOPs and bytes-accessed but no collective
+traffic, so the collective roofline term is derived here: find every
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute,
+take its per-device operand sizes (optimized HLO is the per-partition
+program, so shapes are already per-device), and apply ring-algorithm
+traffic formulas with the replica-group size.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+__all__ = ["collective_traffic", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# `%x = TYPE opcode(OPERANDS), ...` — TYPE may be a tuple.
+_OP_RE = re.compile(
+    r"=\s+(?P<otype>\([^=]*?\)|\S+)\s+"
+    r"(?P<op>" + "|".join(_COLLECTIVES) + r")(?P<variant>-start)?\("
+    r"(?P<operands>[^)]*)\)"
+)
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z]+\d*(?:e\dm\d\w*)?)\[(?P<dims>[\d,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_bytes(dt: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dt, 4)
+
+
+def _line_group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        inner = m.group(1).strip()
+        return len(inner.split(",")) if inner else default
+    return default
+
+
+def collective_traffic(hlo_text: str, n_devices: int) -> dict:
+    """Returns {'per_op': {op: bytes}, 'total_bytes': float, 'n_ops': int}.
+
+    Bytes are *per-device link traffic* with ring formulas:
+      all-reduce:        2 * S * (n-1)/n
+      all-gather:        S_out * (n-1)/n   (received bytes)
+      reduce-scatter:    S_in * (n-1)/n
+      all-to-all:        S * (n-1)/n
+      collective-permute: S
+    """
+    per_op: dict[str, float] = defaultdict(float)
+    n_ops = 0
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        n_ops += 1
+        group = max(2, _line_group_size(line, n_devices))
+        factor = (group - 1) / group
+        operand_bytes = sum(
+            _shape_bytes(s.group("dt"), s.group("dims"))
+            for s in _SHAPE_RE.finditer(m.group("operands"))
+        )
+        out_bytes = sum(
+            _shape_bytes(s.group("dt"), s.group("dims"))
+            for s in _SHAPE_RE.finditer(m.group("otype"))
+        )
+        if op == "all-reduce":
+            traffic = 2.0 * operand_bytes * factor
+        elif op == "all-gather":
+            traffic = out_bytes * factor
+        elif op == "reduce-scatter":
+            traffic = operand_bytes * factor
+        elif op == "all-to-all":
+            traffic = operand_bytes * factor
+        else:  # collective-permute
+            traffic = float(operand_bytes)
+        per_op[op] += traffic
+    return {
+        "per_op": dict(per_op),
+        "total_bytes": float(sum(per_op.values())),
+        "n_ops": n_ops,
+    }

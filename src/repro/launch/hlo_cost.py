@@ -1,0 +1,277 @@
+"""Trip-count-aware cost analysis over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any
+scan-over-layers model under-reports FLOPs/bytes/collectives by ~n_layers.
+This module re-derives the three roofline inputs from the HLO text itself:
+
+  flops  — 2 * prod(out_dims) * prod(contracting_dims) per dot, plus one
+           flop per output element of elementwise ops;
+  bytes  — per op: operand bytes + output bytes, with FUSIONS treated as a
+           single op (the fusion boundary is the HBM traffic boundary —
+           a better memory model than raw per-op accounting);
+  collective traffic — ring formulas (see hlo_analysis.py).
+
+While loops: body totals are multiplied by the trip count, recovered from
+the s32 constant in the loop condition (scan lowers to a counted while).
+Nested scans (KV-chunk scan inside the layer scan) multiply via recursion.
+
+CPU-backend HLO quirks handled: operands are bare ``%name`` references
+(shapes resolved through a module-wide name->type table); computation
+headers contain nested parens; dots are ``dot`` with
+``lhs_contracting_dims`` attrs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.launch.hlo_analysis import DTYPE_BYTES
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+_HEADER_NAME = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_SHAPE = re.compile(r"([a-z]+\d*(?:e\dm\d\w*)?)\[([\d,]*)\]")
+# otype may be a tuple containing layout braces and /*index=N*/ comments
+# (which contain '='), so match anything up to the first ')'.
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(?P<otype>\([^)]*\)|[^\s]+)\s+"
+    r"(?P<opcode>[\w\-]+)\((?P<operands>[^)]*)\)(?P<attrs>.*)$"
+)
+_NAME_REF = re.compile(r"%([\w\.\-]+)")
+_CALLS_ATTR = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY_ATTR = re.compile(r"body=%?([\w\.\-]+)")
+_COND_ATTR = re.compile(r"condition=%?([\w\.\-]+)")
+_CONST_INT = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "copy-start", "copy-done",
+    "iota",
+}
+_COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "reduce-scatter-start", "all-to-all-start", "collective-permute-start",
+}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE.finditer(type_str):
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES.get(m.group(1), 4)
+    return total
+
+
+def _type_elems(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE.finditer(type_str):
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    per_op_collective: dict = dataclasses.field(default_factory=dict)
+    n_collectives: float = 0.0
+
+    def scaled(self, k: float) -> "HloCost":
+        return HloCost(
+            self.flops * k,
+            self.bytes * k,
+            self.collective_bytes * k,
+            {n: v * k for n, v in self.per_op_collective.items()},
+            self.n_collectives * k,
+        )
+
+    def add(self, other: "HloCost") -> None:
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.collective_bytes += other.collective_bytes
+        self.n_collectives += other.n_collectives
+        for n, v in other.per_op_collective.items():
+            self.per_op_collective[n] = self.per_op_collective.get(n, 0.0) + v
+
+
+class _Module:
+    def __init__(self, hlo: str, n_devices: int):
+        self.n_devices = n_devices
+        self.comps: dict[str, list] = {}
+        self.types: dict[str, str] = {}
+        self.entry: str | None = None
+        cur: list | None = None
+        for raw in hlo.splitlines():
+            if raw and not raw[0].isspace() and "{" in raw and "->" in raw:
+                m = _HEADER_NAME.match(raw)
+                if m:
+                    cur = []
+                    self.comps[m.group(1)] = cur
+                    if raw.startswith("ENTRY"):
+                        self.entry = m.group(1)
+                    continue
+            if cur is None:
+                continue
+            s = raw.strip()
+            if s == "}":
+                cur = None
+                continue
+            m = _OP_LINE.match(raw)
+            if m:
+                cur.append(m)
+                self.types[m.group(1)] = m.group("otype")
+        if self.entry is None and self.comps:
+            self.entry = list(self.comps)[-1]
+        self._trip: dict[str, int] = {}
+        self._flops: dict[str, float] = {}
+        self._cost: dict[str, HloCost] = {}
+
+    # ------------------------------------------------------------ helpers
+    def _operand_names(self, operands: str) -> list[str]:
+        return _NAME_REF.findall(operands)
+
+    def _operand_bytes(self, operands: str) -> int:
+        return sum(_type_bytes(self.types.get(n, "")) for n in self._operand_names(operands))
+
+    def _dot_flops(self, m) -> float:
+        out_elems = _type_elems(m.group("otype"))
+        k = 1
+        c = _CONTRACT.search(m.group("attrs"))
+        names = self._operand_names(m.group("operands"))
+        if c and names:
+            lhs_type = self.types.get(names[0], "")
+            sh = _SHAPE.search(lhs_type)
+            if sh:
+                dims = [int(d) for d in sh.group(2).split(",") if d]
+                for idx in (int(x) for x in c.group(1).split(",") if x):
+                    if idx < len(dims):
+                        k *= dims[idx]
+        return 2.0 * out_elems * k
+
+    def trip_count(self, cond: str) -> int:
+        if cond in self._trip:
+            return self._trip[cond]
+        best = 1
+        for m in self.comps.get(cond, []):
+            mm = _CONST_INT.search(m.string)
+            if mm:
+                best = max(best, int(mm.group(1)))
+        self._trip[cond] = best
+        return best
+
+    def _collective(self, m) -> float:
+        attrs = m.group("attrs")
+        iota = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", attrs)
+        if iota:
+            group = int(iota.group(2))
+        else:
+            brace = re.search(r"replica_groups=\{\{([^}]*)\}", attrs)
+            if brace:
+                inner = brace.group(1).strip()
+                group = len(inner.split(",")) if inner else self.n_devices
+            else:
+                group = self.n_devices
+        group = max(2, group)
+        factor = (group - 1) / group
+        op_bytes = self._operand_bytes(m.group("operands"))
+        out_bytes = _type_bytes(m.group("otype"))
+        base = m.group("opcode").replace("-start", "")
+        if base == "all-reduce":
+            return 2.0 * op_bytes * factor
+        if base == "all-gather":
+            return out_bytes * factor
+        if base in ("reduce-scatter", "all-to-all"):
+            return op_bytes * factor
+        return float(op_bytes)  # collective-permute
+
+    # ------------------------------------------------------- computations
+    def flops_only(self, name: str) -> float:
+        """Flops inside a called computation (fusion bodies etc.)."""
+        if name in self._flops:
+            return self._flops[name]
+        self._flops[name] = 0.0  # cycle guard
+        total = 0.0
+        for m in self.comps.get(name, []):
+            opcode = m.group("opcode")
+            if opcode == "dot":
+                total += self._dot_flops(m)
+            elif opcode in ("fusion", "call"):
+                c = _CALLS_ATTR.search(m.group("attrs"))
+                if c:
+                    total += self.flops_only(c.group(1))
+            elif opcode == "while":
+                b = _BODY_ATTR.search(m.group("attrs"))
+                cnd = _COND_ATTR.search(m.group("attrs"))
+                if b:
+                    total += self.flops_only(b.group(1)) * (
+                        self.trip_count(cnd.group(1)) if cnd else 1
+                    )
+            elif opcode in _SKIP_BYTES or opcode in _COLLECTIVES:
+                continue
+            else:
+                total += _type_elems(m.group("otype"))
+        self._flops[name] = total
+        return total
+
+    def total(self, name: str) -> HloCost:
+        if name in self._cost:
+            return self._cost[name]
+        self._cost[name] = HloCost()  # cycle guard
+        acc = HloCost()
+        for m in self.comps.get(name, []):
+            opcode = m.group("opcode")
+            attrs = m.group("attrs")
+            if opcode == "while":
+                b = _BODY_ATTR.search(attrs)
+                cnd = _COND_ATTR.search(attrs)
+                if b:
+                    trips = self.trip_count(cnd.group(1)) if cnd else 1
+                    acc.add(self.total(b.group(1)).scaled(trips))
+                continue
+            if opcode == "conditional":
+                for c in _CALLS_ATTR.finditer(attrs):
+                    acc.add(self.total(c.group(1)))
+                continue
+            if opcode in _COLLECTIVES:
+                traffic = self._collective(m)
+                acc.collective_bytes += traffic
+                acc.n_collectives += 1
+                base = opcode.replace("-start", "")
+                acc.per_op_collective[base] = acc.per_op_collective.get(base, 0.0) + traffic
+                acc.bytes += self._operand_bytes(m.group("operands")) + _type_bytes(
+                    m.group("otype")
+                )
+                continue
+            if opcode in _SKIP_BYTES or opcode.endswith("-done"):
+                continue
+            if opcode in ("fusion", "call"):
+                c = _CALLS_ATTR.search(attrs)
+                if c:
+                    acc.flops += self.flops_only(c.group(1))
+            elif opcode == "dot":
+                acc.flops += self._dot_flops(m)
+            else:
+                acc.flops += _type_elems(m.group("otype"))
+            acc.bytes += self._operand_bytes(m.group("operands")) + _type_bytes(
+                m.group("otype")
+            )
+        self._cost[name] = acc
+        return acc
+
+
+def analyze_hlo(hlo: str, n_devices: int) -> HloCost:
+    mod = _Module(hlo, n_devices)
+    if mod.entry is None:
+        return HloCost()
+    return mod.total(mod.entry)

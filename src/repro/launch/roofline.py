@@ -1,0 +1,159 @@
+"""Roofline terms + analytic ("useful") FLOPs per (arch x shape).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI. Terms (EXPERIMENTS.md §Roofline):
+
+  compute_s    = HLO_FLOPs_global / (chips * PEAK_FLOPS)
+  memory_s     = HLO_bytes_global / (chips * HBM_BW)
+  collective_s = per-device collective traffic / LINK_BW
+
+MODEL_FLOPS is the analytic useful work (6·N·D for dense training etc.);
+MODEL_FLOPS / HLO_FLOPs exposes remat/redundancy waste.
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import ArchDef
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+LINK_BW = 50e9  # bytes/s / link
+
+__all__ = ["PEAK_FLOPS", "HBM_BW", "LINK_BW", "model_flops", "roofline_terms"]
+
+
+def _lm_flops(arch: ArchDef, shape: str) -> float:
+    from repro.configs.families import LM_SHAPES
+
+    cfg = arch.config
+    s = LM_SHAPES[shape]
+    n_act = cfg.active_param_count()
+    l, h, dh = cfg.n_layers, cfg.n_heads, cfg.resolved_head_dim
+    b, sl = s.global_batch, s.seq_len
+    w = cfg.sliding_window or sl
+
+    if s.kind == "train":
+        tokens = b * sl
+        attn = 6 * l * b * sl * min(sl, w) * h * dh  # fwd+bwd, causal ~1/2 * 4
+        return 6.0 * n_act * tokens + attn
+    if s.kind == "prefill":
+        tokens = b * sl
+        attn = 2 * l * b * sl * min(sl, w) * h * dh
+        return 2.0 * n_act * tokens + attn
+    # decode: one token, attention over the cached window
+    attn = 4 * l * b * min(sl, w) * h * dh
+    return 2.0 * n_act * b + attn
+
+
+def _gnn_flops(arch: ArchDef, shape: str) -> float:
+    from repro.configs.families import GNN_SHAPES
+
+    cfg, s = arch.config, GNN_SHAPES[shape]
+    d_h = cfg.d_hidden
+    total = 0.0
+    d_in = s.d_feat
+    for _ in range(cfg.n_layers):
+        total += 2.0 * s.n_edges * d_in  # gather+scatter adds
+        total += 2.0 * s.n_nodes * (d_in * d_h + d_h * d_h)  # MLP
+        d_in = d_h
+    total += 2.0 * s.n_nodes * d_h * s.n_classes
+    return 3.0 * total  # fwd + bwd
+
+
+def _mlp_cost(dims: tuple[int, ...]) -> float:
+    return sum(2.0 * a * b for a, b in zip(dims[:-1], dims[1:]))
+
+
+def _recsys_flops(arch: ArchDef, shape: str) -> float:
+    from repro.configs.families import RECSYS_SHAPES
+    from repro.models.recsys import DINConfig, SASRecConfig, TwoTowerConfig, XDeepFMConfig
+
+    cfg, s = arch.config, RECSYS_SHAPES[shape]
+    b = s.batch
+    mult = 3.0 if s.kind == "train" else 1.0
+    if isinstance(cfg, TwoTowerConfig):
+        tower = _mlp_cost((cfg.embed_dim,) + cfg.tower_mlp)
+        per_row = 2 * tower + (cfg.user_fields + cfg.item_fields) * cfg.embed_dim * 2
+        total = b * per_row
+        if s.kind == "train":
+            total += 2.0 * b * b * cfg.tower_mlp[-1]  # in-batch logits
+        if s.kind == "retrieval":
+            total = b * (tower + cfg.user_fields * cfg.embed_dim * 2)
+            total += 2.0 * b * s.n_candidates * cfg.tower_mlp[-1]
+        return mult * total
+    if isinstance(cfg, SASRecConfig):
+        d, sl = cfg.embed_dim, cfg.seq_len
+        blk = 4.0 * sl * sl * d + 8.0 * sl * d * d
+        total = b * cfg.n_blocks * blk
+        if s.kind == "retrieval":
+            total += 2.0 * s.n_candidates * d
+        return mult * total
+    if isinstance(cfg, XDeepFMConfig):
+        f, d = cfg.n_fields, cfg.embed_dim
+        rows = s.n_candidates if s.kind == "retrieval" else b
+        cin = 0.0
+        h_prev = f
+        for h in cfg.cin_layers:
+            cin += 2.0 * h_prev * f * d + 2.0 * h * h_prev * f * d
+            h_prev = h
+        dnn = _mlp_cost((f * d,) + cfg.mlp + (1,))
+        return mult * rows * (cin + dnn)
+    if isinstance(cfg, DINConfig):
+        d, sl = cfg.embed_dim, cfg.seq_len
+        rows = s.n_candidates if s.kind == "retrieval" else b
+        attn = sl * _mlp_cost((4 * d,) + cfg.attn_mlp + (1,))
+        head = _mlp_cost((3 * d,) + cfg.mlp + (1,))
+        return mult * rows * (attn + head)
+    raise TypeError(type(cfg))
+
+
+def _warp_flops(arch: ArchDef, shape: str) -> float:
+    from repro.configs.warp_family import WARP_SHAPES
+
+    cfg, s = arch.config, WARP_SHAPES[shape]
+    q = cfg.query_maxlen
+    centroid = 2.0 * q * s.n_centroids * cfg.dim  # S_cq = C q^T
+    # Selective sum: one add per candidate-token dim (useful work;
+    # the 2^b select-unroll overhead shows up in the HLO/analytic ratio).
+    decompress = float(q * cfg.nprobe * s.cap * cfg.dim)
+    reduce = 2.0 * q * cfg.nprobe * s.cap * 32  # sort ~ n log n
+    return s.batch * (centroid + decompress + reduce)
+
+
+def model_flops(arch: ArchDef, shape: str) -> float:
+    fam = arch.family.name
+    if fam == "lm":
+        return _lm_flops(arch, shape)
+    if fam == "gnn":
+        return _gnn_flops(arch, shape)
+    if fam == "recsys":
+        return _recsys_flops(arch, shape)
+    if fam == "warp":
+        return _warp_flops(arch, shape)
+    raise ValueError(fam)
+
+
+def roofline_terms(
+    *,
+    per_device_flops: float,
+    per_device_bytes: float,
+    per_device_collective_bytes: float,
+    n_devices: int,
+) -> dict:
+    compute_s = per_device_flops / PEAK_FLOPS
+    memory_s = per_device_bytes / HBM_BW
+    collective_s = per_device_collective_bytes / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    bound = max(terms.values())
+    return {
+        **terms,
+        "bottleneck": bottleneck,
+        "step_lower_bound_s": bound,
+        # What fraction of the bound is spent on HLO compute — 1.0 means
+        # compute-bound (at the roofline), lower means memory/collective
+        # stalls dominate.
+        "hlo_compute_fraction": (compute_s / bound) if bound else 0.0,
+        "hlo_flops_global": per_device_flops * n_devices,
+        "hlo_bytes_global": per_device_bytes * n_devices,
+    }

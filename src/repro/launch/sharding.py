@@ -1,0 +1,200 @@
+"""Partition-spec rules per model family (DESIGN §5).
+
+LM stack: FSDP + TP ("fsdp" = all batch axes, flattened ('pod','data')):
+  wq/wk/wv  [L, D, H*Dh]   -> (None, fsdp, model)   column-parallel
+  wo        [L, H*Dh, D]   -> (None, model, fsdp)   row-parallel
+  ffn gate/up [L, D, F]    -> (None, fsdp, model)
+  ffn down  [L, F, D]      -> (None, model, fsdp)
+  moe experts [L, E, D, F] -> (None, None, fsdp, model) (TP over d_ff; EP is
+                              a hillclimb variant, see DESIGN §Arch-applicability)
+  embed     [V, D]         -> (None, model)          row-gather stays local
+  lm_head   [D, V]         -> (fsdp, model)
+  norms / scalars          -> replicated
+Optimizer state mirrors parameters (ZeRO comes for free under GSPMD).
+
+RecSys: embedding tables row-sharded over model; MLPs replicated; batch
+over fsdp axes. GNN: node/edge arrays sharded over fsdp axes, params
+replicated. WARP index: cluster/token arrays sharded over fsdp axes
+(document-sharded engine), queries replicated.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+
+__all__ = [
+    "lm_param_pspec",
+    "batch_pspec",
+    "kv_cache_pspec",
+    "tree_named_sharding",
+    "recsys_param_pspec",
+    "replicated",
+]
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for e in path:
+        if isinstance(e, jax.tree_util.DictKey):
+            names.append(str(e.key))
+        elif isinstance(e, jax.tree_util.GetAttrKey):
+            names.append(e.name)
+        elif isinstance(e, jax.tree_util.SequenceKey):
+            names.append(str(e.idx))
+    return names
+
+
+def lm_param_pspec(
+    params: Any,
+    mesh: jax.sharding.Mesh,
+    *,
+    embed_shard: str = "d",
+    moe_weight_mode: str = "fsdp",
+) -> Any:
+    """PartitionSpec tree for TransformerLM / TokenEncoder params."""
+    fsdp = data_axes(mesh)
+    model = "model"
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        nd = leaf.ndim
+        joined = "/".join(names)
+        stacked = "layers" in names  # leading L axis from scan stacking
+        lead = (None,) if stacked else ()
+
+        def spec(*tail):
+            full = lead + tail
+            assert len(full) == nd, (joined, full, leaf.shape)
+            return P(*full)
+
+        if "embed" in names or "pos_table" in names:
+            if embed_shard == "vocab":
+                return P(model, None)
+            if embed_shard == "replicated":
+                return P(None, None)
+            return P(None, model)
+        if any(n in names for n in ("user_table", "item_table", "table", "linear")):
+            return P(model, None)  # recsys big tables: row-sharded
+        if "lm_head" in names:
+            return P(fsdp, model) if nd == 2 else P(model)
+        if any(n in names for n in ("wq", "wk", "wv")):
+            return spec(fsdp, model) if "w" in names else spec(model)
+        if "wo" in names:
+            return spec(model, fsdp) if "w" in names else spec(fsdp)
+        if "moe" in names:
+            if "router" in names:
+                return P(*([None] * nd))
+            if moe_weight_mode == "tp_only":
+                # Megatron-MoE: experts replicated over data, TP over model.
+                # GSPMD then lowers the expert matmuls locally with one
+                # row-parallel psum — no [E, cap, d_ff] partial-sum traffic.
+                if names[-1] in ("gate", "up"):
+                    return spec(None, None, model)
+                if names[-1] == "down":
+                    return spec(None, model, None)
+            if names[-1] in ("gate", "up"):
+                return spec(None, fsdp, model)
+            if names[-1] == "down":
+                return spec(None, model, fsdp)
+        if any(n in names for n in ("gate", "up", "ff1")):
+            return spec(fsdp, model) if "w" in names or nd >= 2 + len(lead) else spec(model)
+        if any(n in names for n in ("down", "ff2")):
+            return spec(model, fsdp) if "w" in names or nd >= 2 + len(lead) else spec(fsdp)
+        if "proj" in names and nd >= 2:
+            return spec(fsdp, None)
+        return P(*([None] * nd))  # norms, biases of small layers, scalars
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def recsys_param_pspec(params: Any, mesh: jax.sharding.Mesh) -> Any:
+    """Tables row-sharded over model axis, everything else replicated."""
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        # Big hashed tables shard row-wise; tiny tables (positions) replicate.
+        if any(n in names for n in ("user_table", "item_table", "table", "linear")):
+            if leaf.shape[0] % mesh.shape["model"] == 0:
+                return P("model", *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def zero1_opt_pspec(param_pspec: Any, params_abs: Any, mesh: jax.sharding.Mesh) -> Any:
+    """ZeRO-1 layout for optimizer moments: wherever a parameter is
+    replicated over the data axes (e.g. tp_only MoE experts), shard its
+    m/v over data on the last divisible unsharded dim."""
+    fsdp = data_axes(mesh)
+    n_fsdp = 1
+    for a in fsdp:
+        n_fsdp *= mesh.shape[a]
+
+    def used_axes(parts):
+        out = set()
+        for p in parts:
+            if p is None:
+                continue
+            out |= set(p) if isinstance(p, tuple) else {p}
+        return out
+
+    def rule(spec, leaf):
+        if not isinstance(spec, P):
+            return spec
+        parts = list(spec)
+        if used_axes(parts) & set(fsdp):
+            return spec  # already data-sharded somewhere
+        for i in range(len(parts) - 1, -1, -1):
+            if parts[i] is None and leaf.shape[i] % n_fsdp == 0:
+                parts[i] = fsdp
+                return P(*parts)
+        return spec
+
+    return jax.tree.map(
+        rule, param_pspec, params_abs, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def replicated(tree: Any) -> Any:
+    return jax.tree.map(lambda leaf: P(*([None] * getattr(leaf, "ndim", 0))), tree)
+
+
+def batch_pspec(batch: Any, mesh: jax.sharding.Mesh) -> Any:
+    """Shard the leading (batch) axis of every input over the data axes."""
+    fsdp = data_axes(mesh)
+    return jax.tree.map(
+        lambda leaf: P(fsdp, *([None] * (leaf.ndim - 1))) if leaf.ndim >= 1 else P(),
+        batch,
+    )
+
+
+def kv_cache_pspec(cache: Any, mesh: jax.sharding.Mesh, *, shard_seq: bool) -> Any:
+    """KVCache [L, B, S, Hkv, Dh]: batch-sharded normally; for batch=1
+    long-context decode, shard the sequence axis instead (flash-decoding
+    style LSE merge is generated by SPMD)."""
+    fsdp = data_axes(mesh)
+
+    def rule(leaf):
+        if leaf.ndim == 5:
+            if shard_seq:
+                return P(None, None, fsdp, None, None)
+            return P(None, fsdp, None, None, None)
+        if leaf.ndim == 1:  # lengths [B]
+            return P() if shard_seq else P(fsdp)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree.map(rule, cache)
+
+
+def tree_named_sharding(pspec_tree: Any, mesh: jax.sharding.Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        pspec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

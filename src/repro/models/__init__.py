@@ -1,0 +1,4 @@
+from repro.models.transformer import TransformerConfig, TransformerLM
+from repro.models.encoder import EncoderConfig, TokenEncoder
+
+__all__ = ["TransformerConfig", "TransformerLM", "EncoderConfig", "TokenEncoder"]

@@ -1,0 +1,221 @@
+"""Shared neural layers: RMSNorm, RoPE, GQA attention (sliding-window,
+qk-norm, chunked/flash), SwiGLU. Pure-functional: params are nested dicts,
+every layer is `apply(params, x, ...)` with a matching `init(key, ...)`.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rms_norm",
+    "rms_norm_init",
+    "rope_frequencies",
+    "apply_rope",
+    "dense_init",
+    "dense",
+    "gqa_attention",
+    "chunked_attention",
+    "decode_attention",
+    "swiglu_init",
+    "swiglu",
+]
+
+Params = dict
+
+
+# ---------------------------------------------------------------- RMSNorm
+def rms_norm_init(dim: int) -> Params:
+    return {"scale": jnp.ones((dim,), jnp.float32)}
+
+
+def rms_norm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(dtype)
+
+
+# ------------------------------------------------------------------- RoPE
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, freqs: jax.Array) -> jax.Array:
+    """x [..., S, H, Dh], positions [..., S] -> rotated x."""
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, Dh/2]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ Dense
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False, scale: float | None = None) -> Params:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def dense(params: Params, x: jax.Array) -> jax.Array:
+    out = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        out = out + params["b"].astype(x.dtype)
+    return out
+
+
+# -------------------------------------------------------------- Attention
+def _sdpa_chunk(q, k, v, mask, scale):
+    """One (q-block, kv-block) attention tile with f32 softmax statistics."""
+    logits = jnp.einsum("...qhd,...khd->...hqk", q, k).astype(jnp.float32) * scale
+    logits = jnp.where(mask, logits, -1e30)
+    m = jnp.max(logits, axis=-1)
+    p = jnp.exp(logits - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("...hqk,...khd->...qhd", p.astype(v.dtype), v)
+    return m, l, acc
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: int | None = None,
+    q_positions: jax.Array | None = None,
+    kv_positions: jax.Array | None = None,
+    chunk_size: int = 1024,
+    remat_chunks: bool = False,
+) -> jax.Array:
+    """Flash-style attention: scan over KV chunks with running (m, l, acc).
+
+    q [..., Sq, H, Dh]; k/v [..., Sk, Hkv, Dh] with Hkv | H (GQA broadcast).
+    Never materializes the [Sq, Sk] logits — the memory-roofline requirement
+    for the 32k prefill / 4k train shapes (DESIGN §5).
+    """
+    *batch, sq, h, dh = q.shape
+    sk, hkv = k.shape[-3], k.shape[-2]
+    if h != hkv:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=-2)
+        v = jnp.repeat(v, rep, axis=-2)
+    scale = 1.0 / math.sqrt(dh)
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(sq), (*batch, sq))
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(jnp.arange(sk), (*batch, sk))
+
+    n_chunks = -(-sk // chunk_size)
+    pad = n_chunks * chunk_size - sk
+    if pad:
+        k = jnp.pad(k, [*[(0, 0)] * len(batch), (0, pad), (0, 0), (0, 0)])
+        v = jnp.pad(v, [*[(0, 0)] * len(batch), (0, pad), (0, 0), (0, 0)])
+        kv_positions = jnp.pad(kv_positions, [*[(0, 0)] * len(batch), (0, pad)], constant_values=-(10**9))
+
+    k = jnp.moveaxis(k.reshape(*batch, n_chunks, chunk_size, h, dh), len(batch), 0)
+    v = jnp.moveaxis(v.reshape(*batch, n_chunks, chunk_size, h, dh), len(batch), 0)
+    kp = jnp.moveaxis(kv_positions.reshape(*batch, n_chunks, chunk_size), len(batch), 0)
+
+    def step(carry, inp):
+        m_run, l_run, acc = carry
+        k_c, v_c, kp_c = inp
+        mask = jnp.ones((*batch, 1, sq, chunk_size), bool)
+        rel = q_positions[..., :, None] - kp_c[..., None, :]  # [..., Sq, C]
+        if causal:
+            mask = mask & (rel >= 0)[..., None, :, :]
+        if window is not None:
+            mask = mask & (rel < window)[..., None, :, :]
+        mask = mask & (kp_c >= 0)[..., None, None, :]
+        m_c, l_c, acc_c = _sdpa_chunk(q, k_c, v_c, mask, scale)  # [...,H,Sq],[...,H,Sq],[...,Sq,H,Dh]
+        m_new = jnp.maximum(m_run, m_c)
+        a1 = jnp.exp(m_run - m_new)
+        a2 = jnp.exp(m_c - m_new)
+        l_new = l_run * a1 + l_c * a2
+        acc_new = acc * jnp.moveaxis(a1, -2, -1)[..., None].astype(acc.dtype) + acc_c * jnp.moveaxis(a2, -2, -1)[..., None].astype(acc.dtype)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((*batch, h, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((*batch, h, sq), jnp.float32)
+    acc0 = jnp.zeros((*batch, sq, h, dh), q.dtype)
+    if remat_chunks:
+        # Don't let scan AD stack per-chunk softmax/mask residuals
+        # ([n_chunks, B, H, Sq, C] — tens of GB at 4k train): recompute
+        # the chunk in the backward pass instead (§Perf hillclimb).
+        step = jax.checkpoint(step)
+    (m_f, l_f, acc_f), _ = jax.lax.scan(step, (m0, l0, acc0), (k, v, kp))
+    denom = jnp.moveaxis(l_f, -2, -1)[..., None]  # [..., Sq, H, 1]
+    return (acc_f / jnp.maximum(denom, 1e-30).astype(acc_f.dtype)).astype(q.dtype)
+
+
+def gqa_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    chunk_size: int = 1024,
+    remat_chunks: bool = False,
+) -> jax.Array:
+    """Entry point used by the transformer; always the chunked path so the
+    same code lowers identically across train/prefill shapes."""
+    return chunked_attention(
+        q, k, v, causal=causal, window=window,
+        chunk_size=min(chunk_size, k.shape[-3]), remat_chunks=remat_chunks,
+    )
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    kv_len: jax.Array,
+    *,
+    window: int | None = None,
+) -> jax.Array:
+    """Single-position decode: q [B, 1, H, Dh] vs cache [B, S, Hkv, Dh].
+
+    Masks positions >= kv_len (and outside the sliding window). The [B, S]
+    score matrix is linear in S — no chunking needed for memory, and XLA
+    lowers it as one fused matvec chain.
+    """
+    b, _, h, dh = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    if h != hkv:
+        rep = h // hkv
+        k_cache = jnp.repeat(k_cache, rep, axis=2)
+        v_cache = jnp.repeat(v_cache, rep, axis=2)
+    scale = 1.0 / math.sqrt(dh)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k_cache).astype(jnp.float32) * scale
+    pos = jnp.arange(s)
+    valid = pos[None, :] < kv_len[:, None]  # [B, S]
+    if window is not None:
+        valid = valid & (pos[None, :] >= kv_len[:, None] - window)
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v_cache.dtype), v_cache)
+
+
+# ----------------------------------------------------------------- SwiGLU
+def swiglu_init(key, d_model: int, d_ff: int) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d_model, d_ff),
+        "up": dense_init(k2, d_model, d_ff),
+        "down": dense_init(k3, d_ff, d_model),
+    }
+
+
+def swiglu(params: Params, x: jax.Array) -> jax.Array:
+    return dense(params["down"], jax.nn.silu(dense(params["gate"], x)) * dense(params["up"], x))

@@ -1,0 +1,316 @@
+"""RecSys architectures: two-tower retrieval, SASRec, xDeepFM (CIN), DIN.
+
+Shared substrate: huge hashed embedding tables + EmbeddingBag
+(``jnp.take`` + ``segment_sum`` — see kernels/embedding_bag.py for the
+MXU-native variant). The embedding lookup is the hot path; tables are
+sharded row-wise over the `model` mesh axis at scale.
+
+Two-tower's `retrieval_cand` shape (1 query x 1M candidates) is the WARP
+integration point: candidate item embeddings can be served either as a
+dense batched dot (here) or through a WARP compressed index
+(examples/serve_retrieval.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, dense_init
+
+__all__ = [
+    "TwoTowerConfig",
+    "TwoTower",
+    "SASRecConfig",
+    "SASRec",
+    "XDeepFMConfig",
+    "XDeepFM",
+    "DINConfig",
+    "DIN",
+]
+
+
+def _mlp_init(key, dims: tuple[int, ...]) -> list:
+    keys = jax.random.split(key, len(dims) - 1)
+    return [
+        dense_init(k, dims[i], dims[i + 1], bias=True) for i, k in enumerate(keys)
+    ]
+
+
+def _mlp(params: list, x: jax.Array, final_act: bool = False) -> jax.Array:
+    for i, p in enumerate(params):
+        x = dense(p, x)
+        if i < len(params) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _embed_init(key, vocab: int, dim: int) -> jax.Array:
+    return jax.random.normal(key, (vocab, dim), jnp.float32) * (1.0 / math.sqrt(dim))
+
+
+# ===================================================== Two-tower retrieval
+@dataclasses.dataclass(frozen=True)
+class TwoTowerConfig:
+    """Sampled-softmax retrieval (YouTube two-tower, RecSys'19)."""
+
+    embed_dim: int = 256
+    tower_mlp: tuple[int, ...] = (1024, 512, 256)
+    user_vocab: int = 5_000_000
+    item_vocab: int = 2_000_000
+    user_fields: int = 8  # multi-hot user feature slots (bag)
+    item_fields: int = 4
+    temperature: float = 0.05
+
+
+class TwoTower:
+    @staticmethod
+    def init(key, cfg: TwoTowerConfig) -> dict:
+        ku, ki, kmu, kmi = jax.random.split(key, 4)
+        d = cfg.embed_dim
+        return {
+            "user_table": _embed_init(ku, cfg.user_vocab, d),
+            "item_table": _embed_init(ki, cfg.item_vocab, d),
+            "user_mlp": _mlp_init(kmu, (d,) + cfg.tower_mlp),
+            "item_mlp": _mlp_init(kmi, (d,) + cfg.tower_mlp),
+        }
+
+    @staticmethod
+    def _tower(table, mlp, ids, mask):
+        """EmbeddingBag(mean) over feature slots + MLP + L2 norm."""
+        bags = jnp.take(table, ids, axis=0)  # [B, F, D]
+        denom = jnp.maximum(jnp.sum(mask, -1, keepdims=True), 1.0)
+        pooled = jnp.sum(bags * mask[..., None], axis=1) / denom
+        out = _mlp(mlp, pooled)
+        return out * jax.lax.rsqrt(jnp.sum(out * out, -1, keepdims=True) + 1e-12)
+
+    @staticmethod
+    def user_embed(params, cfg, user_ids, user_mask):
+        return TwoTower._tower(params["user_table"], params["user_mlp"], user_ids, user_mask)
+
+    @staticmethod
+    def item_embed(params, cfg, item_ids, item_mask):
+        return TwoTower._tower(params["item_table"], params["item_mlp"], item_ids, item_mask)
+
+    @staticmethod
+    def loss(params, cfg: TwoTowerConfig, batch) -> tuple[jax.Array, dict]:
+        """In-batch sampled softmax with logQ correction."""
+        u = TwoTower.user_embed(params, cfg, batch["user_ids"], batch["user_mask"])
+        v = TwoTower.item_embed(params, cfg, batch["item_ids"], batch["item_mask"])
+        logits = (u @ v.T) / cfg.temperature  # [B, B]
+        logits = logits - batch["log_q"][None, :]  # sampling correction
+        labels = jnp.arange(u.shape[0])
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+        return loss, {"softmax": loss}
+
+    @staticmethod
+    def retrieval_scores(params, cfg: TwoTowerConfig, user_ids, user_mask, cand_emb):
+        """One (or few) users vs precomputed candidate embeddings [N, D]."""
+        u = TwoTower.user_embed(params, cfg, user_ids, user_mask)
+        return u @ cand_emb.T  # [B, N]
+
+
+# ================================================================= SASRec
+@dataclasses.dataclass(frozen=True)
+class SASRecConfig:
+    embed_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+    item_vocab: int = 500_000
+    dropout: float = 0.0  # inference-style determinism
+
+
+class SASRec:
+    @staticmethod
+    def init(key, cfg: SASRecConfig) -> dict:
+        ki, kp, kb = jax.random.split(key, 3)
+        d = cfg.embed_dim
+        blocks = []
+        for k in jax.random.split(kb, cfg.n_blocks):
+            k1, k2, k3, k4, k5, k6 = jax.random.split(k, 6)
+            blocks.append(
+                {
+                    "wq": dense_init(k1, d, d),
+                    "wk": dense_init(k2, d, d),
+                    "wv": dense_init(k3, d, d),
+                    "wo": dense_init(k4, d, d),
+                    "ff1": dense_init(k5, d, d, bias=True),
+                    "ff2": dense_init(k6, d, d, bias=True),
+                    "ln1": jnp.ones((d,), jnp.float32),
+                    "ln2": jnp.ones((d,), jnp.float32),
+                }
+            )
+        return {
+            "item_table": _embed_init(ki, cfg.item_vocab, d),
+            "pos_table": _embed_init(kp, cfg.seq_len, d),
+            "blocks": blocks,
+        }
+
+    @staticmethod
+    def _ln(scale, x):
+        mu = jnp.mean(x, -1, keepdims=True)
+        var = jnp.mean((x - mu) ** 2, -1, keepdims=True)
+        return (x - mu) * jax.lax.rsqrt(var + 1e-6) * scale
+
+    @staticmethod
+    def hidden(params, cfg: SASRecConfig, seq_ids, seq_mask):
+        """seq_ids i32[B, S] -> causal self-attn hidden states [B, S, D]."""
+        b, s = seq_ids.shape
+        d, h = cfg.embed_dim, cfg.n_heads
+        seq_mask = seq_mask.astype(jnp.float32)
+        x = jnp.take(params["item_table"], seq_ids, axis=0)
+        x = x + params["pos_table"][None, :s, :]
+        x = x * seq_mask[..., None]
+        causal = jnp.tril(jnp.ones((s, s), bool))
+        attn_mask = causal[None, None] & (seq_mask > 0)[:, None, None, :]
+        for blk in params["blocks"]:
+            q = dense(blk["wq"], SASRec._ln(blk["ln1"], x)).reshape(b, s, h, d // h)
+            k = dense(blk["wk"], x).reshape(b, s, h, d // h)
+            v = dense(blk["wv"], x).reshape(b, s, h, d // h)
+            logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(d // h)
+            logits = jnp.where(attn_mask, logits, -1e30)
+            p = jax.nn.softmax(logits, axis=-1)
+            o = jnp.einsum("bhqk,bkhd->bqhd", p, v).reshape(b, s, d)
+            x = x + dense(blk["wo"], o)
+            hdd = SASRec._ln(blk["ln2"], x)
+            x = x + dense(blk["ff2"], jax.nn.relu(dense(blk["ff1"], hdd)))
+            x = x * seq_mask[..., None]
+        return x
+
+    @staticmethod
+    def loss(params, cfg: SASRecConfig, batch) -> tuple[jax.Array, dict]:
+        """Next-item BCE with sampled negatives (paper's training loss)."""
+        hid = SASRec.hidden(params, cfg, batch["seq_ids"], batch["seq_mask"])
+        pos_emb = jnp.take(params["item_table"], batch["pos_ids"], axis=0)
+        neg_emb = jnp.take(params["item_table"], batch["neg_ids"], axis=0)
+        pos_logit = jnp.sum(hid * pos_emb, -1)
+        neg_logit = jnp.sum(hid * neg_emb, -1)
+        mask = batch["seq_mask"]
+        bce = -jax.nn.log_sigmoid(pos_logit) - jax.nn.log_sigmoid(-neg_logit)
+        loss = jnp.sum(bce * mask) / jnp.maximum(jnp.sum(mask), 1)
+        return loss, {"bce": loss}
+
+    @staticmethod
+    def score_candidates(params, cfg: SASRecConfig, seq_ids, seq_mask, cand_ids):
+        """User state (last position) vs candidate items [N] -> [B, N]."""
+        hid = SASRec.hidden(params, cfg, seq_ids, seq_mask)
+        last = hid[:, -1, :]
+        cand = jnp.take(params["item_table"], cand_ids, axis=0)
+        return last @ cand.T
+
+
+# ================================================================ xDeepFM
+@dataclasses.dataclass(frozen=True)
+class XDeepFMConfig:
+    n_fields: int = 39
+    embed_dim: int = 10
+    cin_layers: tuple[int, ...] = (200, 200, 200)
+    mlp: tuple[int, ...] = (400, 400)
+    vocab: int = 10_000_000  # single hashed table, field offsets in ids
+
+
+class XDeepFM:
+    @staticmethod
+    def init(key, cfg: XDeepFMConfig) -> dict:
+        ke, kc, km, kl, ko = jax.random.split(key, 5)
+        f, d = cfg.n_fields, cfg.embed_dim
+        cin = []
+        h_prev = f
+        for i, h in enumerate(cfg.cin_layers):
+            kk = jax.random.fold_in(kc, i)
+            cin.append(
+                jax.random.normal(kk, (h, h_prev * f), jnp.float32)
+                * (1.0 / math.sqrt(h_prev * f))
+            )
+            h_prev = h
+        mlp_dims = (f * d,) + cfg.mlp + (1,)
+        return {
+            "table": _embed_init(ke, cfg.vocab, d),
+            "linear": _embed_init(kl, cfg.vocab, 1),
+            "cin": cin,
+            "mlp": _mlp_init(km, mlp_dims),
+            "cin_out": dense_init(ko, sum(cfg.cin_layers), 1, bias=True),
+        }
+
+    @staticmethod
+    def logits(params, cfg: XDeepFMConfig, field_ids: jax.Array) -> jax.Array:
+        """field_ids i32[B, F] (field offsets pre-added) -> logit [B]."""
+        x0 = jnp.take(params["table"], field_ids, axis=0)  # [B, F, D]
+        b, f, d = x0.shape
+
+        # CIN: x^k[h] = W_k[h] . vec(x^{k-1} (outer) x^0), per embedding dim.
+        xs = []
+        xk = x0
+        for w in params["cin"]:
+            z = jnp.einsum("bhd,bmd->bhmd", xk, x0)  # [B, Hk-1, F, D]
+            z = z.reshape(b, -1, d)  # [B, Hk-1*F, D]
+            xk = jnp.einsum("hp,bpd->bhd", w, z)  # [B, Hk, D]
+            xs.append(jnp.sum(xk, axis=-1))  # sum-pool over D
+        cin_feat = jnp.concatenate(xs, axis=-1)  # [B, sum(H)]
+        cin_logit = dense(params["cin_out"], cin_feat)[:, 0]
+
+        dnn_logit = _mlp(params["mlp"], x0.reshape(b, f * d))[:, 0]
+        lin_logit = jnp.sum(jnp.take(params["linear"], field_ids, axis=0), axis=(1, 2))
+        return cin_logit + dnn_logit + lin_logit
+
+    @staticmethod
+    def loss(params, cfg: XDeepFMConfig, batch) -> tuple[jax.Array, dict]:
+        logit = XDeepFM.logits(params, cfg, batch["field_ids"])
+        y = batch["labels"].astype(jnp.float32)
+        bce = jnp.mean(
+            jnp.maximum(logit, 0) - logit * y + jnp.log1p(jnp.exp(-jnp.abs(logit)))
+        )
+        return bce, {"bce": bce}
+
+
+# ==================================================================== DIN
+@dataclasses.dataclass(frozen=True)
+class DINConfig:
+    embed_dim: int = 18
+    seq_len: int = 100
+    attn_mlp: tuple[int, ...] = (80, 40)
+    mlp: tuple[int, ...] = (200, 80)
+    item_vocab: int = 1_000_000
+
+
+class DIN:
+    @staticmethod
+    def init(key, cfg: DINConfig) -> dict:
+        ke, ka, km = jax.random.split(key, 3)
+        d = cfg.embed_dim
+        attn_dims = (4 * d,) + cfg.attn_mlp + (1,)
+        mlp_dims = (3 * d,) + cfg.mlp + (1,)
+        return {
+            "table": _embed_init(ke, cfg.item_vocab, d),
+            "attn": _mlp_init(ka, attn_dims),
+            "mlp": _mlp_init(km, mlp_dims),
+        }
+
+    @staticmethod
+    def logits(params, cfg: DINConfig, target_ids, hist_ids, hist_mask) -> jax.Array:
+        """target i32[B], hist i32[B, S], mask bool[B, S] -> logit [B]."""
+        t = jnp.take(params["table"], target_ids, axis=0)  # [B, D]
+        h = jnp.take(params["table"], hist_ids, axis=0)  # [B, S, D]
+        tb = jnp.broadcast_to(t[:, None, :], h.shape)
+        feat = jnp.concatenate([h, tb, h - tb, h * tb], axis=-1)  # [B, S, 4D]
+        w = _mlp(params["attn"], feat)[..., 0]  # [B, S] activation weights
+        w = w * hist_mask  # DIN: no softmax, masked sigmoid-free weights
+        interest = jnp.sum(h * w[..., None], axis=1)  # [B, D]
+        z = jnp.concatenate([interest, t, interest * t], axis=-1)
+        return _mlp(params["mlp"], z)[:, 0]
+
+    @staticmethod
+    def loss(params, cfg: DINConfig, batch) -> tuple[jax.Array, dict]:
+        logit = DIN.logits(
+            params, cfg, batch["target_ids"], batch["hist_ids"], batch["hist_mask"]
+        )
+        y = batch["labels"].astype(jnp.float32)
+        bce = jnp.mean(
+            jnp.maximum(logit, 0) - logit * y + jnp.log1p(jnp.exp(-jnp.abs(logit)))
+        )
+        return bce, {"bce": bce}

@@ -1,0 +1,385 @@
+"""Decoder-only transformer LM (dense + MoE) covering the five assigned
+LM architectures: GQA, optional QKV bias (qwen2), qk-norm (qwen3),
+sliding-window attention (mixtral), explicit head_dim, MoE FFN (mixtral,
+dbrx), tied embeddings.
+
+Layers are *stacked* and applied with ``lax.scan`` so HLO size and compile
+time stay flat in depth — essential for the 40-cell dry-run. ``remat=True``
+wraps the layer body in ``jax.checkpoint`` for the training shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.moe import MoEConfig, moe_apply, moe_init
+
+__all__ = ["TransformerConfig", "TransformerLM", "KVCache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    sliding_window: int | None = None
+    rope_theta: float = 10000.0
+    moe: MoEConfig | None = None
+    tie_embeddings: bool = False
+    remat: bool = False
+    attn_chunk: int = 1024
+    compute_dtype: str = "bfloat16"
+    aux_loss_coef: float = 0.01
+    # Perf (§Perf hillclimb): re-shard attention activations so the batch
+    # axis spans these mesh axes during attention. Needed when n_heads does
+    # not divide the model axis (e.g. qwen2's 14 heads vs model=16), where
+    # GSPMD otherwise REPLICATES attention compute across the model axis.
+    attn_batch_axes: tuple[str, ...] | None = None
+    # Perf: compute the CE label term as a one-hot contraction instead of a
+    # gather (a gather over the vocab-sharded logits axis makes GSPMD
+    # all-gather the full [B, S, V] logits). Off by default = baseline.
+    fused_ce: bool = False
+    # Perf: cast the layer stack to compute_dtype ONCE before the scan so
+    # FSDP all-gathers move bf16 instead of f32 (halves weight-gather
+    # traffic). Off by default = baseline.
+    cast_params_once: bool = False
+    # Perf: recompute attention chunks in backward instead of stacking
+    # per-chunk softmax residuals (see layers.chunked_attention).
+    remat_attn_chunks: bool = False
+    # Perf: pin the embedding-lookup output sharding (stops SPMD
+    # "involuntary full rematerialization" transitions on the gather).
+    embed_out_axes: tuple[str, ...] | None = None
+    # Perf: embed table layout — "d" (baseline: d_model over model axis),
+    # "vocab" (rows over model axis; gather output natively D-replicated),
+    # "replicated".
+    embed_shard: str = "d"
+    # Perf: constrain layer weights to their TP layout at point-of-use so
+    # FSDP resolves as a per-layer weight all-gather instead of psum-ing
+    # giant activation partials ([E, cap, d_ff] for MoE — TBs/step).
+    tp_constraints: bool = False
+    # Perf: expert weight layout — "fsdp" (baseline) or "tp_only"
+    # (Megatron-MoE: replicated over data, TP over model; optimizer state
+    # goes ZeRO-1). See launch/sharding.py.
+    moe_weight_mode: str = "fsdp"
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    def param_count(self) -> int:
+        dh = self.resolved_head_dim
+        attn = self.d_model * dh * (self.n_heads * 2 + self.n_kv_heads * 2)
+        if self.moe is None:
+            ffn = 3 * self.d_model * self.d_ff
+        else:
+            ffn = self.moe.n_experts * 3 * self.d_model * self.d_ff + self.d_model * self.moe.n_experts
+        norms = 2 * self.d_model
+        per_layer = attn + ffn + norms
+        embed = self.vocab * self.d_model * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + embed + self.d_model
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k of n_experts)."""
+        if self.moe is None:
+            return self.param_count()
+        dh = self.resolved_head_dim
+        attn = self.d_model * dh * (self.n_heads * 2 + self.n_kv_heads * 2)
+        ffn = self.moe.top_k * 3 * self.d_model * self.d_ff + self.d_model * self.moe.n_experts
+        per_layer = attn + ffn + 2 * self.d_model
+        embed = self.vocab * self.d_model * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + embed + self.d_model
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class KVCache:
+    k: jax.Array  # [L, B, S, Hkv, Dh]
+    v: jax.Array  # [L, B, S, Hkv, Dh]
+    length: jax.Array  # i32[B] tokens currently cached
+
+    @staticmethod
+    def empty(cfg: TransformerConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+        shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.resolved_head_dim)
+        return KVCache(
+            k=jnp.zeros(shape, dtype),
+            v=jnp.zeros(shape, dtype),
+            length=jnp.zeros((batch,), jnp.int32),
+        )
+
+
+class TransformerLM:
+    """Functional namespace: params are plain pytrees."""
+
+    # ------------------------------------------------------------- init
+    @staticmethod
+    def init_layer(key, cfg: TransformerConfig) -> dict:
+        dh = cfg.resolved_head_dim
+        kq, kk, kv, ko, kf = jax.random.split(key, 5)
+        p = {
+            "attn_norm": L.rms_norm_init(cfg.d_model),
+            "ffn_norm": L.rms_norm_init(cfg.d_model),
+            "wq": L.dense_init(kq, cfg.d_model, cfg.n_heads * dh, bias=cfg.qkv_bias),
+            "wk": L.dense_init(kk, cfg.d_model, cfg.n_kv_heads * dh, bias=cfg.qkv_bias),
+            "wv": L.dense_init(kv, cfg.d_model, cfg.n_kv_heads * dh, bias=cfg.qkv_bias),
+            "wo": L.dense_init(ko, cfg.n_heads * dh, cfg.d_model),
+        }
+        if cfg.qk_norm:
+            p["q_norm"] = L.rms_norm_init(dh)
+            p["k_norm"] = L.rms_norm_init(dh)
+        if cfg.moe is None:
+            p["ffn"] = L.swiglu_init(kf, cfg.d_model, cfg.d_ff)
+        else:
+            p["moe"] = moe_init(kf, cfg.moe, cfg.d_model, cfg.d_ff)
+        return p
+
+    @staticmethod
+    def init(key, cfg: TransformerConfig) -> dict:
+        ke, kl, kh = jax.random.split(key, 3)
+        layer_keys = jax.random.split(kl, cfg.n_layers)
+        stacked = jax.vmap(lambda k: TransformerLM.init_layer(k, cfg))(layer_keys)
+        params = {
+            "embed": jax.random.normal(ke, (cfg.vocab, cfg.d_model), jnp.float32)
+            * (1.0 / math.sqrt(cfg.d_model)),
+            "layers": stacked,
+            "final_norm": L.rms_norm_init(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L.dense_init(kh, cfg.d_model, cfg.vocab)
+        return params
+
+    # ------------------------------------------------------- layer body
+    @staticmethod
+    def _attention(p, cfg: TransformerConfig, x, positions, kv=None, kv_len=None):
+        """x [B, S, D]. If kv (k_slice, v_slice [B, Smax, Hkv, Dh]) is given,
+        runs decode against the cache; else self-attention over x."""
+        b, s, _ = x.shape
+        dh = cfg.resolved_head_dim
+        freqs = L.rope_frequencies(dh, cfg.rope_theta)
+        q = L.dense(p["wq"], x).reshape(b, s, cfg.n_heads, dh)
+        k = L.dense(p["wk"], x).reshape(b, s, cfg.n_kv_heads, dh)
+        v = L.dense(p["wv"], x).reshape(b, s, cfg.n_kv_heads, dh)
+        if cfg.attn_batch_axes and b >= 2 and (kv is None or s > 1):
+            from jax.sharding import PartitionSpec as _P
+
+            spec = _P(cfg.attn_batch_axes, None, None, None)
+            q = jax.lax.with_sharding_constraint(q, spec)
+            k = jax.lax.with_sharding_constraint(k, spec)
+            v = jax.lax.with_sharding_constraint(v, spec)
+        if cfg.qk_norm:
+            q = L.rms_norm(p["q_norm"], q)
+            k = L.rms_norm(p["k_norm"], k)
+        q = L.apply_rope(q, positions, freqs)
+        k = L.apply_rope(k, positions, freqs)
+
+        if kv is None:
+            out = L.gqa_attention(
+                q, k, v, causal=True, window=cfg.sliding_window,
+                chunk_size=cfg.attn_chunk, remat_chunks=cfg.remat_attn_chunks,
+            )
+            new_kv = (k, v)
+        else:
+            k_cache, v_cache = kv
+            k_cache = jax.vmap(
+                lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0))
+            )(k_cache, k.astype(k_cache.dtype), kv_len)
+            v_cache = jax.vmap(
+                lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0))
+            )(v_cache, v.astype(v_cache.dtype), kv_len)
+            if s == 1:
+                out = L.decode_attention(
+                    q, k_cache, v_cache, kv_len + s, window=cfg.sliding_window
+                )
+            else:
+                # (Chunked) prefill against the cache: causal over absolute
+                # positions; cache slots beyond kv_len + s are hidden.
+                s_max = k_cache.shape[1]
+                total = (kv_len + s)[:, None]  # [B, 1]
+                kv_pos = jnp.broadcast_to(jnp.arange(s_max), (b, s_max))
+                kv_pos = jnp.where(kv_pos < total, kv_pos, -(10**9))
+                out = L.chunked_attention(
+                    q,
+                    k_cache,
+                    v_cache,
+                    causal=True,
+                    window=cfg.sliding_window,
+                    q_positions=positions,
+                    kv_positions=kv_pos,
+                    chunk_size=min(cfg.attn_chunk, s_max),
+                )
+            new_kv = (k_cache, v_cache)
+        out = out.reshape(b, s, cfg.n_heads * dh)
+        return L.dense(p["wo"], out), new_kv
+
+    @staticmethod
+    def _constrain_tp(p: dict, cfg: TransformerConfig) -> dict:
+        """Pin weights to TP layout (contraction dims UNSHARDED) so the
+        FSDP shards are all-gathered once per layer (§Perf hillclimb)."""
+        from jax.sharding import PartitionSpec as _P
+
+        c = jax.lax.with_sharding_constraint
+        p = dict(p)
+        for k in ("wq", "wk", "wv"):
+            q = dict(p[k])
+            q["w"] = c(q["w"], _P(None, "model"))
+            p[k] = q
+        wo = dict(p["wo"])
+        wo["w"] = c(wo["w"], _P("model", None))
+        p["wo"] = wo
+        if "ffn" in p:
+            ffn = {kk: dict(vv) for kk, vv in p["ffn"].items()}
+            ffn["gate"]["w"] = c(ffn["gate"]["w"], _P(None, "model"))
+            ffn["up"]["w"] = c(ffn["up"]["w"], _P(None, "model"))
+            ffn["down"]["w"] = c(ffn["down"]["w"], _P("model", None))
+            p["ffn"] = ffn
+        if "moe" in p:
+            moe = dict(p["moe"])
+            moe["gate"] = c(moe["gate"], _P(None, None, "model"))
+            moe["up"] = c(moe["up"], _P(None, None, "model"))
+            moe["down"] = c(moe["down"], _P(None, "model", None))
+            p["moe"] = moe
+        return p
+
+    @staticmethod
+    def _layer(p, cfg: TransformerConfig, x, positions, kv=None, kv_len=None):
+        if cfg.tp_constraints:
+            p = TransformerLM._constrain_tp(p, cfg)
+        attn_out, new_kv = TransformerLM._attention(
+            p, cfg, L.rms_norm(p["attn_norm"], x), positions, kv, kv_len
+        )
+        x = x + attn_out
+        h = L.rms_norm(p["ffn_norm"], x)
+        if cfg.moe is None:
+            ffn_out = L.swiglu(p["ffn"], h)
+            aux = jnp.zeros((), jnp.float32)
+        else:
+            b, s, d = h.shape
+            ffn_out, aux = moe_apply(p["moe"], cfg.moe, h.reshape(b * s, d))
+            ffn_out = ffn_out.reshape(b, s, d)
+        return x + ffn_out, new_kv, aux
+
+    # ---------------------------------------------------------- forward
+    @staticmethod
+    def forward(params, cfg: TransformerConfig, tokens: jax.Array) -> tuple[jax.Array, jax.Array]:
+        """tokens i32[B, S] -> (hidden f32[B, S, D], moe aux loss)."""
+        dtype = jnp.dtype(cfg.compute_dtype)
+        x = params["embed"].astype(dtype)[tokens]
+        if cfg.embed_out_axes:
+            from jax.sharding import PartitionSpec as _P
+
+            x = jax.lax.with_sharding_constraint(
+                x, _P(cfg.embed_out_axes, None, None)
+            )
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+        def body(x, lp):
+            out, _, aux = TransformerLM._layer(lp, cfg, x, positions)
+            return out, aux
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        layers = params["layers"]
+        if cfg.cast_params_once:
+            layers = jax.tree.map(
+                lambda w: w.astype(dtype) if w.dtype == jnp.float32 else w, layers
+            )
+        x, auxes = jax.lax.scan(body, x, layers)
+        x = L.rms_norm(params["final_norm"], x)
+        return x, jnp.sum(auxes)
+
+    @staticmethod
+    def logits(params, cfg: TransformerConfig, hidden: jax.Array) -> jax.Array:
+        if cfg.tie_embeddings:
+            return hidden @ params["embed"].T.astype(hidden.dtype)
+        return L.dense(params["lm_head"], hidden)
+
+    @staticmethod
+    def loss(params, cfg: TransformerConfig, tokens, labels):
+        """Causal LM loss; labels < 0 are masked out.
+
+        The label term uses a one-hot contraction instead of
+        ``take_along_axis``: a gather over the vocab-sharded logits axis
+        forces GSPMD to all-gather the full [B, S, V] logits (hundreds of
+        GB at 151k vocab), while the contraction reduces over the sharded
+        axis with a cheap psum (§Perf hillclimb, qwen2 train_4k).
+        """
+        hidden, aux = TransformerLM.forward(params, cfg, tokens)
+        logits = TransformerLM.logits(params, cfg, hidden).astype(jnp.float32)
+        mask = labels >= 0
+        safe = jnp.maximum(labels, 0)
+        if cfg.fused_ce:
+            lse = jax.scipy.special.logsumexp(logits, axis=-1)
+            onehot = jax.nn.one_hot(safe, logits.shape[-1], dtype=logits.dtype)
+            nll = lse - jnp.einsum("bsv,bsv->bs", logits, onehot)
+        else:
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+        loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+        return loss + cfg.aux_loss_coef * aux, {"ce": loss, "aux": aux}
+
+    # ---------------------------------------------------------- serving
+    @staticmethod
+    def prefill(params, cfg: TransformerConfig, tokens: jax.Array, cache: KVCache):
+        """Fill the cache with a prompt; returns (last-position logits, cache)."""
+        dtype = jnp.dtype(cfg.compute_dtype)
+        x = params["embed"].astype(dtype)[tokens]
+        if cfg.embed_out_axes:
+            from jax.sharding import PartitionSpec as _P
+
+            x = jax.lax.with_sharding_constraint(
+                x, _P(cfg.embed_out_axes, None, None)
+            )
+        b, s, _ = x.shape
+        positions = cache.length[:, None] + jnp.arange(s)[None, :]
+
+        def body(x, inp):
+            lp, kc, vc = inp
+            out, (kc2, vc2), _ = TransformerLM._layer(
+                lp, cfg, x, positions, kv=(kc, vc), kv_len=cache.length
+            )
+            return out, (kc2, vc2)
+
+        x, (k_new, v_new) = jax.lax.scan(body, x, (params["layers"], cache.k, cache.v))
+        x = L.rms_norm(params["final_norm"], x)
+        logits = TransformerLM.logits(params, cfg, x[:, -1:, :])
+        new_cache = KVCache(k=k_new, v=v_new, length=cache.length + s)
+        return logits[:, 0, :], new_cache
+
+    @staticmethod
+    def decode_step(params, cfg: TransformerConfig, tokens: jax.Array, cache: KVCache):
+        """tokens i32[B] one new token per sequence -> (logits [B, V], cache)."""
+        dtype = jnp.dtype(cfg.compute_dtype)
+        x = params["embed"].astype(dtype)[tokens][:, None, :]  # [B, 1, D]
+        positions = cache.length[:, None]
+
+        def body(x, inp):
+            lp, kc, vc = inp
+            out, (kc2, vc2), _ = TransformerLM._layer(
+                lp, cfg, x, positions, kv=(kc, vc), kv_len=cache.length
+            )
+            return out, (kc2, vc2)
+
+        x, (k_new, v_new) = jax.lax.scan(body, x, (params["layers"], cache.k, cache.v))
+        x = L.rms_norm(params["final_norm"], x)
+        logits = TransformerLM.logits(params, cfg, x)[:, 0, :]
+        return logits, KVCache(k=k_new, v=v_new, length=cache.length + 1)
+
+    # --------------------------------------------------- abstract shapes
+    @staticmethod
+    def abstract_params(cfg: TransformerConfig, dtype=jnp.float32):
+        """ShapeDtypeStruct pytree without allocating — dry-run input."""
+        return jax.eval_shape(
+            lambda: TransformerLM.init(jax.random.PRNGKey(0), cfg)
+        )

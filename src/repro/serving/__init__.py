@@ -1,0 +1,4 @@
+from repro.serving.batcher import BatchPolicy, RetrievalServer
+from repro.serving.generate import generate
+
+__all__ = ["BatchPolicy", "RetrievalServer", "generate"]

@@ -1,0 +1,104 @@
+"""Request batcher for the retrieval engine (production serving shape).
+
+WARP's jit'd search has a static query-batch dimension, so the server
+collects incoming queries into fixed-size batches: a batch is dispatched
+when it is full OR when the oldest request has waited ``max_wait_s``
+(classic deadline-based continuous batching). Under-full batches are padded
+with masked queries — padding work is bounded by the batch size, and the
+paper's own multi-thread scaling argument (Fig. 10) maps onto batching here:
+on TPU, intra-query parallelism is the mesh, inter-query parallelism is the
+batch.
+
+The clock is injectable so tests drive deadline behavior deterministically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import WarpIndex, WarpSearchConfig, search_batch
+
+__all__ = ["BatchPolicy", "RetrievalServer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPolicy:
+    max_batch: int = 8
+    max_wait_s: float = 0.005
+
+
+@dataclasses.dataclass
+class _Pending:
+    req_id: int
+    q: np.ndarray
+    qmask: np.ndarray
+    arrival: float
+
+
+class RetrievalServer:
+    def __init__(
+        self,
+        index: WarpIndex,
+        config: WarpSearchConfig = WarpSearchConfig(),
+        policy: BatchPolicy = BatchPolicy(),
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.index = index
+        self.config = config
+        self.policy = policy
+        self.clock = clock
+        self._queue: deque[_Pending] = deque()
+        self._results: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+        self._next_id = 0
+        self.stats = {"batches": 0, "padded_slots": 0, "served": 0}
+
+    # ---- client API ----
+    def submit(self, q: np.ndarray, qmask: np.ndarray | None = None) -> int:
+        if qmask is None:
+            qmask = np.ones(q.shape[:-1], bool)
+        rid = self._next_id
+        self._next_id += 1
+        self._queue.append(_Pending(rid, q, qmask, self.clock()))
+        return rid
+
+    def poll(self, req_id: int):
+        return self._results.pop(req_id, None)
+
+    # ---- server loop ----
+    def step(self, *, force: bool = False) -> int:
+        """Dispatch at most one batch; returns number of requests served."""
+        if not self._queue:
+            return 0
+        full = len(self._queue) >= self.policy.max_batch
+        expired = (self.clock() - self._queue[0].arrival) >= self.policy.max_wait_s
+        if not (full or expired or force):
+            return 0
+
+        take = min(len(self._queue), self.policy.max_batch)
+        batch = [self._queue.popleft() for _ in range(take)]
+        b = self.policy.max_batch
+        qm, d = batch[0].q.shape
+        q = np.zeros((b, qm, d), np.float32)
+        mask = np.zeros((b, qm), bool)
+        for i, p in enumerate(batch):
+            q[i] = p.q
+            mask[i] = p.qmask
+        res = search_batch(self.index, jnp.asarray(q), jnp.asarray(mask), self.config)
+        scores = np.asarray(res.scores)
+        docs = np.asarray(res.doc_ids)
+        for i, p in enumerate(batch):
+            self._results[p.req_id] = (scores[i], docs[i])
+        self.stats["batches"] += 1
+        self.stats["padded_slots"] += b - take
+        self.stats["served"] += take
+        return take
+
+    def drain(self) -> None:
+        while self._queue:
+            self.step(force=True)

@@ -1,0 +1,62 @@
+"""LM serving driver: prefill + decode loop over the KV cache.
+
+``generate`` is the host-side loop the decode_32k / long_500k dry-run cells
+lower one step of. Sampling is greedy or temperature-based; the decode step
+itself is jit'd once and reused across positions (static cache shapes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import KVCache, TransformerConfig, TransformerLM
+
+__all__ = ["generate"]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _prefill(params, cfg: TransformerConfig, tokens, cache):
+    return TransformerLM.prefill(params, cfg, tokens, cache)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "temperature"))
+def _decode(params, cfg: TransformerConfig, tokens, cache, key, temperature: float):
+    logits, cache = TransformerLM.decode_step(params, cfg, tokens, cache)
+    if temperature == 0.0:
+        nxt = jnp.argmax(logits, axis=-1)
+    else:
+        nxt = jax.random.categorical(key, logits / temperature, axis=-1)
+    return nxt.astype(jnp.int32), cache
+
+
+def generate(
+    params,
+    cfg: TransformerConfig,
+    prompt: jax.Array,  # i32[B, S_prompt]
+    *,
+    max_new_tokens: int,
+    max_len: int | None = None,
+    temperature: float = 0.0,
+    key: jax.Array | None = None,
+    cache_dtype=jnp.bfloat16,
+):
+    """Returns i32[B, max_new_tokens] sampled continuations."""
+    b, s_prompt = prompt.shape
+    max_len = max_len or (s_prompt + max_new_tokens)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    cache = KVCache.empty(cfg, b, max_len, cache_dtype)
+    logits, cache = _prefill(params, cfg, prompt, cache)
+    if temperature == 0.0:
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    else:
+        key, sub = jax.random.split(key)
+        nxt = jax.random.categorical(sub, logits / temperature, axis=-1).astype(jnp.int32)
+    out = [nxt]
+    for _ in range(max_new_tokens - 1):
+        key, sub = jax.random.split(key)
+        nxt, cache = _decode(params, cfg, nxt, cache, sub, temperature)
+        out.append(nxt)
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,15 @@
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.train.loop import TrainState, make_train_step, train_loop
+from repro.train.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "TrainState",
+    "make_train_step",
+    "train_loop",
+    "save_checkpoint",
+    "restore_checkpoint",
+    "latest_step",
+]

@@ -1,0 +1,95 @@
+"""Per-architecture smoke tests: every (arch x shape) cell instantiates a
+REDUCED config of the same family and runs one forward/train step on CPU,
+asserting output shapes and no NaNs. Full configs are exercised only via
+the dry-run (ShapeDtypeStruct, no allocation)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS, all_cells, get_arch
+
+CELLS = all_cells(include_warp=True)
+
+
+@pytest.mark.parametrize("arch_name,shape", CELLS, ids=[f"{a}::{s}" for a, s in CELLS])
+def test_cell_smoke(arch_name, shape):
+    arch = get_arch(arch_name)
+    out = arch.family.smoke(arch, shape, jax.random.PRNGKey(0))
+    for name, val in out.items():
+        arr = np.atleast_1d(np.asarray(val))
+        finite = np.isfinite(arr)
+        # top-k paddings may be -inf; require at least some finite signal
+        assert finite.any(), f"{arch_name}/{shape}/{name} all non-finite"
+        assert not np.isnan(arr).any(), f"{arch_name}/{shape}/{name} has NaN"
+
+
+def test_registry_has_all_assigned_archs():
+    expected = {
+        "mixtral-8x7b",
+        "dbrx-132b",
+        "qwen2-0.5b",
+        "yi-6b",
+        "qwen3-4b",
+        "gin-tu",
+        "two-tower-retrieval",
+        "sasrec",
+        "xdeepfm",
+        "din",
+    }
+    assert expected <= set(ARCHS)
+    # 40 assigned cells + 3 warp-xtr cells
+    assert len(all_cells(include_warp=False)) == 40
+    assert len(CELLS) == 43
+
+
+def test_full_configs_match_assignment():
+    m = get_arch("mixtral-8x7b").config
+    assert (m.n_layers, m.d_model, m.n_heads, m.n_kv_heads, m.d_ff, m.vocab) == (
+        32, 4096, 32, 8, 14336, 32000)
+    assert m.moe.n_experts == 8 and m.moe.top_k == 2 and m.sliding_window == 4096
+    d = get_arch("dbrx-132b").config
+    assert (d.n_layers, d.d_model, d.n_heads, d.n_kv_heads, d.d_ff, d.vocab) == (
+        40, 6144, 48, 8, 10752, 100352)
+    assert d.moe.n_experts == 16 and d.moe.top_k == 4
+    q2 = get_arch("qwen2-0.5b").config
+    assert (q2.n_layers, q2.d_model, q2.n_heads, q2.n_kv_heads, q2.d_ff, q2.vocab) == (
+        24, 896, 14, 2, 4864, 151936)
+    assert q2.qkv_bias
+    yi = get_arch("yi-6b").config
+    assert (yi.n_layers, yi.d_model, yi.n_heads, yi.n_kv_heads, yi.d_ff, yi.vocab) == (
+        32, 4096, 32, 4, 11008, 64000)
+    q3 = get_arch("qwen3-4b").config
+    assert (q3.n_layers, q3.d_model, q3.n_heads, q3.n_kv_heads, q3.d_ff, q3.vocab) == (
+        36, 2560, 32, 8, 9728, 151936)
+    assert q3.qk_norm
+    g = get_arch("gin-tu").config
+    assert g.n_layers == 5 and g.d_hidden == 64
+    tt = get_arch("two-tower-retrieval").config
+    assert tt.embed_dim == 256 and tt.tower_mlp == (1024, 512, 256)
+    sr = get_arch("sasrec").config
+    assert (sr.embed_dim, sr.n_blocks, sr.n_heads, sr.seq_len) == (50, 2, 1, 50)
+    xd = get_arch("xdeepfm").config
+    assert xd.n_fields == 39 and xd.embed_dim == 10 and xd.cin_layers == (200, 200, 200)
+    dn = get_arch("din").config
+    assert dn.embed_dim == 18 and dn.seq_len == 100 and dn.attn_mlp == (80, 40)
+
+
+def test_abstract_state_no_allocation():
+    """Full-scale abstract params must be ShapeDtypeStructs (no memory)."""
+    arch = get_arch("mixtral-8x7b")
+    state = arch.family.abstract_state(arch, "train_4k")
+    leaves = jax.tree.leaves(state)
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+    total = sum(np.prod(l.shape) for l in leaves if l.dtype == jnp.float32)
+    # params + m + v for a ~46.7B-param model
+    assert total > 100e9
+
+
+def test_param_counts_sane():
+    assert abs(get_arch("mixtral-8x7b").config.param_count() - 46.7e9) < 2e9
+    assert abs(get_arch("yi-6b").config.param_count() - 6.06e9) < 0.4e9
+    assert abs(get_arch("qwen2-0.5b").config.param_count() - 0.5e9) < 0.15e9
+    assert abs(get_arch("dbrx-132b").config.param_count() - 132e9) < 8e9
+    assert abs(get_arch("qwen3-4b").config.param_count() - 4e9) < 0.6e9

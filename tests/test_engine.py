@@ -1,0 +1,176 @@
+"""End-to-end WARP engine behavior: parity identities + quality invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    IndexBuildConfig,
+    WarpSearchConfig,
+    build_index,
+    maxsim_bruteforce,
+    plaid_style_search,
+    search,
+    search_batch,
+    warp_select,
+    xtr_reference,
+)
+from repro.data import make_corpus, make_queries
+
+
+@pytest.fixture(scope="module")
+def small_setup():
+    corpus = make_corpus(n_docs=400, mean_doc_len=20, seed=0)
+    idx = build_index(
+        corpus.emb,
+        corpus.token_doc_ids,
+        corpus.n_docs,
+        IndexBuildConfig(n_centroids=128, nbits=4, kmeans_iters=4),
+    )
+    q, qmask, rel = make_queries(corpus, n_queries=8, seed=1)
+    return corpus, idx, q, qmask, rel
+
+
+def test_index_geometry(small_setup):
+    corpus, idx, *_ = small_setup
+    assert idx.n_tokens == corpus.n_tokens
+    assert idx.packed_codes.shape == (corpus.n_tokens, 128 * 4 // 8)
+    offs = np.asarray(idx.cluster_offsets)
+    sizes = np.asarray(idx.cluster_sizes)
+    assert offs[0] == 0 and offs[-1] == corpus.n_tokens
+    np.testing.assert_array_equal(np.diff(offs), sizes)
+    assert idx.cap == sizes.max()
+    # centroids normalized
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(idx.centroids), axis=-1), 1.0, rtol=1e-4
+    )
+
+
+def test_implicit_equals_explicit_decompression(small_setup):
+    """Paper Eq. 4-5: the implicit path must match PLAID-style explicit."""
+    _, idx, q, qmask, _ = small_setup
+    cfg = WarpSearchConfig(nprobe=16, k=20)
+    for i in range(4):
+        r_imp = search(idx, q[i], jnp.asarray(qmask[i]), cfg)
+        r_exp = plaid_style_search(idx, q[i], jnp.asarray(qmask[i]), cfg)
+        np.testing.assert_allclose(
+            np.asarray(r_imp.scores), np.asarray(r_exp.scores), rtol=1e-4, atol=1e-4
+        )
+        np.testing.assert_array_equal(
+            np.asarray(r_imp.doc_ids), np.asarray(r_exp.doc_ids)
+        )
+
+
+def test_kernel_path_matches_ref_path(small_setup):
+    _, idx, q, qmask, _ = small_setup
+    r0 = search(idx, q[0], jnp.asarray(qmask[0]), WarpSearchConfig(nprobe=8, k=10, use_kernel=False))
+    r1 = search(idx, q[0], jnp.asarray(qmask[0]), WarpSearchConfig(nprobe=8, k=10, use_kernel=True))
+    np.testing.assert_allclose(np.asarray(r0.scores), np.asarray(r1.scores), rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(r0.doc_ids), np.asarray(r1.doc_ids))
+
+
+def test_full_probe_score_parity_with_bruteforce(small_setup):
+    """nprobe=C & fine codec: WARP doc scores ≈ exact MaxSim doc scores."""
+    corpus, _, q, qmask, _ = small_setup
+    idx8 = build_index(
+        corpus.emb,
+        corpus.token_doc_ids,
+        corpus.n_docs,
+        IndexBuildConfig(n_centroids=128, nbits=8, kmeans_iters=4),
+    )
+    cfg = WarpSearchConfig(nprobe=128, k=corpus.n_docs, k_impute=128)
+    r = search(idx8, q[0], jnp.asarray(qmask[0]), cfg)
+    g = maxsim_bruteforce(
+        jnp.asarray(q[0]),
+        jnp.asarray(qmask[0]),
+        jnp.asarray(corpus.emb / np.linalg.norm(corpus.emb, axis=-1, keepdims=True)),
+        jnp.asarray(corpus.token_doc_ids),
+        n_docs=corpus.n_docs,
+        k=corpus.n_docs,
+    )
+    ws = np.zeros(corpus.n_docs)
+    gs = np.zeros(corpus.n_docs)
+    ws[np.asarray(r.doc_ids)] = np.asarray(r.scores)
+    gs[np.asarray(g.doc_ids)] = np.asarray(g.scores)
+    # Bounded only by the b=8 codec error.
+    assert np.abs(ws - gs).max() < 0.06, np.abs(ws - gs).max()
+
+
+def test_recall_improves_with_nprobe(small_setup):
+    corpus, idx, q, qmask, rel = small_setup
+    recalls = []
+    for nprobe in (2, 16, 64):
+        cfg = WarpSearchConfig(nprobe=nprobe, k=10, t_prime=2000, k_impute=128)
+        hits = sum(
+            int(rel[i] in np.asarray(search(idx, q[i], jnp.asarray(qmask[i]), cfg).doc_ids))
+            for i in range(len(rel))
+        )
+        recalls.append(hits)
+    assert recalls[0] <= recalls[1] <= recalls[2]
+    assert recalls[2] >= len(rel) - 1  # near-perfect at deep probes
+
+
+def test_batch_matches_single(small_setup):
+    _, idx, q, qmask, _ = small_setup
+    cfg = WarpSearchConfig(nprobe=8, k=10)
+    rb = search_batch(idx, q[:4], jnp.asarray(qmask[:4]), cfg)
+    for i in range(4):
+        rs = search(idx, q[i], jnp.asarray(qmask[i]), cfg)
+        np.testing.assert_allclose(
+            np.asarray(rb.scores[i]), np.asarray(rs.scores), rtol=1e-5, atol=1e-5
+        )
+        np.testing.assert_array_equal(np.asarray(rb.doc_ids[i]), np.asarray(rs.doc_ids))
+
+
+def test_qmask_zeroes_masked_tokens(small_setup):
+    """Adding garbage masked tokens must not change results."""
+    _, idx, q, qmask, _ = small_setup
+    cfg = WarpSearchConfig(nprobe=8, k=10)
+    q0 = np.array(q[0])
+    m0 = np.array(qmask[0])
+    r_base = search(idx, q0, jnp.asarray(m0), cfg)
+    q_noise = q0.copy()
+    q_noise[~m0] = np.random.default_rng(7).standard_normal((int((~m0).sum()), 128))
+    r_noise = search(idx, q_noise, jnp.asarray(m0), cfg)
+    np.testing.assert_allclose(
+        np.asarray(r_base.scores), np.asarray(r_noise.scores), rtol=1e-5, atol=1e-5
+    )
+    np.testing.assert_array_equal(np.asarray(r_base.doc_ids), np.asarray(r_noise.doc_ids))
+
+
+def test_warpselect_imputation_semantics():
+    """Hand-built case: m_i = score at first cumulative-size crossing."""
+    q = jnp.asarray([[1.0, 0.0], [0.0, 1.0]])
+    centroids = jnp.asarray([[1.0, 0.0], [0.8, 0.6], [0.0, 1.0], [-1.0, 0.0]])
+    sizes = jnp.asarray([5, 3, 4, 100], jnp.int32)
+    out = warp_select(q, centroids, sizes, nprobe=2, t_prime=6, k_impute=4)
+    # qtok 0 scores desc: c0 (1.0, size 5), c1 (0.8, size 3) -> cumsum 5, 8 > 6
+    np.testing.assert_allclose(float(out.mse[0]), 0.8, rtol=1e-6)
+    # qtok 1: c2 (1.0, size 4), c1 (0.6, size 3) -> cumsum 4, 7 > 6
+    np.testing.assert_allclose(float(out.mse[1]), 0.6, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(out.probe_cids[0]), [0, 1])
+    np.testing.assert_array_equal(np.asarray(out.probe_cids[1]), [2, 1])
+
+
+def test_xtr_reference_full_retrieval_equals_bruteforce(small_setup):
+    """With k' = n_tokens the XTR baseline degenerates to exact MaxSim."""
+    corpus, _, q, qmask, _ = small_setup
+    emb = corpus.emb / np.linalg.norm(corpus.emb, axis=-1, keepdims=True)
+    r = xtr_reference(
+        jnp.asarray(q[0]),
+        jnp.asarray(qmask[0]),
+        jnp.asarray(emb),
+        jnp.asarray(corpus.token_doc_ids),
+        k_prime=corpus.n_tokens,
+        k=10,
+    )
+    g = maxsim_bruteforce(
+        jnp.asarray(q[0]),
+        jnp.asarray(qmask[0]),
+        jnp.asarray(emb),
+        jnp.asarray(corpus.token_doc_ids),
+        n_docs=corpus.n_docs,
+        k=10,
+    )
+    np.testing.assert_allclose(np.asarray(r.scores), np.asarray(g.scores), rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(r.doc_ids), np.asarray(g.doc_ids))

@@ -1,0 +1,55 @@
+"""§Perf engine variants must be semantics-preserving: LUT selective sum,
+segment reduction, and qtoken scanning all match the baseline engine."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import IndexBuildConfig, WarpSearchConfig, build_index, search
+from repro.data import make_corpus, make_queries
+
+
+@pytest.fixture(scope="module")
+def setup():
+    corpus = make_corpus(n_docs=300, mean_doc_len=16, seed=5)
+    idx = build_index(
+        corpus.emb, corpus.token_doc_ids, corpus.n_docs,
+        IndexBuildConfig(n_centroids=64, nbits=4, kmeans_iters=3),
+    )
+    q, qmask, rel = make_queries(corpus, n_queries=4, seed=6)
+    return idx, q, qmask
+
+
+BASE = dict(nprobe=16, k=20, t_prime=1000, k_impute=64)
+
+VARIANTS = [
+    dict(sum_impl="lut"),
+    dict(reduce_impl="segment"),
+    dict(scan_qtokens=True),
+    dict(sum_impl="lut", reduce_impl="segment", scan_qtokens=True),
+]
+
+
+@pytest.mark.parametrize("overrides", VARIANTS, ids=[str(v) for v in VARIANTS])
+def test_variant_matches_baseline(setup, overrides):
+    idx, q, qmask = setup
+    base_cfg = WarpSearchConfig(**BASE)
+    var_cfg = WarpSearchConfig(**BASE, **overrides)
+    for i in range(3):
+        a = search(idx, q[i], jnp.asarray(qmask[i]), base_cfg)
+        b = search(idx, q[i], jnp.asarray(qmask[i]), var_cfg)
+        np.testing.assert_allclose(
+            np.asarray(a.scores), np.asarray(b.scores), rtol=1e-4, atol=1e-4
+        )
+        np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+
+
+def test_scores_descending_and_ids_valid(setup):
+    idx, q, qmask = setup
+    res = search(idx, q[0], jnp.asarray(qmask[0]), WarpSearchConfig(**BASE))
+    s = np.asarray(res.scores)
+    d = np.asarray(res.doc_ids)
+    finite = np.isfinite(s)
+    assert np.all(np.diff(s[finite]) <= 1e-6)
+    assert np.all((d[finite] >= 0) & (d[finite] < idx.n_docs))
+    assert np.all(d[~finite] == -1)

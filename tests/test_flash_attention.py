@@ -1,0 +1,65 @@
+"""Flash-attention forward Pallas kernel vs dense SDPA oracle, and vs the
+chunked_attention jnp path used by the transformer."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.models import layers as L
+
+
+def _ref_sdpa(q, k, v, causal, window):
+    b, sq, h, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    if h != hkv:
+        k = jnp.repeat(k, h // hkv, axis=2)
+        v = jnp.repeat(v, h // hkv, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(dh)
+    rel = jnp.arange(sq)[:, None] - jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= rel >= 0
+    if window is not None:
+        mask &= rel < window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+CASES = [
+    (2, 128, 4, 2, 32, True, None),
+    (1, 256, 2, 2, 64, True, 64),
+    (2, 128, 4, 4, 32, False, None),
+    (1, 384, 2, 1, 16, True, 128),
+    (1, 200, 2, 2, 32, True, None),  # padding path (causal)
+]
+
+
+@pytest.mark.parametrize("b,s,h,hkv,dh,causal,window", CASES)
+def test_flash_matches_dense_oracle(b, s, h, hkv, dh, causal, window, rng):
+    q = jnp.asarray(rng.standard_normal((b, s, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, dh)), jnp.float32)
+    want = _ref_sdpa(q, k, v, causal, window)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window, tq=64, tk=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_flash_matches_chunked_attention(rng):
+    b, s, h, dh = 1, 256, 2, 32
+    q = jnp.asarray(rng.standard_normal((b, s, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, h, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, h, dh)), jnp.float32)
+    a = L.chunked_attention(q, k, v, causal=True, chunk_size=64)
+    f = ops.flash_attention(q, k, v, causal=True, tq=64, tk=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(f), rtol=2e-4, atol=2e-4)
+
+
+def test_flash_rejects_noncausal_padding(rng):
+    q = jnp.zeros((1, 100, 2, 16))
+    with pytest.raises(ValueError):
+        ops.flash_attention(q, q, q, causal=False, tq=64, tk=64)

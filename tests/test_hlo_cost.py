@@ -1,0 +1,74 @@
+"""Trip-count-aware HLO analyzer: the measurement tool must itself be
+verified (XLA's cost_analysis counts scan bodies once — see hlo_cost.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import analyze_hlo
+
+M = 128
+
+
+@pytest.fixture(scope="module")
+def w():
+    return jnp.ones((M, M))
+
+
+def _flops(fn, *specs):
+    compiled = jax.jit(fn).lower(*specs).compile()
+    return analyze_hlo(compiled.as_text(), 1).flops
+
+
+def test_scan_flops_match_unroll(w):
+    sds = jax.ShapeDtypeStruct((M, M), jnp.float32)
+
+    def f_scan(x):
+        out, _ = jax.lax.scan(lambda c, _: (c @ w, None), x, None, length=10)
+        return out
+
+    def f_unroll(x):
+        for _ in range(10):
+            x = x @ w
+        return x
+
+    expect = 10 * 2 * M**3
+    got_scan = _flops(f_scan, sds)
+    got_unroll = _flops(f_unroll, sds)
+    assert abs(got_scan - expect) / expect < 0.02, got_scan
+    assert abs(got_unroll - expect) / expect < 0.02, got_unroll
+    # the raw XLA number under-counts the scan body (the bug we fix):
+    xla = jax.jit(f_scan).lower(sds).compile().cost_analysis()["flops"]
+    assert xla < expect / 5
+
+
+def test_nested_scan_multiplies(w):
+    sds = jax.ShapeDtypeStruct((M, M), jnp.float32)
+
+    def f(x):
+        def outer(c, _):
+            c2, _ = jax.lax.scan(lambda c3, _: (c3 @ w, None), c, None, length=3)
+            return c2, None
+
+        out, _ = jax.lax.scan(outer, x, None, length=4)
+        return out
+
+    expect = 12 * 2 * M**3
+    got = _flops(f, sds)
+    assert abs(got - expect) / expect < 0.02, got
+
+
+def test_collective_traffic_in_scan():
+    import os
+
+    if len(jax.devices()) < 2:
+        pytest.skip("needs multiple devices (covered by dryrun artifacts)")
+
+
+def test_bytes_positive_and_finite(w):
+    sds = jax.ShapeDtypeStruct((M, M), jnp.float32)
+    c = jax.jit(lambda x: x @ w + 1.0).lower(sds).compile()
+    cost = analyze_hlo(c.as_text(), 1)
+    assert cost.bytes > 2 * M * M * 4
+    assert np.isfinite(cost.bytes) and np.isfinite(cost.flops)

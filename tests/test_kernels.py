@@ -1,0 +1,95 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs ref.py oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("nbits", [2, 4])
+@pytest.mark.parametrize("q", [1, 4, 32])
+@pytest.mark.parametrize("n", [1, 7, 256, 513])
+@pytest.mark.parametrize("dim", [128])
+def test_selective_sum_shapes(nbits, q, n, dim, rng):
+    pb = dim * nbits // 8
+    packed = rng.integers(0, 256, (q, n, pb), dtype=np.uint8)
+    v = rng.standard_normal((q, dim, 1 << nbits)).astype(np.float32)
+    r = ref.selective_sum(jnp.asarray(packed), jnp.asarray(v), nbits=nbits, dim=dim)
+    k = ops.selective_sum(
+        jnp.asarray(packed), jnp.asarray(v), nbits=nbits, dim=dim, use_kernel=True
+    )
+    assert k.shape == (q, n)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(k), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dim", [64, 256])
+def test_selective_sum_other_dims(dim, rng):
+    nbits, q, n = 4, 2, 64
+    pb = dim * nbits // 8
+    packed = rng.integers(0, 256, (q, n, pb), dtype=np.uint8)
+    v = rng.standard_normal((q, dim, 16)).astype(np.float32)
+    r = ref.selective_sum(jnp.asarray(packed), jnp.asarray(v), nbits=nbits, dim=dim)
+    k = ops.selective_sum(
+        jnp.asarray(packed), jnp.asarray(v), nbits=nbits, dim=dim, use_kernel=True
+    )
+    np.testing.assert_allclose(np.asarray(r), np.asarray(k), rtol=1e-5, atol=1e-5)
+
+
+def test_selective_sum_nbits8_falls_back(rng):
+    q, n, dim = 2, 32, 128
+    packed = rng.integers(0, 256, (q, n, dim), dtype=np.uint8)
+    v = rng.standard_normal((q, dim, 256)).astype(np.float32)
+    out = ops.selective_sum(
+        jnp.asarray(packed), jnp.asarray(v), nbits=8, dim=dim, use_kernel=True
+    )
+    r = ref.selective_sum(jnp.asarray(packed), jnp.asarray(v), nbits=8, dim=dim)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    nbits=st.sampled_from([2, 4]),
+    n=st.integers(1, 300),
+)
+def test_selective_sum_property(seed, nbits, n):
+    rng = np.random.default_rng(seed)
+    q, dim = 2, 128
+    pb = dim * nbits // 8
+    packed = rng.integers(0, 256, (q, n, pb), dtype=np.uint8)
+    v = rng.standard_normal((q, dim, 1 << nbits)).astype(np.float32)
+    r = ref.selective_sum(jnp.asarray(packed), jnp.asarray(v), nbits=nbits, dim=dim)
+    k = ops.selective_sum(
+        jnp.asarray(packed), jnp.asarray(v), nbits=nbits, dim=dim, use_kernel=True
+    )
+    np.testing.assert_allclose(np.asarray(r), np.asarray(k), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("v_rows,d,s,l", [(100, 32, 5, 3), (1000, 64, 37, 10), (513, 128, 8, 64)])
+def test_embedding_bag_kernel_vs_dense(v_rows, d, s, l, rng):
+    table = rng.standard_normal((v_rows, d)).astype(np.float32)
+    idx = rng.integers(0, v_rows, (s, l)).astype(np.int32)
+    w = (rng.random((s, l)) > 0.3).astype(np.float32) * rng.random((s, l)).astype(np.float32)
+    out_k = ops.embedding_bag(
+        jnp.asarray(table), None, bag_indices=jnp.asarray(idx), bag_weights=jnp.asarray(w), use_kernel=True
+    )
+    out_d = ops.embedding_bag(
+        jnp.asarray(table), None, bag_indices=jnp.asarray(idx), bag_weights=jnp.asarray(w), use_kernel=False
+    )
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_d), rtol=1e-4, atol=1e-4)
+
+
+def test_embedding_bag_flat_segments(rng):
+    table = rng.standard_normal((50, 16)).astype(np.float32)
+    indices = rng.integers(0, 50, (40,)).astype(np.int32)
+    seg = np.sort(rng.integers(0, 7, (40,))).astype(np.int32)
+    out = ops.embedding_bag(
+        jnp.asarray(table), jnp.asarray(indices), jnp.asarray(seg), num_segments=7
+    )
+    want = np.zeros((7, 16), np.float32)
+    for i, s in zip(indices, seg):
+        want[s] += table[i]
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-5, atol=1e-5)

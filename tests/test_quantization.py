@@ -1,0 +1,83 @@
+"""Residual codec: pack/unpack roundtrip, quantile buckets, decompress."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import quantization as qz
+
+DIM = 128
+
+
+@pytest.mark.parametrize("nbits", [2, 4, 8])
+def test_pack_unpack_roundtrip(nbits, rng):
+    n = 57
+    codes = rng.integers(0, 1 << nbits, (n, DIM), dtype=np.uint8)
+    packed = qz.pack_codes(jnp.asarray(codes), nbits)
+    assert packed.shape == (n, DIM * nbits // 8)
+    out = qz.unpack_codes(packed, nbits, DIM)
+    np.testing.assert_array_equal(np.asarray(out), codes)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nbits=st.sampled_from([2, 4, 8]),
+    n=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pack_unpack_roundtrip_property(nbits, n, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 1 << nbits, (n, DIM), dtype=np.uint8)
+    out = qz.unpack_codes(qz.pack_codes(jnp.asarray(codes), nbits), nbits, DIM)
+    np.testing.assert_array_equal(np.asarray(out), codes)
+
+
+@pytest.mark.parametrize("nbits", [2, 4, 8])
+def test_buckets_are_sorted_quantiles(nbits, rng):
+    res = rng.standard_normal((4096, DIM)).astype(np.float32) * 0.1
+    cutoffs, weights = qz.compute_buckets(jnp.asarray(res), nbits)
+    c, w = np.asarray(cutoffs), np.asarray(weights)
+    assert c.shape == ((1 << nbits) - 1,)
+    assert w.shape == (1 << nbits,)
+    assert np.all(np.diff(c) >= 0)
+    assert np.all(np.diff(w) >= 0)
+    # Representative weights interleave the boundaries.
+    assert np.all(w[:-1] <= c) and np.all(c <= w[1:])
+
+
+@pytest.mark.parametrize("nbits", [2, 4, 8])
+def test_encode_decompress_reduces_error(nbits, rng):
+    """Quantized reconstruction must beat centroid-only reconstruction."""
+    n = 1024
+    centroid = rng.standard_normal((DIM,)).astype(np.float32)
+    centroid /= np.linalg.norm(centroid)
+    res = (rng.standard_normal((n, DIM)) * 0.08).astype(np.float32)
+    vecs = centroid[None, :] + res
+
+    cutoffs, weights = qz.compute_buckets(jnp.asarray(res), nbits)
+    codes = qz.encode_residuals(jnp.asarray(res), cutoffs)
+    packed = qz.pack_codes(codes, nbits)
+    recon = qz.decompress(
+        packed,
+        jnp.broadcast_to(jnp.asarray(centroid), (n, DIM)),
+        weights,
+        nbits=nbits,
+        dim=DIM,
+    )
+    err_q = float(jnp.mean(jnp.linalg.norm(recon - vecs, axis=-1)))
+    err_c = float(np.mean(np.linalg.norm(res, axis=-1)))
+    assert err_q < err_c * 0.8, (err_q, err_c)
+
+
+def test_more_bits_less_error(rng):
+    res = (rng.standard_normal((2048, DIM)) * 0.08).astype(np.float32)
+    errs = {}
+    for nbits in (2, 4, 8):
+        cutoffs, weights = qz.compute_buckets(jnp.asarray(res), nbits)
+        codes = qz.encode_residuals(jnp.asarray(res), cutoffs)
+        packed = qz.pack_codes(codes, nbits)
+        recon = np.asarray(weights)[np.asarray(qz.unpack_codes(packed, nbits, DIM), np.int32)]
+        errs[nbits] = float(np.mean(np.abs(recon - res)))
+    assert errs[8] < errs[4] < errs[2]

@@ -1,0 +1,129 @@
+"""Two-stage reduction vs a dense numpy oracle (paper Eq. 1/6/7/8)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.reduction import two_stage_reduce
+
+
+def _oracle(doc_ids, qtok_ids, scores, valid, mse, n_docs, q_max):
+    """Dense score matrix + row-sum with imputation: the textbook Eq. (1)."""
+    mat = np.full((n_docs, q_max), -np.inf)
+    seen = np.zeros((n_docs,), bool)
+    for d, t, s, v in zip(doc_ids, qtok_ids, scores, valid):
+        if v:
+            mat[d, t] = max(mat[d, t], s)
+            seen[d] = True
+    out = {}
+    for d in range(n_docs):
+        if not seen[d]:
+            continue
+        total = 0.0
+        for t in range(q_max):
+            total += mat[d, t] if np.isfinite(mat[d, t]) else mse[t]
+        out[d] = total
+    return out
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(4, 200),
+    n_docs=st.integers(1, 30),
+    q_max=st.integers(1, 8),
+    k=st.integers(1, 4),
+)
+def test_two_stage_reduce_matches_oracle(seed, n, n_docs, q_max, k):
+    if k > n:
+        k = n
+    rng = np.random.default_rng(seed)
+    doc_ids = rng.integers(0, n_docs, n).astype(np.int32)
+    qtok_ids = rng.integers(0, q_max, n).astype(np.int32)
+    scores = rng.standard_normal(n).astype(np.float32)
+    valid = rng.random(n) > 0.2
+    mse = (rng.standard_normal(q_max) * 0.1).astype(np.float32)
+
+    res = two_stage_reduce(
+        jnp.asarray(doc_ids),
+        jnp.asarray(qtok_ids),
+        jnp.asarray(scores),
+        jnp.asarray(valid),
+        jnp.asarray(mse),
+        q_max=q_max,
+        k=k,
+    )
+    got_scores = np.asarray(res.scores)
+    got_docs = np.asarray(res.doc_ids)
+
+    want = _oracle(doc_ids, qtok_ids, scores, valid, mse, n_docs, q_max)
+    want_sorted = sorted(want.items(), key=lambda kv: -kv[1])
+
+    n_expect = min(k, len(want))
+    for i in range(n_expect):
+        assert np.isfinite(got_scores[i])
+        assert got_docs[i] in want, got_docs[i]
+        np.testing.assert_allclose(got_scores[i], want[got_docs[i]], rtol=1e-4, atol=1e-4)
+        # i-th returned score matches the i-th best oracle score.
+        np.testing.assert_allclose(
+            got_scores[i], want_sorted[i][1], rtol=1e-4, atol=1e-4
+        )
+    # Padding beyond the unique-doc count.
+    for i in range(n_expect, k):
+        assert got_docs[i] == -1 and got_scores[i] == -np.inf
+
+
+def test_all_invalid_returns_padding():
+    res = two_stage_reduce(
+        jnp.zeros(8, jnp.int32),
+        jnp.zeros(8, jnp.int32),
+        jnp.zeros(8, jnp.float32),
+        jnp.zeros(8, bool),
+        jnp.zeros(4, jnp.float32),
+        q_max=4,
+        k=3,
+    )
+    assert np.all(np.asarray(res.doc_ids) == -1)
+    assert np.all(np.asarray(res.scores) == -np.inf)
+
+
+def test_missing_entries_imputed():
+    """One doc retrieved for qtok 0 only; other qtok contributes m."""
+    mse = jnp.asarray([0.0, 0.25])
+    res = two_stage_reduce(
+        jnp.asarray([7], jnp.int32),
+        jnp.asarray([0], jnp.int32),
+        jnp.asarray([0.5], jnp.float32),
+        jnp.asarray([True]),
+        mse,
+        q_max=2,
+        k=1,
+    )
+    np.testing.assert_allclose(float(res.scores[0]), 0.5 + 0.25, rtol=1e-6)
+    assert int(res.doc_ids[0]) == 7
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(4, 200),
+    n_docs=st.integers(1, 30),
+    q_max=st.integers(1, 8),
+)
+def test_segment_impl_matches_scan_impl(seed, n, n_docs, q_max):
+    """§Perf variant ("segment") must be bit-compatible with baseline."""
+    rng = np.random.default_rng(seed)
+    doc_ids = rng.integers(0, n_docs, n).astype(np.int32)
+    qtok_ids = rng.integers(0, q_max, n).astype(np.int32)
+    scores = rng.standard_normal(n).astype(np.float32)
+    valid = rng.random(n) > 0.2
+    mse = (rng.standard_normal(q_max) * 0.1).astype(np.float32)
+    args = (
+        jnp.asarray(doc_ids), jnp.asarray(qtok_ids), jnp.asarray(scores),
+        jnp.asarray(valid), jnp.asarray(mse),
+    )
+    a = two_stage_reduce(*args, q_max=q_max, k=4, impl="scan")
+    b = two_stage_reduce(*args, q_max=q_max, k=4, impl="segment")
+    np.testing.assert_allclose(np.asarray(a.scores), np.asarray(b.scores), rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))

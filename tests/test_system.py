@@ -1,0 +1,28 @@
+import pytest
+
+# End-to-end behaviour tests for the paper's system live in:
+#   test_engine.py      - WARP search parity + quality invariants
+#   test_reduction.py   - two-stage reduction vs oracle (hypothesis)
+#   test_quantization.py- residual codec
+#   test_kernels.py     - Pallas kernels vs ref (shape/dtype sweeps)
+#   test_distributed.py - doc-sharded shard_map engine
+# This file keeps one cross-cutting smoke path alive.
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import IndexBuildConfig, WarpSearchConfig, build_index, search
+from repro.data import make_corpus, make_queries
+
+
+def test_end_to_end_smoke():
+    corpus = make_corpus(n_docs=120, mean_doc_len=12, seed=42)
+    idx = build_index(
+        corpus.emb, corpus.token_doc_ids, corpus.n_docs,
+        IndexBuildConfig(n_centroids=32, nbits=4, kmeans_iters=2),
+    )
+    q, qmask, rel = make_queries(corpus, n_queries=2, seed=7)
+    res = search(idx, q[0], jnp.asarray(qmask[0]), WarpSearchConfig(nprobe=8, k=5))
+    assert res.scores.shape == (5,)
+    assert res.doc_ids.shape == (5,)
+    assert np.isfinite(np.asarray(res.scores)).any()
