@@ -8,14 +8,15 @@ Stages (paper Fig. 4): query encoding | candidate generation (WARP_SELECT)
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, get_setup, time_fn
+from benchmarks.common import candidate_traffic_bytes, emit, get_setup, time_fn
 from repro.core import WarpSearchConfig, plaid_style_search, search, xtr_reference
-from repro.core.engine import gather_candidates, resolve_config
+from repro.core.engine import gather_candidates, gather_doc_ids, resolve_config
 from repro.core.reduction import two_stage_reduce
 from repro.core.warpselect import warp_select
 from repro.kernels import ops
@@ -46,6 +47,22 @@ def _stage_fns(index, config):
         ).reshape(qm, p, cap) + probe_scores[..., None]
         return scores, doc_ids, valid
 
+    @jax.jit
+    def stage_decompress_fused(q, probe_scores, probe_cids):
+        # Single pass: no [Q, P, cap, PB] candidate tensor in HBM. On TPU
+        # this times the real Pallas kernel; off-TPU the interpret-mode
+        # kernel is Python-rate (meaningless wall-clock), so we time the
+        # fused jnp reference instead — the emitted impl= label says which.
+        v = q[:, :, None] * index.bucket_weights[None, None, :]
+        scores = ops.fused_gather_selective_sum(
+            index.packed_codes, index.cluster_offsets, index.cluster_sizes,
+            probe_cids, probe_scores, v,
+            nbits=index.nbits, dim=index.dim, cap=index.cap,
+            n_tokens=index.n_tokens, use_kernel=ops.on_tpu(),
+        )
+        doc_ids, valid = gather_doc_ids(index, probe_cids)
+        return scores, doc_ids, valid
+
     @functools.partial(jax.jit, static_argnames=())
     def stage_reduce(scores, doc_ids, valid, mse, qmask):
         qm, p, cap = scores.shape
@@ -58,7 +75,7 @@ def _stage_fns(index, config):
             valid.reshape(-1), mse, q_max=qm, k=config.k,
         )
 
-    return stage_select, stage_decompress, stage_reduce
+    return stage_select, stage_decompress, stage_decompress_fused, stage_reduce
 
 
 def run() -> None:
@@ -74,20 +91,36 @@ def run() -> None:
         q0, m0 = jnp.asarray(q[0]), jnp.asarray(qmask[0])
 
         # --- stage breakdown (Fig. 9) ---
-        s_sel, s_dec, s_red = _stage_fns(index, cfg)
+        s_sel, s_dec, s_dec_fused, s_red = _stage_fns(index, cfg)
         sel = s_sel(q0, m0)
         t_sel = time_fn(s_sel, q0, m0)
         dec = s_dec(q0, sel.probe_scores, sel.probe_cids)
         t_dec = time_fn(s_dec, q0, sel.probe_scores, sel.probe_cids)
+        t_dec_fused = time_fn(s_dec_fused, q0, sel.probe_scores, sel.probe_cids)
         t_red = time_fn(s_red, dec[0], dec[1], dec[2], sel.mse, m0)
         emit(f"latency/{tier}/query_encoding", t_enc, "stage")
         emit(f"latency/{tier}/candidate_generation", t_sel, "stage=warpselect")
-        emit(f"latency/{tier}/decompression", t_dec, "stage=implicit")
+        emit(f"latency/{tier}/decompression", t_dec, "stage=implicit_two_step")
+        b_two, b_fused = candidate_traffic_bytes(index, q0.shape[0], cfg.nprobe)
+        impl = "kernel" if ops.on_tpu() else "jnp_ref"
+        emit(
+            f"latency/{tier}/decompression_fused",
+            t_dec_fused,
+            f"stage=fused_gather;impl={impl};fused_bytes={b_fused};"
+            f"two_step_bytes={b_two};bytes_ratio={b_two / max(1, b_fused):.2f}x;"
+            f"speedup_vs_two_step={t_dec / max(t_dec_fused, 1e-12):.2f}x",
+        )
         emit(f"latency/{tier}/scoring", t_red, "stage=two_stage_reduce")
 
         # --- end-to-end engines (Fig. 1 / Tables 2-3) ---
         f_warp = lambda: search(index, q0, m0, cfg)
         t_warp = time_fn(lambda: f_warp())
+        cfg_fused = dataclasses.replace(
+            cfg, fused_gather=True, use_kernel=ops.on_tpu()
+        )
+        t_warp_fused = time_fn(lambda: search(index, q0, m0, cfg_fused))
+        emit(f"latency/{tier}/warp_e2e_fused", t_enc + t_warp_fused,
+             f"retrieval_only={t_warp_fused * 1e6:.1f}")
         f_plaid = lambda: plaid_style_search(index, q0, m0, cfg)
         t_plaid = time_fn(lambda: f_plaid())
         emb = jnp.asarray(corpus.emb)

@@ -24,7 +24,34 @@ def load_records(mesh: str) -> list[dict]:
     return out
 
 
+def _emit_fused_gather_roofline() -> None:
+    """Analytic HBM-bytes comparison of the decompression stage (the paper's
+    memory-roofline-bound hot path) with and without the fused kernel.
+
+    Two-step traffic per query = read CSR rows (gather) + write the
+    [Q, P, cap, PB] candidate tensor + read it back in selective_sum.
+    Fused traffic = read CSR rows once (plus the f32 score write, common to
+    both). The ratio is the bytes-moved win the fused kernel banks before
+    any wall-clock measurement."""
+    from benchmarks.common import SETUPS, candidate_traffic_bytes, get_setup
+
+    nprobe = 32
+    for tier in SETUPS:
+        _, index, q, _, _ = get_setup(tier)
+        qm = q.shape[1]
+        pb = index.dim * index.nbits // 8
+        two_step, fused = candidate_traffic_bytes(index, qm, nprobe)
+        emit(
+            f"roofline/fused_gather/{tier}",
+            0.0,
+            f"two_step_bytes={two_step};fused_bytes={fused};"
+            f"saved_bytes={two_step - fused};ratio={two_step / fused:.2f}x;"
+            f"cap={index.cap};pb={pb}",
+        )
+
+
 def run() -> None:
+    _emit_fused_gather_roofline()
     for mesh in ("single", "multi"):
         records = load_records(mesh)
         ok = [r for r in records if r.get("ok")]

@@ -16,7 +16,18 @@ import numpy as np
 from repro.core import IndexBuildConfig, build_index
 from repro.data import make_corpus, make_queries
 
-__all__ = ["time_fn", "emit", "get_setup", "SETUPS"]
+__all__ = [
+    "time_fn",
+    "emit",
+    "get_setup",
+    "candidate_traffic_bytes",
+    "SETUPS",
+    "RECORDS",
+]
+
+# Every emit() also lands here so run.py can snapshot a suite's metrics to
+# JSON (BENCH_latency.json) for cross-PR perf trajectories.
+RECORDS: list[dict] = []
 
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 5, **kwargs) -> float:
@@ -33,7 +44,22 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5, **kwargs) -> float:
     return float(np.median(times))
 
 
+def candidate_traffic_bytes(index, qm: int, nprobe: int) -> tuple[int, int]:
+    """Analytic HBM traffic of the decompression stage, (two_step, fused).
+
+    Two-step: the XLA gather WRITES the [Q, P, cap, PB] u8 candidate tensor
+    and the selective-sum READS it back, on top of the unavoidable
+    index-side read — 3x the candidate code bytes. Fused: only the
+    index-side read remains. Both include the common f32 score write.
+    """
+    pb = index.dim * index.nbits // 8
+    cand = qm * nprobe * index.cap * pb
+    scores_out = qm * nprobe * index.cap * 4
+    return 3 * cand + scores_out, cand + scores_out
+
+
 def emit(name: str, seconds: float, derived: str = "") -> None:
+    RECORDS.append({"name": name, "us_per_call": seconds * 1e6, "derived": derived})
     print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
 
 

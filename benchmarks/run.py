@@ -10,9 +10,32 @@ from bench_roofline over the dry-run artifacts.
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 SUITES = ["index_size", "quality", "latency", "scaling", "roofline"]
+
+SNAPSHOT_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_latency.json"
+)
+
+
+def write_latency_snapshot(path: str = SNAPSHOT_PATH) -> None:
+    """Persist the latency suite's emitted metrics so later PRs have a perf
+    trajectory to diff against (only rows under latency/)."""
+    from benchmarks.common import RECORDS
+
+    rows = [r for r in RECORDS if r["name"].startswith("latency/")]
+    if not rows:
+        return
+    snap = {
+        "generated_unix": int(time.time()),
+        "metrics": rows,
+    }
+    with open(path, "w") as f:
+        json.dump(snap, f, indent=1, sort_keys=True)
+    print(f"bench/latency/snapshot,0.0,{os.path.abspath(path)}", flush=True)
 
 
 def main() -> None:
@@ -32,6 +55,8 @@ def main() -> None:
             raise
         print(f"bench/{name}/wall,{(time.perf_counter() - t0) * 1e6:.0f},suite_total",
               flush=True)
+        if name == "latency":
+            write_latency_snapshot()
 
 
 if __name__ == "__main__":

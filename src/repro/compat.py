@@ -1,0 +1,75 @@
+"""Version compatibility shims for the installed JAX.
+
+The codebase targets the current jax API surface (``jax.shard_map``,
+``jax.set_mesh``, ``jax.sharding.AxisType``); older releases spell these
+differently. Everything version-dependent funnels through here so call
+sites stay on the modern spelling.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["AxisType", "shard_map", "set_mesh"]
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType  # noqa: F401
+except ImportError:  # pragma: no cover - older jax: meshes implicitly Auto
+    AxisType = None
+
+try:  # jax >= 0.6 top-level API
+    _shard_map = jax.shard_map
+    _NEW_SHARD_MAP = True
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _NEW_SHARD_MAP = False
+
+
+def _ambient_mesh():
+    """The mesh installed by ``with mesh:`` on legacy jax (or None)."""
+    try:
+        from jax._src.mesh import thread_resources
+
+        mesh = thread_resources.env.physical_mesh
+        return None if mesh.empty else mesh
+    except Exception:  # pragma: no cover
+        return None
+
+
+def shard_map(f, *, mesh=None, in_specs, out_specs, check_vma: bool | None = None):
+    """``jax.shard_map`` with the modern keyword surface on any jax.
+
+    On legacy jax the ``check_vma`` flag maps to ``check_rep`` and a
+    missing ``mesh`` is resolved from the ambient ``with mesh:`` context
+    (the modern API resolves it from ``jax.set_mesh``).
+    """
+    kwargs = {}
+    if _NEW_SHARD_MAP:
+        if mesh is not None:
+            kwargs["mesh"] = mesh
+        if check_vma is not None:
+            kwargs["check_vma"] = check_vma
+        return _shard_map(f, in_specs=in_specs, out_specs=out_specs, **kwargs)
+    if mesh is None:
+        mesh = _ambient_mesh()
+        if mesh is None:
+            raise ValueError(
+                "shard_map on this jax needs an explicit mesh or an "
+                "enclosing `with mesh:` context"
+            )
+    if check_vma is not None:
+        kwargs["check_rep"] = check_vma
+    return _shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+
+def set_mesh(mesh: jax.sharding.Mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    jax >= 0.5 exposes ``jax.set_mesh``; on older versions ``Mesh`` itself
+    is the (legacy global-mesh) context manager, which is what pjit /
+    shard_map resolution needs here.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map as _shard_map
+
 from repro.core import index as index_mod
 from repro.core.engine import gather_candidates, score_probed_clusters
 from repro.core.reduction import TopKResult, two_stage_reduce
@@ -249,7 +251,7 @@ def make_sharded_search_fn(
         )(q, qmask)
     else:
         body = local_search
-    fn = jax.shard_map(
+    fn = _shard_map(
         body,
         mesh=mesh,
         in_specs=(idx_spec, P(), P()),

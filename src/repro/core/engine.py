@@ -22,7 +22,13 @@ from repro.core.types import WarpIndex, WarpSearchConfig
 from repro.core.warpselect import warp_select
 from repro.kernels import ops
 
-__all__ = ["search", "search_batch", "gather_candidates", "resolve_config"]
+__all__ = [
+    "search",
+    "search_batch",
+    "gather_candidates",
+    "gather_doc_ids",
+    "resolve_config",
+]
 
 
 def resolve_config(index: WarpIndex, config: WarpSearchConfig) -> WarpSearchConfig:
@@ -36,21 +42,87 @@ def resolve_config(index: WarpIndex, config: WarpSearchConfig) -> WarpSearchConf
     )
 
 
+def _csr_positions(index: WarpIndex, probe_cids: jax.Array):
+    """Static-capacity CSR slot positions: probe_cids i32[..., P] ->
+    (pos i32[..., P, cap] clamped into [0, n_tokens), valid bool[..., P, cap])."""
+    cap = index.cap
+    starts = index.cluster_offsets[probe_cids]
+    sizes = index.cluster_sizes[probe_cids]
+    pos = starts[..., None] + jnp.arange(cap, dtype=jnp.int32)
+    valid = jnp.arange(cap, dtype=jnp.int32) < sizes[..., None]
+    return jnp.minimum(pos, index.n_tokens - 1), valid
+
+
 def gather_candidates(index: WarpIndex, probe_cids: jax.Array):
     """CSR gather with static capacity.
 
     probe_cids i32[Q, P] -> (packed u8[Q, P, cap, PB], doc_ids i32[Q, P, cap],
     valid bool[Q, P, cap]).
     """
-    cap = index.cap
-    starts = index.cluster_offsets[probe_cids]  # [Q, P]
-    sizes = index.cluster_sizes[probe_cids]  # [Q, P]
-    pos = starts[..., None] + jnp.arange(cap, dtype=jnp.int32)  # [Q, P, cap]
-    valid = jnp.arange(cap, dtype=jnp.int32) < sizes[..., None]
-    pos = jnp.minimum(pos, index.n_tokens - 1)
-    packed = index.packed_codes[pos]
-    doc_ids = index.token_doc_ids[pos]
-    return packed, doc_ids, valid
+    pos, valid = _csr_positions(index, probe_cids)
+    return index.packed_codes[pos], index.token_doc_ids[pos], valid
+
+
+def gather_doc_ids(index: WarpIndex, probe_cids: jax.Array):
+    """Doc-id half of the CSR gather, for the fused scoring path.
+
+    The fused kernel reads packed codes straight from the resident index,
+    so only the (4-byte-per-token) doc ids still need an XLA gather.
+    probe_cids i32[..., P] -> (doc_ids i32[..., P, cap], valid bool[..., P, cap]).
+    """
+    pos, valid = _csr_positions(index, probe_cids)
+    return index.token_doc_ids[pos], valid
+
+
+def _fused_score_probed(
+    index: WarpIndex,
+    q: jax.Array,
+    probe_scores: jax.Array,
+    probe_cids: jax.Array,
+    config: WarpSearchConfig,
+):
+    """Single-pass scoring: no [Q, P, cap, PB] candidate tensor exists."""
+
+    def one(q_i, scores_i, cids_i):
+        v = q_i[None, :, None] * index.bucket_weights[None, None, :]
+        cand = ops.fused_gather_selective_sum(
+            index.packed_codes,
+            index.cluster_offsets,
+            index.cluster_sizes,
+            cids_i[None],
+            scores_i[None],
+            v,
+            nbits=index.nbits,
+            dim=index.dim,
+            cap=index.cap,
+            n_tokens=index.n_tokens,
+            use_kernel=config.use_kernel,
+        )[0]
+        doc_ids, valid = gather_doc_ids(index, cids_i)
+        return cand, doc_ids, valid
+
+    if config.scan_qtokens:
+        _, (cand, dids, valid) = jax.lax.scan(
+            lambda c, x: (c, one(*x)), None, (q, probe_scores, probe_cids)
+        )
+        return cand, dids, valid
+
+    v = q[:, :, None] * index.bucket_weights[None, None, :]  # [Q, D, 2^b]
+    cand = ops.fused_gather_selective_sum(
+        index.packed_codes,
+        index.cluster_offsets,
+        index.cluster_sizes,
+        probe_cids,
+        probe_scores,
+        v,
+        nbits=index.nbits,
+        dim=index.dim,
+        cap=index.cap,
+        n_tokens=index.n_tokens,
+        use_kernel=config.use_kernel,
+    )
+    doc_ids, valid = gather_doc_ids(index, probe_cids)
+    return cand, doc_ids, valid
 
 
 def score_probed_clusters(
@@ -65,8 +137,14 @@ def score_probed_clusters(
     Returns (cand_scores f32[Q, P, cap], doc_ids i32[Q, P, cap],
     valid bool[Q, P, cap]). With ``config.scan_qtokens`` the gather +
     selective-sum runs one query token per scan step, bounding the live
-    packed-code working set by a factor of Q.
+    packed-code working set by a factor of Q. With ``config.fused_gather``
+    the gather/decompress/score boundary collapses into the single-pass
+    kernel path and invalid slots come back as exact 0 (dropped by the
+    reduction's valid mask either way).
     """
+    if config.fused_gather:
+        return _fused_score_probed(index, q, probe_scores, probe_cids, config)
+
     p, cap = config.nprobe, index.cap
 
     def one(q_i, scores_i, cids_i):
@@ -134,6 +212,7 @@ def _search_one(index: WarpIndex, q: jax.Array, qmask: jax.Array, config: WarpSe
         q_max=qm,
         k=config.k,
         impl=config.reduce_impl,
+        n_docs=index.n_docs or None,
     )
 
 

@@ -52,7 +52,12 @@ def _segmented_scan(op, flags: jax.Array, values: jax.Array) -> jax.Array:
     return out
 
 
-@functools.partial(jax.jit, static_argnames=("q_max", "k", "impl"))
+def composite_key_fits_int32(n_docs: int, q_max: int) -> bool:
+    """Whether ``doc_id * q_max + qtok`` stays below the int32 sentinel."""
+    return (n_docs - 1) * q_max + (q_max - 1) < int(KEY_SENTINEL)
+
+
+@functools.partial(jax.jit, static_argnames=("q_max", "k", "impl", "n_docs"))
 def two_stage_reduce(
     doc_ids: jax.Array,
     qtok_ids: jax.Array,
@@ -63,6 +68,7 @@ def two_stage_reduce(
     q_max: int,
     k: int,
     impl: str = "scan",
+    n_docs: int | None = None,
 ) -> TopKResult:
     """Reduce flat candidate entries to top-k document scores.
 
@@ -76,25 +82,52 @@ def two_stage_reduce(
           "segment" — cumsum run indices + segment_max/segment_sum scatters
           (§Perf hillclimb: ~3x fewer memory passes on TPU).
 
-    Requires doc_id * q_max + q_max < int32 max for valid entries.
+    The fast path sorts by the int32 composite key ``doc_id * q_max + qtok``
+    which requires ``(n_docs - 1) * q_max + q_max - 1 < int32 max``. Pass
+    ``n_docs`` to make that precondition *checked*: when the composite
+    would overflow, the reduction automatically switches to a lexicographic
+    two-key sort (``lax.sort(..., num_keys=2)``) that never forms the
+    product, at the cost of one extra sort operand. Without ``n_docs`` the
+    precondition is the caller's responsibility, as before.
     """
     n = doc_ids.shape[0]
     if k > n:
         raise ValueError(f"k={k} > candidate count {n}")
 
-    key = jnp.where(
-        valid, doc_ids * q_max + qtok_ids, KEY_SENTINEL
-    ).astype(jnp.int32)
-    key_sorted, scores_sorted = jax.lax.sort((key, scores), num_keys=1)
+    wide = n_docs is not None and not composite_key_fits_int32(n_docs, q_max)
+    if wide:
+        # Composite doc_id * q_max + qtok would overflow int32 (int64 is
+        # unavailable without jax_enable_x64): sort by (doc, qtok) pair.
+        dkey = jnp.where(valid, doc_ids, KEY_SENTINEL).astype(jnp.int32)
+        qkey = jnp.where(valid, qtok_ids, KEY_SENTINEL).astype(jnp.int32)
+        dkey_s, qkey_s, scores_sorted = jax.lax.sort(
+            (dkey, qkey, scores), num_keys=2
+        )
+        valid_sorted = dkey_s != KEY_SENTINEL
+        qtok = jnp.where(valid_sorted, qkey_s, 0)
+        # dkey_s already holds KEY_SENTINEL at invalid rows, which cannot
+        # collide with a representable doc id.
+        docid = dkey_s
+        same_prev = (dkey_s[1:] == dkey_s[:-1]) & (qkey_s[1:] == qkey_s[:-1])
+        false1 = jnp.zeros((1,), bool)
+        run_start = jnp.concatenate([~false1, ~same_prev])
+        run_end = jnp.concatenate([~same_prev, ~false1])
+    else:
+        key = jnp.where(
+            valid, doc_ids * q_max + qtok_ids, KEY_SENTINEL
+        ).astype(jnp.int32)
+        key_sorted, scores_sorted = jax.lax.sort((key, scores), num_keys=1)
 
-    valid_sorted = key_sorted != KEY_SENTINEL
-    qtok = jnp.where(valid_sorted, key_sorted % q_max, 0)
-    docid = jnp.where(valid_sorted, key_sorted // q_max, jnp.int32(2**30))
+        valid_sorted = key_sorted != KEY_SENTINEL
+        qtok = jnp.where(valid_sorted, key_sorted % q_max, 0)
+        # Invalid rows get KEY_SENTINEL (not a representable doc id) so a
+        # real document adjacent to the padding block never merges with it.
+        docid = jnp.where(valid_sorted, key_sorted // q_max, KEY_SENTINEL)
 
-    prev_key = jnp.concatenate([jnp.full((1,), -1, jnp.int32), key_sorted[:-1]])
-    next_key = jnp.concatenate([key_sorted[1:], jnp.full((1,), -2, jnp.int32)])
-    run_start = key_sorted != prev_key
-    run_end = key_sorted != next_key
+        prev_key = jnp.concatenate([jnp.full((1,), -1, jnp.int32), key_sorted[:-1]])
+        next_key = jnp.concatenate([key_sorted[1:], jnp.full((1,), -2, jnp.int32)])
+        run_start = key_sorted != prev_key
+        run_end = key_sorted != next_key
 
     prev_doc = jnp.concatenate([jnp.full((1,), -1, jnp.int32), docid[:-1]])
     next_doc = jnp.concatenate([docid[1:], jnp.full((1,), -2, jnp.int32)])

@@ -83,6 +83,14 @@ class WarpSearchConfig:
     scan_qtokens: decompress/score one query token at a time (lax.scan)
               instead of materializing all [Q, nprobe, cap] packed codes at
               once — bounds peak memory by ~Q (§Perf hillclimb, warp-xtr).
+    fused_gather: score probed clusters with the single-pass
+              gather–decompress–score path (kernels/fused_gather_score.py):
+              the Pallas kernel scalar-prefetches CSR starts/sizes and reads
+              packed codes straight from the resident index, so the
+              [Q, nprobe, cap, PB] uint8 candidate tensor is never
+              materialized in HBM. Combines with ``use_kernel`` (False ->
+              jnp reference of the same fused semantics) and
+              ``scan_qtokens``.
     """
 
     nprobe: int = 32
@@ -92,6 +100,7 @@ class WarpSearchConfig:
     k_impute: int = 64
     use_kernel: bool = False
     scan_qtokens: bool = False
+    fused_gather: bool = False
     reduce_impl: str = "scan"  # "scan" | "segment" (see reduction.py)
     sum_impl: str = "gather"  # "gather" | "lut" (byte-LUT; see kernels/ref.py)
 

@@ -19,6 +19,16 @@ Tiling: grid (Q, N / TILE_N). Per step the kernel holds one
 ``[TILE_N, PB]`` uint8 code tile, the ``[D, 2^b]`` f32 v-table of one query
 token, and a ``[TILE_N]`` f32 output stripe in VMEM — ~TILE_N * (PB + 4)
 bytes plus 8KiB of table; TILE_N=512 at b=4, D=128 is ~34KiB, far under VMEM.
+
+This kernel consumes a *pre-gathered* candidate tensor: the engine's
+two-step path first materializes ``[Q, nprobe, cap, PB]`` codes in HBM
+(XLA gather) and this kernel reads them back — i.e. every candidate byte
+crosses HBM three times (index read at gather, gather write, kernel read).
+``fused_gather_score.py`` is the single-pass evolution: it scalar-prefetches
+the CSR probe metadata and pulls code tiles straight from the resident
+index, eliminating the gathered copy entirely (engine flag
+``WarpSearchConfig.fused_gather``). This two-step kernel remains the
+baseline and the drop-in for callers that already hold gathered codes.
 """
 
 from __future__ import annotations

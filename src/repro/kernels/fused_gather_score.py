@@ -1,0 +1,167 @@
+"""Pallas TPU kernel: fused gather + implicit decompression + scoring.
+
+The two-step engine path materializes the full ``[Q, nprobe, cap, PB]``
+uint8 candidate tensor in HBM (an XLA gather of ``packed_codes``) and then
+reads it back in ``selective_sum`` — three passes over the candidate bytes
+on a path the paper (§4.4) shows is memory-roofline bound. This kernel
+collapses candidate generation's gather and the selective-sum into ONE pass
+over the *resident* index:
+
+  1. Scalar prefetch (``pltpu.PrefetchScalarGridSpec``): per-(query-token,
+     probe) CSR cluster ``starts`` / ``sizes`` (from ``cluster_offsets``)
+     and the centroid probe scores live in SMEM before the kernel body
+     runs, MoE block-sparse style.
+  2. The ``packed_codes`` BlockSpec uses *unblocked* indexing with an
+     index map that reads the prefetched ``starts``: grid step (q, p, j)
+     DMAs rows ``[starts[q,p] + j*TILE_C, +TILE_C)`` of the packed-code
+     array straight from HBM into VMEM. No pre-gathered copy exists in
+     HBM at any point.
+  3. In VMEM the b-bit codes are unpacked with shift/AND (VPU, 8-bit
+     lanes) and scored with the 2^b select-accumulate against the
+     per-query-token v-table (MXU matvec per bucket), exactly the
+     formulation of ``decompress_score.py``.
+  4. The centroid probe score ``S_cq`` is added and slots beyond the true
+     cluster size are masked to 0, so the output is the final
+     ``[Q, nprobe, cap]`` candidate-score tensor in one write.
+
+End-of-array clamp: the index map clamps the row start to
+``n_tokens - TILE_C`` so the DMA never reads out of bounds. When the clamp
+engages, the wanted rows sit ``shift`` rows deeper in the fetched tile; a
+dynamic roll re-aligns them. Valid slots (``c < size``) always land inside
+the clamped tile because ``start + size <= n_tokens`` for every cluster —
+the overhang is exactly the masked tail. This removes any need to pad the
+resident ``packed_codes`` (which would itself be an HBM copy).
+
+VMEM budget per grid step: one ``[TILE_C, PB]`` uint8 code tile
+(TILE_C=128, b=4, D=128 -> 8 KiB), the ``[D, 2^b]`` f32 v-table (8 KiB at
+b=4), and a ``[TILE_C]`` f32 output stripe — ~17 KiB total, far under the
+~16 MiB VMEM. TILE_C trades DMA efficiency against the masked-tail waste
+for small clusters; ops.py picks ``min(128, next_pow2(cap))`` and pads
+``cap`` up to a TILE_C multiple.
+
+Off-TPU the kernel runs under ``interpret=True`` (pure-Python body over an
+XLA grid loop) — bit-identical semantics, used by the parity tests.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["fused_gather_score_kernel_call", "DEFAULT_TILE_C"]
+
+DEFAULT_TILE_C = 128
+
+
+def _fused_kernel(
+    starts_ref,  # SMEM i32[Q, P]   cluster row starts (prefetched)
+    sizes_ref,  # SMEM i32[Q, P]   cluster sizes (prefetched)
+    pscore_ref,  # SMEM f32[Q, P]   centroid probe scores (prefetched)
+    packed_ref,  # VMEM u8[TILE_C, PB]  cluster code tile (unblocked fetch)
+    v_ref,  # VMEM f32[1, D, 2^b]  this query token's v-table
+    out_ref,  # VMEM f32[1, 1, TILE_C]
+    *,
+    nbits: int,
+    dim: int,
+    n_tokens: int,
+    tile_c: int,
+):
+    q, p, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    nb = 1 << nbits
+    per_byte = 8 // nbits
+
+    start = starts_ref[q, p]
+    row0 = start + j * tile_c  # wanted global row of this tile's slot 0
+    # The index map clamped the fetch start to n_tokens - tile_c; re-align.
+    shift = jnp.maximum(0, row0 - (n_tokens - tile_c))
+    packed = jnp.roll(packed_ref[...], -shift, axis=0)  # [TILE_C, PB]
+
+    mask = jnp.uint8(nb - 1)
+    parts = [
+        (packed >> jnp.uint8(slot * nbits)) & mask for slot in range(per_byte)
+    ]
+    codes = jnp.stack(parts, axis=-1).reshape(tile_c, dim)  # [TILE_C, D]
+
+    v = v_ref[0]  # [D, 2^b]
+    acc = jnp.zeros((tile_c,), jnp.float32)
+    for bucket in range(nb):
+        sel = (codes == jnp.uint8(bucket)).astype(jnp.float32)
+        acc = acc + sel @ v[:, bucket]
+
+    c = j * tile_c + jax.lax.broadcasted_iota(jnp.int32, (tile_c,), 0)
+    valid = c < sizes_ref[q, p]
+    out_ref[0, 0] = jnp.where(valid, acc + pscore_ref[q, p], 0.0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("nbits", "dim", "n_tokens", "cap_pad", "tile_c", "interpret"),
+)
+def fused_gather_score_kernel_call(
+    packed_codes: jax.Array,
+    starts: jax.Array,
+    sizes: jax.Array,
+    probe_scores: jax.Array,
+    v: jax.Array,
+    *,
+    nbits: int,
+    dim: int,
+    n_tokens: int,
+    cap_pad: int,
+    tile_c: int = DEFAULT_TILE_C,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused CSR probe + selective sum.
+
+    packed_codes u8[N, PB] (the resident index — never gathered),
+    starts/sizes i32[Q, P], probe_scores f32[Q, P], v f32[Q, D, 2^b]
+    -> scores f32[Q, P, cap_pad] with invalid slots (c >= sizes) zeroed.
+
+    ``cap_pad`` must be a tile_c multiple and n_tokens >= tile_c (ops.py
+    enforces both; it falls back to the jnp reference otherwise).
+    """
+    n, pb = packed_codes.shape
+    qm, p = starts.shape
+    nb = 1 << nbits
+    if n != n_tokens or n < tile_c:
+        raise ValueError(f"n_tokens={n_tokens} (array {n}) < tile_c={tile_c}")
+    if cap_pad % tile_c:
+        raise ValueError(f"cap_pad={cap_pad} not a multiple of tile_c={tile_c}")
+    if v.shape != (qm, dim, nb):
+        raise ValueError(f"v shape {v.shape} != {(qm, dim, nb)}")
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(qm, p, cap_pad // tile_c),
+        in_specs=[
+            pl.BlockSpec(
+                (tile_c, pb),
+                lambda q, pp, j, starts, sizes, ps: (
+                    jnp.minimum(starts[q, pp] + j * tile_c, n_tokens - tile_c),
+                    0,
+                ),
+                indexing_mode=pl.Unblocked(),
+            ),
+            pl.BlockSpec((1, dim, nb), lambda q, pp, j, *_: (q, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, tile_c), lambda q, pp, j, *_: (q, pp, j)
+        ),
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _fused_kernel,
+            nbits=nbits,
+            dim=dim,
+            n_tokens=n_tokens,
+            tile_c=tile_c,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((qm, p, cap_pad), jnp.float32),
+        interpret=interpret,
+    )(starts, sizes, probe_scores.astype(jnp.float32),
+      packed_codes, v.astype(jnp.float32))

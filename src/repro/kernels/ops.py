@@ -14,8 +14,17 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.decompress_score import selective_sum_kernel_call
 from repro.kernels.embedding_bag import embedding_bag_kernel_call
+from repro.kernels.fused_gather_score import (
+    DEFAULT_TILE_C,
+    fused_gather_score_kernel_call,
+)
 
-__all__ = ["selective_sum", "embedding_bag", "on_tpu"]
+__all__ = [
+    "selective_sum",
+    "fused_gather_selective_sum",
+    "embedding_bag",
+    "on_tpu",
+]
 
 
 def on_tpu() -> bool:
@@ -48,15 +57,71 @@ def selective_sum(
             return ref.selective_sum_lut(packed, v, nbits=nbits, dim=dim)
         return ref.selective_sum(packed, v, nbits=nbits, dim=dim)
     q, n, pb = packed.shape
-    tile = tile_n or min(512, max(8, 1 << (n - 1).bit_length() if n else 8))
-    tile = min(tile, _round_up(n, 8))
-    n_pad = _round_up(max(n, tile), tile)
+    if n == 0:
+        # Degenerate candidate set: nothing to score, and the kernel's grid
+        # (n // tile) would be empty anyway.
+        return jnp.zeros((q, 0), jnp.float32)
+    # Power-of-two tile >= 8 (the TPU sublane quantum), capped at 512 and at
+    # the padded input length so tiny N doesn't over-pad.
+    tile = tile_n or min(512, 1 << max(3, (n - 1).bit_length()))
+    tile = max(8, min(tile, _round_up(n, 8)))
+    n_pad = _round_up(n, tile)
     if n_pad != n:
         packed = jnp.pad(packed, ((0, 0), (0, n_pad - n), (0, 0)))
     out = selective_sum_kernel_call(
         packed, v, nbits=nbits, dim=dim, tile_n=tile, interpret=not on_tpu()
     )
     return out[:, :n]
+
+
+def fused_gather_selective_sum(
+    packed_codes: jax.Array,
+    cluster_offsets: jax.Array,
+    cluster_sizes: jax.Array,
+    probe_cids: jax.Array,
+    probe_scores: jax.Array,
+    v: jax.Array,
+    *,
+    nbits: int,
+    dim: int,
+    cap: int,
+    n_tokens: int,
+    use_kernel: bool = True,
+    tile_c: int | None = None,
+    impl: str = "fused",
+) -> jax.Array:
+    """Single-pass CSR probe + implicit decompression + scoring.
+
+    packed_codes u8[N, PB] (resident index), cluster_offsets i32[C+1],
+    cluster_sizes i32[C], probe_cids i32[Q, P], probe_scores f32[Q, P],
+    v f32[Q, D, 2^b] -> cand_scores f32[Q, P, cap] (invalid slots zeroed).
+
+    impl="fused" routes to the Pallas scalar-prefetch kernel (padding cap
+    to the tile size, interpret=True off-TPU); any other value — or b=8,
+    or an index too small to tile — falls back to the jnp reference, which
+    gathers but is semantically identical.
+    """
+    starts = cluster_offsets[probe_cids].astype(jnp.int32)  # [Q, P]
+    sizes = cluster_sizes[probe_cids].astype(jnp.int32)  # [Q, P]
+    tile = tile_c or min(DEFAULT_TILE_C, 1 << max(3, (cap - 1).bit_length() if cap > 1 else 3))
+    if (
+        not use_kernel
+        or impl != "fused"
+        or nbits == 8  # 256 select-accumulate unrolls: ref lowers better
+        or cap == 0
+        or n_tokens < tile  # index smaller than one code tile
+    ):
+        return ref.fused_gather_score(
+            packed_codes, starts, sizes, probe_scores, v,
+            nbits=nbits, dim=dim, cap=cap,
+        )
+    cap_pad = _round_up(cap, tile)
+    out = fused_gather_score_kernel_call(
+        packed_codes, starts, sizes, probe_scores, v,
+        nbits=nbits, dim=dim, n_tokens=n_tokens, cap_pad=cap_pad,
+        tile_c=tile, interpret=not on_tpu(),
+    )
+    return out[:, :, :cap]
 
 
 def embedding_bag(

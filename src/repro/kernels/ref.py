@@ -13,7 +13,13 @@ import jax.numpy as jnp
 
 from repro.core.quantization import unpack_codes
 
-__all__ = ["selective_sum", "selective_sum_lut", "embedding_bag", "fused_reduce_scores"]
+__all__ = [
+    "selective_sum",
+    "selective_sum_lut",
+    "embedding_bag",
+    "fused_reduce_scores",
+    "fused_gather_score",
+]
 
 
 @functools.partial(jax.jit, static_argnames=("nbits", "dim", "d_chunk"))
@@ -75,6 +81,41 @@ def selective_sum_lut(
     idx = packed.astype(jnp.int32)  # [Q, N, PB]
     gathered = jnp.take_along_axis(lut[:, None, :, :], idx[..., None], axis=-1)[..., 0]
     return jnp.sum(gathered, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("nbits", "dim", "cap"))
+def fused_gather_score(
+    packed_codes: jax.Array,
+    starts: jax.Array,
+    sizes: jax.Array,
+    probe_scores: jax.Array,
+    v: jax.Array,
+    *,
+    nbits: int,
+    dim: int,
+    cap: int,
+) -> jax.Array:
+    """Semantics oracle for the fused gather–decompress–score kernel.
+
+    packed_codes u8[N, PB], starts/sizes i32[Q, P], probe_scores f32[Q, P],
+    v f32[Q, D, 2^b] -> f32[Q, P, cap] where slot (q, p, c) is
+    ``probe_scores[q, p] + sum_d v[q, d, code_d]`` of token
+    ``starts[q, p] + c`` when ``c < sizes[q, p]`` and exactly 0 otherwise.
+
+    This reference *does* gather (it is the contract, not the fast path);
+    the Pallas kernel must match it bit-for-bit on valid slots and on the
+    zero masking.
+    """
+    qm, p = starts.shape
+    n = packed_codes.shape[0]
+    pos = starts[..., None] + jnp.arange(cap, dtype=jnp.int32)  # [Q, P, cap]
+    valid = jnp.arange(cap, dtype=jnp.int32) < sizes[..., None]
+    pos = jnp.minimum(pos, n - 1)
+    gathered = packed_codes[pos]  # [Q, P, cap, PB]
+    scores = selective_sum(
+        gathered.reshape(qm, p * cap, -1), v, nbits=nbits, dim=dim
+    ).reshape(qm, p, cap)
+    return jnp.where(valid, scores + probe_scores[..., None], 0.0)
 
 
 @functools.partial(jax.jit, static_argnames=("num_segments",))

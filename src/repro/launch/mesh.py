@@ -8,16 +8,26 @@ before any jax initialization.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
 
-__all__ = ["make_production_mesh", "make_mesh", "data_axes", "MODEL_AXIS"]
+from repro.compat import AxisType as _AxisType
+from repro.compat import set_mesh
+
+__all__ = [
+    "make_production_mesh",
+    "make_mesh",
+    "set_mesh",
+    "data_axes",
+    "MODEL_AXIS",
+]
 
 MODEL_AXIS = "model"
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> jax.sharding.Mesh:
     """jax.make_mesh with explicit Auto axis types (silences the 0.9 change)."""
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    if _AxisType is not None:
+        return jax.make_mesh(shape, axes, axis_types=(_AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:

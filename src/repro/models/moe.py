@@ -21,6 +21,8 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map as _shard_map
+
 from repro.models.layers import dense_init
 
 __all__ = ["MoEConfig", "moe_init", "moe_apply"]
@@ -152,7 +154,7 @@ def _moe_apply_local(params: dict, cfg: MoEConfig, x: jax.Array):
         aux = jax.lax.pmean(jax.lax.pmean(aux, model), data)
         return y.astype(xl.dtype), aux
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         local,
         in_specs=(
             P(data, None),

@@ -1,0 +1,122 @@
+"""Minimal deterministic stand-in for ``hypothesis`` (conftest installs it
+only when the real package is absent).
+
+The repo's property tests use a small strategy surface — ``integers``,
+``sampled_from``, ``sets`` — with ``@given`` / ``@settings``. This stub
+replays a fixed pseudo-random sample of each strategy (seeded, so runs are
+reproducible) instead of hypothesis' adaptive search + shrinking. It keeps
+the property tests meaningful on machines without hypothesis rather than
+erroring the whole suite at collection time.
+
+Example counts are capped (REPRO_STUB_MAX_EXAMPLES, default 8) because each
+distinct drawn shape triggers a fresh jit compile.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import os
+import random
+import sys
+import types
+
+_MAX_EXAMPLES_CAP = int(os.environ.get("REPRO_STUB_MAX_EXAMPLES", "8"))
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+def integers(min_value: int = 0, max_value: int = 1 << 30) -> _Strategy:
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda r: r.choice(elements))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0, **_) -> _Strategy:
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def sets(elements: _Strategy, min_size: int = 0, max_size: int | None = None) -> _Strategy:
+    def draw(r: random.Random):
+        target = r.randint(min_size, max_size if max_size is not None else min_size + 5)
+        out: set = set()
+        for _ in range(100 * max(1, target)):
+            if len(out) >= target:
+                break
+            out.add(elements.draw(r))
+        if len(out) < min_size:
+            raise ValueError("stub sets(): could not draw enough distinct elements")
+        return out
+
+    return _Strategy(draw)
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int | None = None) -> _Strategy:
+    def draw(r: random.Random):
+        size = r.randint(min_size, max_size if max_size is not None else min_size + 5)
+        return [elements.draw(r) for _ in range(size)]
+
+    return _Strategy(draw)
+
+
+def given(**strategies):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(
+                wrapper, "_stub_max_examples",
+                getattr(fn, "_stub_max_examples", _MAX_EXAMPLES_CAP),
+            )
+            rnd = random.Random(0xC0FFEE)
+            for _ in range(min(n, _MAX_EXAMPLES_CAP)):
+                drawn = {k: s.draw(rnd) for k, s in strategies.items()}
+                fn(*args, **drawn, **kwargs)
+
+        wrapper._stub_given = True
+        # Hide the drawn parameters from pytest's fixture resolution: only
+        # the original fn's non-strategy parameters (if any) remain visible.
+        params = [
+            p
+            for name, p in inspect.signature(fn).parameters.items()
+            if name not in strategies
+        ]
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature(params)
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples: int = 10, deadline=None, **_):
+    def decorate(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+def install() -> None:
+    """Register this stub as ``hypothesis`` / ``hypothesis.strategies``."""
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.__stub__ = True
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "sampled_from", "booleans", "floats", "sets", "lists"):
+        setattr(st, name, globals()[name])
+    hyp.strategies = st
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

@@ -1,8 +1,54 @@
+import importlib.util
+import os
+
 import numpy as np
 import pytest
 
 # NOTE: no XLA_FLAGS device-count override here — smoke tests and benches
 # must see the real single CPU device. Only launch/dryrun.py forces 512.
+
+# The container may lack hypothesis; fall back to the deterministic stub so
+# the suite still collects and the property tests run (smoke-level sampling).
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _spec = importlib.util.spec_from_file_location(
+        "_hypothesis_stub",
+        os.path.join(os.path.dirname(__file__), "_hypothesis_stub.py"),
+    )
+    _stub = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_stub)
+    _stub.install()
+
+
+def _on_tpu() -> bool:
+    import jax
+
+    return jax.default_backend() == "tpu"
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "tpu_kernel(requires_tpu=False): Pallas kernel test. Runs everywhere "
+        "via interpret mode by default; requires_tpu=True skips off-TPU "
+        "(e.g. Mosaic-lowering or timing assertions).",
+    )
+    config.addinivalue_line("markers", "slow: long-running test")
+
+
+def pytest_collection_modifyitems(config, items):
+    tpu = None
+    for item in items:
+        marker = item.get_closest_marker("tpu_kernel")
+        if marker is None or not marker.kwargs.get("requires_tpu", False):
+            continue
+        if tpu is None:
+            tpu = _on_tpu()
+        if not tpu:
+            item.add_marker(
+                pytest.mark.skip(reason="requires a real TPU backend")
+            )
 
 
 @pytest.fixture(scope="session")

@@ -27,6 +27,9 @@ VARIANTS = [
     dict(reduce_impl="segment"),
     dict(scan_qtokens=True),
     dict(sum_impl="lut", reduce_impl="segment", scan_qtokens=True),
+    dict(fused_gather=True),
+    dict(fused_gather=True, reduce_impl="segment"),
+    dict(fused_gather=True, scan_qtokens=True),
 ]
 
 

@@ -1,0 +1,175 @@
+"""Fused gather–decompress–score path: interpret-mode kernel parity vs the
+jnp oracle, engine-level top-k identity vs the two-step path, and the
+no-HBM-candidate-materialization guarantee (jaxpr inspection)."""
+
+import dataclasses
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import IndexBuildConfig, WarpSearchConfig, build_index, search
+from repro.core.engine import _search_one, resolve_config
+from repro.data import make_corpus, make_queries
+from repro.kernels import ops, ref
+
+DIM = 128
+
+
+def _make_csr(rng, n_tok, n_clusters, *, with_empty=True):
+    """Random ragged CSR layout over n_tok tokens (optionally with an
+    empty cluster), returning (offsets i32[C+1], sizes i32[C], cap)."""
+    cuts = np.sort(rng.choice(n_tok + 1, size=n_clusters - 1, replace=True))
+    offsets = np.concatenate([[0], cuts, [n_tok]]).astype(np.int32)
+    sizes = np.diff(offsets).astype(np.int32)
+    if with_empty and not (sizes == 0).any():
+        # Force one empty cluster: move a boundary onto its neighbour.
+        j = int(np.argmax(sizes))
+        offsets = np.insert(offsets, j + 1, offsets[j]).astype(np.int32)[: n_clusters + 1]
+        sizes = np.diff(offsets).astype(np.int32)
+    return offsets, sizes, int(sizes.max())
+
+
+@pytest.mark.tpu_kernel
+@pytest.mark.parametrize("nbits", [2, 4, 8])
+@pytest.mark.parametrize("n_tok,n_clusters,q,p", [(400, 10, 3, 4), (129, 6, 1, 5)])
+def test_fused_parity_vs_oracle(nbits, n_tok, n_clusters, q, p, rng):
+    pb = DIM * nbits // 8
+    offsets, sizes, cap = _make_csr(rng, n_tok, n_clusters)
+    packed = rng.integers(0, 256, (n_tok, pb), dtype=np.uint8)
+    cids = rng.integers(0, len(sizes), (q, p)).astype(np.int32)
+    pscores = rng.standard_normal((q, p)).astype(np.float32)
+    v = rng.standard_normal((q, DIM, 1 << nbits)).astype(np.float32)
+
+    starts = offsets[cids]
+    sz = np.take(sizes, cids).astype(np.int32)
+    want = ref.fused_gather_score(
+        jnp.asarray(packed), jnp.asarray(starts), jnp.asarray(sz),
+        jnp.asarray(pscores), jnp.asarray(v), nbits=nbits, dim=DIM, cap=cap,
+    )
+    got = ops.fused_gather_selective_sum(
+        jnp.asarray(packed), jnp.asarray(offsets), jnp.asarray(sizes),
+        jnp.asarray(cids), jnp.asarray(pscores), jnp.asarray(v),
+        nbits=nbits, dim=DIM, cap=cap, n_tokens=n_tok, use_kernel=True,
+    )
+    assert got.shape == (q, p, cap)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.tpu_kernel
+def test_fused_masks_invalid_slots_to_zero(rng):
+    nbits = 4
+    offsets, sizes, cap = _make_csr(rng, 300, 8)
+    packed = rng.integers(0, 256, (300, DIM // 2), dtype=np.uint8)
+    cids = rng.integers(0, len(sizes), (2, 3)).astype(np.int32)
+    pscores = rng.standard_normal((2, 3)).astype(np.float32)
+    v = rng.standard_normal((2, DIM, 16)).astype(np.float32)
+    out = np.asarray(ops.fused_gather_selective_sum(
+        jnp.asarray(packed), jnp.asarray(offsets), jnp.asarray(sizes),
+        jnp.asarray(cids), jnp.asarray(pscores), jnp.asarray(v),
+        nbits=nbits, dim=DIM, cap=cap, n_tokens=300, use_kernel=True,
+    ))
+    sz = np.take(sizes, cids)
+    for qi in range(2):
+        for pi in range(3):
+            np.testing.assert_array_equal(out[qi, pi, sz[qi, pi]:], 0.0)
+
+
+@pytest.mark.tpu_kernel
+def test_fused_tiny_index_falls_back(rng):
+    """n_tokens below one tile routes to the jnp reference, same result."""
+    nbits, n_tok = 4, 9
+    offsets = np.array([0, 4, 9], np.int32)
+    sizes = np.array([4, 5], np.int32)
+    packed = rng.integers(0, 256, (n_tok, DIM // 2), dtype=np.uint8)
+    cids = np.array([[0, 1]], np.int32)
+    pscores = np.zeros((1, 2), np.float32)
+    v = rng.standard_normal((1, DIM, 16)).astype(np.float32)
+    a = ops.fused_gather_selective_sum(
+        jnp.asarray(packed), jnp.asarray(offsets), jnp.asarray(sizes),
+        jnp.asarray(cids), jnp.asarray(pscores), jnp.asarray(v),
+        nbits=nbits, dim=DIM, cap=5, n_tokens=n_tok, use_kernel=True,
+    )
+    b = ops.fused_gather_selective_sum(
+        jnp.asarray(packed), jnp.asarray(offsets), jnp.asarray(sizes),
+        jnp.asarray(cids), jnp.asarray(pscores), jnp.asarray(v),
+        nbits=nbits, dim=DIM, cap=5, n_tokens=n_tok, use_kernel=False,
+    )
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    corpus = make_corpus(n_docs=250, mean_doc_len=14, seed=11)
+    out = {}
+    for nbits in (2, 4, 8):
+        out[nbits] = build_index(
+            corpus.emb, corpus.token_doc_ids, corpus.n_docs,
+            IndexBuildConfig(n_centroids=32, nbits=nbits, kmeans_iters=3),
+        )
+    q, qmask, rel = make_queries(corpus, n_queries=3, seed=12)
+    return out, q, qmask
+
+
+BASE = dict(nprobe=8, k=20, t_prime=500, k_impute=32)
+
+FUSED_VARIANTS = [
+    dict(fused_gather=True),
+    dict(fused_gather=True, use_kernel=True),
+    dict(fused_gather=True, scan_qtokens=True),
+    dict(fused_gather=True, use_kernel=True, scan_qtokens=True),
+]
+
+
+@pytest.mark.tpu_kernel
+@pytest.mark.parametrize("nbits", [2, 4, 8])
+@pytest.mark.parametrize(
+    "overrides", FUSED_VARIANTS, ids=[str(v) for v in FUSED_VARIANTS]
+)
+def test_search_topk_identical(engine_setup, nbits, overrides):
+    indexes, q, qmask = engine_setup
+    idx = indexes[nbits]
+    base_cfg = WarpSearchConfig(**BASE)
+    fused_cfg = WarpSearchConfig(**BASE, **overrides)
+    for i in range(2):
+        a = search(idx, q[i], jnp.asarray(qmask[i]), base_cfg)
+        b = search(idx, q[i], jnp.asarray(qmask[i]), fused_cfg)
+        np.testing.assert_allclose(
+            np.asarray(a.scores), np.asarray(b.scores), rtol=1e-4, atol=1e-4
+        )
+        np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+
+
+_U8_4D = re.compile(r"u8\[\d+,\d+,\d+,\d+\]")
+
+
+@pytest.mark.tpu_kernel
+def test_fused_jaxpr_has_no_candidate_materialization(engine_setup):
+    """Acceptance: the fused search must not gather packed_codes into a
+    [Q, nprobe, cap, PB] uint8 HBM intermediate; the default path does."""
+    indexes, q, qmask = engine_setup
+    idx = indexes[4]
+    q0, m0 = jnp.asarray(q[0]), jnp.asarray(qmask[0])
+    cfg_f = resolve_config(idx, WarpSearchConfig(**BASE, fused_gather=True, use_kernel=True))
+    cfg_d = resolve_config(idx, WarpSearchConfig(**BASE))
+    jx_fused = str(jax.make_jaxpr(lambda a, b: _search_one(idx, a, b, cfg_f))(q0, m0))
+    jx_default = str(jax.make_jaxpr(lambda a, b: _search_one(idx, a, b, cfg_d))(q0, m0))
+    assert _U8_4D.search(jx_default), "two-step path should gather 4-D u8 codes"
+    assert not _U8_4D.search(jx_fused), "fused path must not materialize candidates"
+
+
+@pytest.mark.tpu_kernel
+def test_search_batch_fused(engine_setup):
+    from repro.core import search_batch
+
+    indexes, q, qmask = engine_setup
+    idx = indexes[4]
+    qb, mb = jnp.asarray(q[:3]), jnp.asarray(qmask[:3])
+    a = search_batch(idx, qb, mb, WarpSearchConfig(**BASE))
+    b = search_batch(idx, qb, mb, WarpSearchConfig(**BASE, fused_gather=True))
+    np.testing.assert_allclose(
+        np.asarray(a.scores), np.asarray(b.scores), rtol=1e-4, atol=1e-4
+    )
+    np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))

@@ -39,8 +39,10 @@ def test_scan_flops_match_unroll(w):
     assert abs(got_scan - expect) / expect < 0.02, got_scan
     assert abs(got_unroll - expect) / expect < 0.02, got_unroll
     # the raw XLA number under-counts the scan body (the bug we fix):
-    xla = jax.jit(f_scan).lower(sds).compile().cost_analysis()["flops"]
-    assert xla < expect / 5
+    ca = jax.jit(f_scan).lower(sds).compile().cost_analysis()
+    if isinstance(ca, list):  # jax <= 0.4.x wraps per-executable dicts
+        ca = ca[0]
+    assert ca["flops"] < expect / 5
 
 
 def test_nested_scan_multiplies(w):

@@ -38,6 +38,39 @@ def test_selective_sum_other_dims(dim, rng):
     np.testing.assert_allclose(np.asarray(r), np.asarray(k), rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.tpu_kernel
+@pytest.mark.parametrize("n", [0, 1, 7, 513])
+def test_selective_sum_tile_heuristic_tiny_n(n, rng):
+    """The tile/padding heuristic must survive degenerate candidate counts
+    (n=0 used to divide by zero via tile=0)."""
+    nbits, q, dim = 4, 2, 128
+    pb = dim * nbits // 8
+    packed = rng.integers(0, 256, (q, n, pb), dtype=np.uint8)
+    v = rng.standard_normal((q, dim, 1 << nbits)).astype(np.float32)
+    k = ops.selective_sum(
+        jnp.asarray(packed), jnp.asarray(v), nbits=nbits, dim=dim, use_kernel=True
+    )
+    assert k.shape == (q, n)
+    if n:
+        r = ref.selective_sum(jnp.asarray(packed), jnp.asarray(v), nbits=nbits, dim=dim)
+        np.testing.assert_allclose(np.asarray(r), np.asarray(k), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.tpu_kernel
+@pytest.mark.parametrize("tile_n", [8, 24, 100, 4096])
+def test_selective_sum_explicit_tile_n(tile_n, rng):
+    """User-supplied tile sizes are clamped into a valid tiling."""
+    nbits, q, n, dim = 4, 1, 37, 128
+    packed = rng.integers(0, 256, (q, n, dim // 2), dtype=np.uint8)
+    v = rng.standard_normal((q, dim, 16)).astype(np.float32)
+    r = ref.selective_sum(jnp.asarray(packed), jnp.asarray(v), nbits=nbits, dim=dim)
+    k = ops.selective_sum(
+        jnp.asarray(packed), jnp.asarray(v), nbits=nbits, dim=dim,
+        use_kernel=True, tile_n=tile_n,
+    )
+    np.testing.assert_allclose(np.asarray(r), np.asarray(k), rtol=1e-5, atol=1e-5)
+
+
 def test_selective_sum_nbits8_falls_back(rng):
     q, n, dim = 2, 32, 128
     packed = rng.integers(0, 256, (q, n, dim), dtype=np.uint8)

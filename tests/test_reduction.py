@@ -5,7 +5,10 @@ import numpy as np
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core.reduction import two_stage_reduce
+from repro.core.reduction import (
+    composite_key_fits_int32,
+    two_stage_reduce,
+)
 
 
 def _oracle(doc_ids, qtok_ids, scores, valid, mse, n_docs, q_max):
@@ -102,6 +105,78 @@ def test_missing_entries_imputed():
     )
     np.testing.assert_allclose(float(res.scores[0]), 0.5 + 0.25, rtol=1e-6)
     assert int(res.doc_ids[0]) == 7
+
+
+def test_composite_key_overflow_detection():
+    assert composite_key_fits_int32(n_docs=1000, q_max=32)
+    assert not composite_key_fits_int32(n_docs=2**30, q_max=4)
+    # Boundary: largest composite must stay strictly below the sentinel.
+    assert not composite_key_fits_int32(n_docs=(2**31 - 1) // 8 + 1, q_max=8)
+
+
+def test_wide_key_fallback_matches_oracle():
+    """Regression: doc_id * q_max + qtok overflows int32 -> the checked
+    n_docs path must switch to the two-key sort and stay correct."""
+    q_max, k = 4, 3
+    n_docs = 2**30 + 7  # n_docs * q_max is far beyond int32
+    assert not composite_key_fits_int32(n_docs, q_max)
+    doc_ids = np.array(
+        [2**30 + 5, 2**30 + 5, 3, 2**29, 2**30 + 5, 3, 2**29, 9], np.int32
+    )
+    qtok_ids = np.array([0, 0, 1, 3, 2, 1, 0, 3], np.int32)
+    scores = np.array([0.5, 0.9, 0.3, 0.7, 0.2, 0.8, 0.1, 0.4], np.float32)
+    valid = np.array([1, 1, 1, 1, 1, 0, 1, 1], bool)
+    mse = np.array([0.01, 0.02, 0.03, 0.04], np.float32)
+
+    res = two_stage_reduce(
+        jnp.asarray(doc_ids), jnp.asarray(qtok_ids), jnp.asarray(scores),
+        jnp.asarray(valid), jnp.asarray(mse),
+        q_max=q_max, k=k, n_docs=n_docs,
+    )
+    # Sparse oracle (the dense _oracle cannot allocate 2^30 rows).
+    best: dict = {}
+    for d, t, s, vv in zip(doc_ids, qtok_ids, scores, valid):
+        if vv:
+            best[(int(d), int(t))] = max(best.get((int(d), int(t)), -np.inf), s)
+    want = {}
+    for d in {int(d) for d, v in zip(doc_ids, valid) if v}:
+        want[d] = sum(
+            best.get((d, t), float(mse[t])) for t in range(q_max)
+        )
+    want_sorted = sorted(want.items(), key=lambda kv: -kv[1])
+    for i in range(min(k, len(want_sorted))):
+        assert int(res.doc_ids[i]) == want_sorted[i][0]
+        np.testing.assert_allclose(
+            float(res.scores[i]), want_sorted[i][1], rtol=1e-5, atol=1e-5
+        )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(4, 120),
+    n_docs=st.integers(1, 30),
+    q_max=st.integers(1, 8),
+)
+def test_wide_key_path_matches_fast_path(seed, n, n_docs, q_max):
+    """Force the two-key sort on small inputs (fake huge n_docs) and check
+    bit-identical results against the int32 composite path."""
+    rng = np.random.default_rng(seed)
+    doc_ids = rng.integers(0, n_docs, n).astype(np.int32)
+    qtok_ids = rng.integers(0, q_max, n).astype(np.int32)
+    scores = rng.standard_normal(n).astype(np.float32)
+    valid = rng.random(n) > 0.2
+    mse = (rng.standard_normal(q_max) * 0.1).astype(np.float32)
+    args = (
+        jnp.asarray(doc_ids), jnp.asarray(qtok_ids), jnp.asarray(scores),
+        jnp.asarray(valid), jnp.asarray(mse),
+    )
+    a = two_stage_reduce(*args, q_max=q_max, k=4, n_docs=n_docs)
+    b = two_stage_reduce(*args, q_max=q_max, k=4, n_docs=2**31 - 1)
+    np.testing.assert_allclose(
+        np.asarray(a.scores), np.asarray(b.scores), rtol=1e-5, atol=1e-5
+    )
+    np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
 
 
 @settings(max_examples=25, deadline=None)
