@@ -14,8 +14,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import candidate_traffic_bytes, emit, get_setup, time_fn
-from repro.core import WarpSearchConfig, plaid_style_search, search, xtr_reference
+from benchmarks.common import PLANS, candidate_traffic_bytes, emit, get_setup, time_fn
+from repro.core import Retriever, WarpSearchConfig, plaid_style_search, xtr_reference
 from repro.core.engine import gather_candidates, gather_doc_ids, resolve_config
 from repro.core.reduction import two_stage_reduce
 from repro.core.warpselect import warp_select
@@ -113,12 +113,18 @@ def run() -> None:
         emit(f"latency/{tier}/scoring", t_red, "stage=two_stage_reduce")
 
         # --- end-to-end engines (Fig. 1 / Tables 2-3) ---
-        f_warp = lambda: search(index, q0, m0, cfg)
-        t_warp = time_fn(lambda: f_warp())
-        cfg_fused = dataclasses.replace(
-            cfg, fused_gather=True, use_kernel=ops.on_tpu()
+        # Dispatch through the planned pipeline; the resolved plan (incl.
+        # concretized executor/t'/k_impute) is snapshotted next to the
+        # numbers so the perf record names what actually ran.
+        retriever = Retriever.from_index(index)
+        plan = retriever.plan(cfg)
+        plan_fused = retriever.plan(
+            dataclasses.replace(cfg, gather="fused", executor="auto")
         )
-        t_warp_fused = time_fn(lambda: search(index, q0, m0, cfg_fused))
+        PLANS[tier] = {"warp_e2e": plan.describe(), "warp_e2e_fused": plan_fused.describe()}
+        f_warp = lambda: plan.retrieve(q0, m0)
+        t_warp = time_fn(lambda: f_warp())
+        t_warp_fused = time_fn(lambda: plan_fused.retrieve(q0, m0))
         emit(f"latency/{tier}/warp_e2e_fused", t_enc + t_warp_fused,
              f"retrieval_only={t_warp_fused * 1e6:.1f}")
         f_plaid = lambda: plaid_style_search(index, q0, m0, cfg)

@@ -23,11 +23,17 @@ __all__ = [
     "candidate_traffic_bytes",
     "SETUPS",
     "RECORDS",
+    "PLANS",
 ]
 
 # Every emit() also lands here so run.py can snapshot a suite's metrics to
 # JSON (BENCH_latency.json) for cross-PR perf trajectories.
 RECORDS: list[dict] = []
+
+# Resolved SearchPlan.describe() dicts keyed by setup tier — snapshotted
+# alongside the metrics so a perf number is reproducible: it names the
+# strategies (gather/executor/memory), t', k_impute, and geometry that ran.
+PLANS: dict[str, dict] = {}
 
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 5, **kwargs) -> float:

@@ -23,8 +23,10 @@ SNAPSHOT_PATH = os.path.join(
 
 def write_latency_snapshot(path: str = SNAPSHOT_PATH) -> None:
     """Persist the latency suite's emitted metrics so later PRs have a perf
-    trajectory to diff against (only rows under latency/)."""
-    from benchmarks.common import RECORDS
+    trajectory to diff against (only rows under latency/), together with the
+    resolved SearchPlans (strategies, t', k_impute, geometry) that produced
+    them — a wall-clock number without its plan is not reproducible."""
+    from benchmarks.common import PLANS, RECORDS
 
     rows = [r for r in RECORDS if r["name"].startswith("latency/")]
     if not rows:
@@ -32,6 +34,7 @@ def write_latency_snapshot(path: str = SNAPSHOT_PATH) -> None:
     snap = {
         "generated_unix": int(time.time()),
         "metrics": rows,
+        "search_plans": PLANS,
     }
     with open(path, "w") as f:
         json.dump(snap, f, indent=1, sort_keys=True)

@@ -8,11 +8,10 @@ import numpy as np
 
 from repro.core import (
     IndexBuildConfig,
+    Retriever,
     WarpSearchConfig,
-    build_index,
     index_stats,
     maxsim_bruteforce,
-    search,
 )
 from repro.data import make_corpus, make_queries
 
@@ -23,24 +22,27 @@ def main() -> None:
     print(f"corpus: {corpus.n_docs} docs, {corpus.n_tokens} token embeddings")
 
     # 2. Index construction (paper §4.1): k-means + 4-bit residual codec.
-    index = build_index(
+    #    Retriever.build(..., n_shards=N) would document-shard it instead.
+    retriever = Retriever.build(
         corpus.emb,
         corpus.token_doc_ids,
         corpus.n_docs,
         IndexBuildConfig(nbits=4),
     )
-    st = index_stats(index)
+    st = index_stats(retriever.index)
     print(
         f"index: {st['n_centroids']} centroids, {st['bytes']/2**20:.1f} MiB "
         f"({st['bytes_per_token']:.0f} B/token vs 512 B/token uncompressed)"
     )
 
-    # 3. Search (paper §4.2-4.5): WARP_SELECT -> implicit decompression ->
-    #    two-stage reduction -> top-k.
+    # 3. Plan (validate config against index geometry + backend, resolve
+    #    t'/k_impute/executor, compile), then search (paper §4.2-4.5):
+    #    WARP_SELECT -> implicit decompression -> two-stage reduction -> top-k.
     q, qmask, relevant = make_queries(corpus, n_queries=4, seed=1)
-    cfg = WarpSearchConfig(nprobe=32, k=10)
+    plan = retriever.plan(WarpSearchConfig(nprobe=32, k=10))
+    print(f"search plan: {plan.describe()}")
     for i in range(4):
-        res = search(index, q[i], jnp.asarray(qmask[i]), cfg)
+        res = plan.retrieve(q[i], jnp.asarray(qmask[i]))
         gold = maxsim_bruteforce(
             jnp.asarray(q[i]), jnp.asarray(qmask[i]),
             jnp.asarray(corpus.emb / np.linalg.norm(corpus.emb, axis=-1, keepdims=True)),

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import IndexBuildConfig, WarpSearchConfig, build_index, search
+from repro.core import IndexBuildConfig, Retriever, WarpSearchConfig
 from repro.models.encoder import EncoderConfig, TokenEncoder
 from repro.models.recsys import TwoTower, TwoTowerConfig
 from repro.serving import BatchPolicy, RetrievalServer
@@ -38,9 +38,11 @@ def main() -> None:
     token_doc_ids = np.repeat(np.arange(n_docs, dtype=np.int32), doc_len)
 
     # ---------- 2. index + batched serving ----------
-    index = build_index(emb, token_doc_ids, n_docs, IndexBuildConfig(n_centroids=32, kmeans_iters=3))
+    retriever = Retriever.build(
+        emb, token_doc_ids, n_docs, IndexBuildConfig(n_centroids=32, kmeans_iters=3)
+    )
     server = RetrievalServer(
-        index,
+        retriever,
         WarpSearchConfig(nprobe=8, k=5),
         BatchPolicy(max_batch=4, max_wait_s=0.002),
     )
@@ -48,10 +50,9 @@ def main() -> None:
     query_tokens = doc_tokens[:6, :8]  # queries = prefixes of docs 0..5
     q_emb = encode(query_tokens, jnp.ones_like(query_tokens, dtype=bool))
     ids = [server.submit(np.asarray(q_emb[i])) for i in range(6)]
-    server.drain()
     hits = 0
     for i, rid in enumerate(ids):
-        scores, docs = server.poll(rid)
+        scores, docs = server.result(rid, timeout=30.0)  # drives the batcher
         hits += int(i == docs[0])
         print(f"query from doc {i}: top docs {docs.tolist()}")
     print(f"self-retrieval precision@1: {hits}/6; batches={server.stats['batches']}")
@@ -62,7 +63,7 @@ def main() -> None:
     item_ids = jnp.arange(2000)[:, None] % 5000
     item_emb = TwoTower.item_embed(tt, tt_cfg, item_ids, jnp.ones_like(item_ids, dtype=jnp.float32))
     # items are single-vector docs: WARP with query_maxlen=1
-    warp_items = build_index(
+    warp_items = Retriever.build(
         np.asarray(item_emb), np.arange(2000, dtype=np.int32), 2000,
         IndexBuildConfig(n_centroids=64, kmeans_iters=3),
     )
@@ -71,7 +72,9 @@ def main() -> None:
         jax.random.randint(key, (1, 8), 0, 1000),
         jnp.ones((1, 8), jnp.float32),
     )
-    res = search(warp_items, user, jnp.ones((1,), bool), WarpSearchConfig(nprobe=16, k=10))
+    res = warp_items.retrieve(
+        user, jnp.ones((1,), bool), config=WarpSearchConfig(nprobe=16, k=10)
+    )
     dense_scores = np.asarray(user @ item_emb.T)[0]
     gold_top = np.argsort(-dense_scores)[:10]
     got = np.asarray(res.doc_ids)

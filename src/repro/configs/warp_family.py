@@ -81,6 +81,8 @@ def _index_specs(cfg: WarpArchConfig, s: WarpShape, n_shards: int) -> ShardedWar
         cap=s.cap,
         n_docs=s.n_docs,
         n_tokens_padded=n_local,
+        n_tokens_total=s.n_tokens,
+        local_docs=-(-s.n_docs // n_shards),
     )
 
 
@@ -121,10 +123,15 @@ class WarpFamily:
             k=min(cfg.k, s.n_docs),
             k_impute=min(cfg.k_impute, max(4, s.n_centroids // 2)),
         )
+        from repro.kernels import ops
+
         return dataclasses.replace(
             base,
             t_prime=base.resolved_t_prime(s.n_tokens),
             k_impute=base.resolved_k_impute(max(4, s.n_centroids)),
+            # make_sharded_search_fn expects a fully resolved config: leaving
+            # "auto" here would cost-model the jnp reference path on TPU.
+            executor=base.resolved_executor(ops.on_tpu()),
         )
 
     @staticmethod

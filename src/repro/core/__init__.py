@@ -1,8 +1,11 @@
 """WARP engine core: the paper's primary contribution, in JAX.
 
 Public API:
+  Retriever / SearchPlan                         — unified planned pipeline
+                                                   (local, batched, sharded)
   build_index / WarpIndex / IndexBuildConfig     — §4.1 index construction
-  search / search_batch / WarpSearchConfig       — §4.2 retrieval
+  search / search_batch / WarpSearchConfig       — §4.2 retrieval (thin
+                                                   wrappers over the plan)
   warp_select                                    — §4.3 WARP_SELECT
   two_stage_reduce                               — §4.5 scoring reduction
   baselines (maxsim_bruteforce, xtr_reference, plaid_style_search)
@@ -23,11 +26,14 @@ from repro.core.distributed import (
 from repro.core.engine import search, search_batch
 from repro.core.index import build_index, index_stats
 from repro.core.reduction import TopKResult, two_stage_reduce
+from repro.core.retriever import Retriever, SearchPlan
 from repro.core.types import IndexBuildConfig, WarpIndex, WarpSearchConfig
 from repro.core.warpselect import warp_select
 
 __all__ = [
     "IndexBuildConfig",
+    "Retriever",
+    "SearchPlan",
     "ShardedWarpIndex",
     "TopKResult",
     "WarpIndex",

@@ -11,6 +11,13 @@ threshold yields a single global m_i used by every shard, so cross-shard
 score comparison is consistent (see DESIGN.md for why per-shard m_i would
 bias the merge).
 
+The per-shard body is NOT a private reimplementation of the engine: it runs
+the same exported pipeline stages as the single-device path —
+``warp_select`` (stage 1) -> ``impute_mse`` over the all-gathered per-shard
+candidates (global m_i) -> ``score_and_reduce`` (stages 2+3, including the
+``gather="fused"``/``executor`` strategies and the reduction's shard-local
+``n_docs`` overflow guard) — followed by the O(k · devices) top-k merge.
+
 The same code runs on 1 CPU device (tests) and on the (pod, data, model)
 production mesh (dry-run): shard over the flattened data axes, replicate
 over ``model``.
@@ -19,7 +26,6 @@ over ``model``.
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -29,10 +35,10 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map as _shard_map
 
 from repro.core import index as index_mod
-from repro.core.engine import gather_candidates, score_probed_clusters
-from repro.core.reduction import TopKResult, two_stage_reduce
+from repro.core.engine import score_and_reduce, score_probed_clusters  # noqa: F401  (re-export for stage-level callers)
+from repro.core.reduction import TopKResult
 from repro.core.types import IndexBuildConfig, WarpIndex, WarpSearchConfig
-from repro.core.warpselect import warp_select
+from repro.core.warpselect import impute_mse, warp_select
 from repro.kernels import ops
 
 __all__ = ["ShardedWarpIndex", "build_sharded_index", "sharded_search", "make_sharded_search_fn"]
@@ -46,8 +52,13 @@ class ShardedWarpIndex:
     All shards are padded to identical geometry (n_centroids, n_tokens,
     cap) so the stack is rectangular; padding clusters have size 0 and
     padding tokens carry doc id ``local_docs`` (never surfaced: size-0
-    clusters are never probed... they are, via top-k, but contribute no
-    valid candidates).
+    clusters contribute no valid candidates even when probed).
+
+    ``n_tokens_padded`` is the per-shard padded token count (the local CSR
+    geometry); ``n_tokens_total`` is the TRUE corpus token count, which is
+    what t' resolution must use — padding tokens are not retrievable mass.
+    ``local_docs`` is the max shard-local document count (also the padding
+    doc id), the bound the reduction's overflow guard needs.
     """
 
     centroids: jax.Array  # f32[S, C, D]
@@ -63,6 +74,8 @@ class ShardedWarpIndex:
     cap: int = dataclasses.field(metadata=dict(static=True), default=0)
     n_docs: int = dataclasses.field(metadata=dict(static=True), default=0)
     n_tokens_padded: int = dataclasses.field(metadata=dict(static=True), default=0)
+    n_tokens_total: int = dataclasses.field(metadata=dict(static=True), default=0)
+    local_docs: int = dataclasses.field(metadata=dict(static=True), default=0)
 
     @property
     def n_shards(self) -> int:
@@ -71,6 +84,11 @@ class ShardedWarpIndex:
     @property
     def n_centroids(self) -> int:
         return self.centroids.shape[1]
+
+    def resolved_n_tokens(self) -> int:
+        """True corpus token count; pre-``n_tokens_total`` stacks fall back
+        to the (over-counting) padded estimate."""
+        return self.n_tokens_total or self.n_tokens_padded * self.n_shards
 
 
 def build_sharded_index(
@@ -144,6 +162,32 @@ def build_sharded_index(
         cap=cap,
         n_docs=int(n_docs),
         n_tokens_padded=int(n_max),
+        n_tokens_total=int(n_tokens),
+        local_docs=int(local_docs_max),
+    )
+
+
+def local_index(sidx: ShardedWarpIndex) -> WarpIndex:
+    """View this shard's slice (leading axis already shard-local under
+    shard_map) as a plain ``WarpIndex`` so the shared engine stages apply.
+
+    ``n_docs`` is the shard-local document bound (``local_docs`` covers the
+    padding doc id too): the reduction's int32-overflow guard must see the
+    id range actually present in this shard, not the global corpus size.
+    """
+    return WarpIndex(
+        centroids=sidx.centroids[0],
+        packed_codes=sidx.packed_codes[0],
+        token_doc_ids=sidx.token_doc_ids[0],
+        cluster_offsets=sidx.cluster_offsets[0],
+        cluster_sizes=sidx.cluster_sizes[0],
+        bucket_weights=sidx.bucket_weights[0],
+        bucket_cutoffs=jnp.zeros(((1 << sidx.nbits) - 1,), jnp.float32),
+        dim=sidx.dim,
+        nbits=sidx.nbits,
+        cap=sidx.cap,
+        n_docs=sidx.local_docs + 1,
+        n_tokens=sidx.n_tokens_padded,
     )
 
 
@@ -160,7 +204,12 @@ def make_sharded_search_fn(
     The index is sharded over ``shard_axes`` (their total size must equal
     n_shards); queries are replicated. Returns f(sidx, q, qmask) ->
     TopKResult with *global* doc ids. With ``query_batch`` the query takes
-    a leading batch axis (vmapped inside the shard)."""
+    a leading batch axis (vmapped inside the shard).
+
+    ``config`` must be resolved (concrete t'/k_impute/executor) — use
+    ``Retriever.plan`` or ``sharded_search`` rather than calling this with
+    data-dependent defaults still unmaterialized.
+    """
     idx_spec = ShardedWarpIndex(
         centroids=P(shard_axes),
         packed_codes=P(shard_axes),
@@ -174,67 +223,36 @@ def make_sharded_search_fn(
         cap=sidx_template.cap,
         n_docs=sidx_template.n_docs,
         n_tokens_padded=sidx_template.n_tokens_padded,
+        n_tokens_total=sidx_template.n_tokens_total,
+        local_docs=sidx_template.local_docs,
     )
     cfg = config
     axis_name = shard_axes if len(shard_axes) > 1 else shard_axes[0]
 
     def local_search(sidx: ShardedWarpIndex, q: jax.Array, qmask: jax.Array):
         qm = q.shape[0]
-        local = WarpIndex(
-            centroids=sidx.centroids[0],
-            packed_codes=sidx.packed_codes[0],
-            token_doc_ids=sidx.token_doc_ids[0],
-            cluster_offsets=sidx.cluster_offsets[0],
-            cluster_sizes=sidx.cluster_sizes[0],
-            bucket_weights=sidx.bucket_weights[0],
-            bucket_cutoffs=jnp.zeros(((1 << sidx.nbits) - 1,), jnp.float32),
-            dim=sidx.dim,
-            nbits=sidx.nbits,
-            cap=sidx.cap,
-            n_docs=sidx.n_docs,
-            n_tokens=sidx.n_tokens_padded,
+        local = local_index(sidx)
+        # ---- stage 1: WARP_SELECT (shared with the single-device path) ----
+        sel = warp_select(
+            q,
+            local.centroids,
+            local.cluster_sizes,
+            nprobe=cfg.nprobe,
+            t_prime=cfg.t_prime,
+            k_impute=cfg.k_impute,
+            qmask=qmask,
         )
-        # Local centroid scoring + probe selection (one top-k pass).
-        kk = max(cfg.nprobe, cfg.k_impute)
-        s_cq = q @ local.centroids.T
-        top_scores, top_cids = jax.lax.top_k(s_cq, kk)
-        probe_scores = top_scores[:, : cfg.nprobe]
-        probe_cids = top_cids[:, : cfg.nprobe].astype(jnp.int32)
-        # ---- globally aligned imputation ----
-        top_sizes = local.cluster_sizes[top_cids]
-        g_scores = jax.lax.all_gather(top_scores, axis_name, tiled=False)  # [S, Q, kk]
-        g_sizes = jax.lax.all_gather(top_sizes, axis_name, tiled=False)
+        # ---- globally aligned imputation: merge every shard's top-kk
+        # (score, size) candidates, then re-run the same impute stage ----
+        g_scores = jax.lax.all_gather(sel.top_scores, axis_name, tiled=False)  # [S, Q, kk]
+        g_sizes = jax.lax.all_gather(sel.top_sizes, axis_name, tiled=False)
         s_all = jnp.swapaxes(g_scores, 0, 1).reshape(qm, -1)  # [Q, S*kk]
         z_all = jnp.swapaxes(g_sizes, 0, 1).reshape(qm, -1)
-        order = jnp.argsort(-s_all, axis=-1)
-        s_sorted = jnp.take_along_axis(s_all, order, axis=-1)
-        z_sorted = jnp.take_along_axis(z_all, order, axis=-1)
-        csum = jnp.cumsum(z_sorted, axis=-1)
-        crossed = csum > jnp.asarray(cfg.t_prime, csum.dtype)
-        first = jnp.where(
-            jnp.any(crossed, axis=-1), jnp.argmax(crossed, axis=-1), s_all.shape[-1] - 1
-        )
-        mse = jnp.take_along_axis(s_sorted, first[:, None], axis=-1)[:, 0]
-        mse = jnp.where(qmask, mse, 0.0)
+        mse = impute_mse(s_all, z_all, cfg.t_prime, qmask)
 
-        # ---- local decompression + reduction with the global m ----
-        p, cap = cfg.nprobe, local.cap
-        cand_scores, doc_ids, valid = score_probed_clusters(
-            local, q, probe_scores, probe_cids, cfg
-        )
-        valid = valid & qmask[:, None, None]
-        qtok = jnp.broadcast_to(
-            jnp.arange(qm, dtype=jnp.int32)[:, None, None], (qm, p, cap)
-        )
-        local_top = two_stage_reduce(
-            doc_ids.reshape(-1),
-            qtok.reshape(-1),
-            cand_scores.reshape(-1),
-            valid.reshape(-1),
-            mse,
-            q_max=qm,
-            k=cfg.k,
-            impl=cfg.reduce_impl,
+        # ---- stages 2+3: decompress + reduce with the global m ----
+        local_top = score_and_reduce(
+            local, q, qmask, sel.probe_scores, sel.probe_cids, mse, cfg
         )
         # ---- global top-k merge (O(k * devices) traffic) ----
         gdocs = jnp.where(
@@ -261,6 +279,20 @@ def make_sharded_search_fn(
     return jax.jit(fn)
 
 
+def resolve_sharded_config(
+    sidx: ShardedWarpIndex, config: WarpSearchConfig
+) -> WarpSearchConfig:
+    """Sharded analogue of ``engine.resolve_config``: t' from the TRUE total
+    token count (padding tokens are not retrievable mass), k_impute from the
+    per-shard centroid count, executor concretized against the backend."""
+    return dataclasses.replace(
+        config,
+        t_prime=config.resolved_t_prime(sidx.resolved_n_tokens()),
+        k_impute=config.resolved_k_impute(sidx.n_centroids),
+        executor=config.resolved_executor(ops.on_tpu()),
+    )
+
+
 def sharded_search(
     sidx: ShardedWarpIndex,
     q: jax.Array,
@@ -269,17 +301,14 @@ def sharded_search(
     mesh: jax.sharding.Mesh | None = None,
     shard_axes: tuple[str, ...] = ("data",),
 ) -> TopKResult:
-    """Convenience one-shot sharded search (builds mesh over all devices)."""
-    import dataclasses as dc
+    """Convenience one-shot sharded search (builds mesh over all devices).
 
+    Equivalent to ``Retriever.from_index(sidx, mesh=mesh).retrieve(...)``.
+    """
     if mesh is None:
         mesh = jax.make_mesh((sidx.n_shards,), ("data",))
         shard_axes = ("data",)
-    config = dc.replace(
-        config,
-        t_prime=config.resolved_t_prime(sidx.n_tokens_padded * sidx.n_shards),
-        k_impute=config.resolved_k_impute(sidx.n_centroids),
-    )
+    config = resolve_sharded_config(sidx, config)
     if qmask is None:
         qmask = jnp.ones((q.shape[0],), bool)
     fn = make_sharded_search_fn(sidx, config, mesh, shard_axes)

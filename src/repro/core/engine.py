@@ -8,10 +8,17 @@ reduction -> top-k.
 All shapes are static: the candidate set is [Q, nprobe, cap] where ``cap``
 is the index's max cluster size, masked by true cluster sizes. This is the
 jit/TPU replacement for the paper's pointer-chasing inverted lists.
+
+The exported stage functions (``warp_select`` -> ``score_probed_clusters``
+-> ``score_and_reduce``/``two_stage_reduce``) are the single source of
+truth for the pipeline: ``core.retriever.Retriever`` plans over them, and
+``core.distributed`` runs the same stages per shard under ``shard_map``.
+``search`` / ``search_batch`` remain as thin convenience wrappers.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -28,17 +35,24 @@ __all__ = [
     "gather_candidates",
     "gather_doc_ids",
     "resolve_config",
+    "score_probed_clusters",
+    "score_and_reduce",
 ]
 
 
 def resolve_config(index: WarpIndex, config: WarpSearchConfig) -> WarpSearchConfig:
-    """Materialize data-dependent defaults (t', k_impute) to static values."""
-    import dataclasses
+    """Materialize data-dependent defaults to static values.
 
+    t' and k_impute become concrete ints derived from the index geometry;
+    executor="auto" is concretized against the active backend (Pallas
+    kernels on TPU, jnp references elsewhere) so jit cache keys — the
+    config is a static argument — name the actual strategy that ran.
+    """
     return dataclasses.replace(
         config,
         t_prime=config.resolved_t_prime(index.n_tokens),
         k_impute=config.resolved_k_impute(index.n_centroids),
+        executor=config.resolved_executor(ops.on_tpu()),
     )
 
 
@@ -96,12 +110,12 @@ def _fused_score_probed(
             dim=index.dim,
             cap=index.cap,
             n_tokens=index.n_tokens,
-            use_kernel=config.use_kernel,
+            use_kernel=config.wants_kernel,
         )[0]
         doc_ids, valid = gather_doc_ids(index, cids_i)
         return cand, doc_ids, valid
 
-    if config.scan_qtokens:
+    if config.memory == "scan_qtokens":
         _, (cand, dids, valid) = jax.lax.scan(
             lambda c, x: (c, one(*x)), None, (q, probe_scores, probe_cids)
         )
@@ -119,7 +133,7 @@ def _fused_score_probed(
         dim=index.dim,
         cap=index.cap,
         n_tokens=index.n_tokens,
-        use_kernel=config.use_kernel,
+        use_kernel=config.wants_kernel,
     )
     doc_ids, valid = gather_doc_ids(index, probe_cids)
     return cand, doc_ids, valid
@@ -135,14 +149,14 @@ def score_probed_clusters(
     """Implicit decompression (Eq. 5) over the probed clusters.
 
     Returns (cand_scores f32[Q, P, cap], doc_ids i32[Q, P, cap],
-    valid bool[Q, P, cap]). With ``config.scan_qtokens`` the gather +
+    valid bool[Q, P, cap]). With ``memory="scan_qtokens"`` the gather +
     selective-sum runs one query token per scan step, bounding the live
-    packed-code working set by a factor of Q. With ``config.fused_gather``
-    the gather/decompress/score boundary collapses into the single-pass
-    kernel path and invalid slots come back as exact 0 (dropped by the
-    reduction's valid mask either way).
+    packed-code working set by a factor of Q. With ``gather="fused"`` the
+    gather/decompress/score boundary collapses into the single-pass kernel
+    path and invalid slots come back as exact 0 (dropped by the reduction's
+    valid mask either way).
     """
-    if config.fused_gather:
+    if config.gather == "fused":
         return _fused_score_probed(index, q, probe_scores, probe_cids, config)
 
     p, cap = config.nprobe, index.cap
@@ -155,12 +169,12 @@ def score_probed_clusters(
             v,
             nbits=index.nbits,
             dim=index.dim,
-            use_kernel=config.use_kernel,
+            use_kernel=config.wants_kernel,
             impl=config.sum_impl,
         ).reshape(1, p, cap)
         return (res + scores_i[None, :, None])[0], doc_ids[0], valid[0]
 
-    if config.scan_qtokens:
+    if config.memory == "scan_qtokens":
         _, (cand, dids, valid) = jax.lax.scan(
             lambda c, x: (c, one(*x)), None, (q, probe_scores, probe_cids)
         )
@@ -174,27 +188,33 @@ def score_probed_clusters(
         v,
         nbits=index.nbits,
         dim=index.dim,
-        use_kernel=config.use_kernel,
+        use_kernel=config.wants_kernel,
         impl=config.sum_impl,
     ).reshape(qm, p, cap)
     return res_scores + probe_scores[..., None], doc_ids, valid
 
 
-@functools.partial(jax.jit, static_argnames=("config",))
-def _search_one(index: WarpIndex, q: jax.Array, qmask: jax.Array, config: WarpSearchConfig) -> TopKResult:
+def score_and_reduce(
+    index: WarpIndex,
+    q: jax.Array,
+    qmask: jax.Array,
+    probe_scores: jax.Array,
+    probe_cids: jax.Array,
+    mse: jax.Array,
+    config: WarpSearchConfig,
+) -> TopKResult:
+    """Stages 2+3 of the pipeline: implicit decompression over the probe
+    set, then the two-stage reduction to top-k.
+
+    ``mse`` is the per-query-token missing similarity estimate — locally
+    imputed by ``warp_select`` on the single-device path, globally merged
+    across shards on the distributed path. ``index.n_docs`` (shard-local on
+    the distributed path) arms the reduction's int32-overflow fallback.
+    """
     qm = q.shape[0]
-    sel = warp_select(
-        q,
-        index.centroids,
-        index.cluster_sizes,
-        nprobe=config.nprobe,
-        t_prime=config.t_prime,
-        k_impute=config.k_impute,
-        qmask=qmask,
-    )
     p, cap = config.nprobe, index.cap
     cand_scores, doc_ids, valid = score_probed_clusters(
-        index, q, sel.probe_scores, sel.probe_cids, config
+        index, q, probe_scores, probe_cids, config
     )
 
     # Candidates of masked query tokens are dropped here.
@@ -208,11 +228,27 @@ def _search_one(index: WarpIndex, q: jax.Array, qmask: jax.Array, config: WarpSe
         qtok.reshape(-1),
         cand_scores.reshape(-1),
         valid.reshape(-1),
-        sel.mse,
+        mse,
         q_max=qm,
         k=config.k,
         impl=config.reduce_impl,
         n_docs=index.n_docs or None,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("config",))
+def _search_one(index: WarpIndex, q: jax.Array, qmask: jax.Array, config: WarpSearchConfig) -> TopKResult:
+    sel = warp_select(
+        q,
+        index.centroids,
+        index.cluster_sizes,
+        nprobe=config.nprobe,
+        t_prime=config.t_prime,
+        k_impute=config.k_impute,
+        qmask=qmask,
+    )
+    return score_and_reduce(
+        index, q, qmask, sel.probe_scores, sel.probe_cids, sel.mse, config
     )
 
 
@@ -222,7 +258,11 @@ def search(
     qmask: jax.Array | None = None,
     config: WarpSearchConfig = WarpSearchConfig(),
 ) -> TopKResult:
-    """Single query: q f32[Q, D] (rows L2-normalized by caller or encoder)."""
+    """Single query: q f32[Q, D] (rows L2-normalized by caller or encoder).
+
+    Convenience wrapper over the planned pipeline; equivalent to
+    ``Retriever.from_index(index).retrieve(q, qmask, config=config)``.
+    """
     config = resolve_config(index, config)
     if qmask is None:
         qmask = jnp.ones((q.shape[0],), bool)
@@ -240,7 +280,11 @@ def search_batch(
     qmask: jax.Array | None = None,
     config: WarpSearchConfig = WarpSearchConfig(),
 ) -> TopKResult:
-    """Batched queries: q f32[B, Q, D] -> TopKResult with leading batch dim."""
+    """Batched queries: q f32[B, Q, D] -> TopKResult with leading batch dim.
+
+    Convenience wrapper; equivalent to ``Retriever.from_index(index)
+    .retrieve_batch(q, qmask, config=config)``.
+    """
     config = resolve_config(index, config)
     if qmask is None:
         qmask = jnp.ones(q.shape[:2], bool)

@@ -1,0 +1,304 @@
+"""Unified ``Retriever`` facade: one planned pipeline for local, batched,
+and document-sharded WARP search.
+
+WARP's contribution is an *engine* — WARP_SELECT, implicit decompression,
+and the two-stage reduction composed into one optimized pipeline — and this
+module is the single front door to it. The API has an explicit plan/execute
+split:
+
+  build / from_index   construct (or adopt) a single-device ``WarpIndex``
+                       or a ``ShardedWarpIndex`` + mesh.
+  plan(config)         validate the search config against index geometry
+                       and backend capabilities, materialize every
+                       data-dependent default (t', k_impute, executor), and
+                       compile the jit'd callables once -> ``SearchPlan``.
+  retrieve(...)        dispatch a single query through a plan.
+  retrieve_batch(...)  dispatch a [B, Q, D] query batch through a plan.
+
+Every execution surface — ``engine.search``, ``engine.search_batch``,
+``distributed.sharded_search``, the serving batcher, benchmarks — runs the
+same three exported stages (``warp_select`` -> ``score_probed_clusters`` ->
+``two_stage_reduce``); the plan only decides *how* they run:
+
+  gather   = "materialize" | "fused"       candidate-code movement
+  executor = "auto" | "kernel" | "reference"  Pallas vs jnp (auto = backend)
+  memory   = "full" | "scan_qtokens"       peak working-set bounding
+
+Plans are cached per config, so repeated ``retrieve`` calls with the same
+config reuse the compiled pipeline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distributed as dist
+from repro.core import engine
+from repro.core.index import build_index
+from repro.core.reduction import TopKResult
+from repro.core.types import IndexBuildConfig, WarpIndex, WarpSearchConfig
+from repro.kernels import ops
+
+__all__ = ["Retriever", "SearchPlan"]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SearchPlan:
+    """A validated, compiled search pipeline bound to one index + config.
+
+    ``config`` is fully resolved: ``t_prime`` / ``k_impute`` are concrete
+    ints, ``executor`` is "kernel" or "reference" (never "auto"). The jit'd
+    callables are built once at plan time; ``retrieve``/``retrieve_batch``
+    only convert inputs and dispatch.
+
+    ``eq=False``: plans hash/compare by identity — they close over compiled
+    callables and device arrays, which have no useful value equality.
+    """
+
+    config: WarpSearchConfig
+    n_shards: int
+    backend: str
+    index_geometry: dict
+    _single: Callable[..., TopKResult] = dataclasses.field(repr=False)
+    _batch: Callable[..., TopKResult] = dataclasses.field(repr=False)
+    _index: Any = dataclasses.field(repr=False)
+
+    @property
+    def t_prime(self) -> int:
+        return self.config.t_prime
+
+    @property
+    def k_impute(self) -> int:
+        return self.config.k_impute
+
+    def retrieve(self, q: jax.Array, qmask: jax.Array | None = None) -> TopKResult:
+        """One query: q f32[Q, D] -> TopKResult (scores f32[k], doc_ids i32[k])."""
+        q = jnp.asarray(q, jnp.float32)
+        if qmask is None:
+            qmask = jnp.ones((q.shape[0],), bool)
+        return self._single(self._index, q, jnp.asarray(qmask, bool))
+
+    def retrieve_batch(self, q: jax.Array, qmask: jax.Array | None = None) -> TopKResult:
+        """Query batch: q f32[B, Q, D] -> TopKResult with leading batch dim."""
+        q = jnp.asarray(q, jnp.float32)
+        if qmask is None:
+            qmask = jnp.ones(q.shape[:2], bool)
+        return self._batch(self._index, q, jnp.asarray(qmask, bool))
+
+    def describe(self) -> dict:
+        """Snapshot of every resolved pipeline choice (JSON-serializable) —
+        recorded by benchmarks so perf numbers name the plan that ran."""
+        cfg = self.config
+        return {
+            "gather": cfg.gather,
+            "executor": cfg.executor,
+            "memory": cfg.memory,
+            "reduce_impl": cfg.reduce_impl,
+            "sum_impl": cfg.sum_impl,
+            "nprobe": cfg.nprobe,
+            "t_prime": cfg.t_prime,
+            "k": cfg.k,
+            "k_impute": cfg.k_impute,
+            "n_shards": self.n_shards,
+            "backend": self.backend,
+            **self.index_geometry,
+        }
+
+
+class Retriever:
+    """Facade over the WARP engine: build/adopt an index, plan, retrieve.
+
+    >>> r = Retriever.build(emb, token_doc_ids, n_docs)
+    >>> plan = r.plan(WarpSearchConfig(nprobe=16, k=10, gather="fused"))
+    >>> res = plan.retrieve(q, qmask)          # or r.retrieve(q, qmask, config=...)
+
+    A ``Retriever`` wraps either a single-device ``WarpIndex`` or a
+    ``ShardedWarpIndex`` (+ mesh); the planned pipeline is identical, the
+    sharded plan just runs it per shard under ``shard_map`` with globally
+    aligned imputation and an O(k · devices) merge.
+    """
+
+    def __init__(
+        self,
+        index: WarpIndex | dist.ShardedWarpIndex,
+        *,
+        mesh: jax.sharding.Mesh | None = None,
+        shard_axes: tuple[str, ...] = ("data",),
+    ):
+        self.index = index
+        self.shard_axes = shard_axes
+        self._plans: dict[WarpSearchConfig, SearchPlan] = {}
+        if self.is_sharded:
+            if mesh is None:
+                mesh = jax.make_mesh((index.n_shards,), ("data",))
+                self.shard_axes = ("data",)
+            mesh_size = 1
+            for ax in self.shard_axes:
+                mesh_size *= mesh.shape[ax]
+            if mesh_size != index.n_shards:
+                raise ValueError(
+                    f"mesh axes {self.shard_axes} have total size {mesh_size} "
+                    f"but the index has {index.n_shards} shards"
+                )
+        elif mesh is not None:
+            raise ValueError("mesh= only applies to a ShardedWarpIndex")
+        self.mesh = mesh
+
+    # ---- constructors ----
+    @classmethod
+    def build(
+        cls,
+        embeddings,
+        token_doc_ids,
+        n_docs: int,
+        index_cfg: IndexBuildConfig = IndexBuildConfig(),
+        *,
+        n_shards: int | None = None,
+        mesh: jax.sharding.Mesh | None = None,
+        shard_axes: tuple[str, ...] = ("data",),
+    ) -> "Retriever":
+        """Index a corpus. ``n_shards``/``mesh`` select the document-sharded
+        build (n_shards defaults to the mesh size when only a mesh is given)."""
+        if mesh is not None and n_shards is None:
+            n_shards = 1
+            for ax in shard_axes:
+                n_shards *= mesh.shape[ax]
+        if n_shards is None:
+            index = build_index(embeddings, token_doc_ids, n_docs, index_cfg)
+            return cls(index)
+        sidx = dist.build_sharded_index(
+            embeddings, token_doc_ids, n_docs, n_shards, index_cfg
+        )
+        return cls(sidx, mesh=mesh, shard_axes=shard_axes)
+
+    @classmethod
+    def from_index(
+        cls,
+        index: WarpIndex | dist.ShardedWarpIndex,
+        *,
+        mesh: jax.sharding.Mesh | None = None,
+        shard_axes: tuple[str, ...] = ("data",),
+    ) -> "Retriever":
+        """Adopt an existing single-device or sharded index."""
+        return cls(index, mesh=mesh, shard_axes=shard_axes)
+
+    # ---- properties ----
+    @property
+    def is_sharded(self) -> bool:
+        return isinstance(self.index, dist.ShardedWarpIndex)
+
+    @property
+    def n_docs(self) -> int:
+        return self.index.n_docs
+
+    @property
+    def n_shards(self) -> int:
+        return self.index.n_shards if self.is_sharded else 1
+
+    # ---- plan/execute ----
+    def plan(self, config: WarpSearchConfig = WarpSearchConfig()) -> SearchPlan:
+        """Validate ``config`` against index geometry + backend capabilities
+        and compile the pipeline. Raises ValueError on an unsatisfiable
+        config; returns a cached plan for a previously planned config."""
+        cached = self._plans.get(config)
+        if cached is not None:
+            return cached
+        resolved = self._resolve(config)
+        self._validate(resolved)
+        plan = SearchPlan(
+            config=resolved,
+            n_shards=self.n_shards,
+            backend=jax.default_backend(),
+            index_geometry=self._geometry(),
+            _single=self._compile_single(resolved),
+            _batch=self._compile_batch(resolved),
+            _index=self.index,
+        )
+        self._plans[config] = plan
+        self._plans[resolved] = plan
+        return plan
+
+    def retrieve(
+        self,
+        q: jax.Array,
+        qmask: jax.Array | None = None,
+        config: WarpSearchConfig = WarpSearchConfig(),
+    ) -> TopKResult:
+        """Plan (cached) + single-query dispatch."""
+        return self.plan(config).retrieve(q, qmask)
+
+    def retrieve_batch(
+        self,
+        q: jax.Array,
+        qmask: jax.Array | None = None,
+        config: WarpSearchConfig = WarpSearchConfig(),
+    ) -> TopKResult:
+        """Plan (cached) + batched dispatch."""
+        return self.plan(config).retrieve_batch(q, qmask)
+
+    # ---- internals ----
+    def _resolve(self, config: WarpSearchConfig) -> WarpSearchConfig:
+        if self.is_sharded:
+            return dist.resolve_sharded_config(self.index, config)
+        return engine.resolve_config(self.index, config)
+
+    def _validate(self, cfg: WarpSearchConfig) -> None:
+        idx = self.index
+        n_centroids = idx.n_centroids
+        problems = []
+        if cfg.nprobe < 1:
+            problems.append(f"nprobe={cfg.nprobe} must be >= 1")
+        if cfg.nprobe > n_centroids:
+            problems.append(
+                f"nprobe={cfg.nprobe} exceeds the index's "
+                f"{n_centroids} centroids"
+            )
+        if cfg.k < 1:
+            problems.append(f"k={cfg.k} must be >= 1")
+        # k_impute is clamped to [nprobe, n_centroids] during resolution
+        # (resolved_k_impute), so it cannot be invalid here.
+        if cfg.t_prime < 1:
+            problems.append(f"t_prime={cfg.t_prime} must be >= 1")
+        max_cands = cfg.nprobe * idx.cap
+        if idx.cap and cfg.k > max_cands:
+            problems.append(
+                f"k={cfg.k} exceeds the candidate pool nprobe*cap="
+                f"{max_cands}; raise nprobe or lower k"
+            )
+        if problems:
+            raise ValueError(
+                "unsatisfiable search plan: " + "; ".join(problems)
+            )
+
+    def _geometry(self) -> dict:
+        idx = self.index
+        geo = {
+            "n_docs": idx.n_docs,
+            "n_centroids": idx.n_centroids,
+            "cap": idx.cap,
+            "nbits": idx.nbits,
+            "dim": idx.dim,
+        }
+        if self.is_sharded:
+            geo["n_tokens"] = idx.resolved_n_tokens()
+        else:
+            geo["n_tokens"] = idx.n_tokens
+        return geo
+
+    def _compile_single(self, cfg: WarpSearchConfig) -> Callable[..., TopKResult]:
+        if self.is_sharded:
+            return dist.make_sharded_search_fn(
+                self.index, cfg, self.mesh, self.shard_axes, query_batch=False
+            )
+        return lambda index, q, qmask: engine._search_one(index, q, qmask, cfg)
+
+    def _compile_batch(self, cfg: WarpSearchConfig) -> Callable[..., TopKResult]:
+        if self.is_sharded:
+            return dist.make_sharded_search_fn(
+                self.index, cfg, self.mesh, self.shard_axes, query_batch=True
+            )
+        return lambda index, q, qmask: engine._search_many(index, q, qmask, cfg)

@@ -10,12 +10,19 @@ max cluster size) rides along as aux data.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 __all__ = ["WarpIndex", "WarpSearchConfig", "IndexBuildConfig"]
+
+GATHER_STRATEGIES = ("materialize", "fused")
+EXECUTOR_STRATEGIES = ("auto", "kernel", "reference")
+MEMORY_STRATEGIES = ("full", "scan_qtokens")
+REDUCE_IMPLS = ("scan", "segment")
+SUM_IMPLS = ("gather", "lut")
 
 
 @jax.tree_util.register_dataclass
@@ -78,19 +85,27 @@ class WarpSearchConfig:
     k:        number of documents returned.
     k_impute: how many score-sorted centroids to consider when locating the
               cumulative-size crossing point. Must be >= nprobe.
-    use_kernel: route the selective-sum through the Pallas kernel
-              (interpret=True off-TPU) instead of the pure-jnp reference.
-    scan_qtokens: decompress/score one query token at a time (lax.scan)
-              instead of materializing all [Q, nprobe, cap] packed codes at
-              once — bounds peak memory by ~Q (§Perf hillclimb, warp-xtr).
-    fused_gather: score probed clusters with the single-pass
-              gather–decompress–score path (kernels/fused_gather_score.py):
-              the Pallas kernel scalar-prefetches CSR starts/sizes and reads
-              packed codes straight from the resident index, so the
-              [Q, nprobe, cap, PB] uint8 candidate tensor is never
-              materialized in HBM. Combines with ``use_kernel`` (False ->
-              jnp reference of the same fused semantics) and
-              ``scan_qtokens``.
+
+    Pipeline strategies (validated; see ``Retriever.plan``):
+
+    gather:   "materialize" — CSR-gather the [Q, nprobe, cap, PB] packed
+              candidate codes into a dense tensor, then score; "fused" —
+              single-pass gather–decompress–score
+              (kernels/fused_gather_score.py) that reads packed codes
+              straight from the resident index, so the candidate tensor is
+              never materialized in HBM.
+    executor: "kernel" — Pallas kernels (interpret mode off-TPU: correct
+              but Python-rate); "reference" — pure-jnp references of the
+              same semantics; "auto" — kernels on TPU, references elsewhere.
+    memory:   "full" — decompress/score all query tokens at once;
+              "scan_qtokens" — one query token per lax.scan step, bounding
+              the live packed-code working set by a factor of Q.
+
+    The booleans ``use_kernel`` / ``scan_qtokens`` / ``fused_gather`` are
+    deprecated shims: passing them emits ``DeprecationWarning`` and rewrites
+    the matching strategy field, so old call sites still work and hash/
+    compare equal to the new spelling. They are normalized back to ``None``
+    and never read by the engine.
     """
 
     nprobe: int = 32
@@ -98,11 +113,39 @@ class WarpSearchConfig:
     t_prime_max: int = 1 << 16
     k: int = 100
     k_impute: int = 64
-    use_kernel: bool = False
-    scan_qtokens: bool = False
-    fused_gather: bool = False
+    gather: str = "materialize"  # "materialize" | "fused"
+    executor: str = "auto"  # "auto" | "kernel" | "reference"
+    memory: str = "full"  # "full" | "scan_qtokens"
     reduce_impl: str = "scan"  # "scan" | "segment" (see reduction.py)
     sum_impl: str = "gather"  # "gather" | "lut" (byte-LUT; see kernels/ref.py)
+    # Deprecated boolean shims (None = not passed). Mapped in __post_init__.
+    use_kernel: bool | None = None
+    scan_qtokens: bool | None = None
+    fused_gather: bool | None = None
+
+    def __post_init__(self):
+        shims = (
+            ("use_kernel", "executor", {True: "kernel", False: "reference"}),
+            ("scan_qtokens", "memory", {True: "scan_qtokens", False: "full"}),
+            ("fused_gather", "gather", {True: "fused", False: "materialize"}),
+        )
+        for legacy, field, mapping in shims:
+            val = getattr(self, legacy)
+            if val is None:
+                continue
+            warnings.warn(
+                f"WarpSearchConfig.{legacy} is deprecated; use "
+                f"{field}={mapping[bool(val)]!r} instead",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+            object.__setattr__(self, field, mapping[bool(val)])
+            object.__setattr__(self, legacy, None)
+        _check_choice("gather", self.gather, GATHER_STRATEGIES)
+        _check_choice("executor", self.executor, EXECUTOR_STRATEGIES)
+        _check_choice("memory", self.memory, MEMORY_STRATEGIES)
+        _check_choice("reduce_impl", self.reduce_impl, REDUCE_IMPLS)
+        _check_choice("sum_impl", self.sum_impl, SUM_IMPLS)
 
     def resolved_t_prime(self, n_tokens: int) -> int:
         if self.t_prime is not None:
@@ -111,6 +154,30 @@ class WarpSearchConfig:
 
     def resolved_k_impute(self, n_centroids: int) -> int:
         return int(min(n_centroids, max(self.k_impute, self.nprobe)))
+
+    def resolved_executor(self, on_tpu: bool) -> str:
+        """Concretize executor="auto": Pallas kernels on TPU, jnp refs off."""
+        if self.executor == "auto":
+            return "kernel" if on_tpu else "reference"
+        return self.executor
+
+    @property
+    def wants_kernel(self) -> bool:
+        """Whether the (resolved) executor routes through the Pallas kernels.
+
+        "auto" must be concretized first (``resolved_executor`` /
+        ``engine.resolve_config``); reading it here means the config was
+        never planned, and the conservative answer is the jnp reference.
+        """
+        return self.executor == "kernel"
+
+
+def _check_choice(name: str, value: str, allowed: tuple[str, ...]) -> None:
+    if value not in allowed:
+        raise ValueError(
+            f"WarpSearchConfig.{name}={value!r} is not a valid strategy; "
+            f"expected one of {allowed}"
+        )
 
 
 @dataclasses.dataclass(frozen=True)

@@ -26,8 +26,8 @@ two-step path first materializes ``[Q, nprobe, cap, PB]`` codes in HBM
 crosses HBM three times (index read at gather, gather write, kernel read).
 ``fused_gather_score.py`` is the single-pass evolution: it scalar-prefetches
 the CSR probe metadata and pulls code tiles straight from the resident
-index, eliminating the gathered copy entirely (engine flag
-``WarpSearchConfig.fused_gather``). This two-step kernel remains the
+index, eliminating the gathered copy entirely (engine strategy
+``WarpSearchConfig(gather="fused")``). This two-step kernel remains the
 baseline and the drop-in for callers that already hold gathered codes.
 """
 

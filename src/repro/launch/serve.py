@@ -1,8 +1,15 @@
 """Serving driver: stand up a WARP retrieval server over a synthetic
 corpus and push batched queries through the deadline batcher.
 
+Everything dispatches through the unified ``Retriever`` plan, so the same
+driver serves a single-device index or a document-sharded one — pass
+``--n-shards N`` (N must divide the available device count; N devices are
+meshed over the ``data`` axis).
+
   PYTHONPATH=src python -m repro.launch.serve --n-docs 500 --queries 32 \
       --nprobe 16 --max-batch 8
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      PYTHONPATH=src python -m repro.launch.serve --n-shards 4
 """
 
 from __future__ import annotations
@@ -10,10 +17,9 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax.numpy as jnp
-import numpy as np
+import jax
 
-from repro.core import IndexBuildConfig, WarpSearchConfig, build_index, index_stats
+from repro.core import IndexBuildConfig, Retriever, WarpSearchConfig, index_stats
 from repro.data import make_corpus, make_queries
 from repro.serving import BatchPolicy, RetrievalServer
 
@@ -25,32 +31,45 @@ def main() -> None:
     ap.add_argument("--nprobe", type=int, default=16)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--nbits", type=int, default=4)
+    ap.add_argument("--n-shards", type=int, default=0,
+                    help="document-shard the index over this many devices "
+                         "(0 = single-device)")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-wait-ms", type=float, default=5.0)
+    ap.add_argument("--gather", choices=["materialize", "fused"], default="materialize")
+    ap.add_argument("--executor", choices=["auto", "kernel", "reference"], default="auto")
+    ap.add_argument("--memory", choices=["full", "scan_qtokens"], default="full")
     ap.add_argument("--sum-impl", choices=["gather", "lut"], default="lut")
     ap.add_argument("--reduce-impl", choices=["scan", "segment"], default="segment")
     args = ap.parse_args()
 
     corpus = make_corpus(args.n_docs, mean_doc_len=20, seed=0)
     t0 = time.perf_counter()
-    index = build_index(
+    retriever = Retriever.build(
         corpus.emb, corpus.token_doc_ids, corpus.n_docs,
         IndexBuildConfig(nbits=args.nbits),
+        n_shards=args.n_shards or None,
     )
-    st = index_stats(index)
-    print(
-        f"indexed {st['n_tokens']} tokens -> {st['n_centroids']} centroids, "
-        f"{st['bytes']/2**20:.1f} MiB in {time.perf_counter()-t0:.1f}s"
-    )
+    if retriever.is_sharded:
+        print(f"sharded index: {retriever.n_shards} shards over "
+              f"{len(jax.devices())} devices")
+    else:
+        st = index_stats(retriever.index)
+        print(
+            f"indexed {st['n_tokens']} tokens -> {st['n_centroids']} centroids, "
+            f"{st['bytes']/2**20:.1f} MiB in {time.perf_counter()-t0:.1f}s"
+        )
 
     server = RetrievalServer(
-        index,
+        retriever,
         WarpSearchConfig(
             nprobe=args.nprobe, k=args.k,
+            gather=args.gather, executor=args.executor, memory=args.memory,
             sum_impl=args.sum_impl, reduce_impl=args.reduce_impl,
         ),
         BatchPolicy(max_batch=args.max_batch, max_wait_s=args.max_wait_ms / 1e3),
     )
+    print(f"search plan: {server.plan.describe()}")
     q, qmask, rel = make_queries(corpus, n_queries=args.queries, seed=1)
 
     t0 = time.perf_counter()
@@ -59,7 +78,7 @@ def main() -> None:
     dt = time.perf_counter() - t0
     hits = 0
     for i, rid in enumerate(ids):
-        scores, docs = server.poll(rid)
+        scores, docs = server.result(rid, timeout=10.0)
         hits += int(rel[i] in docs)
     print(
         f"served {args.queries} queries in {dt:.2f}s "

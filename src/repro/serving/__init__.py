@@ -1,4 +1,4 @@
-from repro.serving.batcher import BatchPolicy, RetrievalServer
+from repro.serving.batcher import PENDING, BatchPolicy, RetrievalServer
 from repro.serving.generate import generate
 
-__all__ = ["BatchPolicy", "RetrievalServer", "generate"]
+__all__ = ["PENDING", "BatchPolicy", "RetrievalServer", "generate"]

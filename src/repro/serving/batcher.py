@@ -9,7 +9,19 @@ paper's own multi-thread scaling argument (Fig. 10) maps onto batching here:
 on TPU, intra-query parallelism is the mesh, inter-query parallelism is the
 batch.
 
+The server dispatches through the unified ``Retriever`` plan, so it serves
+single-device AND document-sharded indexes with the same code: pass a
+``WarpIndex``, a ``ShardedWarpIndex``, or a pre-built ``Retriever`` (e.g.
+one holding a multi-host mesh).
+
 The clock is injectable so tests drive deadline behavior deterministically.
+
+Request lifecycle: ``submit`` -> ``poll`` returns the ``PENDING`` sentinel
+until the request's batch has been dispatched, then pops and returns the
+``(scores, doc_ids)`` pair exactly once; polling an id that was never
+submitted (or already popped) raises ``KeyError``. ``result`` is the
+blocking convenience wrapper that drives the server loop until the request
+completes.
 """
 
 from __future__ import annotations
@@ -22,9 +34,31 @@ from typing import Callable
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import WarpIndex, WarpSearchConfig, search_batch
+from repro.core import Retriever, WarpSearchConfig
+from repro.core.distributed import ShardedWarpIndex
+from repro.core.types import WarpIndex
 
-__all__ = ["BatchPolicy", "RetrievalServer"]
+__all__ = ["BatchPolicy", "RetrievalServer", "PENDING"]
+
+
+class _PendingType:
+    """Sentinel: the request is known but its batch has not run yet."""
+
+    _instance = None
+
+    def __new__(cls):
+        if cls._instance is None:
+            cls._instance = super().__new__(cls)
+        return cls._instance
+
+    def __repr__(self) -> str:
+        return "PENDING"
+
+    def __bool__(self) -> bool:
+        return False
+
+
+PENDING = _PendingType()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,16 +78,20 @@ class _Pending:
 class RetrievalServer:
     def __init__(
         self,
-        index: WarpIndex,
+        index: WarpIndex | ShardedWarpIndex | Retriever,
         config: WarpSearchConfig = WarpSearchConfig(),
         policy: BatchPolicy = BatchPolicy(),
         clock: Callable[[], float] = time.monotonic,
     ):
-        self.index = index
-        self.config = config
+        self.retriever = (
+            index if isinstance(index, Retriever) else Retriever.from_index(index)
+        )
+        self.plan = self.retriever.plan(config)
+        self.config = self.plan.config
         self.policy = policy
         self.clock = clock
         self._queue: deque[_Pending] = deque()
+        self._inflight: set[int] = set()
         self._results: dict[int, tuple[np.ndarray, np.ndarray]] = {}
         self._next_id = 0
         self.stats = {"batches": 0, "padded_slots": 0, "served": 0}
@@ -65,10 +103,42 @@ class RetrievalServer:
         rid = self._next_id
         self._next_id += 1
         self._queue.append(_Pending(rid, q, qmask, self.clock()))
+        self._inflight.add(rid)
         return rid
 
     def poll(self, req_id: int):
-        return self._results.pop(req_id, None)
+        """Non-blocking result check.
+
+        Completed -> pops and returns ``(scores, doc_ids)`` (exactly once).
+        Submitted but not yet served -> the ``PENDING`` sentinel.
+        Unknown or already-popped id -> ``KeyError``.
+        """
+        if req_id in self._results:
+            return self._results.pop(req_id)
+        if req_id in self._inflight:
+            return PENDING
+        raise KeyError(f"unknown or already-consumed request id {req_id}")
+
+    def result(self, req_id: int, timeout: float | None = None):
+        """Blocking helper: drive the server loop until ``req_id`` completes.
+
+        Prefers deadline/full-batch dispatch; if no batch is dispatchable
+        yet (queue under-full, deadline not reached) it forces a padded
+        dispatch rather than spin — this is the single-threaded driver, so
+        nobody else will. Raises ``TimeoutError`` if ``timeout`` (measured
+        on the injected clock) elapses first, ``KeyError`` on unknown ids.
+        """
+        start = self.clock()
+        while True:
+            out = self.poll(req_id)
+            if out is not PENDING:
+                return out
+            if timeout is not None and self.clock() - start >= timeout:
+                raise TimeoutError(
+                    f"request {req_id} not served within {timeout}s"
+                )
+            if self.step() == 0:
+                self.step(force=True)
 
     # ---- server loop ----
     def step(self, *, force: bool = False) -> int:
@@ -89,11 +159,12 @@ class RetrievalServer:
         for i, p in enumerate(batch):
             q[i] = p.q
             mask[i] = p.qmask
-        res = search_batch(self.index, jnp.asarray(q), jnp.asarray(mask), self.config)
+        res = self.plan.retrieve_batch(jnp.asarray(q), jnp.asarray(mask))
         scores = np.asarray(res.scores)
         docs = np.asarray(res.doc_ids)
         for i, p in enumerate(batch):
             self._results[p.req_id] = (scores[i], docs[i])
+            self._inflight.discard(p.req_id)
         self.stats["batches"] += 1
         self.stats["padded_slots"] += b - take
         self.stats["served"] += take

@@ -1,0 +1,75 @@
+"""Deprecation lane: run the internal surfaces under
+``-W error::DeprecationWarning`` in a subprocess.
+
+The legacy boolean flags (``use_kernel``/``scan_qtokens``/``fused_gather``)
+are shims that warn; internal code — engine, retriever, distributed,
+serving, benchmarks — must be on the strategy-field API, so exercising all
+of it with DeprecationWarning promoted to an error proves no internal call
+site still routes through the shims. (Parity *tests* still use the shims
+on purpose; this lane covers the product code paths.)
+"""
+
+import os
+import subprocess
+import sys
+
+LANE_SCRIPT = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import (Retriever, WarpSearchConfig, IndexBuildConfig,
+                        build_index, build_sharded_index, search, search_batch,
+                        sharded_search)
+from repro.data import make_corpus, make_queries
+from repro.serving import BatchPolicy, RetrievalServer, PENDING
+
+corpus = make_corpus(n_docs=120, mean_doc_len=10, seed=0)
+q, qmask, rel = make_queries(corpus, n_queries=4, seed=1)
+bcfg = IndexBuildConfig(n_centroids=16, nbits=4, kmeans_iters=2)
+
+# Engine wrappers + every strategy dimension through the Retriever plan.
+idx = build_index(corpus.emb, corpus.token_doc_ids, corpus.n_docs, bcfg)
+r = Retriever.from_index(idx)
+for cfg in (
+    WarpSearchConfig(nprobe=8, k=5, t_prime=400),
+    WarpSearchConfig(nprobe=8, k=5, t_prime=400, gather="fused"),
+    WarpSearchConfig(nprobe=8, k=5, t_prime=400, memory="scan_qtokens",
+                     executor="kernel", sum_impl="lut", reduce_impl="segment"),
+):
+    r.plan(cfg).retrieve(q[0], qmask[0])
+search(idx, q[0], jnp.asarray(qmask[0]), WarpSearchConfig(nprobe=8, k=5))
+search_batch(idx, q[:2], jnp.asarray(qmask[:2]), WarpSearchConfig(nprobe=8, k=5))
+
+# Sharded path (1 shard on this container; same shard_map code).
+sidx = build_sharded_index(corpus.emb, corpus.token_doc_ids, corpus.n_docs,
+                           len(jax.devices()), bcfg)
+sharded_search(sidx, q[0], jnp.asarray(qmask[0]), WarpSearchConfig(nprobe=8, k=5))
+Retriever.from_index(sidx).retrieve_batch(q[:2], qmask[:2],
+                                          config=WarpSearchConfig(nprobe=8, k=5))
+
+# Serving batcher end to end.
+srv = RetrievalServer(r, WarpSearchConfig(nprobe=8, k=5),
+                      BatchPolicy(max_batch=2, max_wait_s=10.0))
+rids = [srv.submit(q[i], qmask[i]) for i in range(3)]
+assert srv.poll(rids[2]) is PENDING
+for rid in rids:
+    srv.result(rid, timeout=30.0)
+
+# Benchmark harness imports (module-level config construction would trip).
+import benchmarks.common, benchmarks.bench_latency, benchmarks.run  # noqa
+
+print("LANE_CLEAN")
+"""
+
+
+def test_internal_code_is_deprecation_clean():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run(
+        [sys.executable, "-W", "error::DeprecationWarning", "-c", LANE_SCRIPT],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=600,
+    )
+    assert out.returncode == 0, (out.stderr or out.stdout)[-3000:]
+    assert "LANE_CLEAN" in out.stdout

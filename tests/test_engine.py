@@ -63,8 +63,8 @@ def test_implicit_equals_explicit_decompression(small_setup):
 
 def test_kernel_path_matches_ref_path(small_setup):
     _, idx, q, qmask, _ = small_setup
-    r0 = search(idx, q[0], jnp.asarray(qmask[0]), WarpSearchConfig(nprobe=8, k=10, use_kernel=False))
-    r1 = search(idx, q[0], jnp.asarray(qmask[0]), WarpSearchConfig(nprobe=8, k=10, use_kernel=True))
+    r0 = search(idx, q[0], jnp.asarray(qmask[0]), WarpSearchConfig(nprobe=8, k=10, executor="reference"))
+    r1 = search(idx, q[0], jnp.asarray(qmask[0]), WarpSearchConfig(nprobe=8, k=10, executor="kernel"))
     np.testing.assert_allclose(np.asarray(r0.scores), np.asarray(r1.scores), rtol=1e-5, atol=1e-5)
     np.testing.assert_array_equal(np.asarray(r0.doc_ids), np.asarray(r1.doc_ids))
 

@@ -25,11 +25,11 @@ BASE = dict(nprobe=16, k=20, t_prime=1000, k_impute=64)
 VARIANTS = [
     dict(sum_impl="lut"),
     dict(reduce_impl="segment"),
-    dict(scan_qtokens=True),
-    dict(sum_impl="lut", reduce_impl="segment", scan_qtokens=True),
-    dict(fused_gather=True),
-    dict(fused_gather=True, reduce_impl="segment"),
-    dict(fused_gather=True, scan_qtokens=True),
+    dict(memory="scan_qtokens"),
+    dict(sum_impl="lut", reduce_impl="segment", memory="scan_qtokens"),
+    dict(gather="fused"),
+    dict(gather="fused", reduce_impl="segment"),
+    dict(gather="fused", memory="scan_qtokens"),
 ]
 
 

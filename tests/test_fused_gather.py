@@ -116,10 +116,10 @@ def engine_setup():
 BASE = dict(nprobe=8, k=20, t_prime=500, k_impute=32)
 
 FUSED_VARIANTS = [
-    dict(fused_gather=True),
-    dict(fused_gather=True, use_kernel=True),
-    dict(fused_gather=True, scan_qtokens=True),
-    dict(fused_gather=True, use_kernel=True, scan_qtokens=True),
+    dict(gather="fused"),
+    dict(gather="fused", executor="kernel"),
+    dict(gather="fused", memory="scan_qtokens"),
+    dict(gather="fused", executor="kernel", memory="scan_qtokens"),
 ]
 
 
@@ -152,7 +152,7 @@ def test_fused_jaxpr_has_no_candidate_materialization(engine_setup):
     indexes, q, qmask = engine_setup
     idx = indexes[4]
     q0, m0 = jnp.asarray(q[0]), jnp.asarray(qmask[0])
-    cfg_f = resolve_config(idx, WarpSearchConfig(**BASE, fused_gather=True, use_kernel=True))
+    cfg_f = resolve_config(idx, WarpSearchConfig(**BASE, gather="fused", executor="kernel"))
     cfg_d = resolve_config(idx, WarpSearchConfig(**BASE))
     jx_fused = str(jax.make_jaxpr(lambda a, b: _search_one(idx, a, b, cfg_f))(q0, m0))
     jx_default = str(jax.make_jaxpr(lambda a, b: _search_one(idx, a, b, cfg_d))(q0, m0))
@@ -168,7 +168,7 @@ def test_search_batch_fused(engine_setup):
     idx = indexes[4]
     qb, mb = jnp.asarray(q[:3]), jnp.asarray(qmask[:3])
     a = search_batch(idx, qb, mb, WarpSearchConfig(**BASE))
-    b = search_batch(idx, qb, mb, WarpSearchConfig(**BASE, fused_gather=True))
+    b = search_batch(idx, qb, mb, WarpSearchConfig(**BASE, gather="fused"))
     np.testing.assert_allclose(
         np.asarray(a.scores), np.asarray(b.scores), rtol=1e-4, atol=1e-4
     )

@@ -1,0 +1,293 @@
+"""Unified ``Retriever`` API: parity vs the legacy entry points (local,
+batched, sharded; fused vs materialize), plan validation, and the
+deprecated-flag shims."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    IndexBuildConfig,
+    Retriever,
+    WarpSearchConfig,
+    build_index,
+    build_sharded_index,
+    search,
+    search_batch,
+    sharded_search,
+)
+from repro.data import make_corpus, make_queries
+
+
+@pytest.fixture(scope="module")
+def setup():
+    corpus = make_corpus(n_docs=250, mean_doc_len=14, seed=21)
+    idx = build_index(
+        corpus.emb, corpus.token_doc_ids, corpus.n_docs,
+        IndexBuildConfig(n_centroids=64, nbits=4, kmeans_iters=3),
+    )
+    q, qmask, rel = make_queries(corpus, n_queries=6, seed=22)
+    return corpus, idx, q, qmask, rel
+
+
+CFGS = [
+    WarpSearchConfig(nprobe=8, k=10, t_prime=600),
+    WarpSearchConfig(nprobe=8, k=10, t_prime=600, gather="fused"),
+    WarpSearchConfig(nprobe=8, k=10, t_prime=600, gather="fused",
+                     memory="scan_qtokens"),
+    WarpSearchConfig(nprobe=8, k=10, t_prime=600, executor="kernel"),
+]
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=lambda c: f"{c.gather}/{c.executor}/{c.memory}")
+def test_retriever_matches_legacy_search(setup, cfg):
+    _, idx, q, qmask, _ = setup
+    r = Retriever.from_index(idx)
+    plan = r.plan(cfg)
+    for i in range(3):
+        a = plan.retrieve(q[i], qmask[i])
+        b = search(idx, q[i], jnp.asarray(qmask[i]), cfg)
+        np.testing.assert_allclose(
+            np.asarray(a.scores), np.asarray(b.scores), rtol=1e-5, atol=1e-5
+        )
+        np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+
+
+def test_retriever_batch_matches_legacy(setup):
+    _, idx, q, qmask, _ = setup
+    cfg = WarpSearchConfig(nprobe=8, k=10, t_prime=600)
+    r = Retriever.from_index(idx)
+    a = r.retrieve_batch(q[:4], qmask[:4], config=cfg)
+    b = search_batch(idx, q[:4], jnp.asarray(qmask[:4]), cfg)
+    np.testing.assert_allclose(
+        np.asarray(a.scores), np.asarray(b.scores), rtol=1e-5, atol=1e-5
+    )
+    np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+
+
+def test_fused_matches_materialize_via_plans(setup):
+    _, idx, q, qmask, _ = setup
+    r = Retriever.from_index(idx)
+    base = r.plan(WarpSearchConfig(nprobe=8, k=10, t_prime=600))
+    fused = r.plan(WarpSearchConfig(nprobe=8, k=10, t_prime=600, gather="fused"))
+    for i in range(3):
+        a = base.retrieve(q[i], qmask[i])
+        b = fused.retrieve(q[i], qmask[i])
+        np.testing.assert_allclose(
+            np.asarray(a.scores), np.asarray(b.scores), rtol=1e-4, atol=1e-4
+        )
+        np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+
+
+def test_retriever_sharded_matches_legacy(setup):
+    corpus, _, q, qmask, _ = setup
+    sidx = build_sharded_index(
+        corpus.emb, corpus.token_doc_ids, corpus.n_docs,
+        n_shards=len(jax.devices()),
+        config=IndexBuildConfig(n_centroids=32, nbits=4, kmeans_iters=2),
+    )
+    cfg = WarpSearchConfig(nprobe=8, k=10, t_prime=600)
+    r = Retriever.from_index(sidx)
+    plan = r.plan(cfg)
+    for i in range(3):
+        a = plan.retrieve(q[i], qmask[i])
+        b = sharded_search(sidx, q[i], jnp.asarray(qmask[i]), cfg)
+        np.testing.assert_allclose(
+            np.asarray(a.scores), np.asarray(b.scores), rtol=1e-5, atol=1e-5
+        )
+        np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+    # Sharded batch goes through the same plan (query_batch shard_map body).
+    ab = plan.retrieve_batch(q[:2], qmask[:2])
+    for i in range(2):
+        a1 = plan.retrieve(q[i], qmask[i])
+        np.testing.assert_array_equal(
+            np.asarray(ab.doc_ids[i]), np.asarray(a1.doc_ids)
+        )
+
+
+def test_build_constructor_local_and_sharded(setup):
+    corpus, _, q, qmask, rel = setup
+    r_local = Retriever.build(
+        corpus.emb, corpus.token_doc_ids, corpus.n_docs,
+        IndexBuildConfig(n_centroids=32, nbits=4, kmeans_iters=2),
+    )
+    assert not r_local.is_sharded and r_local.n_shards == 1
+    r_shard = Retriever.build(
+        corpus.emb, corpus.token_doc_ids, corpus.n_docs,
+        IndexBuildConfig(n_centroids=32, nbits=4, kmeans_iters=2),
+        n_shards=len(jax.devices()),
+    )
+    assert r_shard.is_sharded
+    res = r_shard.retrieve(q[0], qmask[0], config=WarpSearchConfig(nprobe=8, k=10))
+    assert np.asarray(res.doc_ids).shape == (10,)
+
+
+def test_sharded_t_prime_resolves_from_true_token_count(setup):
+    """Padding tokens must not inflate the imputation threshold."""
+    corpus, *_ = setup
+    sidx = build_sharded_index(
+        corpus.emb, corpus.token_doc_ids, corpus.n_docs,
+        n_shards=len(jax.devices()),
+        config=IndexBuildConfig(n_centroids=32, nbits=4, kmeans_iters=2),
+    )
+    assert sidx.n_tokens_total == corpus.n_tokens
+    assert sidx.resolved_n_tokens() == corpus.n_tokens
+    plan = Retriever.from_index(sidx).plan(WarpSearchConfig(nprobe=8, k=10))
+    want = WarpSearchConfig(nprobe=8, k=10).resolved_t_prime(corpus.n_tokens)
+    assert plan.t_prime == want
+    # The old bug resolved from n_tokens_padded * n_shards, which over-counts
+    # whenever shards are padded to a common geometry.
+    assert sidx.n_tokens_padded * sidx.n_shards >= corpus.n_tokens
+
+
+# ---- plan validation ----
+
+def test_plan_rejects_bad_strategy_strings():
+    with pytest.raises(ValueError, match="gather"):
+        WarpSearchConfig(gather="fussed")
+    with pytest.raises(ValueError, match="executor"):
+        WarpSearchConfig(executor="gpu")
+    with pytest.raises(ValueError, match="memory"):
+        WarpSearchConfig(memory="tiny")
+    with pytest.raises(ValueError, match="reduce_impl"):
+        WarpSearchConfig(reduce_impl="tree")
+    with pytest.raises(ValueError, match="sum_impl"):
+        WarpSearchConfig(sum_impl="simd")
+
+
+def test_plan_rejects_bad_geometry(setup):
+    _, idx, *_ = setup  # 64 centroids
+    r = Retriever.from_index(idx)
+    with pytest.raises(ValueError, match="nprobe"):
+        r.plan(WarpSearchConfig(nprobe=65, k=10))
+    # k_impute is clamped (not rejected) to the centroid count at plan time.
+    assert r.plan(WarpSearchConfig(nprobe=8, k=10, k_impute=100000)).k_impute == 64
+    with pytest.raises(ValueError, match="k="):
+        r.plan(WarpSearchConfig(nprobe=1, k=10 ** 9))
+    with pytest.raises(ValueError, match="nprobe"):
+        r.plan(WarpSearchConfig(nprobe=0, k=10))
+
+
+def test_plan_is_cached_and_resolved(setup):
+    _, idx, *_ = setup
+    r = Retriever.from_index(idx)
+    cfg = WarpSearchConfig(nprobe=8, k=10)
+    p1, p2 = r.plan(cfg), r.plan(cfg)
+    assert p1 is p2
+    assert p1.config.executor in ("kernel", "reference")  # never "auto"
+    assert isinstance(p1.t_prime, int) and p1.t_prime >= 1
+    d = p1.describe()
+    assert d["n_docs"] == idx.n_docs and d["gather"] == "materialize"
+    # Planning the already-resolved config hits the same cache entry.
+    assert r.plan(p1.config) is p1
+
+
+def test_mesh_mismatch_rejected(setup):
+    corpus, idx, *_ = setup
+    with pytest.raises(ValueError, match="mesh"):
+        Retriever.from_index(idx, mesh=jax.make_mesh((1,), ("data",)))
+
+
+# ---- deprecated-flag shims ----
+
+def test_legacy_flags_warn_and_map():
+    with pytest.warns(DeprecationWarning, match="use_kernel"):
+        c = WarpSearchConfig(use_kernel=True)
+    assert c.executor == "kernel" and c.use_kernel is None
+    with pytest.warns(DeprecationWarning, match="scan_qtokens"):
+        c = WarpSearchConfig(scan_qtokens=True)
+    assert c.memory == "scan_qtokens"
+    with pytest.warns(DeprecationWarning, match="fused_gather"):
+        c = WarpSearchConfig(fused_gather=True)
+    assert c.gather == "fused"
+    with pytest.warns(DeprecationWarning):
+        c = WarpSearchConfig(use_kernel=False)
+    assert c.executor == "reference"
+
+
+def test_legacy_flags_hash_equal_to_strategy_spelling():
+    with pytest.warns(DeprecationWarning):
+        old = WarpSearchConfig(nprobe=4, fused_gather=True, scan_qtokens=True)
+    new = WarpSearchConfig(nprobe=4, gather="fused", memory="scan_qtokens")
+    assert old == new and hash(old) == hash(new)
+
+
+def test_legacy_flagged_search_still_works(setup):
+    _, idx, q, qmask, _ = setup
+    with pytest.warns(DeprecationWarning):
+        cfg_old = WarpSearchConfig(nprobe=8, k=10, t_prime=600, fused_gather=True)
+    cfg_new = WarpSearchConfig(nprobe=8, k=10, t_prime=600, gather="fused")
+    a = search(idx, q[0], jnp.asarray(qmask[0]), cfg_old)
+    b = search(idx, q[0], jnp.asarray(qmask[0]), cfg_new)
+    np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+
+
+# ---- 2-shard shard_map parity (forced multi-device subprocess) ----
+
+TWO_SHARD_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import (Retriever, WarpSearchConfig, IndexBuildConfig,
+                        build_sharded_index, sharded_search, build_index, search)
+from repro.data import make_corpus, make_queries
+
+corpus = make_corpus(n_docs=300, mean_doc_len=16, seed=0)
+q, qmask, rel = make_queries(corpus, n_queries=6, seed=1)
+sidx = build_sharded_index(corpus.emb, corpus.token_doc_ids, corpus.n_docs, 2,
+                           IndexBuildConfig(n_centroids=32, nbits=4, kmeans_iters=3))
+r = Retriever.from_index(sidx)
+cfg_mat = WarpSearchConfig(nprobe=16, k=10, t_prime=1500, k_impute=32)
+cfg_fused = WarpSearchConfig(nprobe=16, k=10, t_prime=1500, k_impute=32, gather="fused")
+plan_mat, plan_fused = r.plan(cfg_mat), r.plan(cfg_fused)
+assert plan_mat.n_shards == 2
+
+# (a) fused == materialize under the 2-shard mesh, exactly.
+for i in range(6):
+    a = plan_mat.retrieve(q[i], qmask[i])
+    b = plan_fused.retrieve(q[i], qmask[i])
+    np.testing.assert_allclose(np.asarray(a.scores), np.asarray(b.scores),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+
+# (b) Retriever == legacy sharded_search entry point, exactly.
+for i in range(3):
+    a = plan_fused.retrieve(q[i], qmask[i])
+    b = sharded_search(sidx, q[i], jnp.asarray(qmask[i]), cfg_fused)
+    np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+
+# (c) vs single-device search over the SAME corpus: per-shard k-means gives a
+# different codec, so scores differ — but retrieval quality must agree: the
+# planted relevant doc is found by both paths.
+idx = build_index(corpus.emb, corpus.token_doc_ids, corpus.n_docs,
+                  IndexBuildConfig(n_centroids=64, nbits=4, kmeans_iters=3))
+single_plan = Retriever.from_index(idx).plan(cfg_fused)
+hits_sharded = hits_single = 0
+for i in range(6):
+    hits_sharded += int(rel[i] in np.asarray(plan_fused.retrieve(q[i], qmask[i]).doc_ids))
+    hits_single += int(rel[i] in np.asarray(single_plan.retrieve(q[i], qmask[i]).doc_ids))
+assert hits_single >= 5, hits_single
+assert hits_sharded >= 5, hits_sharded
+print("OK", hits_sharded, hits_single)
+"""
+
+
+@pytest.mark.slow
+def test_two_shard_fused_parity_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run(
+        [sys.executable, "-c", TWO_SHARD_SCRIPT],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout

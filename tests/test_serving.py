@@ -3,11 +3,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import IndexBuildConfig, WarpSearchConfig, build_index, search
 from repro.data import make_corpus, make_queries
 from repro.models.transformer import TransformerConfig, TransformerLM
-from repro.serving import BatchPolicy, RetrievalServer, generate
+from repro.serving import PENDING, BatchPolicy, RetrievalServer, generate
 
 
 def test_generate_matches_forward_greedy():
@@ -86,5 +87,86 @@ def test_batcher_drain():
     srv, clock, q, qmask, *_ = _server(BatchPolicy(max_batch=4, max_wait_s=10.0))
     ids = [srv.submit(q[i], qmask[i]) for i in range(6)]
     srv.drain()
-    assert all(srv.poll(r) is not None for r in ids)
+    assert all(srv.poll(r) is not PENDING for r in ids)
+    assert srv.stats["served"] == 6
+
+
+def test_poll_pending_sentinel_is_not_destructive():
+    srv, clock, q, qmask, *_ = _server(BatchPolicy(max_batch=8, max_wait_s=10.0))
+    rid = srv.submit(q[0], qmask[0])
+    # Pending: repeated polls keep returning the sentinel (nothing popped).
+    assert srv.poll(rid) is PENDING
+    assert srv.poll(rid) is PENDING
+    assert not PENDING  # falsy, so `if result:` reads naturally
+    srv.step(force=True)
+    scores, docs = srv.poll(rid)
+    assert scores.shape == (5,)
+    # Consumed exactly once: a second poll is now an *unknown* id.
+    with pytest.raises(KeyError):
+        srv.poll(rid)
+
+
+def test_poll_unknown_id_raises():
+    srv, *_ = _server(BatchPolicy(max_batch=4, max_wait_s=10.0))
+    with pytest.raises(KeyError):
+        srv.poll(12345)
+
+
+def test_result_blocks_until_served_and_matches_single():
+    srv, clock, q, qmask, rel, idx = _server(BatchPolicy(max_batch=8, max_wait_s=10.0))
+    rid = srv.submit(q[0], qmask[0])
+    # result() drives the loop itself: no manual step()/drain() needed.
+    scores, docs = srv.result(rid)
+    single = search(idx, q[0], jnp.asarray(qmask[0]), WarpSearchConfig(nprobe=8, k=5))
+    np.testing.assert_array_equal(docs, np.asarray(single.doc_ids))
+    with pytest.raises(KeyError):
+        srv.result(rid)  # already consumed
+
+
+def test_result_timeout_on_empty_progress():
+    srv, clock, q, qmask, *_ = _server(BatchPolicy(max_batch=8, max_wait_s=10.0))
+    rid = srv.submit(q[0], qmask[0])
+    consumed = srv.result(rid, timeout=5.0)
+    assert consumed is not PENDING
+    # Unknown id: KeyError wins over timeout.
+    with pytest.raises(KeyError):
+        srv.result(999, timeout=0.1)
+
+
+def test_result_timeout_fires_and_preserves_request():
+    srv, clock, q, qmask, *_ = _server(BatchPolicy(max_batch=8, max_wait_s=10.0))
+    rid = srv.submit(q[0], qmask[0])
+    # An already-exhausted budget must raise before any forced dispatch...
+    with pytest.raises(TimeoutError):
+        srv.result(rid, timeout=0.0)
+    # ...leaving the request pending and still servable afterwards.
+    assert srv.poll(rid) is PENDING
+    scores, docs = srv.result(rid)
+    assert scores.shape == (5,)
+
+
+def test_server_accepts_sharded_index():
+    """End-to-end sharded serving: same batcher, document-sharded plan."""
+    from repro.core import Retriever, build_sharded_index
+
+    corpus = make_corpus(n_docs=120, mean_doc_len=10, seed=2)
+    sidx = build_sharded_index(
+        corpus.emb, corpus.token_doc_ids, corpus.n_docs,
+        n_shards=len(jax.devices()),
+        config=IndexBuildConfig(n_centroids=16, nbits=4, kmeans_iters=2),
+    )
+    q, qmask, rel = make_queries(corpus, n_queries=6, seed=3)
+    srv = RetrievalServer(
+        Retriever.from_index(sidx),
+        WarpSearchConfig(nprobe=8, k=5, t_prime=400),
+        BatchPolicy(max_batch=4, max_wait_s=10.0),
+    )
+    assert srv.plan.n_shards == len(jax.devices())
+    ids = [srv.submit(q[i], qmask[i]) for i in range(6)]
+    hits = 0
+    for i, rid in enumerate(ids):
+        scores, docs = srv.result(rid, timeout=30.0)
+        assert scores.shape == (5,)
+        hits += int(rel[i] in docs)
+    assert hits >= 4
     assert srv.stats["served"] == 6
