@@ -19,6 +19,23 @@ SUITES = ["index_size", "quality", "latency", "scaling", "roofline"]
 SNAPSHOT_PATH = os.path.join(
     os.path.dirname(__file__), "..", "BENCH_latency.json"
 )
+INDEX_SIZE_SNAPSHOT_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_index_size.json"
+)
+
+
+def write_index_size_snapshot(path: str = INDEX_SIZE_SNAPSHOT_PATH) -> None:
+    """Persist the measured on-disk index footprint (per-component bytes
+    from the store manifest) so size regressions show up in diffs."""
+    from benchmarks.common import RECORDS
+
+    rows = [r for r in RECORDS if r["name"].startswith("index_size/")]
+    if not rows:
+        return
+    snap = {"generated_unix": int(time.time()), "metrics": rows}
+    with open(path, "w") as f:
+        json.dump(snap, f, indent=1, sort_keys=True)
+    print(f"bench/index_size/snapshot,0.0,{os.path.abspath(path)}", flush=True)
 
 
 def write_latency_snapshot(path: str = SNAPSHOT_PATH) -> None:
@@ -60,6 +77,8 @@ def main() -> None:
               flush=True)
         if name == "latency":
             write_latency_snapshot()
+        if name == "index_size":
+            write_index_size_snapshot()
 
 
 if __name__ == "__main__":

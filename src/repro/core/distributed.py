@@ -41,7 +41,13 @@ from repro.core.types import IndexBuildConfig, WarpIndex, WarpSearchConfig
 from repro.core.warpselect import impute_mse, warp_select
 from repro.kernels import ops
 
-__all__ = ["ShardedWarpIndex", "build_sharded_index", "sharded_search", "make_sharded_search_fn"]
+__all__ = [
+    "ShardedWarpIndex",
+    "build_sharded_index",
+    "stack_shards",
+    "sharded_search",
+    "make_sharded_search_fn",
+]
 
 
 @jax.tree_util.register_dataclass
@@ -124,7 +130,21 @@ def build_sharded_index(
         shards.append(
             index_mod.build_index(emb[sel], tdi[sel] - lo, max(1, hi - lo), sub_cfg)
         )
+    return stack_shards(shards, doc_bounds[:-1], n_docs, n_tokens)
 
+
+def stack_shards(
+    shards: list[WarpIndex],
+    doc_start,
+    n_docs: int,
+    n_tokens_total: int,
+) -> ShardedWarpIndex:
+    """Pad per-shard ``WarpIndex``es to common geometry and stack them.
+
+    ``doc_start[s]`` is the global id of shard ``s``'s first document.
+    Exposed separately from ``build_sharded_index`` so shard stacks can be
+    reconstructed from independently built (or store-loaded) shards."""
+    n_shards = len(shards)
     c_max = max(s.n_centroids for s in shards)
     n_max = max(s.n_tokens for s in shards)
     cap = max(s.cap for s in shards)
@@ -156,13 +176,13 @@ def build_sharded_index(
         cluster_offsets=jnp.stack(offs),
         cluster_sizes=jnp.stack(sizes),
         bucket_weights=jnp.stack(weights),
-        doc_start=jnp.asarray(doc_bounds[:-1], jnp.int32),
+        doc_start=jnp.asarray(np.asarray(doc_start)[:n_shards], jnp.int32),
         dim=shards[0].dim,
         nbits=shards[0].nbits,
         cap=cap,
         n_docs=int(n_docs),
         n_tokens_padded=int(n_max),
-        n_tokens_total=int(n_tokens),
+        n_tokens_total=int(n_tokens_total),
         local_docs=int(local_docs_max),
     )
 

@@ -1,19 +1,20 @@
 """Index construction (paper §4.1): cluster, quantize, lay out CSR-by-cluster.
 
-Build runs on host (a few jit'd stages); the result is a ``WarpIndex``
-pytree ready for the jit'd search path. Geometry (cap = max cluster size)
-is materialized to Python ints so the search can use static shapes.
+The actual build lives in ``repro.store.builder`` as a chunked,
+out-of-core pipeline; ``build_index`` here is the thin in-memory wrapper —
+one chunk spanning the whole tensor, leaves materialized on device. The
+chunked path is exact (bit-identical for any chunking), so the two entry
+points build the same index; tests/test_store.py pins that parity.
+Geometry (cap = max cluster size) is materialized to Python ints so the
+search can use static shapes.
 """
 
 from __future__ import annotations
-
-import math
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import kmeans, quantization
 from repro.core.types import IndexBuildConfig, WarpIndex
 
 __all__ = ["build_index", "index_stats"]
@@ -28,59 +29,22 @@ def build_index(
     """embeddings f32[N, D] (any scale; normalized internally),
     token_doc_ids i32[N] mapping each token embedding to its document.
     """
-    emb = kmeans.l2_normalize(jnp.asarray(embeddings, jnp.float32))
-    n_tokens, dim = emb.shape
-    token_doc_ids = jnp.asarray(token_doc_ids, jnp.int32)
-    if token_doc_ids.shape != (n_tokens,):
+    # Deferred: repro.store depends on repro.core for types.
+    from repro.store import builder
+
+    n_tokens = embeddings.shape[0]
+    if np.shape(token_doc_ids) != (n_tokens,):
         raise ValueError("token_doc_ids must align with embeddings")
-
-    key = jax.random.PRNGKey(config.seed)
-    c = config.resolved_n_centroids(n_tokens)
-
-    # --- k-means on a sqrt(N)-proportional sample (paper §4.1) ---
-    sample_n = int(min(n_tokens, max(4 * c, config.sample_factor * 4 * math.sqrt(n_tokens))))
-    k_sample, k_fit = jax.random.split(key)
-    sample_idx = jax.random.choice(k_sample, n_tokens, (sample_n,), replace=False)
-    centroids = kmeans.spherical_kmeans(
-        k_fit, emb[sample_idx], c, iters=config.kmeans_iters
-    )
-
-    # --- assign all tokens, quantize residuals ---
-    assign = kmeans.assign_clusters(emb, centroids)
-    residuals = emb - centroids[assign]
-    # Bucket stats from a bounded residual sample.
-    flat = residuals.reshape(-1)
-    stats_n = min(flat.shape[0], 1 << 22)
-    cutoffs, weights = quantization.compute_buckets(flat[:stats_n], config.nbits)
-    codes = quantization.encode_residuals(residuals, cutoffs)
-    packed = quantization.pack_codes(codes, config.nbits)
-
-    # --- CSR-by-cluster layout ---
-    order = jnp.argsort(assign, stable=True)
-    packed = packed[order]
-    doc_ids_sorted = token_doc_ids[order]
-    sizes = jax.ops.segment_sum(
-        jnp.ones((n_tokens,), jnp.int32), assign, num_segments=c
-    )
-    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(sizes)]).astype(
-        jnp.int32
-    )
-    cap = int(jnp.max(sizes))
-
-    return WarpIndex(
-        centroids=centroids,
-        packed_codes=packed,
-        token_doc_ids=doc_ids_sorted,
-        cluster_offsets=offsets,
-        cluster_sizes=sizes.astype(jnp.int32),
-        bucket_weights=weights,
-        bucket_cutoffs=cutoffs,
-        dim=dim,
-        nbits=config.nbits,
-        cap=cap,
-        n_docs=int(n_docs),
+    index = builder.build_index_chunked(
+        builder.array_chunks(embeddings, token_doc_ids, chunk_size=None),
+        n_docs,
+        config,
         n_tokens=int(n_tokens),
+        dim=int(embeddings.shape[1]),
     )
+    # In-memory callers expect on-device leaves (the store path keeps
+    # host/memmap arrays instead).
+    return jax.tree_util.tree_map(jnp.asarray, index)
 
 
 def index_stats(index: WarpIndex) -> dict:

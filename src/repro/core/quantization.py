@@ -22,6 +22,7 @@ __all__ = [
     "compute_buckets",
     "encode_residuals",
     "pack_codes",
+    "packed_bytes",
     "unpack_codes",
     "decompress",
 ]
@@ -57,33 +58,48 @@ def encode_residuals(residuals: jax.Array, cutoffs: jax.Array) -> jax.Array:
     return jnp.searchsorted(cutoffs, residuals, side="left").astype(jnp.uint8)
 
 
+def packed_bytes(dim: int, nbits: int) -> int:
+    """On-disk bytes per token row: ceil(dim * nbits / 8) (trailing partial
+    byte zero-padded when ``dim`` is not a multiple of the per-byte factor)."""
+    _check_nbits(nbits)
+    return -(-dim * nbits // 8)
+
+
 @functools.partial(jax.jit, static_argnames=("nbits",))
 def pack_codes(codes: jax.Array, nbits: int) -> jax.Array:
-    """u8[N, D] bucket indices -> u8[N, D * nbits // 8] packed bytes."""
+    """u8[..., D] bucket indices -> u8[..., ceil(D * nbits / 8)] packed bytes.
+
+    When D is not a multiple of the per-byte factor (8 // nbits), the
+    trailing partial byte is zero-padded in its high bits; ``unpack_codes``
+    truncates it back using the caller-supplied ``dim``.
+    """
     _check_nbits(nbits)
     if nbits == 8:
         return codes
     per_byte = 8 // nbits
-    n, d = codes.shape
-    if d % per_byte:
-        raise ValueError(f"dim {d} not divisible by {per_byte}")
-    grouped = codes.reshape(n, d // per_byte, per_byte).astype(jnp.uint32)
-    shifts = (jnp.arange(per_byte, dtype=jnp.uint32) * nbits)[None, None, :]
+    d = codes.shape[-1]
+    pb = -(-d // per_byte)
+    pad = pb * per_byte - d
+    if pad:
+        codes = jnp.pad(codes, [(0, 0)] * (codes.ndim - 1) + [(0, pad)])
+    grouped = codes.reshape(*codes.shape[:-1], pb, per_byte).astype(jnp.uint32)
+    shifts = (jnp.arange(per_byte, dtype=jnp.uint32) * nbits)
     return jnp.sum(grouped << shifts, axis=-1).astype(jnp.uint8)
 
 
 @functools.partial(jax.jit, static_argnames=("nbits", "dim"))
 def unpack_codes(packed: jax.Array, nbits: int, dim: int) -> jax.Array:
-    """u8[..., D * nbits // 8] packed bytes -> u8[..., D] bucket indices."""
+    """u8[..., ceil(D * nbits / 8)] packed bytes -> u8[..., D] bucket indices."""
     _check_nbits(nbits)
     if nbits == 8:
         return packed
     per_byte = 8 // nbits
     mask = jnp.uint8((1 << nbits) - 1)
     shifts = (jnp.arange(per_byte, dtype=jnp.uint8) * nbits)
-    # [..., PB] -> [..., PB, per_byte] -> [..., D]
+    # [..., PB] -> [..., PB, per_byte] -> [..., PB * per_byte] -> [..., D]
     expanded = (packed[..., None] >> shifts) & mask
-    return expanded.reshape(*packed.shape[:-1], dim)
+    flat = expanded.reshape(*packed.shape[:-1], packed.shape[-1] * per_byte)
+    return flat[..., :dim]
 
 
 @functools.partial(jax.jit, static_argnames=("nbits", "dim"))

@@ -6,8 +6,12 @@ and the two-stage reduction composed into one optimized pipeline — and this
 module is the single front door to it. The API has an explicit plan/execute
 split:
 
-  build / from_index   construct (or adopt) a single-device ``WarpIndex``
-                       or a ``ShardedWarpIndex`` + mesh.
+  build / from_index   construct (or adopt) a single-device ``WarpIndex``,
+                       a ``ShardedWarpIndex`` + mesh, or a
+                       ``SegmentedWarpIndex`` (base + delta segments).
+  from_store           adopt a saved index directory (``repro.store``) as
+                       zero-copy mmap views — single, sharded, or
+                       base-plus-deltas.
   plan(config)         validate the search config against index geometry
                        and backend capabilities, materialize every
                        data-dependent default (t', k_impute, executor), and
@@ -116,15 +120,18 @@ class Retriever:
     >>> plan = r.plan(WarpSearchConfig(nprobe=16, k=10, gather="fused"))
     >>> res = plan.retrieve(q, qmask)          # or r.retrieve(q, qmask, config=...)
 
-    A ``Retriever`` wraps either a single-device ``WarpIndex`` or a
-    ``ShardedWarpIndex`` (+ mesh); the planned pipeline is identical, the
-    sharded plan just runs it per shard under ``shard_map`` with globally
-    aligned imputation and an O(k · devices) merge.
+    A ``Retriever`` wraps a single-device ``WarpIndex``, a
+    ``ShardedWarpIndex`` (+ mesh), or a ``SegmentedWarpIndex`` (a frozen
+    base plus delta segments from ``repro.store``); the planned pipeline is
+    identical — the sharded plan runs it per shard under ``shard_map`` with
+    globally aligned imputation and an O(k · devices) merge, the segmented
+    plan runs stage 1 once over combined cluster sizes and merges the
+    per-segment reductions with doc-id offsets.
     """
 
     def __init__(
         self,
-        index: WarpIndex | dist.ShardedWarpIndex,
+        index,
         *,
         mesh: jax.sharding.Mesh | None = None,
         shard_axes: tuple[str, ...] = ("data",),
@@ -132,6 +139,8 @@ class Retriever:
         self.index = index
         self.shard_axes = shard_axes
         self._plans: dict[WarpSearchConfig, SearchPlan] = {}
+        if self.is_segmented and mesh is not None:
+            raise ValueError("mesh= does not apply to a SegmentedWarpIndex")
         if self.is_sharded:
             if mesh is None:
                 mesh = jax.make_mesh((index.n_shards,), ("data",))
@@ -178,18 +187,44 @@ class Retriever:
     @classmethod
     def from_index(
         cls,
-        index: WarpIndex | dist.ShardedWarpIndex,
+        index,
         *,
         mesh: jax.sharding.Mesh | None = None,
         shard_axes: tuple[str, ...] = ("data",),
     ) -> "Retriever":
-        """Adopt an existing single-device or sharded index."""
+        """Adopt an existing single-device, sharded, or segmented index."""
+        return cls(index, mesh=mesh, shard_axes=shard_axes)
+
+    @classmethod
+    def from_store(
+        cls,
+        path: str,
+        *,
+        mmap: bool = True,
+        with_segments: bool = True,
+        mesh: jax.sharding.Mesh | None = None,
+        shard_axes: tuple[str, ...] = ("data",),
+    ) -> "Retriever":
+        """Adopt a saved index directory (``repro.store.save_index`` /
+        ``launch/build_index.py``). With ``mmap`` (default) the arrays are
+        zero-copy ``np.memmap`` views; delta segments are picked up
+        automatically unless ``with_segments=False``."""
+        from repro.store import load_index  # deferred: store depends on core
+
+        index = load_index(path, mmap=mmap, with_segments=with_segments)
         return cls(index, mesh=mesh, shard_axes=shard_axes)
 
     # ---- properties ----
     @property
     def is_sharded(self) -> bool:
         return isinstance(self.index, dist.ShardedWarpIndex)
+
+    @property
+    def is_segmented(self) -> bool:
+        # Deferred import keeps core importable without the store package.
+        from repro.store.segments import SegmentedWarpIndex
+
+        return isinstance(self.index, SegmentedWarpIndex)
 
     @property
     def n_docs(self) -> int:
@@ -287,6 +322,8 @@ class Retriever:
             geo["n_tokens"] = idx.resolved_n_tokens()
         else:
             geo["n_tokens"] = idx.n_tokens
+        if self.is_segmented:
+            geo["n_segments"] = idx.n_segments
         return geo
 
     def _compile_single(self, cfg: WarpSearchConfig) -> Callable[..., TopKResult]:
@@ -294,6 +331,10 @@ class Retriever:
             return dist.make_sharded_search_fn(
                 self.index, cfg, self.mesh, self.shard_axes, query_batch=False
             )
+        if self.is_segmented:
+            from repro.store.segments import make_segmented_search_fn
+
+            return make_segmented_search_fn(self.index, cfg, query_batch=False)
         return lambda index, q, qmask: engine._search_one(index, q, qmask, cfg)
 
     def _compile_batch(self, cfg: WarpSearchConfig) -> Callable[..., TopKResult]:
@@ -301,4 +342,8 @@ class Retriever:
             return dist.make_sharded_search_fn(
                 self.index, cfg, self.mesh, self.shard_axes, query_batch=True
             )
+        if self.is_segmented:
+            from repro.store.segments import make_segmented_search_fn
+
+            return make_segmented_search_fn(self.index, cfg, query_batch=True)
         return lambda index, q, qmask: engine._search_many(index, q, qmask, cfg)

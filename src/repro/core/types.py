@@ -191,6 +191,10 @@ class IndexBuildConfig:
     sample_factor: k-means runs on ~sample_factor * sqrt(n_tokens) *
                  tokens-per-doc sampled tokens (paper: sample of passages
                  proportional to sqrt of collection size).
+    chunk_size:  token rows per streamed chunk in the out-of-core build
+                 (``repro.store.builder``); bounds peak host memory at
+                 O(chunk_size * dim). The chunked build is bit-identical
+                 for any value, so this is purely a memory/throughput knob.
     """
 
     n_centroids: int | None = None
@@ -198,6 +202,7 @@ class IndexBuildConfig:
     kmeans_iters: int = 8
     sample_factor: float = 16.0
     seed: int = 0
+    chunk_size: int = 1 << 16
 
     def resolved_n_centroids(self, n_tokens: int) -> int:
         if self.n_centroids is not None:

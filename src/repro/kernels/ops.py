@@ -35,6 +35,22 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+def _check_packable_dim(dim: int, nbits: int, *, byte_wise: bool) -> None:
+    """Byte-wise code consumers (Pallas kernels, the byte-LUT path) reshape
+    packed rows as [PB, 8/nbits] and cannot skip the zero-padded trailing
+    byte an odd ``dim`` produces; fail with direction instead of a reshape
+    TypeError deep in the kernel."""
+    per_byte = 8 // nbits
+    if byte_wise and dim % per_byte:
+        raise ValueError(
+            f"dim={dim} does not fill whole {nbits}-bit packed bytes "
+            f"({8 // nbits} dims/byte): the Pallas kernels and sum_impl="
+            "'lut' index codes byte-wise and cannot skip the padded "
+            "trailing byte — use executor='reference' with "
+            "sum_impl='gather' (and gather='materialize') for this index"
+        )
+
+
 def selective_sum(
     packed: jax.Array,
     v: jax.Array,
@@ -50,6 +66,7 @@ def selective_sum(
     packed u8[Q, N, PB], v f32[Q, D, 2^b] -> f32[Q, N].
     impl (non-kernel path): "gather" (per-dim) | "lut" (byte-LUT, §Perf).
     """
+    _check_packable_dim(dim, nbits, byte_wise=use_kernel or impl == "lut")
     if not use_kernel or nbits == 8:
         # b=8 means 256 select-accumulate unrolls; the gather-based ref is
         # the better lowering there.
@@ -100,7 +117,12 @@ def fused_gather_selective_sum(
     to the tile size, interpret=True off-TPU); any other value — or b=8,
     or an index too small to tile — falls back to the jnp reference, which
     gathers but is semantically identical.
+
+    With ``use_kernel`` the dim must fill whole packed bytes — the Pallas
+    kernel reshapes codes as [PB, per_byte] and cannot skip a padded
+    trailing byte; the jnp reference (gather-based) handles any dim.
     """
+    _check_packable_dim(dim, nbits, byte_wise=use_kernel and impl == "fused")
     starts = cluster_offsets[probe_cids].astype(jnp.int32)  # [Q, P]
     sizes = cluster_sizes[probe_cids].astype(jnp.int32)  # [Q, P]
     tile = tile_c or min(DEFAULT_TILE_C, 1 << max(3, (cap - 1).bit_length() if cap > 1 else 3))

@@ -1,0 +1,172 @@
+"""Index lifecycle CLI: build / add / compact / inspect a store directory.
+
+  # out-of-core build from .npy inputs (mmap-read, streamed in chunks)
+  PYTHONPATH=src python -m repro.launch.build_index build \
+      --out idx.warpidx --emb emb.npy --doc-ids doc_ids.npy --n-docs 100000
+
+  # or from the synthetic corpus generator (smoke / benchmarks)
+  PYTHONPATH=src python -m repro.launch.build_index build \
+      --out idx.warpidx --synth-docs 500 --nbits 4
+
+  # append new documents as a delta segment against the frozen base
+  PYTHONPATH=src python -m repro.launch.build_index add \
+      --index idx.warpidx --synth-docs 50 --synth-seed 9
+
+  # fold delta segments back into a fresh single-segment base
+  PYTHONPATH=src python -m repro.launch.build_index compact --index idx.warpidx
+
+  # manifest + measured per-component bytes
+  PYTHONPATH=src python -m repro.launch.build_index inspect --index idx.warpidx
+
+``build --n-shards N`` produces a sharded store (loads back as a
+``ShardedWarpIndex``); sharded bases do not take delta segments — compact
+and re-shard instead.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import IndexBuildConfig, WarpSearchConfig, build_sharded_index
+from repro.core.retriever import Retriever
+from repro.data import make_corpus, make_queries
+from repro.store import (
+    add_documents,
+    array_chunks,
+    build_index_to_store,
+    compact,
+    inspect_index,
+    save_index,
+)
+
+
+def _add_input_args(ap: argparse.ArgumentParser) -> None:
+    ap.add_argument("--emb", help=".npy of f32[N, D] token embeddings")
+    ap.add_argument("--doc-ids", help=".npy of i32[N] token doc ids")
+    ap.add_argument("--n-docs", type=int, default=None,
+                    help="document count (default: max(doc_ids) + 1)")
+    ap.add_argument("--synth-docs", type=int, default=None,
+                    help="generate a synthetic corpus of this many docs")
+    ap.add_argument("--synth-seed", type=int, default=0)
+    ap.add_argument("--mean-doc-len", type=int, default=20)
+
+
+def _load_input(args) -> tuple[np.ndarray, np.ndarray, int]:
+    """(embeddings, token_doc_ids, n_docs); .npy inputs stay mmap-backed."""
+    if args.synth_docs is not None:
+        corpus = make_corpus(
+            args.synth_docs, mean_doc_len=args.mean_doc_len, seed=args.synth_seed
+        )
+        return corpus.emb, corpus.token_doc_ids, corpus.n_docs
+    if not args.emb or not args.doc_ids:
+        raise SystemExit("need --emb + --doc-ids, or --synth-docs")
+    emb = np.load(args.emb, mmap_mode="r")
+    tdi = np.load(args.doc_ids, mmap_mode="r")
+    n_docs = args.n_docs if args.n_docs is not None else int(tdi.max()) + 1
+    return emb, tdi, n_docs
+
+
+def cmd_build(args) -> None:
+    emb, tdi, n_docs = _load_input(args)
+    cfg = IndexBuildConfig(
+        n_centroids=args.n_centroids, nbits=args.nbits,
+        kmeans_iters=args.kmeans_iters, seed=args.seed,
+        chunk_size=args.chunk_size,
+    )
+    t0 = time.perf_counter()
+    if args.n_shards:
+        sidx = build_sharded_index(emb, tdi, n_docs, args.n_shards, cfg)
+        save_index(sidx, args.out, build_config=cfg, overwrite=args.overwrite)
+    else:
+        build_index_to_store(
+            array_chunks(emb, tdi, cfg.chunk_size), args.out, n_docs, cfg,
+            n_tokens=int(emb.shape[0]), dim=int(emb.shape[1]),
+            overwrite=args.overwrite,
+        )
+    dt = time.perf_counter() - t0
+    info = inspect_index(args.out)
+    print(f"built {info['kind']} at {args.out} in {dt:.1f}s: "
+          f"{info['total_bytes']/2**20:.1f} MiB "
+          f"({info['bytes_per_token']:.1f} B/token)")
+
+
+def cmd_add(args) -> None:
+    emb, tdi, n_docs = _load_input(args)
+    seg_dir = add_documents(args.index, emb, tdi, n_docs)
+    print(f"appended {n_docs} docs ({emb.shape[0]} tokens) -> {seg_dir}")
+
+
+def cmd_compact(args) -> None:
+    t0 = time.perf_counter()
+    compact(args.index)
+    info = inspect_index(args.index)
+    print(f"compacted {args.index} in {time.perf_counter()-t0:.1f}s: "
+          f"{info['static']['n_docs']} docs, {info['static']['n_tokens']} tokens, "
+          f"{info['total_bytes']/2**20:.1f} MiB")
+
+
+def cmd_inspect(args) -> None:
+    print(json.dumps(inspect_index(args.index), indent=1, sort_keys=True))
+
+
+def cmd_smoke(args) -> None:
+    """Load the index and run a tiny search — lifecycle sanity check."""
+    retriever = Retriever.from_store(args.index)
+    plan = retriever.plan(WarpSearchConfig(nprobe=args.nprobe, k=args.k))
+    corpus = make_corpus(64, mean_doc_len=8, seed=123)
+    q, qmask, _ = make_queries(corpus, n_queries=1, seed=124)
+    res = plan.retrieve(q[0], qmask[0])
+    docs = np.asarray(res.doc_ids)
+    print(f"plan: {plan.describe()}")
+    print(f"smoke top-{args.k}: {docs.tolist()}")
+    if not ((docs >= -1) & (docs < retriever.n_docs)).all():
+        raise SystemExit("smoke search returned out-of-range doc ids")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    b = sub.add_parser("build", help="build a new store directory")
+    _add_input_args(b)
+    b.add_argument("--out", required=True)
+    b.add_argument("--n-centroids", type=int, default=None)
+    b.add_argument("--nbits", type=int, default=4, choices=(2, 4, 8))
+    b.add_argument("--kmeans-iters", type=int, default=4)
+    b.add_argument("--seed", type=int, default=0)
+    b.add_argument("--chunk-size", type=int, default=IndexBuildConfig().chunk_size)
+    b.add_argument("--n-shards", type=int, default=0,
+                   help="document-sharded build (0 = single)")
+    b.add_argument("--overwrite", action="store_true")
+    b.set_defaults(fn=cmd_build)
+
+    a = sub.add_parser("add", help="append documents as a delta segment")
+    _add_input_args(a)
+    a.add_argument("--index", required=True)
+    a.set_defaults(fn=cmd_add)
+
+    c = sub.add_parser("compact", help="fold delta segments into the base")
+    c.add_argument("--index", required=True)
+    c.set_defaults(fn=cmd_compact)
+
+    i = sub.add_parser("inspect", help="print manifest + measured bytes")
+    i.add_argument("--index", required=True)
+    i.set_defaults(fn=cmd_inspect)
+
+    s = sub.add_parser("smoke", help="load + search sanity check")
+    s.add_argument("--index", required=True)
+    s.add_argument("--nprobe", type=int, default=8)
+    s.add_argument("--k", type=int, default=5)
+    s.set_defaults(fn=cmd_smoke)
+
+    args = ap.parse_args()
+    args.fn(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -22,11 +22,18 @@ until the request's batch has been dispatched, then pops and returns the
 submitted (or already popped) raises ``KeyError``. ``result`` is the
 blocking convenience wrapper that drives the server loop until the request
 completes.
+
+``reload`` hot-swaps the served index (e.g. after ``repro.store.compact``
+folded delta segments into a fresh base): the new plan is compiled from
+the originally *requested* config — data-dependent resolutions like t'
+re-materialize against the new geometry — and queued requests simply
+dispatch through the new plan on their next ``step``; nothing is dropped.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from collections import deque
 from typing import Callable
@@ -86,6 +93,9 @@ class RetrievalServer:
         self.retriever = (
             index if isinstance(index, Retriever) else Retriever.from_index(index)
         )
+        # Keep the pre-resolution config: a reload must re-resolve t' /
+        # k_impute / executor against the NEW index, not freeze the old.
+        self._requested_config = config
         self.plan = self.retriever.plan(config)
         self.config = self.plan.config
         self.policy = policy
@@ -94,7 +104,7 @@ class RetrievalServer:
         self._inflight: set[int] = set()
         self._results: dict[int, tuple[np.ndarray, np.ndarray]] = {}
         self._next_id = 0
-        self.stats = {"batches": 0, "padded_slots": 0, "served": 0}
+        self.stats = {"batches": 0, "padded_slots": 0, "served": 0, "reloads": 0}
 
     # ---- client API ----
     def submit(self, q: np.ndarray, qmask: np.ndarray | None = None) -> int:
@@ -139,6 +149,43 @@ class RetrievalServer:
                 )
             if self.step() == 0:
                 self.step(force=True)
+
+    # ---- lifecycle ----
+    def reload(self, index, *, config: WarpSearchConfig | None = None) -> None:
+        """Hot-swap the served index without downtime.
+
+        ``index`` may be a ``WarpIndex`` / ``ShardedWarpIndex`` /
+        ``SegmentedWarpIndex``, a pre-built ``Retriever``, or a path to a
+        store directory (``repro.store``), which is mmap-loaded — the
+        zero-copy path a post-``compact()`` pickup wants. The new plan is
+        compiled *before* the swap, so in-flight ``submit``/``poll``
+        callers never observe a half-reloaded server; queued requests are
+        preserved and dispatch through the new plan.
+        """
+        if config is not None:
+            self._requested_config = config
+        old = self.retriever
+        if isinstance(index, (str, os.PathLike)):
+            from repro.store import load_index  # deferred: store dep on core
+
+            index = load_index(os.fspath(index))
+        if isinstance(index, Retriever):
+            retriever = index
+        else:
+            # Preserve the serving topology: a sharded reload reuses the
+            # current mesh/shard_axes rather than a default 1-D mesh; a
+            # reload onto a single-device index drops them.
+            sharded = isinstance(index, ShardedWarpIndex)
+            retriever = Retriever.from_index(
+                index,
+                mesh=old.mesh if sharded else None,
+                shard_axes=old.shard_axes if sharded else ("data",),
+            )
+        plan = retriever.plan(self._requested_config)
+        self.retriever = retriever
+        self.plan = plan
+        self.config = plan.config
+        self.stats["reloads"] += 1
 
     # ---- server loop ----
     def step(self, *, force: bool = False) -> int:

@@ -1,0 +1,53 @@
+"""Index lifecycle subsystem: on-disk store, out-of-core builds, deltas.
+
+  format.py    versioned manifest + raw-binary layout; save_index /
+               load_index with zero-copy np.memmap views
+  builder.py   out-of-core chunked build (bit-identical to the in-memory
+               build_index; O(chunk) peak memory with store_path=)
+  segments.py  append-only delta segments (add_documents), segmented
+               search, and compact()
+
+``launch/build_index.py`` is the CLI over all three.
+"""
+
+from repro.store.builder import (
+    array_chunks,
+    build_index_chunked,
+    build_index_to_store,
+)
+from repro.store.format import (
+    FORMAT_VERSION,
+    inspect_index,
+    list_segment_dirs,
+    load_index,
+    read_manifest,
+    recover_interrupted_compact,
+    save_index,
+)
+from repro.store.segments import (
+    SegmentedWarpIndex,
+    add_documents,
+    compact,
+    load_segmented,
+    make_segmented_search_fn,
+    quantize_segment,
+)
+
+__all__ = [
+    "FORMAT_VERSION",
+    "SegmentedWarpIndex",
+    "add_documents",
+    "array_chunks",
+    "build_index_chunked",
+    "build_index_to_store",
+    "compact",
+    "inspect_index",
+    "list_segment_dirs",
+    "load_index",
+    "load_segmented",
+    "make_segmented_search_fn",
+    "quantize_segment",
+    "read_manifest",
+    "recover_interrupted_compact",
+    "save_index",
+]

@@ -1,0 +1,314 @@
+"""Out-of-core index construction: stream embedding chunks, never hold the
+corpus in memory.
+
+``build_index_chunked`` reproduces ``core.index.build_index`` *bit for bit*
+(same seed -> same index) while only ever materializing one chunk of
+embeddings at a time:
+
+  pass 0 (optional)  count tokens / infer dim when the caller doesn't know
+  pass 1 (sample)    gather the sqrt(N)-proportional k-means sample rows —
+                     the sample indices come from the exact PRNG stream the
+                     in-memory build uses, so the centroids are identical
+  pass 2 (assign)    assign every token (assignments buffered: i32[N] in
+                     RAM, or a disk scratch file for store builds, so the
+                     O(N·C·D) assignment matmul runs once), accumulate
+                     per-cluster counts and the bounded residual sample
+                     for the quantile codec
+  pass 3 (scatter)   encode and scatter packed codes + doc ids into their
+                     final CSR-by-cluster slots (count-then-scatter; the
+                     stable within-chunk sort plus running per-cluster
+                     fill cursors reproduce the stable argsort of the
+                     in-memory layout exactly)
+
+Every per-token computation (normalize, assign, residual encode, pack) is
+row-independent, which is what makes the chunked result bit-identical to
+the monolithic one — the parity test in tests/test_store.py holds the
+implementation to that.
+
+With ``store_path`` the two O(N) outputs (packed codes, doc ids) are
+written straight into the store directory through ``np.memmap``, so peak
+host memory is O(chunk + n_centroids), independent of corpus size.
+
+``core.index.build_index`` is a thin wrapper over this module (one chunk
+spanning the whole tensor).
+"""
+
+from __future__ import annotations
+
+import math
+import os
+from typing import Callable, Iterable, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kmeans, quantization
+from repro.core.types import IndexBuildConfig, WarpIndex
+from repro.store import format as store_format
+
+__all__ = ["array_chunks", "build_index_chunked", "build_index_to_store"]
+
+Chunk = Tuple[np.ndarray, np.ndarray]
+ChunkSource = Callable[[], Iterable[Chunk]]
+
+
+def array_chunks(
+    embeddings, token_doc_ids, chunk_size: int | None = None
+) -> ChunkSource:
+    """Adapt in-memory (or np.load(mmap_mode="r")) arrays to a re-iterable
+    chunk source. ``chunk_size=None`` yields one chunk spanning everything —
+    the exact-legacy-equivalence mode ``build_index`` uses."""
+    n = embeddings.shape[0]
+    step = int(chunk_size) if chunk_size else max(1, n)
+
+    def chunks() -> Iterator[Chunk]:
+        for lo in range(0, n, step):
+            yield embeddings[lo : lo + step], token_doc_ids[lo : lo + step]
+        if n == 0:
+            yield embeddings[:0], token_doc_ids[:0]
+
+    return chunks
+
+
+def _normalize(chunk) -> jax.Array:
+    return kmeans.l2_normalize(jnp.asarray(chunk, jnp.float32))
+
+
+def build_index_chunked(
+    chunks: ChunkSource,
+    n_docs: int,
+    config: IndexBuildConfig = IndexBuildConfig(),
+    *,
+    n_tokens: int | None = None,
+    dim: int | None = None,
+    store_path: str | None = None,
+    overwrite: bool = False,
+) -> WarpIndex:
+    """Build a ``WarpIndex`` from a re-iterable stream of
+    ``(emb_chunk f32[n, D], token_doc_ids i32[n])`` pairs.
+
+    ``chunks`` is a zero-arg callable returning a fresh iterator — the
+    build makes up to four passes. Pass ``n_tokens``/``dim`` when known to
+    skip the counting pass. With ``store_path`` the packed codes and doc
+    ids are memmap-written into that store directory and the manifest is
+    finalized in place; the returned index is the mmap-backed reload.
+    """
+    if n_tokens is None or dim is None:
+        n_tokens, dim = 0, dim
+        for emb_c, tdi_c in chunks():
+            if emb_c.shape[0] != np.shape(tdi_c)[0]:
+                raise ValueError("token_doc_ids must align with embeddings")
+            n_tokens += emb_c.shape[0]
+            if dim is None and emb_c.ndim == 2:
+                dim = int(emb_c.shape[1])
+    if not n_tokens or not dim:
+        raise ValueError("cannot build an index from an empty corpus")
+    if store_path is not None:
+        # Claim the output directory up front so an existing index fails
+        # fast, before the expensive passes run.
+        store_format._prepare_dir(store_path, overwrite)
+
+    key = jax.random.PRNGKey(config.seed)
+    c = config.resolved_n_centroids(n_tokens)
+
+    # --- pass 1: k-means on a sqrt(N)-proportional sample (paper §4.1).
+    # Identical PRNG stream to the in-memory build: same sample indices in
+    # the same (unsorted) order, so the centroids come out bit-identical.
+    sample_n = int(
+        min(n_tokens, max(4 * c, config.sample_factor * 4 * math.sqrt(n_tokens)))
+    )
+    k_sample, k_fit = jax.random.split(key)
+    sample_idx = np.asarray(
+        jax.random.choice(k_sample, n_tokens, (sample_n,), replace=False)
+    )
+    sample = np.empty((sample_n, dim), np.float32)
+    lo = 0
+    for emb_c, tdi_c in chunks():
+        # Validated here (the first full pass) even when the counting pass
+        # was skipped, so a mismatched doc-id stream fails before k-means.
+        if np.shape(tdi_c)[0] != emb_c.shape[0]:
+            raise ValueError("token_doc_ids must align with embeddings")
+        hi = lo + emb_c.shape[0]
+        m = (sample_idx >= lo) & (sample_idx < hi)
+        if m.any():
+            # Gather-then-normalize: row-wise identical to normalizing the
+            # chunk first, and only the sampled rows pay the arithmetic.
+            rows = np.asarray(emb_c)[sample_idx[m] - lo]
+            sample[m] = np.asarray(_normalize(rows))
+        lo = hi
+    if lo != n_tokens:
+        # An overstated count would leave sample rows as uninitialized
+        # memory (and k-means training on heap garbage); fail instead.
+        raise ValueError(
+            f"chunk source yielded {lo} tokens but n_tokens={n_tokens}"
+        )
+    centroids = kmeans.spherical_kmeans(
+        k_fit, jnp.asarray(sample), c, iters=config.kmeans_iters
+    )
+
+    # --- pass 2: assign + count + bounded residual sample for bucket stats.
+    # The in-memory build takes the first min(N*D, 2^22) flat residual
+    # values == the residuals of the first ceil(stats_n / D) tokens.
+    counts = np.zeros((c,), np.int64)
+    stats_n = min(n_tokens * dim, 1 << 22)
+    rows_needed = -(-stats_n // dim)
+    stat_rows: list[np.ndarray] = []
+    got = 0
+    # Assignments are buffered (i32[N], disk-backed for store builds) so
+    # pass 3 doesn't pay the O(N*C*D) assignment matmul a second time.
+    if store_path is not None:
+        assign_scratch = os.path.join(
+            store_path, store_format.ARRAY_DIR, "assign.scratch"
+        )
+        assign_all = np.memmap(
+            assign_scratch, dtype=np.int32, mode="w+", shape=(n_tokens,)
+        )
+    else:
+        assign_scratch = None
+        assign_all = np.empty((n_tokens,), np.int32)
+    lo = 0
+    for emb_c, _ in chunks():
+        norm = _normalize(emb_c)
+        assign = kmeans.assign_clusters(norm, centroids)
+        a_np = np.asarray(assign, np.int32)
+        assign_all[lo : lo + a_np.shape[0]] = a_np
+        lo += a_np.shape[0]
+        counts += np.bincount(a_np, minlength=c)
+        if got < rows_needed:
+            take = min(rows_needed - got, int(emb_c.shape[0]))
+            stat_rows.append(np.asarray(norm[:take] - centroids[assign[:take]]))
+            got += take
+    flat = np.concatenate([r.reshape(-1) for r in stat_rows])[:stats_n]
+    cutoffs, weights = quantization.compute_buckets(
+        jnp.asarray(flat), config.nbits
+    )
+
+    sizes = counts.astype(np.int32)
+    offsets = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
+    cap = int(counts.max())
+
+    # --- pass 3: encode + scatter into final CSR-by-cluster slots.
+    pb = quantization.packed_bytes(dim, config.nbits)
+    if store_path is not None:
+        arr_dir = os.path.join(store_path, store_format.ARRAY_DIR)
+        packed_out = np.memmap(
+            os.path.join(arr_dir, "packed_codes.bin"),
+            dtype=np.uint8, mode="w+", shape=(n_tokens, pb),
+        )
+        docs_out = np.memmap(
+            os.path.join(arr_dir, "token_doc_ids.bin"),
+            dtype=np.int32, mode="w+", shape=(n_tokens,),
+        )
+    else:
+        packed_out = np.empty((n_tokens, pb), np.uint8)
+        docs_out = np.empty((n_tokens,), np.int32)
+
+    fill = np.zeros((c,), np.int64)
+    lo = 0
+    for emb_c, tdi_c in chunks():
+        norm = _normalize(emb_c)
+        a_np = np.asarray(assign_all[lo : lo + int(emb_c.shape[0])])
+        lo += int(emb_c.shape[0])
+        residuals = norm - centroids[jnp.asarray(a_np)]
+        codes = quantization.encode_residuals(residuals, cutoffs)
+        packed = np.asarray(quantization.pack_codes(codes, config.nbits))
+        # Stable within-chunk sort + running per-cluster cursors == the
+        # stable argsort over the whole corpus, chunk by chunk.
+        order = np.argsort(a_np, kind="stable")
+        sa = a_np[order]
+        chunk_counts = np.bincount(a_np, minlength=c)
+        run_start = np.concatenate([[0], np.cumsum(chunk_counts)])
+        within = np.arange(len(sa), dtype=np.int64) - run_start[sa]
+        dest = offsets[sa].astype(np.int64) + fill[sa] + within
+        packed_out[dest] = packed[order]
+        docs_out[dest] = np.asarray(tdi_c, np.int32)[order]
+        fill += chunk_counts
+    if not np.array_equal(fill, counts):
+        raise RuntimeError(
+            "chunk source changed between passes (assign/count vs scatter)"
+        )
+
+    if store_path is not None:
+        packed_out.flush()
+        docs_out.flush()
+        del packed_out, docs_out, assign_all
+        os.remove(assign_scratch)
+        _finalize_store(
+            store_path, centroids, offsets, sizes, weights, cutoffs,
+            dim=dim, nbits=config.nbits, cap=cap, n_docs=int(n_docs),
+            n_tokens=int(n_tokens), build_config=config,
+        )
+        return store_format.load_index(store_path)
+
+    return WarpIndex(
+        centroids=centroids,
+        packed_codes=packed_out,
+        token_doc_ids=docs_out,
+        cluster_offsets=offsets,
+        cluster_sizes=sizes,
+        bucket_weights=weights,
+        bucket_cutoffs=cutoffs,
+        dim=int(dim),
+        nbits=config.nbits,
+        cap=cap,
+        n_docs=int(n_docs),
+        n_tokens=int(n_tokens),
+    )
+
+
+def _finalize_store(
+    path, centroids, offsets, sizes, weights, cutoffs, *,
+    dim, nbits, cap, n_docs, n_tokens, build_config,
+):
+    """Write the small arrays + manifest around the memmap-written big ones."""
+    arrays = {}
+    small = {
+        "centroids": np.asarray(centroids, np.float32),
+        "cluster_offsets": np.asarray(offsets, np.int32),
+        "cluster_sizes": np.asarray(sizes, np.int32),
+        "bucket_weights": np.asarray(weights, np.float32),
+        "bucket_cutoffs": np.asarray(cutoffs, np.float32),
+    }
+    for name, arr in small.items():
+        rel = f"{store_format.ARRAY_DIR}/{name}.bin"
+        meta = store_format._write_array(os.path.join(path, rel), arr)
+        arrays[name] = store_format._entry(rel, meta)
+    pb = quantization.packed_bytes(dim, nbits)
+    arrays["packed_codes"] = store_format._entry(
+        f"{store_format.ARRAY_DIR}/packed_codes.bin",
+        {"dtype": "uint8", "shape": [n_tokens, pb]},
+    )
+    arrays["token_doc_ids"] = store_format._entry(
+        f"{store_format.ARRAY_DIR}/token_doc_ids.bin",
+        {"dtype": "int32", "shape": [n_tokens]},
+    )
+    store_format._write_manifest(path, {
+        "format": store_format.FORMAT_NAME,
+        "version": store_format.FORMAT_VERSION,
+        "kind": store_format.KIND_SINGLE,
+        "static": {
+            "dim": dim, "nbits": nbits, "cap": cap,
+            "n_docs": n_docs, "n_tokens": n_tokens,
+        },
+        "arrays": arrays,
+        "build_config": store_format._config_dict(build_config),
+    })
+
+
+def build_index_to_store(
+    chunks: ChunkSource,
+    path: str,
+    n_docs: int,
+    config: IndexBuildConfig = IndexBuildConfig(),
+    *,
+    n_tokens: int | None = None,
+    dim: int | None = None,
+    overwrite: bool = False,
+) -> WarpIndex:
+    """Out-of-core build straight into a store directory; returns the
+    mmap-backed index. Peak memory is O(chunk + n_centroids)."""
+    return build_index_chunked(
+        chunks, n_docs, config,
+        n_tokens=n_tokens, dim=dim, store_path=path, overwrite=overwrite,
+    )

@@ -1,0 +1,434 @@
+"""Delta segments: append-only index updates against a frozen base.
+
+``add_documents`` quantizes new documents with the base index's FROZEN
+centroids and codec tables (no re-clustering, no re-training) into a small
+CSR-by-cluster segment over the *same* centroid space, written as an
+append-only ``segments/seg_NNNNN/`` directory next to the base.
+
+Search over base + deltas is exact, not approximate, because everything
+that crosses segment boundaries is shared or additive:
+
+  - centroid relevance S_cq depends only on the (frozen) centroids, so one
+    ``warp_select`` pass serves every segment;
+  - the missing-similarity threshold t' and estimate m_i depend on
+    *combined* cluster sizes, which are the element-wise sum of per-segment
+    sizes — computed once and fed to the shared stage-1;
+  - a document's tokens live entirely inside one segment, so stage 2+3
+    (implicit decompression + two-stage reduction) run per segment with the
+    shared probe set and global m_i, and the final merge is a top-k over
+    the per-segment top-k lists with doc-id offsets.
+
+Hence segmented search returns the same documents as the single-segment
+index ``compact()`` produces by folding the deltas back into a fresh base,
+with scores equal up to floating-point summation order (the reduction's
+``associative_scan`` tree shape depends on the candidate-array length, so
+the last ulp can differ) — that identity is the subsystem's correctness
+anchor (tests/test_segments.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine, kmeans, quantization
+from repro.core.reduction import TopKResult
+from repro.core.types import WarpIndex, WarpSearchConfig
+from repro.core.warpselect import warp_select
+from repro.store import format as store_format
+
+__all__ = [
+    "SegmentedWarpIndex",
+    "quantize_segment",
+    "add_documents",
+    "load_segmented",
+    "compact",
+    "make_segmented_search_fn",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentedWarpIndex:
+    """A base ``WarpIndex`` plus ordered delta segments.
+
+    Each delta is itself a ``WarpIndex`` over the SAME centroid space
+    (centroids / bucket tables are shared references, not copies) with
+    segment-local doc ids; ``doc_starts[i]`` is the global id of segment
+    ``i``'s first document (segment 0 is the base, at offset 0).
+    """
+
+    base: WarpIndex
+    deltas: tuple[WarpIndex, ...]
+    doc_starts: tuple[int, ...]
+
+    def __post_init__(self):
+        if len(self.doc_starts) != 1 + len(self.deltas):
+            raise ValueError("doc_starts must cover base + every delta")
+
+    @property
+    def segments(self) -> tuple[WarpIndex, ...]:
+        return (self.base, *self.deltas)
+
+    @property
+    def n_segments(self) -> int:
+        return 1 + len(self.deltas)
+
+    @property
+    def n_docs(self) -> int:
+        return sum(s.n_docs for s in self.segments)
+
+    @property
+    def n_tokens(self) -> int:
+        return sum(s.n_tokens for s in self.segments)
+
+    @property
+    def n_centroids(self) -> int:
+        return self.base.n_centroids
+
+    @property
+    def cap(self) -> int:
+        return max(s.cap for s in self.segments)
+
+    @property
+    def dim(self) -> int:
+        return self.base.dim
+
+    @property
+    def nbits(self) -> int:
+        return self.base.nbits
+
+    def combined_cluster_sizes(self) -> jax.Array:
+        sizes = np.asarray(self.base.cluster_sizes, np.int32).copy()
+        for d in self.deltas:
+            sizes += np.asarray(d.cluster_sizes, np.int32)
+        return jnp.asarray(sizes)
+
+    def nbytes(self) -> int:
+        """Resident footprint; centroid/codec tables are shared references
+        across segments and counted once (with the base)."""
+        total = self.base.nbytes()
+        for d in self.deltas:
+            for name in ("packed_codes", "token_doc_ids",
+                         "cluster_offsets", "cluster_sizes"):
+                arr = getattr(d, name)
+                total += arr.size * arr.dtype.itemsize
+        return total
+
+
+def quantize_segment(
+    base: WarpIndex, embeddings, token_doc_ids, n_docs: int
+) -> WarpIndex:
+    """Quantize new documents against the frozen base: assign to the
+    existing centroids, encode residuals with the existing codec, lay out
+    CSR-by-cluster over the same centroid space. Doc ids are segment-local
+    (``0 .. n_docs``)."""
+    emb = kmeans.l2_normalize(jnp.asarray(embeddings, jnp.float32))
+    n_tokens = emb.shape[0]
+    tdi = np.asarray(token_doc_ids, np.int32)
+    if tdi.shape != (n_tokens,):
+        raise ValueError("token_doc_ids must align with embeddings")
+    if n_tokens and (tdi.min() < 0 or tdi.max() >= n_docs):
+        raise ValueError("segment doc ids must be local, in [0, n_docs)")
+    if emb.shape[1] != base.dim:
+        raise ValueError(f"dim {emb.shape[1]} != base dim {base.dim}")
+
+    c = base.n_centroids
+    centroids = jnp.asarray(base.centroids)
+    assign = np.asarray(kmeans.assign_clusters(emb, centroids))
+    residuals = emb - centroids[assign]
+    codes = quantization.encode_residuals(
+        residuals, jnp.asarray(base.bucket_cutoffs)
+    )
+    packed = np.asarray(quantization.pack_codes(codes, base.nbits))
+
+    order = np.argsort(assign, kind="stable")
+    sizes = np.bincount(assign, minlength=c).astype(np.int32)
+    offsets = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int32)
+    return WarpIndex(
+        centroids=base.centroids,
+        packed_codes=packed[order],
+        token_doc_ids=tdi[order],
+        cluster_offsets=offsets,
+        cluster_sizes=sizes,
+        bucket_weights=base.bucket_weights,
+        bucket_cutoffs=base.bucket_cutoffs,
+        dim=base.dim,
+        nbits=base.nbits,
+        cap=int(sizes.max()) if n_tokens else 0,
+        n_docs=int(n_docs),
+        n_tokens=int(n_tokens),
+    )
+
+
+def add_documents(
+    path: str, embeddings, token_doc_ids, n_docs: int
+) -> str:
+    """Append a delta segment to the store at ``path``; returns the new
+    segment directory. ``token_doc_ids`` are local to the new batch
+    (``0 .. n_docs``); global ids are assigned by position at load time."""
+    manifest = store_format.read_manifest(path)
+    if manifest["kind"] != store_format.KIND_SINGLE:
+        raise NotImplementedError(
+            f"delta segments require a single-device base index, "
+            f"got kind={manifest['kind']!r} (compact + reshard instead)"
+        )
+    if "shard" in manifest:
+        # Per-shard views of a sharded store carry zero-filled codec
+        # cutoffs (encode-only); quantizing against them would silently
+        # collapse every residual code.
+        raise NotImplementedError(
+            f"{path} is a per-shard view of a sharded index; delta "
+            "segments must target the owning store"
+        )
+    base = store_format.load_index(path, with_segments=False)
+    seg = quantize_segment(base, embeddings, token_doc_ids, n_docs)
+
+    seg_root = os.path.join(path, "segments")
+    os.makedirs(seg_root, exist_ok=True)
+    seg_id = len(store_format.list_segment_dirs(path))
+    seg_dir = os.path.join(seg_root, f"seg_{seg_id:05d}")
+    os.makedirs(os.path.join(seg_dir, store_format.ARRAY_DIR), exist_ok=True)
+    arrays = {}
+    for name in store_format.SEGMENT_ARRAYS:
+        rel = f"{store_format.ARRAY_DIR}/{name}.bin"
+        meta = store_format._write_array(
+            os.path.join(seg_dir, rel), np.asarray(getattr(seg, name))
+        )
+        arrays[name] = store_format._entry(rel, meta)
+    store_format._write_manifest(seg_dir, {
+        "format": store_format.FORMAT_NAME,
+        "version": store_format.FORMAT_VERSION,
+        "kind": store_format.KIND_SEGMENT,
+        "static": {
+            "dim": seg.dim, "nbits": seg.nbits, "cap": seg.cap,
+            "n_docs": seg.n_docs, "n_tokens": seg.n_tokens,
+        },
+        "arrays": arrays,
+    })
+    return seg_dir
+
+
+def load_segmented(
+    base: WarpIndex, seg_dirs: list[str], *, mmap: bool = True
+) -> SegmentedWarpIndex:
+    """Stitch a base index + delta-segment directories into one searchable
+    view; centroid/codec arrays are shared with the base, not copied."""
+    deltas = []
+    doc_starts = [0]
+    total = base.n_docs
+    for seg_dir in seg_dirs:
+        manifest, arrays = store_format.load_segment_arrays(seg_dir, mmap=mmap)
+        static = manifest["static"]
+        deltas.append(WarpIndex(
+            centroids=base.centroids,
+            bucket_weights=base.bucket_weights,
+            bucket_cutoffs=base.bucket_cutoffs,
+            **arrays,
+            dim=int(static["dim"]),
+            nbits=int(static["nbits"]),
+            cap=int(static["cap"]),
+            n_docs=int(static["n_docs"]),
+            n_tokens=int(static["n_tokens"]),
+        ))
+        doc_starts.append(total)
+        total += deltas[-1].n_docs
+    return SegmentedWarpIndex(
+        base=base, deltas=tuple(deltas), doc_starts=tuple(doc_starts)
+    )
+
+
+# ---------------------------------------------------------------------------
+# search
+# ---------------------------------------------------------------------------
+
+
+def make_segmented_search_fn(
+    seg: SegmentedWarpIndex, config: WarpSearchConfig, *, query_batch: bool
+):
+    """Compile the staged pipeline over base + deltas.
+
+    One shared ``warp_select`` over the frozen centroids with COMBINED
+    cluster sizes (global t' crossing -> global m_i), then per-segment
+    stage 2+3 with segment-local doc ids, then a top-k merge with doc-id
+    offsets. ``config`` must be resolved (concrete t'/k_impute/executor).
+    """
+    doc_starts = seg.doc_starts
+    combined_sizes = seg.combined_cluster_sizes()
+    cfg = config
+
+    def single(segments, sizes, q, qmask):
+        sel = warp_select(
+            q,
+            segments[0].centroids,
+            sizes,
+            nprobe=cfg.nprobe,
+            t_prime=cfg.t_prime,
+            k_impute=cfg.k_impute,
+            qmask=qmask,
+        )
+        scores_l, docs_l = [], []
+        for sub, start in zip(segments, doc_starts):
+            if sub.cap == 0 or sub.n_tokens == 0:
+                continue  # token-less segment: no candidates to score
+            # A small delta may hold fewer candidate slots than k.
+            k_sub = max(1, min(cfg.k, q.shape[0] * cfg.nprobe * sub.cap))
+            r = engine.score_and_reduce(
+                sub, q, qmask, sel.probe_scores, sel.probe_cids, sel.mse,
+                dataclasses.replace(cfg, k=k_sub),
+            )
+            scores_l.append(r.scores)
+            docs_l.append(jnp.where(r.doc_ids >= 0, r.doc_ids + start, -1))
+        all_scores = jnp.concatenate(scores_l)
+        all_docs = jnp.concatenate(docs_l)
+        if all_scores.shape[0] < cfg.k:  # degenerate tiny-corpus guard
+            pad = cfg.k - all_scores.shape[0]
+            all_scores = jnp.pad(all_scores, (0, pad), constant_values=-jnp.inf)
+            all_docs = jnp.pad(all_docs, (0, pad), constant_values=-1)
+        top_scores, top_idx = jax.lax.top_k(all_scores, cfg.k)
+        top_docs = jnp.where(
+            jnp.isfinite(top_scores), all_docs[top_idx], jnp.int32(-1)
+        )
+        return TopKResult(scores=top_scores, doc_ids=top_docs)
+
+    if query_batch:
+        body = lambda segments, sizes, q, qmask: jax.vmap(
+            lambda qq, mm: single(segments, sizes, qq, mm)
+        )(q, qmask)
+    else:
+        body = single
+    compiled = jax.jit(body)
+
+    def run(index: SegmentedWarpIndex, q, qmask):
+        return compiled(index.segments, combined_sizes, q, qmask)
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# compaction
+# ---------------------------------------------------------------------------
+
+
+def compact(path: str) -> str:
+    """Fold every delta segment back into a fresh single-segment base.
+
+    Centroids and codec tables stay frozen (compaction re-lays-out, it does
+    not re-train); within each cluster, tokens keep segment order (base
+    first, then deltas in append order) and doc ids are rebased to global.
+    The directory is replaced near-atomically: the new index is written
+    beside it, then swapped in; open mmaps of the old files stay valid
+    (POSIX unlink semantics) until their holders drop them — which is what
+    lets a serving process ``reload()`` with zero downtime. A pid lockfile
+    (``.compact-lock``) marks the swap as writer-owned: concurrent
+    ``compact`` calls are rejected, and readers never run recovery against
+    a live writer (a read landing inside the rename window sees a
+    transient FileNotFoundError and should retry). A crash inside the
+    window leaves ``.compact-tmp``/``.compact-old`` siblings plus a stale
+    lock that the next ``compact``/``load_index`` repairs
+    (``format.recover_interrupted_compact``).
+    """
+    lock = store_format.compact_lock_path(path)
+    try:
+        fd = os.open(lock, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+    except FileExistsError:
+        if store_format._lock_holder_alive(lock):
+            raise RuntimeError(
+                f"another compact() is already running on {path} "
+                f"(lockfile {lock})"
+            ) from None
+        os.remove(lock)  # stale: crashed writer; take over
+        fd = os.open(lock, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+    with os.fdopen(fd, "w") as f:
+        f.write(str(os.getpid()))
+    try:
+        return _compact_locked(path)
+    finally:
+        if os.path.exists(lock):
+            os.remove(lock)
+
+
+def _compact_locked(path: str) -> str:
+    store_format.recover_interrupted_compact(path)
+    manifest = store_format.read_manifest(path)
+    seg = store_format.load_index(path, mmap=True)
+    if isinstance(seg, WarpIndex):
+        return path  # no deltas; already compact
+    if not isinstance(seg, SegmentedWarpIndex):
+        raise NotImplementedError(f"cannot compact kind={manifest['kind']!r}")
+
+    base = seg.base
+    c = base.n_centroids
+    sizes = np.asarray(seg.combined_cluster_sizes())
+    offsets = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int32)
+    n_tokens = int(sizes.sum())
+    pb = quantization.packed_bytes(base.dim, base.nbits)
+
+    # The merged O(N) arrays are memmap-written into the tmp store (the
+    # builder's pattern), segment slices copied range-by-range, so
+    # compaction never holds the index in host RAM — it stays usable on
+    # exactly the larger-than-memory corpora the store exists for.
+    tmp = path.rstrip("/\\") + store_format.COMPACT_TMP_SUFFIX
+    old = path.rstrip("/\\") + store_format.COMPACT_OLD_SUFFIX
+    store_format._prepare_dir(tmp, overwrite=True)
+    arr_dir = os.path.join(tmp, store_format.ARRAY_DIR)
+    packed = np.memmap(
+        os.path.join(arr_dir, "packed_codes.bin"),
+        dtype=np.uint8, mode="w+", shape=(n_tokens, pb),
+    )
+    doc_ids = np.memmap(
+        os.path.join(arr_dir, "token_doc_ids.bin"),
+        dtype=np.int32, mode="w+", shape=(n_tokens,),
+    )
+    fill = np.zeros((c,), np.int64)
+    step = 1 << 18
+    for sub, start in zip(seg.segments, seg.doc_starts):
+        sub_sizes = np.asarray(sub.cluster_sizes, np.int64)
+        sub_offsets = np.asarray(sub.cluster_offsets, np.int64)
+        # Chunk-local destination math: everything here is O(step), so
+        # compaction memory stays bounded regardless of corpus size.
+        for lo in range(0, sub.n_tokens, step):
+            hi = min(sub.n_tokens, lo + step)
+            pos = np.arange(lo, hi, dtype=np.int64)
+            # Owning cluster of CSR position p: last offset <= p ('right'
+            # handles empty clusters whose offsets collapse).
+            cluster_of = np.searchsorted(sub_offsets, pos, side="right") - 1
+            within = pos - sub_offsets[cluster_of]
+            d = offsets[cluster_of].astype(np.int64) + fill[cluster_of] + within
+            packed[d] = sub.packed_codes[lo:hi]
+            doc_ids[d] = (
+                np.asarray(sub.token_doc_ids[lo:hi], np.int32) + np.int32(start)
+            )
+        fill += sub_sizes
+    packed.flush()
+    doc_ids.flush()
+    del packed, doc_ids
+
+    from repro.store.builder import _finalize_store  # no import cycle: builder
+    # depends only on core + format
+
+    _finalize_store(
+        tmp,
+        np.asarray(base.centroids),
+        offsets,
+        sizes.astype(np.int32),
+        np.asarray(base.bucket_weights),
+        np.asarray(base.bucket_cutoffs),
+        dim=base.dim,
+        nbits=base.nbits,
+        cap=int(sizes.max()),
+        n_docs=seg.n_docs,
+        n_tokens=n_tokens,
+        build_config=manifest.get("build_config"),
+    )
+    # A stale .compact-old can only be the leftover of a crash after a
+    # completed swap (path intact) — clear it so the rename below works.
+    shutil.rmtree(old, ignore_errors=True)
+    os.rename(path, old)
+    os.rename(tmp, path)
+    shutil.rmtree(old)
+    return path

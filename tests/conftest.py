@@ -27,6 +27,15 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--slow-build",
+        action="store_true",
+        default=False,
+        help="run tests marked slow_build (large out-of-core index builds)",
+    )
+
+
 def pytest_configure(config):
     config.addinivalue_line(
         "markers",
@@ -35,11 +44,21 @@ def pytest_configure(config):
         "(e.g. Mosaic-lowering or timing assertions).",
     )
     config.addinivalue_line("markers", "slow: long-running test")
+    config.addinivalue_line(
+        "markers",
+        "slow_build: large out-of-core index build; deselected from the "
+        "tier-1 run unless --slow-build is passed",
+    )
 
 
 def pytest_collection_modifyitems(config, items):
     tpu = None
+    run_slow_build = config.getoption("--slow-build")
     for item in items:
+        if not run_slow_build and item.get_closest_marker("slow_build"):
+            item.add_marker(
+                pytest.mark.skip(reason="slow_build: pass --slow-build to run")
+            )
         marker = item.get_closest_marker("tpu_kernel")
         if marker is None or not marker.kwargs.get("requires_tpu", False):
             continue

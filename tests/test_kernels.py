@@ -126,3 +126,25 @@ def test_embedding_bag_flat_segments(rng):
     for i, s in zip(indices, seg):
         want[s] += table[i]
     np.testing.assert_allclose(np.asarray(out), want, rtol=1e-5, atol=1e-5)
+
+
+def test_byte_wise_paths_reject_padded_trailing_byte():
+    """Odd dims pack with a zero-padded trailing byte that only the
+    reference gather path can skip; the kernel and LUT paths must fail
+    with direction, not a reshape TypeError."""
+    import pytest
+
+    from repro.kernels import ops
+
+    dim, nbits = 5, 4  # 2 dims/byte -> 3 bytes, last one half-padded
+    packed = jnp.zeros((1, 8, 3), jnp.uint8)
+    v = jnp.zeros((1, dim, 1 << nbits), jnp.float32)
+    # Reference gather path: works.
+    out = ops.selective_sum(packed, v, nbits=nbits, dim=dim, use_kernel=False)
+    assert out.shape == (1, 8)
+    with pytest.raises(ValueError, match="packed bytes"):
+        ops.selective_sum(packed, v, nbits=nbits, dim=dim, use_kernel=True)
+    with pytest.raises(ValueError, match="packed bytes"):
+        ops.selective_sum(
+            packed, v, nbits=nbits, dim=dim, use_kernel=False, impl="lut"
+        )

@@ -35,6 +35,42 @@ def test_pack_unpack_roundtrip_property(nbits, n, seed):
 
 
 @pytest.mark.parametrize("nbits", [2, 4, 8])
+@pytest.mark.parametrize("n", [0, 1, 7, 513])
+def test_pack_unpack_roundtrip_token_counts(nbits, n, rng):
+    """Every token count round-trips, including empty and odd sizes."""
+    codes = rng.integers(0, 1 << nbits, (n, DIM), dtype=np.uint8)
+    packed = qz.pack_codes(jnp.asarray(codes), nbits)
+    assert packed.shape == (n, qz.packed_bytes(DIM, nbits))
+    out = qz.unpack_codes(packed, nbits, DIM)
+    np.testing.assert_array_equal(np.asarray(out), codes)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    nbits=st.sampled_from([2, 4, 8]),
+    n=st.sampled_from([0, 1, 7, 513]),
+    dim=st.sampled_from([1, 3, 5, 31, 127, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pack_unpack_partial_byte_property(nbits, n, dim, seed):
+    """Dims that don't fill the last byte (dim % (8//nbits) != 0) pack into
+    ceil(dim*nbits/8) bytes with zero-padded high bits and round-trip."""
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 1 << nbits, (n, dim), dtype=np.uint8)
+    packed = qz.pack_codes(jnp.asarray(codes), nbits)
+    assert packed.shape == (n, qz.packed_bytes(dim, nbits))
+    out = qz.unpack_codes(packed, nbits, dim)
+    assert out.shape == (n, dim)
+    np.testing.assert_array_equal(np.asarray(out), codes)
+    # Trailing pad bits are zero: unpacking one position past dim (when the
+    # last byte is partial) must yield zeros, so on-disk bytes are canonical.
+    per_byte = 8 // nbits
+    if dim % per_byte and n:
+        wide = qz.unpack_codes(packed, nbits, packed.shape[-1] * per_byte)
+        assert not np.asarray(wide)[:, dim:].any()
+
+
+@pytest.mark.parametrize("nbits", [2, 4, 8])
 def test_buckets_are_sorted_quantiles(nbits, rng):
     res = rng.standard_normal((4096, DIM)).astype(np.float32) * 0.1
     cutoffs, weights = qz.compute_buckets(jnp.asarray(res), nbits)

@@ -1,0 +1,221 @@
+"""Delta segments: add_documents -> segmented search -> compact().
+
+Correctness anchors:
+  1. segmented search (base + deltas) retrieves the SAME documents as the
+     compacted single-segment index, scores equal up to fp summation order
+     — shared stage-1 over combined cluster sizes makes the decomposition
+     exact, not approximate;
+  2. after add_documents, retrieval matches a from-scratch rebuild of the
+     concatenated corpus (top-k ids equal) on margin queries — queries
+     whose top-k doc-score gaps are O(1), far above codec noise, so the
+     comparison is meaningful across two different clusterings;
+  3. compact() preserves doc ids/scores and drops the segment dirs.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    IndexBuildConfig,
+    Retriever,
+    WarpSearchConfig,
+    build_index,
+    index_stats,
+)
+from repro.data import make_corpus
+from repro.store import (
+    SegmentedWarpIndex,
+    add_documents,
+    compact,
+    list_segment_dirs,
+    load_index,
+    save_index,
+)
+
+BUILD_CFG = IndexBuildConfig(n_centroids=64, nbits=4, kmeans_iters=3)
+DIM = 128
+
+
+def concat_corpora(c1, c2):
+    emb = np.concatenate([c1.emb, c2.emb])
+    tdi = np.concatenate([c1.token_doc_ids, c2.token_doc_ids + c1.n_docs])
+    return emb, tdi, c1.n_docs + c2.n_docs
+
+
+def margin_queries(emb, tdi, n_docs, n_queries, seed):
+    """Queries built from 4/3/2 near-copies of tokens from three distinct
+    docs: the top-3 docs and their order are decided by token multiplicity
+    (score gaps ~1.0), not by codec- or imputation-level noise."""
+    rng = np.random.default_rng(seed)
+    offs = {}
+    for t, d in enumerate(tdi):
+        offs.setdefault(int(d), []).append(t)
+    qs, masks, expected = [], [], []
+    for _ in range(n_queries):
+        docs = rng.choice(n_docs, size=3, replace=False)
+        toks = []
+        for mult, d in zip((4, 3, 2), docs):
+            cand = offs[int(d)]
+            pick = rng.choice(cand, size=mult, replace=len(cand) < mult)
+            toks.extend(emb[pick])
+        arr = np.stack(toks) + 0.01 * rng.standard_normal((9, DIM)).astype(
+            np.float32
+        )
+        qs.append(arr / np.linalg.norm(arr, axis=-1, keepdims=True))
+        masks.append(np.ones(9, bool))
+        expected.append(docs)
+    return np.stack(qs).astype(np.float32), np.stack(masks), expected
+
+
+@pytest.fixture(scope="module")
+def lifecycle(tmp_path_factory):
+    """Base corpus saved to a store + one delta of new documents."""
+    c1 = make_corpus(n_docs=160, mean_doc_len=14, seed=31,
+                     topic_strength=3.0, n_topics=200)
+    c2 = make_corpus(n_docs=40, mean_doc_len=14, seed=32,
+                     topic_strength=3.0, n_topics=200)
+    path = str(tmp_path_factory.mktemp("store") / "idx")
+    base = build_index(c1.emb, c1.token_doc_ids, c1.n_docs, BUILD_CFG)
+    save_index(base, path, build_config=BUILD_CFG)
+    add_documents(path, c2.emb, c2.token_doc_ids, c2.n_docs)
+    return c1, c2, path
+
+
+def test_add_documents_appends_segment(lifecycle):
+    c1, c2, path = lifecycle
+    seg = load_index(path)
+    assert isinstance(seg, SegmentedWarpIndex)
+    assert seg.n_segments == 2
+    assert seg.n_docs == c1.n_docs + c2.n_docs
+    assert seg.n_tokens == c1.n_tokens + c2.n_tokens
+    assert seg.doc_starts == (0, c1.n_docs)
+    # The delta shares the frozen centroid space, not a re-clustered one.
+    delta = seg.deltas[0]
+    assert delta.n_centroids == seg.base.n_centroids
+    assert np.shares_memory(
+        np.asarray(delta.centroids), np.asarray(seg.base.centroids)
+    ) or np.array_equal(
+        np.asarray(delta.centroids), np.asarray(seg.base.centroids)
+    )
+    sizes = np.asarray(seg.combined_cluster_sizes())
+    assert sizes.sum() == seg.n_tokens
+
+
+def test_segmented_search_reaches_both_old_and_new_docs(lifecycle):
+    c1, c2, path = lifecycle
+    emb, tdi, n_docs = concat_corpora(c1, c2)
+    plan = Retriever.from_store(path).plan(WarpSearchConfig(nprobe=16, k=3))
+    q, m, expected = margin_queries(emb, tdi, n_docs, 8, seed=77)
+    hits = 0
+    for i in range(q.shape[0]):
+        got = np.asarray(plan.retrieve(q[i], m[i]).doc_ids)
+        hits += int(expected[i][0] == got[0])
+    assert hits == q.shape[0]
+    # Queries specifically about delta documents retrieve global ids.
+    q2, m2, exp2 = margin_queries(c2.emb, c2.token_doc_ids, c2.n_docs, 4, seed=78)
+    for i in range(2):
+        got = np.asarray(plan.retrieve(q2[i], m2[i]).doc_ids)
+        assert got[0] == exp2[i][0] + c1.n_docs
+
+
+def test_segmented_matches_rebuild_on_concatenated_corpus(lifecycle):
+    """Acceptance: add_documents + search == from-scratch rebuild of the
+    concatenated corpus, top-k ids equal (margin queries; full probing so
+    imputation cancels and only O(1) score gaps decide)."""
+    c1, c2, path = lifecycle
+    emb, tdi, n_docs = concat_corpora(c1, c2)
+    cfg = WarpSearchConfig(nprobe=64, k=3)
+    plan_seg = Retriever.from_store(path).plan(cfg)
+    rebuilt = build_index(emb, tdi, n_docs, BUILD_CFG)
+    plan_re = Retriever.from_index(rebuilt).plan(cfg)
+    q, m, _ = margin_queries(emb, tdi, n_docs, 10, seed=36)
+    for i in range(q.shape[0]):
+        a = np.asarray(plan_seg.retrieve(q[i], m[i]).doc_ids)
+        b = np.asarray(plan_re.retrieve(q[i], m[i]).doc_ids)
+        np.testing.assert_array_equal(a, b)
+
+
+def test_compact_preserves_results(lifecycle, tmp_path):
+    """compact() must not change retrieval: same docs in the same order;
+    scores equal up to the reduction's fp summation order (the scan tree
+    shape depends on candidate-array length, so allow the last ulps)."""
+    import shutil
+
+    c1, c2, path = lifecycle
+    work = str(tmp_path / "idx")
+    shutil.copytree(path, work)
+    emb, tdi, n_docs = concat_corpora(c1, c2)
+    cfg = WarpSearchConfig(nprobe=16, k=3)
+    plan_seg = Retriever.from_store(work).plan(cfg)
+    q, m, _ = margin_queries(emb, tdi, n_docs, 6, seed=55)
+    before = [plan_seg.retrieve(q[i], m[i]) for i in range(q.shape[0])]
+    before_batch = plan_seg.retrieve_batch(q, m)
+
+    compact(work)
+    assert list_segment_dirs(work) == []
+    comp = load_index(work)
+    assert not isinstance(comp, SegmentedWarpIndex)
+    stats = index_stats(comp)
+    assert stats["n_docs"] == n_docs and stats["n_tokens"] == len(tdi)
+
+    plan_c = Retriever.from_store(work).plan(cfg)
+    for i, r in enumerate(before):
+        rc = plan_c.retrieve(q[i], m[i])
+        np.testing.assert_array_equal(
+            np.asarray(r.doc_ids), np.asarray(rc.doc_ids)
+        )
+        np.testing.assert_allclose(
+            np.asarray(r.scores), np.asarray(rc.scores), rtol=1e-6, atol=1e-6
+        )
+    rcb = plan_c.retrieve_batch(q, m)
+    np.testing.assert_array_equal(
+        np.asarray(before_batch.doc_ids), np.asarray(rcb.doc_ids)
+    )
+    # Compacting an already-compact store is a no-op.
+    assert compact(work) == work
+
+
+def test_multiple_deltas_then_compact(tmp_path):
+    """Two append rounds stack segments; compaction folds both."""
+    c1 = make_corpus(n_docs=80, mean_doc_len=10, seed=41)
+    c2 = make_corpus(n_docs=20, mean_doc_len=10, seed=42)
+    c3 = make_corpus(n_docs=15, mean_doc_len=10, seed=43)
+    cfg = IndexBuildConfig(n_centroids=16, nbits=4, kmeans_iters=2)
+    path = str(tmp_path / "idx")
+    save_index(build_index(c1.emb, c1.token_doc_ids, c1.n_docs, cfg), path,
+               build_config=cfg)
+    add_documents(path, c2.emb, c2.token_doc_ids, c2.n_docs)
+    add_documents(path, c3.emb, c3.token_doc_ids, c3.n_docs)
+    seg = load_index(path)
+    assert seg.n_segments == 3
+    assert seg.doc_starts == (0, c1.n_docs, c1.n_docs + c2.n_docs)
+
+    emb = np.concatenate([c1.emb, c2.emb, c3.emb])
+    tdi = np.concatenate([
+        c1.token_doc_ids,
+        c2.token_doc_ids + c1.n_docs,
+        c3.token_doc_ids + c1.n_docs + c2.n_docs,
+    ])
+    n_docs = c1.n_docs + c2.n_docs + c3.n_docs
+    scfg = WarpSearchConfig(nprobe=8, k=3, t_prime=300)
+    q, m, _ = margin_queries(emb, tdi, n_docs, 4, seed=44)
+    plan_a = Retriever.from_store(path).plan(scfg)
+    before = [plan_a.retrieve(q[i], m[i]) for i in range(q.shape[0])]
+    compact(path)
+    plan_b = Retriever.from_store(path).plan(scfg)
+    for i, a in enumerate(before):
+        b = plan_b.retrieve(q[i], m[i])
+        np.testing.assert_array_equal(
+            np.asarray(a.doc_ids), np.asarray(b.doc_ids)
+        )
+        np.testing.assert_allclose(
+            np.asarray(a.scores), np.asarray(b.scores), rtol=1e-6, atol=1e-6
+        )
+
+
+def test_add_documents_validates_inputs(lifecycle, tmp_path):
+    c1, c2, path = lifecycle
+    with pytest.raises(ValueError, match="local"):
+        add_documents(path, c2.emb, c2.token_doc_ids + c1.n_docs, c2.n_docs)
+    with pytest.raises(ValueError, match="align"):
+        add_documents(path, c2.emb, c2.token_doc_ids[:-1], c2.n_docs)

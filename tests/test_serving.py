@@ -170,3 +170,48 @@ def test_server_accepts_sharded_index():
         hits += int(rel[i] in docs)
     assert hits >= 4
     assert srv.stats["served"] == 6
+
+
+def test_server_reload_hot_swaps_index(tmp_path):
+    """Lifecycle: serve a store-backed index, add docs + compact offline,
+    reload() — queued requests survive, new docs become retrievable, and
+    t' re-resolves against the grown corpus."""
+    from repro.core import Retriever
+    from repro.store import add_documents, compact, save_index
+
+    c1 = make_corpus(n_docs=120, mean_doc_len=10, seed=4)
+    c2 = make_corpus(n_docs=30, mean_doc_len=10, seed=5)
+    cfg = IndexBuildConfig(n_centroids=16, nbits=4, kmeans_iters=2)
+    path = str(tmp_path / "idx")
+    save_index(build_index(c1.emb, c1.token_doc_ids, c1.n_docs, cfg), path,
+               build_config=cfg)
+
+    clock = _FakeClock()
+    srv = RetrievalServer(
+        Retriever.from_store(path),
+        WarpSearchConfig(nprobe=8, k=5),  # t' left data-dependent on purpose
+        BatchPolicy(max_batch=4, max_wait_s=10.0),
+        clock=clock,
+    )
+    t_prime_before = srv.plan.config.t_prime
+    assert srv.retriever.n_docs == c1.n_docs
+
+    # A request queued BEFORE the reload must be served by the new plan.
+    queued = srv.submit(np.asarray(c2.emb[:4], np.float32), np.ones(4, bool))
+
+    add_documents(path, c2.emb, c2.token_doc_ids, c2.n_docs)
+    compact(path)
+    srv.reload(path)
+    assert srv.stats["reloads"] == 1
+    assert srv.retriever.n_docs == c1.n_docs + c2.n_docs
+    # t' re-resolved from the grown token count, not frozen from the old.
+    assert srv.plan.config.t_prime >= t_prime_before
+
+    scores, docs = srv.result(queued, timeout=30.0)
+    assert docs.shape == (5,)
+    # The query was doc 0 of the delta batch: its global id must surface.
+    assert c1.n_docs + 0 in docs
+    # Fresh requests keep flowing on the same server object.
+    rid = srv.submit(np.asarray(c1.emb[:4], np.float32), np.ones(4, bool))
+    scores, docs = srv.result(rid, timeout=30.0)
+    assert docs.shape == (5,)

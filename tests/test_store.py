@@ -1,0 +1,367 @@
+"""Index lifecycle store: on-disk format round-trips, mmap provenance,
+out-of-core chunked build parity, and the sharded save/load path."""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    IndexBuildConfig,
+    Retriever,
+    WarpSearchConfig,
+    build_index,
+    index_stats,
+)
+from repro.data import make_corpus, make_queries
+from repro.store import (
+    array_chunks,
+    build_index_chunked,
+    build_index_to_store,
+    inspect_index,
+    load_index,
+    read_manifest,
+    save_index,
+)
+
+ARRAY_FIELDS = (
+    "centroids",
+    "packed_codes",
+    "token_doc_ids",
+    "cluster_offsets",
+    "cluster_sizes",
+    "bucket_weights",
+    "bucket_cutoffs",
+)
+
+BUILD_CFG = IndexBuildConfig(n_centroids=32, nbits=4, kmeans_iters=2)
+SEARCH_CFG = WarpSearchConfig(nprobe=8, k=10, t_prime=400)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(n_docs=220, mean_doc_len=12, seed=17)
+
+
+@pytest.fixture(scope="module")
+def index(corpus):
+    return build_index(
+        corpus.emb, corpus.token_doc_ids, corpus.n_docs, BUILD_CFG
+    )
+
+
+def assert_indexes_bit_identical(a, b):
+    for name in ARRAY_FIELDS:
+        x, y = np.asarray(getattr(a, name)), np.asarray(getattr(b, name))
+        assert x.dtype == y.dtype and x.shape == y.shape, name
+        np.testing.assert_array_equal(x, y, err_msg=name)
+    for name in ("dim", "nbits", "cap", "n_docs", "n_tokens"):
+        assert getattr(a, name) == getattr(b, name), name
+
+
+# ---- out-of-core chunked build parity -------------------------------------
+
+
+@pytest.mark.parametrize("chunk_size", [97, 1024])
+def test_chunked_build_bit_identical(corpus, index, chunk_size):
+    """The streamed multi-pass build must reproduce the in-memory build
+    exactly — same PRNG stream, same codec, same CSR layout."""
+    chunked = build_index_chunked(
+        array_chunks(corpus.emb, corpus.token_doc_ids, chunk_size),
+        corpus.n_docs,
+        BUILD_CFG,
+    )
+    assert_indexes_bit_identical(index, chunked)
+
+
+def test_chunked_build_counts_tokens_itself(corpus, index):
+    """n_tokens/dim discovery pass yields the same index."""
+    chunked = build_index_chunked(
+        array_chunks(corpus.emb, corpus.token_doc_ids, 333),
+        corpus.n_docs,
+        BUILD_CFG,
+        n_tokens=None,
+        dim=None,
+    )
+    assert_indexes_bit_identical(index, chunked)
+
+
+def test_store_build_writes_mmap_backed_index(corpus, index, tmp_path):
+    """build_index_to_store memmap-writes the O(N) arrays and the reload
+    is bit-identical to the in-memory build."""
+    out = str(tmp_path / "idx")
+    stored = build_index_to_store(
+        array_chunks(corpus.emb, corpus.token_doc_ids, 256),
+        out, corpus.n_docs, BUILD_CFG,
+        n_tokens=corpus.n_tokens, dim=128,
+    )
+    assert isinstance(stored.packed_codes, np.memmap)
+    assert_indexes_bit_identical(index, stored)
+
+
+@pytest.mark.slow_build
+def test_out_of_core_build_large(tmp_path):
+    """Larger corpus through small chunks — the tier-2 soak for the
+    out-of-core path (deselected from tier-1; pass --slow-build)."""
+    corpus = make_corpus(n_docs=2500, mean_doc_len=20, seed=5)
+    cfg = IndexBuildConfig(n_centroids=128, nbits=4, kmeans_iters=3)
+    ref = build_index(corpus.emb, corpus.token_doc_ids, corpus.n_docs, cfg)
+    stored = build_index_to_store(
+        array_chunks(corpus.emb, corpus.token_doc_ids, 2048),
+        str(tmp_path / "big"), corpus.n_docs, cfg,
+    )
+    assert_indexes_bit_identical(ref, stored)
+
+
+# ---- save -> load ---------------------------------------------------------
+
+
+def test_save_load_mmap_provenance(index, tmp_path):
+    """load_index must return memory-mapped views, not heap copies."""
+    path = str(tmp_path / "idx")
+    save_index(index, path, build_config=BUILD_CFG)
+    loaded = load_index(path)
+    for name in ARRAY_FIELDS:
+        arr = getattr(loaded, name)
+        assert isinstance(arr, np.memmap), f"{name} is {type(arr).__name__}"
+        assert not arr.flags.writeable or arr.mode == "r"
+    # mmap=False is the explicit copy path.
+    copied = load_index(path, mmap=False)
+    assert not isinstance(copied.packed_codes, np.memmap)
+    assert_indexes_bit_identical(loaded, copied)
+
+
+def test_save_load_stats_and_search_parity(corpus, index, tmp_path):
+    path = str(tmp_path / "idx")
+    save_index(index, path, build_config=BUILD_CFG)
+    loaded = load_index(path)
+    assert index_stats(loaded) == index_stats(index)
+
+    q, qmask, _ = make_queries(corpus, n_queries=4, seed=18)
+    plan_mem = Retriever.from_index(index).plan(SEARCH_CFG)
+    plan_mmap = Retriever.from_store(path).plan(SEARCH_CFG)
+    assert plan_mem.describe() == plan_mmap.describe()
+    for i in range(4):
+        a = plan_mem.retrieve(q[i], qmask[i])
+        b = plan_mmap.retrieve(q[i], qmask[i])
+        np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+        np.testing.assert_array_equal(np.asarray(a.scores), np.asarray(b.scores))
+    ab = plan_mem.retrieve_batch(q, qmask)
+    bb = plan_mmap.retrieve_batch(q, qmask)
+    np.testing.assert_array_equal(np.asarray(ab.doc_ids), np.asarray(bb.doc_ids))
+
+
+def test_manifest_header_and_guards(index, tmp_path):
+    path = str(tmp_path / "idx")
+    save_index(index, path, build_config=BUILD_CFG)
+    manifest = read_manifest(path)
+    assert manifest["format"] == "warp-store"
+    assert manifest["kind"] == "warp_index"
+    assert manifest["build_config"]["nbits"] == BUILD_CFG.nbits
+    for entry in manifest["arrays"].values():
+        assert set(entry) >= {"file", "dtype", "shape"}
+    # Refuses to clobber without overwrite=True.
+    with pytest.raises(FileExistsError):
+        save_index(index, path)
+    save_index(index, path, overwrite=True)
+    # Future format versions are rejected, not misread.
+    import json
+
+    manifest["version"] = 99
+    with open(os.path.join(path, "MANIFEST.json"), "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(ValueError, match="version"):
+        load_index(path)
+
+
+def test_inspect_reports_measured_component_bytes(index, tmp_path):
+    path = str(tmp_path / "idx")
+    save_index(index, path)
+    info = inspect_index(path)
+    comp = info["components_bytes"]
+    assert comp["packed_codes"] == index.n_tokens * (128 * 4 // 8)
+    assert comp["doc_ids"] == index.n_tokens * 4
+    assert comp["centroids"] == index.n_centroids * 128 * 4
+    on_disk = sum(
+        os.path.getsize(os.path.join(path, "arrays", f))
+        for f in os.listdir(os.path.join(path, "arrays"))
+    )
+    assert info["total_bytes"] == on_disk
+
+
+# ---- sharded path ---------------------------------------------------------
+
+SHARDED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import sys, tempfile
+import numpy as np
+from repro.core import (IndexBuildConfig, WarpSearchConfig, Retriever,
+                        build_sharded_index, sharded_search)
+from repro.core.distributed import ShardedWarpIndex
+from repro.core.types import WarpIndex
+from repro.data import make_corpus, make_queries
+from repro.store import load_index, save_index
+
+corpus = make_corpus(n_docs=180, mean_doc_len=12, seed=2)
+sidx = build_sharded_index(corpus.emb, corpus.token_doc_ids, corpus.n_docs, 2,
+                           IndexBuildConfig(n_centroids=16, nbits=4, kmeans_iters=2))
+path = tempfile.mkdtemp() + "/sidx"
+save_index(sidx, path)
+loaded = load_index(path)
+assert isinstance(loaded, ShardedWarpIndex) and loaded.n_shards == 2
+assert isinstance(loaded.packed_codes, np.memmap)
+assert loaded.n_tokens_total == sidx.n_tokens_total
+
+cfg = WarpSearchConfig(nprobe=8, k=10, t_prime=400)
+q, qmask, _ = make_queries(corpus, n_queries=3, seed=3)
+plan_a = Retriever.from_index(sidx).plan(cfg)
+plan_b = Retriever.from_store(path).plan(cfg)
+for i in range(3):
+    a, b = plan_a.retrieve(q[i], qmask[i]), plan_b.retrieve(q[i], qmask[i])
+    np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+    np.testing.assert_array_equal(np.asarray(a.scores), np.asarray(b.scores))
+
+# Per-shard directories reconstruct standalone WarpIndex views over the
+# SAME binaries (byte offsets, no duplication).
+for s in range(2):
+    sh = load_index(os.path.join(path, f"shard_{s:05d}"))
+    assert isinstance(sh, WarpIndex) and isinstance(sh.packed_codes, np.memmap)
+    np.testing.assert_array_equal(np.asarray(sh.packed_codes),
+                                  np.asarray(sidx.packed_codes)[s])
+    np.testing.assert_array_equal(np.asarray(sh.token_doc_ids),
+                                  np.asarray(sidx.token_doc_ids)[s])
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_save_load_two_shard_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run(
+        [sys.executable, "-c", SHARDED_SCRIPT],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout
+
+
+def test_chunked_build_rejects_overstated_n_tokens(corpus):
+    """An n_tokens larger than the stream must fail fast, not train
+    k-means on uninitialized sample rows."""
+    with pytest.raises(ValueError, match="yielded"):
+        build_index_chunked(
+            array_chunks(corpus.emb, corpus.token_doc_ids, 512),
+            corpus.n_docs,
+            BUILD_CFG,
+            n_tokens=corpus.n_tokens + 100,
+            dim=128,
+        )
+
+
+def test_interrupted_compact_swap_recovers(corpus, index, tmp_path):
+    """Crash window between the two swap renames: the next load finishes
+    the swap when the new base is complete, rolls back when it is not."""
+    from repro.store import add_documents, recover_interrupted_compact
+    from repro.store.format import COMPACT_OLD_SUFFIX, COMPACT_TMP_SUFFIX
+
+    extra = make_corpus(n_docs=20, mean_doc_len=10, seed=99)
+
+    # Case 1: complete .compact-tmp -> promoted.
+    path = str(tmp_path / "idx1")
+    save_index(index, path, build_config=BUILD_CFG)
+    add_documents(path, extra.emb, extra.token_doc_ids, extra.n_docs)
+    import shutil as _sh
+
+    _sh.copytree(path, path + COMPACT_TMP_SUFFIX)  # stand-in "new base"
+    os.rename(path, path + COMPACT_OLD_SUFFIX)  # crash mid-swap
+    loaded = load_index(path)  # auto-recovers
+    assert loaded.n_docs == index.n_docs + extra.n_docs
+    assert not os.path.exists(path + COMPACT_TMP_SUFFIX)
+    assert not os.path.exists(path + COMPACT_OLD_SUFFIX)
+
+    # Case 2: tmp has no manifest (incomplete write) -> rolled back.
+    path2 = str(tmp_path / "idx2")
+    save_index(index, path2, build_config=BUILD_CFG)
+    os.makedirs(path2 + COMPACT_TMP_SUFFIX)  # empty: manifest never landed
+    os.rename(path2, path2 + COMPACT_OLD_SUFFIX)
+    recover_interrupted_compact(path2)
+    assert load_index(path2).n_docs == index.n_docs
+    assert not os.path.exists(path2 + COMPACT_TMP_SUFFIX)
+
+
+def test_add_documents_rejects_per_shard_view(tmp_path):
+    """Per-shard views carry encode-only (zeroed) codec cutoffs; quantizing
+    a delta against them must be refused, not silently corrupted."""
+    from repro.core import build_sharded_index
+    from repro.store import add_documents
+
+    c = make_corpus(n_docs=60, mean_doc_len=8, seed=9)
+    sidx = build_sharded_index(
+        c.emb, c.token_doc_ids, c.n_docs, 2,
+        IndexBuildConfig(n_centroids=8, nbits=4, kmeans_iters=1),
+    )
+    path = str(tmp_path / "sidx")
+    save_index(sidx, path)
+    extra = make_corpus(n_docs=10, mean_doc_len=8, seed=10)
+    with pytest.raises(NotImplementedError, match="per-shard"):
+        add_documents(
+            os.path.join(path, "shard_00000"),
+            extra.emb, extra.token_doc_ids, extra.n_docs,
+        )
+    with pytest.raises(NotImplementedError, match="single-device"):
+        add_documents(path, extra.emb, extra.token_doc_ids, extra.n_docs)
+
+
+def test_chunked_build_rejects_misaligned_doc_ids(corpus):
+    """Alignment is validated even when n_tokens/dim are caller-supplied
+    (the CLI path, which skips the counting pass)."""
+    with pytest.raises(ValueError, match="align"):
+        build_index_chunked(
+            array_chunks(corpus.emb, corpus.token_doc_ids[:-5], 512),
+            corpus.n_docs,
+            BUILD_CFG,
+            n_tokens=corpus.n_tokens,
+            dim=128,
+        )
+
+
+def test_segment_dir_load_raises_clear_error(corpus, index, tmp_path):
+    from repro.store import add_documents
+
+    path = str(tmp_path / "idx")
+    save_index(index, path)
+    extra = make_corpus(n_docs=10, mean_doc_len=8, seed=3)
+    seg_dir = add_documents(path, extra.emb, extra.token_doc_ids, extra.n_docs)
+    with pytest.raises(ValueError, match="delta segment"):
+        load_index(seg_dir)
+
+
+def test_compact_lock_blocks_concurrent_writer(corpus, index, tmp_path):
+    """A live lockfile rejects a second compact and shields the swap from
+    reader-side recovery; a stale lock (dead pid) is taken over."""
+    from repro.store import add_documents, compact
+    from repro.store.format import compact_lock_path
+
+    path = str(tmp_path / "idx")
+    save_index(index, path)
+    extra = make_corpus(n_docs=10, mean_doc_len=8, seed=3)
+    add_documents(path, extra.emb, extra.token_doc_ids, extra.n_docs)
+
+    lock = compact_lock_path(path)
+    with open(lock, "w") as f:
+        f.write(str(os.getpid()))  # "live writer" (this process)
+    with pytest.raises(RuntimeError, match="already running"):
+        compact(path)
+    with open(lock, "w") as f:
+        f.write("999999999")  # stale: no such pid
+    compact(path)  # takes over the stale lock
+    assert not os.path.exists(lock)
+    assert load_index(path).n_docs == index.n_docs + extra.n_docs
