@@ -4,6 +4,13 @@ baselines, across three dataset tiers.
 
 Stages (paper Fig. 4): query encoding | candidate generation (WARP_SELECT)
 | decompression (implicit, selective-sum) | scoring (two-stage reduction).
+
+The decompression and scoring rows carry ``derived`` occupancy fields —
+``real_slots`` (true candidates in the probed clusters), ``padded_slots``
+(what the layout pays for), and ``sort_n`` (the reduction's lax.sort
+width) — so the ragged layout's win (compute ∝ real candidates instead of
+``nprobe × cap``) is visible in the BENCH_latency.json trajectory, not
+just in wall-clock.
 """
 
 from __future__ import annotations
@@ -13,10 +20,16 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import PLANS, candidate_traffic_bytes, emit, get_setup, time_fn
 from repro.core import Retriever, WarpSearchConfig, plaid_style_search, xtr_reference
-from repro.core.engine import gather_candidates, gather_doc_ids, resolve_config
+from repro.core.engine import (
+    gather_candidates,
+    gather_doc_ids,
+    ragged_flat_candidates,
+    resolve_config,
+)
 from repro.core.reduction import two_stage_reduce
 from repro.core.warpselect import warp_select
 from repro.kernels import ops
@@ -27,6 +40,9 @@ _ENC = EncoderConfig(n_layers=4, d_model=256, n_heads=4, d_ff=512, vocab=32128)
 
 def _stage_fns(index, config):
     config = resolve_config(index, config)
+    config_ragged = resolve_config(
+        index, dataclasses.replace(config, layout="ragged")
+    )
 
     @jax.jit
     def stage_select(q, qmask):
@@ -63,7 +79,20 @@ def _stage_fns(index, config):
         doc_ids, valid = gather_doc_ids(index, probe_cids)
         return scores, doc_ids, valid
 
-    @functools.partial(jax.jit, static_argnames=())
+    @jax.jit
+    def stage_decompress_ragged(q, probe_scores, probe_cids):
+        # Worklist build + flat fused scoring in one stage: the worklist is
+        # part of the ragged layout's cost and is timed with it.
+        return ragged_flat_candidates(
+            index, q, probe_scores, probe_cids,
+            dataclasses.replace(
+                config_ragged,
+                gather="fused",
+                executor="kernel" if ops.on_tpu() else "reference",
+            ),
+        )
+
+    @jax.jit
     def stage_reduce(scores, doc_ids, valid, mse, qmask):
         qm, p, cap = scores.shape
         valid = valid & qmask[:, None, None]
@@ -75,7 +104,23 @@ def _stage_fns(index, config):
             valid.reshape(-1), mse, q_max=qm, k=config.k,
         )
 
-    return stage_select, stage_decompress, stage_decompress_fused, stage_reduce
+    @functools.partial(jax.jit, static_argnames=("q_max",))
+    def stage_reduce_ragged(scores, doc_ids, qtok, valid, mse, qmask, *, q_max):
+        valid = valid & qmask[qtok]
+        return two_stage_reduce(
+            doc_ids, qtok, scores, valid, mse, q_max=q_max, k=config.k,
+            pad_to_k=True,
+        )
+
+    return (
+        stage_select,
+        stage_decompress,
+        stage_decompress_fused,
+        stage_decompress_ragged,
+        stage_reduce,
+        stage_reduce_ragged,
+        config_ragged,
+    )
 
 
 def run() -> None:
@@ -83,50 +128,115 @@ def run() -> None:
     enc = jax.jit(lambda t, m: TokenEncoder.encode(enc_params, _ENC, t, m))
     tok = jnp.zeros((1, 32), jnp.int32)
     tok_mask = jnp.ones((1, 32), bool)
-    t_enc = time_fn(enc, tok, tok_mask)
 
     for tier in ("nfcorpus_like", "lifestyle_like", "pooled_like"):
         corpus, index, q, qmask, rel = get_setup(tier)
         cfg = WarpSearchConfig(nprobe=32, k=100, t_prime=2000, k_impute=64)
         q0, m0 = jnp.asarray(q[0]), jnp.asarray(qmask[0])
+        qm = q0.shape[0]
+
+        # Measured per tier (the encoder is tier-independent, but re-timing
+        # it per tier records the steady-state dispatch cost instead of
+        # re-emitting one stale number three times).
+        t_enc = time_fn(enc, tok, tok_mask)
 
         # --- stage breakdown (Fig. 9) ---
-        s_sel, s_dec, s_dec_fused, s_red = _stage_fns(index, cfg)
+        (s_sel, s_dec, s_dec_fused, s_dec_ragged, s_red, s_red_ragged,
+         cfg_ragged) = _stage_fns(index, cfg)
         sel = s_sel(q0, m0)
         t_sel = time_fn(s_sel, q0, m0)
         dec = s_dec(q0, sel.probe_scores, sel.probe_cids)
         t_dec = time_fn(s_dec, q0, sel.probe_scores, sel.probe_cids)
         t_dec_fused = time_fn(s_dec_fused, q0, sel.probe_scores, sel.probe_cids)
+        rag = s_dec_ragged(q0, sel.probe_scores, sel.probe_cids)
+        t_dec_ragged = time_fn(
+            s_dec_ragged, q0, sel.probe_scores, sel.probe_cids
+        )
         t_red = time_fn(s_red, dec[0], dec[1], dec[2], sel.mse, m0)
+        t_red_ragged = time_fn(
+            s_red_ragged, rag[0], rag[1], rag[2], rag[3], sel.mse, m0, q_max=qm
+        )
+
+        # Slot occupancy: real candidates in the probed clusters vs what
+        # each layout pays for (= the reduction's sort width).
+        real_slots = int(
+            np.asarray(index.cluster_sizes)[np.asarray(sel.probe_cids)].sum()
+        )
+        dense_slots = qm * cfg.nprobe * index.cap
+        tile = ops.resolve_tile_c(index.cap, cfg_ragged.tile_c, layout="ragged")
+        ragged_slots = qm * cfg_ragged.worklist_tiles * tile
+
         emit(f"latency/{tier}/query_encoding", t_enc, "stage")
         emit(f"latency/{tier}/candidate_generation", t_sel, "stage=warpselect")
-        emit(f"latency/{tier}/decompression", t_dec, "stage=implicit_two_step")
-        b_two, b_fused = candidate_traffic_bytes(index, q0.shape[0], cfg.nprobe)
+        emit(
+            f"latency/{tier}/decompression",
+            t_dec,
+            f"stage=implicit_two_step;real_slots={real_slots};"
+            f"padded_slots={dense_slots};"
+            f"occupancy={real_slots / dense_slots:.3f};sort_n={dense_slots}",
+        )
+        b_two, b_fused = candidate_traffic_bytes(index, qm, cfg.nprobe)
         impl = "kernel" if ops.on_tpu() else "jnp_ref"
         emit(
             f"latency/{tier}/decompression_fused",
             t_dec_fused,
             f"stage=fused_gather;impl={impl};fused_bytes={b_fused};"
             f"two_step_bytes={b_two};bytes_ratio={b_two / max(1, b_fused):.2f}x;"
+            f"real_slots={real_slots};padded_slots={dense_slots};"
             f"speedup_vs_two_step={t_dec / max(t_dec_fused, 1e-12):.2f}x",
         )
-        emit(f"latency/{tier}/scoring", t_red, "stage=two_stage_reduce")
+        emit(
+            f"latency/{tier}/decompression_ragged",
+            t_dec_ragged,
+            f"stage=ragged_worklist;impl={impl};tile_c={tile};"
+            f"worklist_tiles_total={qm * cfg_ragged.worklist_tiles};"
+            f"real_slots={real_slots};padded_slots={ragged_slots};"
+            f"occupancy={real_slots / ragged_slots:.3f};"
+            f"slots_vs_dense={ragged_slots / dense_slots:.3f}x;"
+            f"speedup_vs_two_step={t_dec / max(t_dec_ragged, 1e-12):.2f}x",
+        )
+        emit(
+            f"latency/{tier}/scoring",
+            t_red,
+            f"stage=two_stage_reduce;sort_n={dense_slots}",
+        )
+        emit(
+            f"latency/{tier}/scoring_ragged",
+            t_red_ragged,
+            f"stage=two_stage_reduce;sort_n={ragged_slots};"
+            f"sort_n_vs_dense={ragged_slots / dense_slots:.3f}x;"
+            f"speedup_vs_dense_sort={t_red / max(t_red_ragged, 1e-12):.2f}x",
+        )
 
         # --- end-to-end engines (Fig. 1 / Tables 2-3) ---
         # Dispatch through the planned pipeline; the resolved plan (incl.
-        # concretized executor/t'/k_impute) is snapshotted next to the
-        # numbers so the perf record names what actually ran.
+        # concretized executor/t'/k_impute/layout) is snapshotted next to
+        # the numbers so the perf record names what actually ran.
         retriever = Retriever.from_index(index)
         plan = retriever.plan(cfg)
         plan_fused = retriever.plan(
             dataclasses.replace(cfg, gather="fused", executor="auto")
         )
-        PLANS[tier] = {"warp_e2e": plan.describe(), "warp_e2e_fused": plan_fused.describe()}
+        plan_ragged = retriever.plan(
+            dataclasses.replace(cfg, gather="fused", layout="ragged")
+        )
+        PLANS[tier] = {
+            "warp_e2e": plan.describe(),
+            "warp_e2e_fused": plan_fused.describe(),
+            "warp_e2e_ragged": plan_ragged.describe(),
+        }
         f_warp = lambda: plan.retrieve(q0, m0)
         t_warp = time_fn(lambda: f_warp())
         t_warp_fused = time_fn(lambda: plan_fused.retrieve(q0, m0))
+        t_warp_ragged = time_fn(lambda: plan_ragged.retrieve(q0, m0))
         emit(f"latency/{tier}/warp_e2e_fused", t_enc + t_warp_fused,
              f"retrieval_only={t_warp_fused * 1e6:.1f}")
+        emit(
+            f"latency/{tier}/warp_e2e_ragged",
+            t_enc + t_warp_ragged,
+            f"retrieval_only={t_warp_ragged * 1e6:.1f};"
+            f"speedup_vs_dense_fused={t_warp_fused / max(t_warp_ragged, 1e-12):.2f}x",
+        )
         f_plaid = lambda: plaid_style_search(index, q0, m0, cfg)
         t_plaid = time_fn(lambda: f_plaid())
         emb = jnp.asarray(corpus.emb)

@@ -1,0 +1,61 @@
+"""Ragged-vs-dense layout parity smoke (layout-drift guard).
+
+Not a timing benchmark: a small-index correctness gate that runs everywhere
+(no TPU needed — kernels go through interpret/reference paths) and fails
+loudly if the two layouts ever return different top-k doc ids, or if the
+ragged worklist stops sorting strictly fewer reduction entries than the
+dense ``[Q, nprobe, cap]`` grid. Wired into the default suite list and
+into tier-1 (tests/test_ragged_layout.py), so layout drift is caught
+without TPU hardware.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, get_setup
+from repro.core import Retriever, WarpSearchConfig
+
+
+def run() -> None:
+    corpus, index, q, qmask, rel = get_setup("nfcorpus_like")
+    retriever = Retriever.from_index(index)
+    cfg = WarpSearchConfig(nprobe=32, k=100, t_prime=2000, k_impute=64)
+    qm = q.shape[1]
+
+    for gather in ("materialize", "fused"):
+        dense = retriever.plan(dataclasses.replace(cfg, gather=gather))
+        ragged = retriever.plan(
+            dataclasses.replace(cfg, gather=gather, layout="ragged")
+        )
+        sort_n_dense = qm * dense.describe()["slots_per_qtoken"]
+        sort_n_ragged = qm * ragged.describe()["slots_per_qtoken"]
+        assert sort_n_ragged < sort_n_dense, (
+            f"ragged worklist ({sort_n_ragged} sort entries) must undercut "
+            f"the dense grid ({sort_n_dense}) on the smoke index"
+        )
+        for i in range(4):
+            a = dense.retrieve(q[i], qmask[i])
+            b = ragged.retrieve(q[i], qmask[i])
+            np.testing.assert_array_equal(
+                np.asarray(a.doc_ids), np.asarray(b.doc_ids),
+                err_msg=f"layout drift: gather={gather}, query {i}",
+            )
+            np.testing.assert_allclose(
+                np.asarray(a.scores), np.asarray(b.scores),
+                rtol=1e-4, atol=1e-4,
+            )
+        ab = dense.retrieve_batch(jnp.asarray(q[:2]), jnp.asarray(qmask[:2]))
+        bb = ragged.retrieve_batch(jnp.asarray(q[:2]), jnp.asarray(qmask[:2]))
+        np.testing.assert_array_equal(
+            np.asarray(ab.doc_ids), np.asarray(bb.doc_ids)
+        )
+        emit(
+            f"parity/ragged_vs_dense/{gather}",
+            0.0,
+            f"ok;sort_n_ragged={sort_n_ragged};sort_n_dense={sort_n_dense};"
+            f"ratio={sort_n_ragged / sort_n_dense:.3f}",
+        )

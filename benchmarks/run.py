@@ -14,7 +14,7 @@ import json
 import os
 import time
 
-SUITES = ["index_size", "quality", "latency", "scaling", "roofline"]
+SUITES = ["parity", "index_size", "quality", "latency", "scaling", "roofline"]
 
 SNAPSHOT_PATH = os.path.join(
     os.path.dirname(__file__), "..", "BENCH_latency.json"

@@ -35,7 +35,11 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map as _shard_map
 
 from repro.core import index as index_mod
-from repro.core.engine import score_and_reduce, score_probed_clusters  # noqa: F401  (re-export for stage-level callers)
+from repro.core.engine import (  # noqa: F401  (score_* re-exported for stage-level callers)
+    resolve_layout_fields,
+    score_and_reduce,
+    score_probed_clusters,
+)
 from repro.core.reduction import TopKResult
 from repro.core.types import IndexBuildConfig, WarpIndex, WarpSearchConfig
 from repro.core.warpselect import impute_mse, warp_select
@@ -271,8 +275,11 @@ def make_sharded_search_fn(
         mse = impute_mse(s_all, z_all, cfg.t_prime, qmask)
 
         # ---- stages 2+3: decompress + reduce with the global m ----
+        # (probe_sizes rides along so layout="ragged" builds its per-shard
+        # tile worklist without re-gathering cluster sizes.)
         local_top = score_and_reduce(
-            local, q, qmask, sel.probe_scores, sel.probe_cids, mse, cfg
+            local, q, qmask, sel.probe_scores, sel.probe_cids, mse, cfg,
+            probe_sizes=sel.probe_sizes,
         )
         # ---- global top-k merge (O(k * devices) traffic) ----
         gdocs = jnp.where(
@@ -304,13 +311,22 @@ def resolve_sharded_config(
 ) -> WarpSearchConfig:
     """Sharded analogue of ``engine.resolve_config``: t' from the TRUE total
     token count (padding tokens are not retrievable mass), k_impute from the
-    per-shard centroid count, executor concretized against the backend."""
-    return dataclasses.replace(
+    per-shard centroid count, executor concretized against the backend, and
+    the ragged worklist bound from the WORST shard's cluster-size stats (the
+    shard_map body is one program, so every shard shares the static bound).
+    """
+    if sidx.resolved_n_tokens() == 0:
+        raise ValueError(
+            "sharded index has n_tokens == 0 — nothing to retrieve. Build "
+            "or load a non-empty index before planning a search."
+        )
+    config = dataclasses.replace(
         config,
         t_prime=config.resolved_t_prime(sidx.resolved_n_tokens()),
         k_impute=config.resolved_k_impute(sidx.n_centroids),
         executor=config.resolved_executor(ops.on_tpu()),
     )
+    return resolve_layout_fields(config, sidx.cluster_sizes, sidx.cap)
 
 
 def sharded_search(

@@ -5,9 +5,15 @@ similarity) -> static-capacity CSR gather of packed codes -> implicit
 decompression selective-sum (Pallas kernel or jnp ref) -> two-stage
 reduction -> top-k.
 
-All shapes are static: the candidate set is [Q, nprobe, cap] where ``cap``
-is the index's max cluster size, masked by true cluster sizes. This is the
-jit/TPU replacement for the paper's pointer-chasing inverted lists.
+All shapes are static. With ``layout="dense"`` the candidate set is
+[Q, nprobe, cap] where ``cap`` is the index's max cluster size, masked by
+true cluster sizes — the jit/TPU replacement for the paper's
+pointer-chasing inverted lists. With ``layout="ragged"`` the probes are
+flattened into a statically-bounded tile worklist (``core.worklist``) and
+every downstream stage — gather, selective sum, the reduction's sort —
+runs over flat ``[n_slots]`` arrays sized by the real candidates instead
+of ``nprobe * cap`` padding (closer to the paper's per-stride iteration,
+and the faster layout under cluster-size skew).
 
 The exported stage functions (``warp_select`` -> ``score_probed_clusters``
 -> ``score_and_reduce``/``two_stage_reduce``) are the single source of
@@ -27,6 +33,11 @@ import jax.numpy as jnp
 from repro.core.reduction import TopKResult, two_stage_reduce
 from repro.core.types import WarpIndex, WarpSearchConfig
 from repro.core.warpselect import warp_select
+from repro.core.worklist import (
+    build_tile_worklist,
+    worklist_bound,
+    worklist_slot_positions,
+)
 from repro.kernels import ops
 
 __all__ = [
@@ -35,9 +46,35 @@ __all__ = [
     "gather_candidates",
     "gather_doc_ids",
     "resolve_config",
+    "resolve_layout_fields",
     "score_probed_clusters",
+    "ragged_flat_candidates",
     "score_and_reduce",
 ]
+
+
+def resolve_layout_fields(config: WarpSearchConfig, cluster_sizes, cap: int) -> WarpSearchConfig:
+    """Concretize ``layout="auto"`` and the ragged worklist bound.
+
+    ``cluster_sizes`` may be [C] or a sharded [S, C] stack (the bound
+    covers every shard). "auto" picks by measured padding waste: ragged
+    wins when the worklist slot bound (sum of the nprobe largest clusters'
+    tile counts, times tile_c) undercuts the dense ``nprobe * cap`` slots
+    per query token. Shared by the local and sharded resolvers so the two
+    paths cannot drift.
+    """
+    if config.layout == "dense":
+        if config.worklist_tiles is None:
+            return config
+        return dataclasses.replace(config, worklist_tiles=None)
+    tile = ops.resolve_tile_c(cap, config.tile_c, layout="ragged")
+    bound = worklist_bound(cluster_sizes, config.nprobe, tile)
+    layout = config.layout
+    if layout == "auto":
+        layout = "ragged" if bound * tile < config.nprobe * cap else "dense"
+    if layout == "dense":
+        return dataclasses.replace(config, layout="dense", worklist_tiles=None)
+    return dataclasses.replace(config, layout="ragged", worklist_tiles=bound)
 
 
 def resolve_config(index: WarpIndex, config: WarpSearchConfig) -> WarpSearchConfig:
@@ -45,26 +82,43 @@ def resolve_config(index: WarpIndex, config: WarpSearchConfig) -> WarpSearchConf
 
     t' and k_impute become concrete ints derived from the index geometry;
     executor="auto" is concretized against the active backend (Pallas
-    kernels on TPU, jnp references elsewhere) so jit cache keys — the
-    config is a static argument — name the actual strategy that ran.
+    kernels on TPU, jnp references elsewhere) and layout="auto" against the
+    index's cluster-size statistics, so jit cache keys — the config is a
+    static argument — name the actual strategy that ran.
     """
-    return dataclasses.replace(
+    if index.n_tokens == 0:
+        raise ValueError(
+            "index has n_tokens == 0 — nothing to retrieve, and the "
+            "static-capacity CSR gather has no rows to clamp into. Build "
+            "or load a non-empty index before planning a search."
+        )
+    config = dataclasses.replace(
         config,
         t_prime=config.resolved_t_prime(index.n_tokens),
         k_impute=config.resolved_k_impute(index.n_centroids),
         executor=config.resolved_executor(ops.on_tpu()),
     )
+    if config.layout == "dense" and config.worklist_tiles is None:
+        # Skip the host-side cluster-size stats (and stay agnostic to
+        # index kinds without a flat cluster_sizes array, e.g. segmented).
+        return config
+    return resolve_layout_fields(config, index.cluster_sizes, index.cap)
 
 
 def _csr_positions(index: WarpIndex, probe_cids: jax.Array):
     """Static-capacity CSR slot positions: probe_cids i32[..., P] ->
-    (pos i32[..., P, cap] clamped into [0, n_tokens), valid bool[..., P, cap])."""
+    (pos i32[..., P, cap] clamped into [0, n_tokens), valid bool[..., P, cap]).
+
+    Clamp floor 0: on an empty index ``n_tokens - 1`` is -1, and a bare
+    ``minimum`` would turn every slot into a wraparound gather. Plan time
+    rejects n_tokens == 0 with a directed error; the clamp keeps the stage
+    itself well-defined for callers that bypass planning."""
     cap = index.cap
     starts = index.cluster_offsets[probe_cids]
     sizes = index.cluster_sizes[probe_cids]
     pos = starts[..., None] + jnp.arange(cap, dtype=jnp.int32)
     valid = jnp.arange(cap, dtype=jnp.int32) < sizes[..., None]
-    return jnp.minimum(pos, index.n_tokens - 1), valid
+    return jnp.clip(pos, 0, max(0, index.n_tokens - 1)), valid
 
 
 def gather_candidates(index: WarpIndex, probe_cids: jax.Array):
@@ -111,6 +165,7 @@ def _fused_score_probed(
             cap=index.cap,
             n_tokens=index.n_tokens,
             use_kernel=config.wants_kernel,
+            tile_c=config.tile_c,
         )[0]
         doc_ids, valid = gather_doc_ids(index, cids_i)
         return cand, doc_ids, valid
@@ -134,6 +189,7 @@ def _fused_score_probed(
         cap=index.cap,
         n_tokens=index.n_tokens,
         use_kernel=config.wants_kernel,
+        tile_c=config.tile_c,
     )
     doc_ids, valid = gather_doc_ids(index, probe_cids)
     return cand, doc_ids, valid
@@ -194,6 +250,94 @@ def score_probed_clusters(
     return res_scores + probe_scores[..., None], doc_ids, valid
 
 
+def ragged_flat_candidates(
+    index: WarpIndex,
+    q: jax.Array,
+    probe_scores: jax.Array,
+    probe_cids: jax.Array,
+    config: WarpSearchConfig,
+    probe_sizes: jax.Array | None = None,
+):
+    """Flat worklist-ordered candidates (layout="ragged", paper §4.4).
+
+    Builds the tile worklist from the selected probes (``core.worklist``)
+    and scores it in one pass — fused kernel or flat gather + reference —
+    returning flat ``[n_slots]`` arrays (scores, doc_ids, qtok, valid)
+    with ``n_slots = Q * worklist_tiles * tile_c``, worklist-padded slots
+    invalid. No ``[Q, nprobe, cap]`` tensor exists on this path, and the
+    downstream sort N shrinks from ``Q * nprobe * cap`` to the worklist
+    bound (2–4x fewer entries at typical cluster-size skew).
+
+    ``probe_sizes`` is the WARP_SELECT probe metadata
+    (``WarpSelectOut.probe_sizes``); omitted, the sizes are re-gathered
+    from the index.
+    """
+    tile = ops.resolve_tile_c(index.cap, config.tile_c, layout="ragged")
+    bound = config.worklist_tiles
+    if bound is None:
+        raise ValueError(
+            "layout='ragged' needs a resolved worklist bound "
+            "(worklist_tiles); run the config through engine.resolve_config "
+            "or Retriever.plan first"
+        )
+    starts = index.cluster_offsets[probe_cids].astype(jnp.int32)
+    sizes = (
+        probe_sizes
+        if probe_sizes is not None
+        else index.cluster_sizes[probe_cids]
+    ).astype(jnp.int32)
+
+    def one(starts_i, sizes_i, pscores_i, v_i):
+        # [n, P] probes -> flat (scores, doc_ids, qtok, valid), n*bound*tile.
+        wl = build_tile_worklist(
+            starts_i, sizes_i, pscores_i, tile_c=tile, tiles_per_qtoken=bound
+        )
+        pos, slot_valid = worklist_slot_positions(
+            wl, tile_c=tile, n_tokens=index.n_tokens
+        )
+        qtok_slot = jnp.repeat(wl.qtok, tile)
+        if config.gather == "fused":
+            scores = ops.ragged_fused_gather_selective_sum(
+                index.packed_codes,
+                wl.row0,
+                wl.nvalid,
+                wl.qtok,
+                wl.pscore,
+                v_i,
+                nbits=index.nbits,
+                dim=index.dim,
+                tile_c=tile,
+                n_tokens=index.n_tokens,
+                use_kernel=config.wants_kernel,
+            )
+        else:
+            packed = index.packed_codes[pos]  # flat [n_slots, PB] gather
+            res = ops.ragged_selective_sum(
+                packed, qtok_slot, v_i,
+                nbits=index.nbits, dim=index.dim, impl=config.sum_impl,
+            )
+            scores = jnp.where(slot_valid, res + jnp.repeat(wl.pscore, tile), 0.0)
+        return scores, index.token_doc_ids[pos], qtok_slot, slot_valid
+
+    if config.memory == "scan_qtokens":
+        qm = q.shape[0]
+
+        def step(carry, x):
+            q_i, st_i, sz_i, ps_i = x
+            v_i = q_i[None, :, None] * index.bucket_weights[None, None, :]
+            s, d, _, val = one(st_i[None], sz_i[None], ps_i[None], v_i)
+            return carry, (s, d, val)
+
+        _, (s, d, val) = jax.lax.scan(
+            step, None, (q, starts, sizes, probe_scores)
+        )
+        qtok = jnp.repeat(jnp.arange(qm, dtype=jnp.int32), bound * tile)
+        return s.reshape(-1), d.reshape(-1), qtok, val.reshape(-1)
+
+    v = q[:, :, None] * index.bucket_weights[None, None, :]  # [Q, D, 2^b]
+    return one(starts, sizes, probe_scores, v)
+
+
 def score_and_reduce(
     index: WarpIndex,
     q: jax.Array,
@@ -202,6 +346,8 @@ def score_and_reduce(
     probe_cids: jax.Array,
     mse: jax.Array,
     config: WarpSearchConfig,
+    *,
+    probe_sizes: jax.Array | None = None,
 ) -> TopKResult:
     """Stages 2+3 of the pipeline: implicit decompression over the probe
     set, then the two-stage reduction to top-k.
@@ -210,8 +356,33 @@ def score_and_reduce(
     imputed by ``warp_select`` on the single-device path, globally merged
     across shards on the distributed path. ``index.n_docs`` (shard-local on
     the distributed path) arms the reduction's int32-overflow fallback.
+
+    With ``layout="ragged"`` the candidates flow through the flat tile
+    worklist (``ragged_flat_candidates``) straight into the reduction — no
+    [Q, nprobe, cap] tensor, and a sort over the worklist bound instead of
+    the padded capacity. The worklist may bound fewer than ``k`` slots on
+    skew-free tiny indexes, so the reduction pads to k (all-invalid slots).
     """
     qm = q.shape[0]
+    if config.layout == "ragged":
+        scores, doc_ids, qtok, valid = ragged_flat_candidates(
+            index, q, probe_scores, probe_cids, config, probe_sizes
+        )
+        # Candidates of masked query tokens are dropped here.
+        valid = valid & qmask[qtok]
+        return two_stage_reduce(
+            doc_ids,
+            qtok,
+            scores,
+            valid,
+            mse,
+            q_max=qm,
+            k=config.k,
+            impl=config.reduce_impl,
+            n_docs=index.n_docs or None,
+            pad_to_k=True,
+        )
+
     p, cap = config.nprobe, index.cap
     cand_scores, doc_ids, valid = score_probed_clusters(
         index, q, probe_scores, probe_cids, config
@@ -248,7 +419,8 @@ def _search_one(index: WarpIndex, q: jax.Array, qmask: jax.Array, config: WarpSe
         qmask=qmask,
     )
     return score_and_reduce(
-        index, q, qmask, sel.probe_scores, sel.probe_cids, sel.mse, config
+        index, q, qmask, sel.probe_scores, sel.probe_cids, sel.mse, config,
+        probe_sizes=sel.probe_sizes,
     )
 
 

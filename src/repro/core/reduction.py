@@ -57,7 +57,9 @@ def composite_key_fits_int32(n_docs: int, q_max: int) -> bool:
     return (n_docs - 1) * q_max + (q_max - 1) < int(KEY_SENTINEL)
 
 
-@functools.partial(jax.jit, static_argnames=("q_max", "k", "impl", "n_docs"))
+@functools.partial(
+    jax.jit, static_argnames=("q_max", "k", "impl", "n_docs", "pad_to_k")
+)
 def two_stage_reduce(
     doc_ids: jax.Array,
     qtok_ids: jax.Array,
@@ -69,6 +71,7 @@ def two_stage_reduce(
     k: int,
     impl: str = "scan",
     n_docs: int | None = None,
+    pad_to_k: bool = False,
 ) -> TopKResult:
     """Reduce flat candidate entries to top-k document scores.
 
@@ -89,10 +92,28 @@ def two_stage_reduce(
     two-key sort (``lax.sort(..., num_keys=2)``) that never forms the
     product, at the cost of one extra sort operand. Without ``n_docs`` the
     precondition is the caller's responsibility, as before.
+
+    The entries come in flat — dense callers reshape their [Q, P, cap]
+    stages, ragged callers feed worklist slots directly (the sort N *is*
+    ``n``, so a tighter candidate layout shrinks the dominant
+    ``lax.sort``). A ragged worklist bound may be smaller than ``k`` on
+    skew-free tiny indexes even though the (padded) dense pool is not;
+    ``pad_to_k`` appends invalid entries up to ``k`` in that case instead
+    of raising, preserving the -inf/-1-padded contract.
     """
     n = doc_ids.shape[0]
     if k > n:
-        raise ValueError(f"k={k} > candidate count {n}")
+        if not pad_to_k:
+            raise ValueError(
+                f"k={k} > candidate count {n} (flat entries; pass "
+                "pad_to_k=True to pad a statically short candidate stream)"
+            )
+        pad = k - n
+        doc_ids = jnp.pad(doc_ids, (0, pad))
+        qtok_ids = jnp.pad(qtok_ids, (0, pad))
+        scores = jnp.pad(scores, (0, pad))
+        valid = jnp.pad(valid, (0, pad))  # False: sorts to the back
+        n = k
 
     wide = n_docs is not None and not composite_key_fits_int32(n_docs, q_max)
     if wide:

@@ -27,6 +27,9 @@ same three exported stages (``warp_select`` -> ``score_probed_clusters`` ->
   gather   = "materialize" | "fused"       candidate-code movement
   executor = "auto" | "kernel" | "reference"  Pallas vs jnp (auto = backend)
   memory   = "full" | "scan_qtokens"       peak working-set bounding
+  layout   = "dense" | "ragged" | "auto"   candidate shape: padded
+             [Q, nprobe, cap] grid vs flat tile worklist sized by the real
+             candidates (auto = by measured padding waste at plan time)
 
 Plans are cached per config, so repeated ``retrieve`` calls with the same
 config reuse the compiled pipeline.
@@ -95,12 +98,41 @@ class SearchPlan:
 
     def describe(self) -> dict:
         """Snapshot of every resolved pipeline choice (JSON-serializable) —
-        recorded by benchmarks so perf numbers name the plan that ran."""
+        recorded by benchmarks so perf numbers name the plan that ran.
+
+        The layout block reports *expected occupancy*: how many candidate
+        slots per query token each layout pays for (``slots_per_qtoken`` —
+        also the reduction's sort N per token) vs the dense
+        ``nprobe * cap`` baseline, and the fraction of those slots the mean
+        cluster size actually fills. A dense plan with low
+        ``expected_slot_occupancy`` is the signal to migrate to
+        ``layout="ragged"`` (or "auto"); see README "Performance tuning".
+        """
         cfg = self.config
+        geo = self.index_geometry
+        cap = geo["cap"]
+        tile = ops.resolve_tile_c(cap, cfg.tile_c, layout=cfg.layout)
+        dense_slots = cfg.nprobe * cap
+        if cfg.layout == "ragged" and cfg.worklist_tiles is not None:
+            slots = cfg.worklist_tiles * tile
+        else:
+            slots = dense_slots
+        mean_cluster = geo["n_tokens"] / max(
+            1, self.n_shards * geo["n_centroids"]
+        )
+        expected_real = min(dense_slots, cfg.nprobe * mean_cluster)
         return {
             "gather": cfg.gather,
             "executor": cfg.executor,
             "memory": cfg.memory,
+            "layout": cfg.layout,
+            "tile_c": tile,
+            "worklist_tiles": cfg.worklist_tiles,
+            "slots_per_qtoken": slots,
+            "dense_slots_per_qtoken": dense_slots,
+            "expected_slot_occupancy": round(
+                expected_real / max(1, slots), 4
+            ),
             "reduce_impl": cfg.reduce_impl,
             "sum_impl": cfg.sum_impl,
             "nprobe": cfg.nprobe,
@@ -109,7 +141,7 @@ class SearchPlan:
             "k_impute": cfg.k_impute,
             "n_shards": self.n_shards,
             "backend": self.backend,
-            **self.index_geometry,
+            **geo,
         }
 
 
@@ -279,6 +311,17 @@ class Retriever:
     def _resolve(self, config: WarpSearchConfig) -> WarpSearchConfig:
         if self.is_sharded:
             return dist.resolve_sharded_config(self.index, config)
+        if self.is_segmented:
+            # Delta segments each carry their own CSR geometry; a shared
+            # static worklist bound across segments is future work.
+            if config.layout == "ragged":
+                raise ValueError(
+                    "layout='ragged' is not supported on a segmented index "
+                    "yet; compact() the delta segments into the base first, "
+                    "or plan with layout='dense'"
+                )
+            if config.layout == "auto":
+                config = dataclasses.replace(config, layout="dense")
         return engine.resolve_config(self.index, config)
 
     def _validate(self, cfg: WarpSearchConfig) -> None:

@@ -21,6 +21,7 @@ __all__ = ["WarpIndex", "WarpSearchConfig", "IndexBuildConfig"]
 GATHER_STRATEGIES = ("materialize", "fused")
 EXECUTOR_STRATEGIES = ("auto", "kernel", "reference")
 MEMORY_STRATEGIES = ("full", "scan_qtokens")
+LAYOUT_STRATEGIES = ("dense", "ragged", "auto")
 REDUCE_IMPLS = ("scan", "segment")
 SUM_IMPLS = ("gather", "lut")
 
@@ -100,6 +101,24 @@ class WarpSearchConfig:
     memory:   "full" — decompress/score all query tokens at once;
               "scan_qtokens" — one query token per lax.scan step, bounding
               the live packed-code working set by a factor of Q.
+    layout:   "dense" — every stage is shaped [Q, nprobe, cap] (cap = the
+              global max cluster size), padding slots masked; "ragged" —
+              the probes are flattened into a tile worklist
+              (``core.worklist``) so compute and the reduction's sort size
+              scale with the real candidate count instead of
+              ``nprobe * cap``; "auto" — picks by measured padding waste
+              from index statistics at plan time.
+    tile_c:   candidate-tile row count for the fused kernel and the ragged
+              worklist. ``None`` -> per-layout heuristic (dense: up to 128,
+              capped at the padded cap; ragged: up to 32 — smaller tiles
+              track ragged cluster sizes more tightly at the cost of more
+              grid steps). Must be a positive multiple of 8 (TPU sublane
+              quantum) when given.
+
+    ``worklist_tiles`` is a RESOLVED field like ``t_prime``: the static
+    per-query-token worklist tile bound, derived from index statistics by
+    ``engine.resolve_config`` / ``Retriever.plan`` when layout="ragged".
+    Callers never set it directly.
 
     The booleans ``use_kernel`` / ``scan_qtokens`` / ``fused_gather`` are
     deprecated shims: passing them emits ``DeprecationWarning`` and rewrites
@@ -116,8 +135,13 @@ class WarpSearchConfig:
     gather: str = "materialize"  # "materialize" | "fused"
     executor: str = "auto"  # "auto" | "kernel" | "reference"
     memory: str = "full"  # "full" | "scan_qtokens"
+    layout: str = "dense"  # "dense" | "ragged" | "auto" (see core/worklist.py)
+    tile_c: int | None = None  # candidate tile rows; None -> heuristic
     reduce_impl: str = "scan"  # "scan" | "segment" (see reduction.py)
     sum_impl: str = "gather"  # "gather" | "lut" (byte-LUT; see kernels/ref.py)
+    # Resolved by engine.resolve_config when layout="ragged" (static
+    # per-qtoken worklist tile bound); never set by callers.
+    worklist_tiles: int | None = None
     # Deprecated boolean shims (None = not passed). Mapped in __post_init__.
     use_kernel: bool | None = None
     scan_qtokens: bool | None = None
@@ -144,8 +168,14 @@ class WarpSearchConfig:
         _check_choice("gather", self.gather, GATHER_STRATEGIES)
         _check_choice("executor", self.executor, EXECUTOR_STRATEGIES)
         _check_choice("memory", self.memory, MEMORY_STRATEGIES)
+        _check_choice("layout", self.layout, LAYOUT_STRATEGIES)
         _check_choice("reduce_impl", self.reduce_impl, REDUCE_IMPLS)
         _check_choice("sum_impl", self.sum_impl, SUM_IMPLS)
+        if self.tile_c is not None and (self.tile_c < 8 or self.tile_c % 8):
+            raise ValueError(
+                f"WarpSearchConfig.tile_c={self.tile_c} must be a positive "
+                "multiple of 8 (the TPU sublane quantum)"
+            )
 
     def resolved_t_prime(self, n_tokens: int) -> int:
         if self.t_prime is not None:

@@ -34,6 +34,7 @@ __all__ = ["WarpSelectOut", "warp_select", "impute_mse"]
 class WarpSelectOut(NamedTuple):
     probe_scores: jax.Array  # f32[Q, nprobe]  S_cq of probed centroids
     probe_cids: jax.Array  # i32[Q, nprobe]  probed centroid ids
+    probe_sizes: jax.Array  # i32[Q, nprobe]  true sizes of probed clusters
     mse: jax.Array  # f32[Q]          missing similarity estimate m_i
     top_scores: jax.Array  # f32[Q, kk]      full top-k scores (kk >= nprobe)
     top_sizes: jax.Array  # i32[Q, kk]      cluster sizes of those centroids
@@ -91,6 +92,10 @@ def warp_select(
     return WarpSelectOut(
         probe_scores=top_scores[:, :nprobe],
         probe_cids=top_cids[:, :nprobe].astype(jnp.int32),
+        # Probe metadata for downstream worklist construction: the ragged
+        # layout builds tile counts from the true cluster sizes, already in
+        # hand here — re-emitting them saves a second gather in the engine.
+        probe_sizes=top_sizes[:, :nprobe].astype(jnp.int32),
         mse=mse,
         top_scores=top_scores,
         top_sizes=top_sizes.astype(jnp.int32),

@@ -1,0 +1,140 @@
+"""Ragged tile worklists: compute proportional to real candidates.
+
+Every dense stage downstream of WARP_SELECT is shaped ``[Q, nprobe, cap]``
+where ``cap`` is the *global max* cluster size — the Pallas grid, the
+gathered doc-id tensors, and the reduction's global sort all pay for
+padding slots that are masked out. Cluster-size skew is structural in
+routed multi-vector indexes (CITADEL; XTR-style top-k' retrieval inherits
+it), so the mean cluster is typically 60–75% of ``cap`` *before* tile
+rounding. The paper's engine (§4.4–4.5) instead iterates exactly the
+tokens in each probed cluster's stride.
+
+This module is the TPU-shaped analogue of that pointer-chasing loop: the
+selected probes are flattened into a **tile worklist** — per-(query-token,
+probe) tile counts ``ceil(size / tile_c)`` prefix-summed into a flat,
+statically-bounded list of ``tile_c``-row tiles, each entry carrying the
+scalar-prefetchable ``(qtoken, tile row start, valid rows, probe score)``.
+A 1-D grid over worklist tiles then does compute proportional to the real
+candidate count (rounded up to tiles), and the downstream reduction sorts
+``W * tile_c`` flat slots instead of ``Q * nprobe * cap_pad``.
+
+The static bound is derived from index statistics at plan time
+(``worklist_bound``): a query token probes ``nprobe`` *distinct* clusters,
+so its tile count is at most the sum of the ``nprobe`` largest clusters'
+tile counts — far tighter than ``nprobe * ceil(cap / tile_c)`` under skew.
+Worklist entries beyond the true total are padding tiles with
+``nvalid == 0``; the kernel early-exits on them (``pl.when``) and the
+reduction drops their slots via the valid mask.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "TileWorklist",
+    "build_tile_worklist",
+    "worklist_bound",
+    "worklist_slot_positions",
+]
+
+
+class TileWorklist(NamedTuple):
+    """Flat, statically-bounded list of candidate tiles.
+
+    All arrays are length ``W = n_qtokens * tiles_per_qtoken`` (the static
+    bound); entries past the true tile count are padding with
+    ``nvalid == 0``.
+    """
+
+    row0: jax.Array  # i32[W] global packed-codes row of the tile's slot 0
+    nvalid: jax.Array  # i32[W] valid slots in this tile (0 => padding tile)
+    qtok: jax.Array  # i32[W] owning query token (0 on padding tiles)
+    pscore: jax.Array  # f32[W] centroid probe score S_cq of the cluster
+
+
+def worklist_bound(cluster_sizes, nprobe: int, tile_c: int) -> int:
+    """Static per-query-token tile bound from index statistics.
+
+    A query token probes ``nprobe`` distinct clusters, so the tightest
+    data-independent bound is the sum of the ``nprobe`` largest clusters'
+    tile counts. ``cluster_sizes`` may be ``[C]`` (single index) or
+    ``[S, C]`` (sharded stack — the bound must cover every shard, so the
+    max over shards is returned). Always >= 1 so degenerate indexes still
+    produce a non-empty (all-padding) worklist.
+    """
+    sizes = np.asarray(cluster_sizes)
+    if sizes.ndim == 2:
+        return max(worklist_bound(s, nprobe, tile_c) for s in sizes)
+    tiles = -np.sort(-((sizes.astype(np.int64) + tile_c - 1) // tile_c))
+    return max(1, int(tiles[:nprobe].sum()))
+
+
+def build_tile_worklist(
+    starts: jax.Array,
+    sizes: jax.Array,
+    probe_scores: jax.Array,
+    *,
+    tile_c: int,
+    tiles_per_qtoken: int,
+) -> TileWorklist:
+    """Flatten [Q, P] probes into a tile worklist of static length
+    ``Q * tiles_per_qtoken``.
+
+    starts/sizes i32[Q, P] (CSR row start / true size of each probed
+    cluster), probe_scores f32[Q, P]. Probes are laid out query-token-major
+    (all of qtoken 0's tiles, then qtoken 1's, ...), each cluster
+    contributing ``ceil(size / tile_c)`` consecutive tiles; empty clusters
+    contribute none. ``tiles_per_qtoken`` must be a valid bound
+    (``worklist_bound``) or tiles are silently truncated.
+    """
+    qm, p = starts.shape
+    w = qm * tiles_per_qtoken
+    flat_starts = starts.reshape(-1).astype(jnp.int32)
+    flat_sizes = sizes.reshape(-1).astype(jnp.int32)
+    flat_pscores = probe_scores.reshape(-1)
+
+    tiles = (flat_sizes + (tile_c - 1)) // tile_c  # [Q*P]
+    cum = jnp.cumsum(tiles)
+    first = cum - tiles  # tile index where each probe's run begins
+    total = cum[-1] if cum.shape[0] else jnp.int32(0)
+
+    wid = jnp.arange(w, dtype=jnp.int32)
+    # Probe owning worklist tile ``wid``: the run [first[e], cum[e]) it
+    # falls in. side="right" maps wid == cum[e] to the next run.
+    e = jnp.searchsorted(cum, wid, side="right").astype(jnp.int32)
+    e = jnp.minimum(e, qm * p - 1)
+    j = wid - first[e]  # tile index within the cluster
+
+    used = wid < total
+    row0 = flat_starts[e] + j * tile_c
+    nvalid = jnp.clip(flat_sizes[e] - j * tile_c, 0, tile_c)
+    nvalid = jnp.where(used, nvalid, 0)
+    qtok = jnp.where(used, e // p, 0)
+    pscore = jnp.where(used, flat_pscores[e], 0.0)
+    return TileWorklist(
+        row0=jnp.where(used, row0, 0).astype(jnp.int32),
+        nvalid=nvalid.astype(jnp.int32),
+        qtok=qtok.astype(jnp.int32),
+        pscore=pscore.astype(jnp.float32),
+    )
+
+
+def worklist_slot_positions(
+    wl: TileWorklist, *, tile_c: int, n_tokens: int
+) -> tuple[jax.Array, jax.Array]:
+    """Expand a worklist to flat per-slot CSR positions.
+
+    Returns (pos i32[W * tile_c] clamped into [0, n_tokens), valid
+    bool[W * tile_c]). Clamp floor is 0 so an empty index can never
+    produce a wraparound (-1) gather; all its slots are invalid anyway.
+    """
+    lane = jnp.arange(tile_c, dtype=jnp.int32)
+    pos = wl.row0[:, None] + lane[None, :]
+    valid = lane[None, :] < wl.nvalid[:, None]
+    pos = jnp.clip(pos, 0, max(0, n_tokens - 1))
+    return pos.reshape(-1), valid.reshape(-1)

@@ -52,9 +52,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["fused_gather_score_kernel_call", "DEFAULT_TILE_C"]
+__all__ = [
+    "fused_gather_score_kernel_call",
+    "ragged_fused_gather_score_kernel_call",
+    "DEFAULT_TILE_C",
+    "DEFAULT_RAGGED_TILE_C",
+]
 
 DEFAULT_TILE_C = 128
+# Ragged worklists favour smaller tiles: the per-cluster padding waste is
+# ceil(size/tile)*tile - size (< tile_c rows), so a tighter tile tracks
+# skewed cluster sizes better at the cost of more grid steps. 32 keeps the
+# sublane dimension well above the 8-row quantum while roughly quartering
+# the tail waste vs the dense default.
+DEFAULT_RAGGED_TILE_C = 32
 
 
 def _fused_kernel(
@@ -136,7 +147,7 @@ def fused_gather_score_kernel_call(
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
-        grid=(qm, p, cap_pad // tile_c),
+        grid=(qm, p, cap_pad // tile_c),  # dense: every probe pays cap_pad
         in_specs=[
             pl.BlockSpec(
                 (tile_c, pb),
@@ -165,3 +176,134 @@ def fused_gather_score_kernel_call(
         interpret=interpret,
     )(starts, sizes, probe_scores.astype(jnp.float32),
       packed_codes, v.astype(jnp.float32))
+
+
+def _ragged_kernel(
+    row0_ref,  # SMEM i32[W]  tile row starts (prefetched)
+    nvalid_ref,  # SMEM i32[W]  valid slots per tile (0 => padding tile)
+    qtok_ref,  # SMEM i32[W]  owning query token per tile (prefetched)
+    pscore_ref,  # SMEM f32[W]  centroid probe score per tile (prefetched)
+    packed_ref,  # VMEM u8[TILE_C, PB]  this tile's code rows (unblocked fetch)
+    v_ref,  # VMEM f32[1, D, 2^b]  the owning query token's v-table
+    out_ref,  # VMEM f32[1, TILE_C]
+    *,
+    nbits: int,
+    dim: int,
+    n_tokens: int,
+    tile_c: int,
+):
+    w = pl.program_id(0)
+    nvalid = nvalid_ref[w]
+
+    # Early-exit: padding tiles past the true worklist length (and probes
+    # whose remaining rows ran out) skip the 2^b select-accumulate entirely.
+    @pl.when(nvalid == 0)
+    def _():
+        out_ref[0] = jnp.zeros((tile_c,), jnp.float32)
+
+    @pl.when(nvalid > 0)
+    def _():
+        nb = 1 << nbits
+        per_byte = 8 // nbits
+        row0 = row0_ref[w]
+        # The index map clamped the fetch start into [0, n_tokens - tile_c];
+        # wanted rows sit ``shift`` rows deeper in the fetched tile.
+        shift = jnp.maximum(0, row0 - (n_tokens - tile_c))
+        packed = jnp.roll(packed_ref[...], -shift, axis=0)  # [TILE_C, PB]
+
+        mask = jnp.uint8(nb - 1)
+        parts = [
+            (packed >> jnp.uint8(slot * nbits)) & mask
+            for slot in range(per_byte)
+        ]
+        codes = jnp.stack(parts, axis=-1).reshape(tile_c, dim)  # [TILE_C, D]
+
+        v = v_ref[0]  # [D, 2^b]
+        acc = jnp.zeros((tile_c,), jnp.float32)
+        for bucket in range(nb):
+            sel = (codes == jnp.uint8(bucket)).astype(jnp.float32)
+            acc = acc + sel @ v[:, bucket]
+
+        c = jax.lax.broadcasted_iota(jnp.int32, (tile_c,), 0)
+        out_ref[0] = jnp.where(c < nvalid, acc + pscore_ref[w], 0.0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("nbits", "dim", "n_tokens", "tile_c", "interpret"),
+)
+def ragged_fused_gather_score_kernel_call(
+    packed_codes: jax.Array,
+    row0: jax.Array,
+    nvalid: jax.Array,
+    qtok: jax.Array,
+    pscore: jax.Array,
+    v: jax.Array,
+    *,
+    nbits: int,
+    dim: int,
+    n_tokens: int,
+    tile_c: int = DEFAULT_RAGGED_TILE_C,
+    interpret: bool = False,
+) -> jax.Array:
+    """Worklist-driven fused CSR probe + selective sum (ragged layout).
+
+    Where ``fused_gather_score_kernel_call`` runs a dense
+    ``(Q, nprobe, cap_pad / tile_c)`` grid — every probe slot pays for the
+    global max cluster size — this variant runs a 1-D grid over the tiles
+    of a prefix-summed tile worklist (``core.worklist``): one grid step per
+    *real* candidate tile, plus statically-bounded padding tiles that
+    early-exit via ``pl.when``. Per step, the prefetched ``row0`` drives an
+    unblocked DMA of the tile's code rows straight from the resident index
+    and ``qtok`` picks the owning query token's v-table block.
+
+    packed_codes u8[N, PB], row0/nvalid/qtok i32[W], pscore f32[W],
+    v f32[Q, D, 2^b] -> flat scores f32[W * tile_c] with invalid slots
+    (c >= nvalid, incl. all slots of padding tiles) zeroed.
+    """
+    n, pb = packed_codes.shape
+    (w,) = row0.shape
+    qm = v.shape[0]
+    nb = 1 << nbits
+    if n != n_tokens:
+        raise ValueError(
+            f"static n_tokens={n_tokens} does not match packed_codes rows {n}"
+        )
+    if n < tile_c:
+        raise ValueError(
+            f"index has {n} token rows, below one tile_c={tile_c} tile; "
+            "ops.py should have routed this to the jnp reference"
+        )
+    if v.shape != (qm, dim, nb):
+        raise ValueError(f"v shape {v.shape} != {(qm, dim, nb)}")
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(w,),
+        in_specs=[
+            pl.BlockSpec(
+                (tile_c, pb),
+                lambda i, row0, nvalid, qtok, ps: (
+                    jnp.clip(row0[i], 0, n_tokens - tile_c),
+                    0,
+                ),
+                indexing_mode=pl.Unblocked(),
+            ),
+            pl.BlockSpec((1, dim, nb), lambda i, row0, nvalid, qtok, ps: (qtok[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_c), lambda i, *_: (i, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _ragged_kernel,
+            nbits=nbits,
+            dim=dim,
+            n_tokens=n_tokens,
+            tile_c=tile_c,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((w, tile_c), jnp.float32),
+        interpret=interpret,
+    )(row0, nvalid, qtok, pscore.astype(jnp.float32),
+      packed_codes, v.astype(jnp.float32))
+    return out.reshape(-1)

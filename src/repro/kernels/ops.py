@@ -15,13 +15,18 @@ from repro.kernels import ref
 from repro.kernels.decompress_score import selective_sum_kernel_call
 from repro.kernels.embedding_bag import embedding_bag_kernel_call
 from repro.kernels.fused_gather_score import (
+    DEFAULT_RAGGED_TILE_C,
     DEFAULT_TILE_C,
     fused_gather_score_kernel_call,
+    ragged_fused_gather_score_kernel_call,
 )
 
 __all__ = [
     "selective_sum",
     "fused_gather_selective_sum",
+    "ragged_selective_sum",
+    "ragged_fused_gather_selective_sum",
+    "resolve_tile_c",
     "embedding_bag",
     "on_tpu",
 ]
@@ -49,6 +54,22 @@ def _check_packable_dim(dim: int, nbits: int, *, byte_wise: bool) -> None:
             "trailing byte — use executor='reference' with "
             "sum_impl='gather' (and gather='materialize') for this index"
         )
+
+
+def resolve_tile_c(cap: int, tile_c: int | None = None, *, layout: str = "dense") -> int:
+    """Candidate tile row count for the fused kernels and worklists.
+
+    An explicit ``tile_c`` wins. Otherwise: power-of-two >= 8 (the TPU
+    sublane quantum) capped at the layout default — 128 for the dense grid
+    (DMA efficiency; the masked tail is paid once per probe anyway) and 32
+    for ragged worklists (the per-cluster tail waste is < tile_c rows, so a
+    tighter tile tracks skewed cluster sizes better) — and at the padded
+    cap so tiny indexes don't over-pad.
+    """
+    if tile_c is not None:
+        return tile_c
+    default = DEFAULT_RAGGED_TILE_C if layout == "ragged" else DEFAULT_TILE_C
+    return min(default, 1 << max(3, (cap - 1).bit_length() if cap > 1 else 3))
 
 
 def selective_sum(
@@ -125,7 +146,7 @@ def fused_gather_selective_sum(
     _check_packable_dim(dim, nbits, byte_wise=use_kernel and impl == "fused")
     starts = cluster_offsets[probe_cids].astype(jnp.int32)  # [Q, P]
     sizes = cluster_sizes[probe_cids].astype(jnp.int32)  # [Q, P]
-    tile = tile_c or min(DEFAULT_TILE_C, 1 << max(3, (cap - 1).bit_length() if cap > 1 else 3))
+    tile = resolve_tile_c(cap, tile_c)
     if (
         not use_kernel
         or impl != "fused"
@@ -144,6 +165,74 @@ def fused_gather_selective_sum(
         tile_c=tile, interpret=not on_tpu(),
     )
     return out[:, :, :cap]
+
+
+def ragged_selective_sum(
+    packed: jax.Array,
+    qtok: jax.Array,
+    v: jax.Array,
+    *,
+    nbits: int,
+    dim: int,
+    impl: str = "gather",
+) -> jax.Array:
+    """Selective sum over a flat worklist-ordered candidate stream.
+
+    packed u8[N_slots, PB], qtok i32[N_slots], v f32[Q, D, 2^b]
+    -> f32[N_slots]. Slots from different query tokens are interleaved
+    (worklist order), so there is no leading Q axis for the blocked Pallas
+    selective-sum kernel to tile over — the ragged *materialize* path
+    always scores with the jnp references (the kernel-accelerated ragged
+    path is the fused one, ``ragged_fused_gather_selective_sum``).
+
+    impl: "gather" (per-dim) | "lut" (byte-LUT), as in ``selective_sum``.
+    """
+    _check_packable_dim(dim, nbits, byte_wise=impl == "lut")
+    if impl == "lut":
+        return ref.ragged_selective_sum_lut(packed, qtok, v, nbits=nbits, dim=dim)
+    return ref.ragged_selective_sum(packed, qtok, v, nbits=nbits, dim=dim)
+
+
+def ragged_fused_gather_selective_sum(
+    packed_codes: jax.Array,
+    row0: jax.Array,
+    nvalid: jax.Array,
+    qtok: jax.Array,
+    pscore: jax.Array,
+    v: jax.Array,
+    *,
+    nbits: int,
+    dim: int,
+    tile_c: int,
+    n_tokens: int,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Single-pass worklist probe + implicit decompression + scoring.
+
+    packed_codes u8[N, PB] (resident index), worklist arrays
+    row0/nvalid/qtok i32[W] + pscore f32[W] (``core.worklist``),
+    v f32[Q, D, 2^b] -> flat scores f32[W * tile_c] (invalid slots zeroed).
+
+    Routes to the ragged Pallas scalar-prefetch kernel (interpret off-TPU);
+    b=8 or an index smaller than one code tile falls back to the jnp
+    reference, which gathers but is semantically identical.
+    """
+    _check_packable_dim(dim, nbits, byte_wise=use_kernel)
+    if (
+        not use_kernel
+        or nbits == 8  # 256 select-accumulate unrolls: ref lowers better
+        or n_tokens < tile_c  # index smaller than one code tile
+        or row0.shape[0] == 0
+    ):
+        return ref.ragged_fused_gather_score(
+            packed_codes, row0, nvalid, qtok, pscore, v,
+            nbits=nbits, dim=dim, tile_c=tile_c,
+        )
+    return ragged_fused_gather_score_kernel_call(
+        packed_codes, row0, nvalid, qtok, pscore, v,
+        nbits=nbits, dim=dim, n_tokens=n_tokens, tile_c=tile_c,
+        interpret=not on_tpu(),
+    )
 
 
 def embedding_bag(

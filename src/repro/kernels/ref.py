@@ -16,9 +16,12 @@ from repro.core.quantization import unpack_codes
 __all__ = [
     "selective_sum",
     "selective_sum_lut",
+    "ragged_selective_sum",
+    "ragged_selective_sum_lut",
     "embedding_bag",
     "fused_reduce_scores",
     "fused_gather_score",
+    "ragged_fused_gather_score",
 ]
 
 
@@ -55,6 +58,24 @@ def selective_sum(
     return out
 
 
+def _byte_lut(v: jax.Array, nbits: int) -> jax.Array:
+    """Fold the per-dimension v-table into a per-byte LUT:
+    lut[q, j, byte] = sum over the 8/nbits dims packed into byte j of
+    v[q, dim, digit]. Shared by the dense and ragged LUT paths."""
+    q = v.shape[0]
+    per_byte = 8 // nbits
+    nb = 1 << nbits
+    pb = v.shape[1] // per_byte  # packed bytes per code row
+    byte_vals = jnp.arange(256, dtype=jnp.int32)
+    # v grouped by byte: [Q, PB, per_byte, 2^b]
+    vg = v.reshape(q, pb, per_byte, nb)
+    lut = jnp.zeros((q, pb, 256), jnp.float32)
+    for slot in range(per_byte):
+        digits = (byte_vals >> (slot * nbits)) & (nb - 1)  # [256]
+        lut = lut + vg[:, :, slot, digits]
+    return lut
+
+
 @functools.partial(jax.jit, static_argnames=("nbits", "dim"))
 def selective_sum_lut(
     packed: jax.Array, v: jax.Array, *, nbits: int, dim: int
@@ -68,18 +89,63 @@ def selective_sum_lut(
     per DIMENSION — 2x (b=4) / 4x (b=2) fewer gathers and no unpacking.
     Semantically identical to selective_sum (parity-tested).
     """
-    q, n, pb = packed.shape
-    per_byte = 8 // nbits
-    nb = 1 << nbits
-    byte_vals = jnp.arange(256, dtype=jnp.int32)
-    # v grouped by byte: [Q, PB, per_byte, 2^b]
-    vg = v.reshape(q, pb, per_byte, nb)
-    lut = jnp.zeros((q, pb, 256), jnp.float32)
-    for slot in range(per_byte):
-        digits = (byte_vals >> (slot * nbits)) & (nb - 1)  # [256]
-        lut = lut + vg[:, :, slot, digits]
+    lut = _byte_lut(v, nbits)
     idx = packed.astype(jnp.int32)  # [Q, N, PB]
     gathered = jnp.take_along_axis(lut[:, None, :, :], idx[..., None], axis=-1)[..., 0]
+    return jnp.sum(gathered, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("nbits", "dim", "d_chunk"))
+def ragged_selective_sum(
+    packed: jax.Array,
+    qtok: jax.Array,
+    v: jax.Array,
+    *,
+    nbits: int,
+    dim: int,
+    d_chunk: int = 32,
+) -> jax.Array:
+    """Selective sum over a FLAT candidate stream with per-slot query tokens.
+
+    packed u8[N, PB] (one packed code row per worklist slot),
+    qtok i32[N] owning query token of each slot, v f32[Q, D, 2^b]
+    -> f32[N] with out[n] = sum_d v[qtok[n], d, codes[n, d]].
+
+    The ragged-layout analogue of ``selective_sum``: the flat stream mixes
+    query tokens (worklist order), so the v-row is picked per slot by one
+    3-operand gather instead of aligning on a leading Q axis. Chunked over
+    D with the same chunk size and summation order as ``selective_sum`` so
+    a slot's score is identical bit-for-bit across layouts.
+    """
+    n = packed.shape[0]
+    codes = unpack_codes(packed[None], nbits, dim)[0].astype(jnp.int32)  # [N, D]
+    if dim % d_chunk:
+        d_chunk = dim
+    n_chunks = dim // d_chunk
+    q = v.shape[0]
+    codes_c = jnp.moveaxis(codes.reshape(n, n_chunks, d_chunk), 1, 0)  # [C, N, Dc]
+    v_c = jnp.moveaxis(v.reshape(q, n_chunks, d_chunk, -1), 1, 0)  # [C, Q, Dc, B]
+    d_idx = jnp.arange(d_chunk, dtype=jnp.int32)
+
+    def step(acc, inp):
+        cc, vc = inp  # [N, Dc] / [Q, Dc, B]
+        g = vc[qtok[:, None], d_idx[None, :], cc]  # [N, Dc] gather
+        return acc + jnp.sum(g, axis=-1), None
+
+    out, _ = jax.lax.scan(step, jnp.zeros((n,), jnp.float32), (codes_c, v_c))
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("nbits", "dim"))
+def ragged_selective_sum_lut(
+    packed: jax.Array, qtok: jax.Array, v: jax.Array, *, nbits: int, dim: int
+) -> jax.Array:
+    """Byte-LUT variant of ``ragged_selective_sum`` (see selective_sum_lut):
+    out[n] = sum_j lut[qtok[n], j, packed[n, j]]."""
+    n, pb = packed.shape
+    lut = _byte_lut(v, nbits)
+    j_idx = jnp.arange(pb, dtype=jnp.int32)
+    gathered = lut[qtok[:, None], j_idx[None, :], packed.astype(jnp.int32)]
     return jnp.sum(gathered, axis=-1)
 
 
@@ -110,12 +176,53 @@ def fused_gather_score(
     n = packed_codes.shape[0]
     pos = starts[..., None] + jnp.arange(cap, dtype=jnp.int32)  # [Q, P, cap]
     valid = jnp.arange(cap, dtype=jnp.int32) < sizes[..., None]
-    pos = jnp.minimum(pos, n - 1)
+    # Clamp floor 0: n == 0 must not produce a -1 wraparound gather.
+    pos = jnp.clip(pos, 0, max(0, n - 1))
     gathered = packed_codes[pos]  # [Q, P, cap, PB]
     scores = selective_sum(
         gathered.reshape(qm, p * cap, -1), v, nbits=nbits, dim=dim
     ).reshape(qm, p, cap)
     return jnp.where(valid, scores + probe_scores[..., None], 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("nbits", "dim", "tile_c"))
+def ragged_fused_gather_score(
+    packed_codes: jax.Array,
+    row0: jax.Array,
+    nvalid: jax.Array,
+    qtok: jax.Array,
+    pscore: jax.Array,
+    v: jax.Array,
+    *,
+    nbits: int,
+    dim: int,
+    tile_c: int,
+) -> jax.Array:
+    """Semantics oracle for the ragged worklist kernel.
+
+    packed_codes u8[N, PB] (resident index), worklist arrays
+    row0/nvalid/qtok i32[W] + pscore f32[W] (``core.worklist``),
+    v f32[Q, D, 2^b] -> flat f32[W * tile_c] where slot (w, c) is
+    ``pscore[w] + sum_d v[qtok[w], d, code_d]`` of token ``row0[w] + c``
+    when ``c < nvalid[w]`` and exactly 0 otherwise.
+
+    Like ``fused_gather_score`` this reference *does* gather; the Pallas
+    kernel must match it on valid slots and on the zero masking. Slot
+    expansion is shared with the engine's materialize path
+    (``worklist_slot_positions``) so the clamp/validity semantics of a
+    worklist tile have exactly one definition.
+    """
+    from repro.core.worklist import TileWorklist, worklist_slot_positions
+
+    wl = TileWorklist(row0=row0, nvalid=nvalid, qtok=qtok, pscore=pscore)
+    pos, valid = worklist_slot_positions(
+        wl, tile_c=tile_c, n_tokens=packed_codes.shape[0]
+    )
+    gathered = packed_codes[pos]  # [W * tile_c, PB]
+    qtok_slot = jnp.repeat(qtok, tile_c)
+    scores = ragged_selective_sum(gathered, qtok_slot, v, nbits=nbits, dim=dim)
+    scores = scores + jnp.repeat(pscore, tile_c)
+    return jnp.where(valid, scores, 0.0)
 
 
 @functools.partial(jax.jit, static_argnames=("num_segments",))

@@ -1,0 +1,371 @@
+"""Ragged tile-worklist execution layout: worklist builder oracle, kernel
+parity, dense-vs-ragged top-k identity across every execution surface
+(local, batched, 2-shard sharded; fused and materialize gathers), layout
+resolution, and the empty-index guards."""
+
+import dataclasses
+import os
+import re
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    IndexBuildConfig,
+    Retriever,
+    WarpSearchConfig,
+    build_index,
+    search,
+)
+from repro.core.engine import resolve_config
+from repro.core.worklist import (
+    build_tile_worklist,
+    worklist_bound,
+    worklist_slot_positions,
+)
+from repro.data import make_corpus, make_queries
+from repro.kernels import ops, ref
+
+DIM = 128
+
+
+# ---- worklist builder ----
+
+
+def _oracle_worklist(starts, sizes, pscores, tile_c):
+    """Reference tile expansion: query-token-major, cluster-order tiles."""
+    qm, p = starts.shape
+    out = []
+    for qi in range(qm):
+        for pi in range(p):
+            size = int(sizes[qi, pi])
+            for j in range((size + tile_c - 1) // tile_c):
+                out.append((
+                    int(starts[qi, pi]) + j * tile_c,
+                    min(tile_c, size - j * tile_c),
+                    qi,
+                    float(pscores[qi, pi]),
+                ))
+    return out
+
+
+@pytest.mark.parametrize("tile_c", [8, 32])
+@pytest.mark.parametrize("qm,p", [(1, 5), (4, 7)])
+def test_worklist_matches_oracle(rng, tile_c, qm, p):
+    sizes = rng.integers(0, 100, (qm, p)).astype(np.int32)
+    sizes[rng.random((qm, p)) < 0.25] = 0  # empty clusters contribute no tiles
+    starts = np.cumsum(sizes.reshape(-1)).reshape(qm, p) - sizes
+    pscores = rng.standard_normal((qm, p)).astype(np.float32)
+
+    want = _oracle_worklist(starts, sizes, pscores, tile_c)
+    bound = int(np.ceil(sizes / tile_c).sum(axis=1).max()) + 1  # any valid bound
+    wl = build_tile_worklist(
+        jnp.asarray(starts), jnp.asarray(sizes), jnp.asarray(pscores),
+        tile_c=tile_c, tiles_per_qtoken=bound,
+    )
+    got = [
+        (int(r), int(nv), int(qt), float(ps))
+        for r, nv, qt, ps in zip(
+            np.asarray(wl.row0), np.asarray(wl.nvalid),
+            np.asarray(wl.qtok), np.asarray(wl.pscore),
+        )
+        if nv > 0
+    ]
+    assert got == want
+    # Padding tiles are fully masked.
+    n_pad = qm * bound - len(want)
+    assert n_pad >= 0
+    assert int((np.asarray(wl.nvalid) == 0).sum()) == n_pad
+
+
+def test_worklist_bound_is_top_nprobe_tiles():
+    sizes = np.array([100, 3, 64, 0, 7, 33])
+    # tile 32: tile counts [4, 1, 2, 0, 1, 2]; top-3 = 4 + 2 + 2.
+    assert worklist_bound(sizes, nprobe=3, tile_c=32) == 8
+    assert worklist_bound(sizes, nprobe=100, tile_c=32) == 10
+    assert worklist_bound(np.zeros(4, np.int32), nprobe=2, tile_c=32) == 1
+    # Sharded stack: the bound must cover the worst shard.
+    stacked = np.stack([sizes, sizes * 2])
+    assert worklist_bound(stacked, 3, 32) == worklist_bound(sizes * 2, 3, 32)
+
+
+def test_worklist_slot_positions_clamp_floor():
+    wl = build_tile_worklist(
+        jnp.zeros((1, 1), jnp.int32), jnp.zeros((1, 1), jnp.int32),
+        jnp.zeros((1, 1), jnp.float32), tile_c=8, tiles_per_qtoken=1,
+    )
+    pos, valid = worklist_slot_positions(wl, tile_c=8, n_tokens=0)
+    assert not bool(valid.any())
+    assert int(pos.min()) == 0  # never -1 / wraparound
+
+
+# ---- ragged kernel vs oracle ----
+
+
+@pytest.mark.tpu_kernel
+@pytest.mark.parametrize("nbits", [2, 4])
+def test_ragged_kernel_matches_oracle(rng, nbits):
+    n_tok, tile_c, qm = 400, 32, 3
+    pb = DIM * nbits // 8
+    packed = rng.integers(0, 256, (n_tok, pb), dtype=np.uint8)
+    w = 17
+    row0 = rng.integers(0, n_tok, w).astype(np.int32)  # incl. near-end clamps
+    nvalid = rng.integers(0, tile_c + 1, w).astype(np.int32)
+    nvalid[rng.random(w) < 0.3] = 0  # padding tiles
+    # Valid rows must exist in the index (worklist invariant).
+    nvalid = np.minimum(nvalid, np.maximum(0, n_tok - row0)).astype(np.int32)
+    qtok = rng.integers(0, qm, w).astype(np.int32)
+    pscore = rng.standard_normal(w).astype(np.float32)
+    v = rng.standard_normal((qm, DIM, 1 << nbits)).astype(np.float32)
+
+    args = (
+        jnp.asarray(packed), jnp.asarray(row0), jnp.asarray(nvalid),
+        jnp.asarray(qtok), jnp.asarray(pscore), jnp.asarray(v),
+    )
+    want = ref.ragged_fused_gather_score(
+        *args, nbits=nbits, dim=DIM, tile_c=tile_c
+    )
+    got = ops.ragged_fused_gather_selective_sum(
+        *args, nbits=nbits, dim=DIM, tile_c=tile_c, n_tokens=n_tok,
+        use_kernel=True,
+    )
+    assert got.shape == (w * tile_c,)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got), rtol=1e-4, atol=1e-4)
+    # Padding tiles and masked tails come back exactly 0.
+    got2 = np.asarray(got).reshape(w, tile_c)
+    for i in range(w):
+        np.testing.assert_array_equal(got2[i, nvalid[i]:], 0.0)
+
+
+# ---- engine-level dense vs ragged parity ----
+
+
+@pytest.fixture(scope="module")
+def setup():
+    corpus = make_corpus(n_docs=300, mean_doc_len=16, seed=31)
+    idx = build_index(
+        corpus.emb, corpus.token_doc_ids, corpus.n_docs,
+        IndexBuildConfig(n_centroids=64, nbits=4, kmeans_iters=3),
+    )
+    q, qmask, rel = make_queries(corpus, n_queries=6, seed=32)
+    return corpus, idx, q, qmask
+
+
+BASE = dict(nprobe=16, k=20, t_prime=1000, k_impute=32)
+
+RAGGED_VARIANTS = [
+    dict(),
+    dict(gather="fused"),
+    dict(gather="fused", executor="kernel"),
+    dict(memory="scan_qtokens"),
+    dict(gather="fused", memory="scan_qtokens"),
+    dict(sum_impl="lut"),
+    dict(reduce_impl="segment"),
+    dict(tile_c=16),
+]
+
+
+@pytest.mark.parametrize(
+    "overrides", RAGGED_VARIANTS, ids=[str(v) for v in RAGGED_VARIANTS]
+)
+def test_ragged_topk_identical_to_dense(setup, overrides):
+    _, idx, q, qmask, = setup
+    dense_cfg = WarpSearchConfig(**BASE, **overrides)
+    ragged_cfg = WarpSearchConfig(**BASE, layout="ragged", **overrides)
+    for i in range(3):
+        a = search(idx, q[i], jnp.asarray(qmask[i]), dense_cfg)
+        b = search(idx, q[i], jnp.asarray(qmask[i]), ragged_cfg)
+        np.testing.assert_allclose(
+            np.asarray(a.scores), np.asarray(b.scores), rtol=1e-4, atol=1e-4
+        )
+        np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+
+
+def test_ragged_batched_matches_dense(setup):
+    _, idx, q, qmask = setup
+    r = Retriever.from_index(idx)
+    cfg = WarpSearchConfig(**BASE)
+    for overrides in (dict(), dict(gather="fused")):
+        a = r.plan(dataclasses.replace(cfg, **overrides)).retrieve_batch(
+            q[:4], qmask[:4]
+        )
+        b = r.plan(
+            dataclasses.replace(cfg, layout="ragged", **overrides)
+        ).retrieve_batch(q[:4], qmask[:4])
+        np.testing.assert_allclose(
+            np.asarray(a.scores), np.asarray(b.scores), rtol=1e-4, atol=1e-4
+        )
+        np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+
+
+def test_ragged_all_masked_query(setup):
+    _, idx, q, _ = setup
+    cfg = WarpSearchConfig(**BASE, layout="ragged")
+    res = search(idx, q[0], jnp.zeros(q[0].shape[0], bool), cfg)
+    assert np.all(np.asarray(res.doc_ids) == -1)
+    assert np.all(np.asarray(res.scores) == -np.inf)
+
+
+def test_ragged_pads_when_worklist_smaller_than_k(setup):
+    """A tiny probe set can statically bound fewer slots than k; the plan
+    must still return the -inf/-1-padded k (dense parity)."""
+    _, idx, q, qmask = setup
+    cfg = WarpSearchConfig(nprobe=1, k=100, t_prime=500, tile_c=8)
+    a = search(idx, q[0], jnp.asarray(qmask[0]), cfg)
+    b = search(
+        idx, q[0], jnp.asarray(qmask[0]),
+        dataclasses.replace(cfg, layout="ragged"),
+    )
+    np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+
+
+_U8_4D = re.compile(r"u8\[\d+,\d+,\d+,\d+\]")
+
+
+@pytest.mark.tpu_kernel
+def test_ragged_fused_jaxpr_no_candidate_materialization(setup):
+    """The ragged fused path keeps PR 1's guarantee: packed codes are read
+    from the resident index, never gathered into a 4-D HBM candidate
+    tensor — and the flat worklist adds no u8 intermediates of its own."""
+    from repro.core.engine import _search_one
+
+    _, idx, q, qmask = setup
+    cfg = resolve_config(
+        idx,
+        WarpSearchConfig(
+            **BASE, layout="ragged", gather="fused", executor="kernel"
+        ),
+    )
+    q0, m0 = jnp.asarray(q[0]), jnp.asarray(qmask[0])
+    jx = str(jax.make_jaxpr(lambda a, b: _search_one(idx, a, b, cfg))(q0, m0))
+    assert not _U8_4D.search(jx)
+
+
+# ---- layout resolution + plan surface ----
+
+
+def test_layout_resolution_and_describe(setup):
+    _, idx, *_ = setup
+    r = Retriever.from_index(idx)
+    plan = r.plan(WarpSearchConfig(**BASE, layout="ragged"))
+    cfg = plan.config
+    assert cfg.layout == "ragged" and cfg.worklist_tiles >= 1
+    sizes = np.asarray(idx.cluster_sizes)
+    tile = ops.resolve_tile_c(idx.cap, None, layout="ragged")
+    assert cfg.worklist_tiles == worklist_bound(sizes, cfg.nprobe, tile)
+    d = plan.describe()
+    assert d["layout"] == "ragged"
+    assert d["slots_per_qtoken"] == cfg.worklist_tiles * d["tile_c"]
+    assert d["dense_slots_per_qtoken"] == cfg.nprobe * idx.cap
+    assert 0 < d["expected_slot_occupancy"] <= 1.0
+
+    auto = r.plan(WarpSearchConfig(**BASE, layout="auto")).config
+    assert auto.layout in ("dense", "ragged")  # concretized, never "auto"
+    # auto picks ragged exactly when the worklist bound undercuts dense.
+    want = "ragged" if cfg.worklist_tiles * tile < cfg.nprobe * idx.cap else "dense"
+    assert auto.layout == want
+
+    dense = r.plan(WarpSearchConfig(**BASE)).config
+    assert dense.layout == "dense" and dense.worklist_tiles is None
+
+
+def test_ragged_requires_resolved_config(setup):
+    _, idx, q, qmask = setup
+    from repro.core.engine import ragged_flat_candidates
+
+    cfg = WarpSearchConfig(**BASE, layout="ragged")  # unresolved: no bound
+    with pytest.raises(ValueError, match="worklist"):
+        ragged_flat_candidates(
+            idx, jnp.asarray(q[0]),
+            jnp.zeros((q[0].shape[0], cfg.nprobe)),
+            jnp.zeros((q[0].shape[0], cfg.nprobe), jnp.int32),
+            cfg,
+        )
+
+
+def test_bad_tile_c_rejected():
+    with pytest.raises(ValueError, match="tile_c"):
+        WarpSearchConfig(tile_c=12)
+    with pytest.raises(ValueError, match="layout"):
+        WarpSearchConfig(layout="jagged")
+
+
+def test_empty_index_plan_time_error(setup):
+    _, idx, *_ = setup
+    empty = dataclasses.replace(
+        idx,
+        packed_codes=idx.packed_codes[:0],
+        token_doc_ids=idx.token_doc_ids[:0],
+        cluster_offsets=jnp.zeros_like(idx.cluster_offsets),
+        cluster_sizes=jnp.zeros_like(idx.cluster_sizes),
+        cap=0,
+        n_tokens=0,
+    )
+    with pytest.raises(ValueError, match="n_tokens == 0"):
+        Retriever.from_index(empty).plan(WarpSearchConfig(nprobe=4, k=5))
+    with pytest.raises(ValueError, match="n_tokens == 0"):
+        resolve_config(empty, WarpSearchConfig(nprobe=4, k=5))
+
+
+# ---- 2-shard shard_map parity (forced multi-device subprocess) ----
+
+TWO_SHARD_RAGGED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import dataclasses
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import (Retriever, WarpSearchConfig, IndexBuildConfig,
+                        build_sharded_index)
+from repro.data import make_corpus, make_queries
+
+corpus = make_corpus(n_docs=300, mean_doc_len=16, seed=0)
+q, qmask, rel = make_queries(corpus, n_queries=4, seed=1)
+sidx = build_sharded_index(corpus.emb, corpus.token_doc_ids, corpus.n_docs, 2,
+                           IndexBuildConfig(n_centroids=32, nbits=4, kmeans_iters=3))
+r = Retriever.from_index(sidx)
+base = WarpSearchConfig(nprobe=16, k=10, t_prime=1500, k_impute=32)
+for overrides in (dict(), dict(gather="fused")):
+    dense = r.plan(dataclasses.replace(base, **overrides))
+    ragged = r.plan(dataclasses.replace(base, layout="ragged", **overrides))
+    assert ragged.config.worklist_tiles >= 1
+    assert dense.n_shards == 2
+    for i in range(4):
+        a = dense.retrieve(q[i], qmask[i])
+        b = ragged.retrieve(q[i], qmask[i])
+        np.testing.assert_allclose(np.asarray(a.scores), np.asarray(b.scores),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_two_shard_ragged_parity_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run(
+        [sys.executable, "-c", TWO_SHARD_RAGGED_SCRIPT],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout
+
+
+# ---- benchmark-harness parity smoke (tier-1 layout-drift guard) ----
+
+
+def test_bench_parity_smoke_runs():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if root not in sys.path:
+        sys.path.insert(0, root)
+    from benchmarks import bench_parity
+
+    bench_parity.run()

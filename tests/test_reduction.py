@@ -182,6 +182,70 @@ def test_wide_key_path_matches_fast_path(seed, n, n_docs, q_max):
 @settings(max_examples=25, deadline=None)
 @given(
     seed=st.integers(0, 2**31 - 1),
+    n=st.integers(4, 300),
+    n_docs=st.integers(1, 10),
+    q_max=st.integers(1, 6),
+    wide=st.booleans(),
+)
+def test_segment_impl_parity_duplicate_heavy(seed, n, n_docs, q_max, wide):
+    """Ragged/duplicate-heavy parity between the two reduction impls,
+    covering BOTH sort paths: the int32 composite key and the wide two-key
+    lexicographic sort (``wide`` fakes a huge n_docs so the composite would
+    overflow — previously the segment impl had no parity test there).
+
+    Few docs + few qtokens over many entries maximizes duplicate
+    (doc, qtok) runs — exactly what a ragged worklist produces when one
+    document's tokens span several probed clusters. Top-k doc ids must be
+    bit-identical; scores may differ by summation order only
+    (``segment_sum`` scatter-adds in index order, ``associative_scan``
+    combines as a tree), so a few float32 ulps.
+    """
+    rng = np.random.default_rng(seed)
+    doc_ids = rng.integers(0, n_docs, n).astype(np.int32)
+    qtok_ids = rng.integers(0, q_max, n).astype(np.int32)
+    scores = rng.standard_normal(n).astype(np.float32)
+    # Duplicate-heavy score ties too: quantize a third of the entries.
+    ties = rng.random(n) < 0.33
+    scores[ties] = np.round(scores[ties], 1)
+    valid = rng.random(n) > 0.3
+    mse = (rng.standard_normal(q_max) * 0.1).astype(np.float32)
+    nd = (2**31 - 1) if wide else n_docs
+    if wide:
+        assert not composite_key_fits_int32(nd, q_max)
+    args = (
+        jnp.asarray(doc_ids), jnp.asarray(qtok_ids), jnp.asarray(scores),
+        jnp.asarray(valid), jnp.asarray(mse),
+    )
+    a = two_stage_reduce(*args, q_max=q_max, k=4, impl="scan", n_docs=nd)
+    b = two_stage_reduce(*args, q_max=q_max, k=4, impl="segment", n_docs=nd)
+    np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+    np.testing.assert_allclose(
+        np.asarray(a.scores), np.asarray(b.scores), rtol=0, atol=4e-6
+    )
+
+
+def test_pad_to_k_pads_short_candidate_streams():
+    """Flat-path contract: a statically short stream (ragged worklist bound
+    < k) pads with invalid entries instead of raising."""
+    args = (
+        jnp.asarray([3, 3, 5], jnp.int32),
+        jnp.asarray([0, 1, 0], jnp.int32),
+        jnp.asarray([0.5, 0.25, 0.1], jnp.float32),
+        jnp.asarray([True, True, True]),
+        jnp.zeros(2, jnp.float32),
+    )
+    with np.testing.assert_raises(ValueError):
+        two_stage_reduce(*args, q_max=2, k=5)
+    res = two_stage_reduce(*args, q_max=2, k=5, pad_to_k=True)
+    assert int(res.doc_ids[0]) == 3
+    np.testing.assert_allclose(float(res.scores[0]), 0.75, rtol=1e-6)
+    assert np.all(np.asarray(res.doc_ids[2:]) == -1)
+    assert np.all(np.asarray(res.scores[2:]) == -np.inf)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
     n=st.integers(4, 200),
     n_docs=st.integers(1, 30),
     q_max=st.integers(1, 8),
