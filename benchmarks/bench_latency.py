@@ -10,7 +10,12 @@ The decompression and scoring rows carry ``derived`` occupancy fields —
 (what the layout pays for), and ``sort_n`` (the reduction's lax.sort
 width) — so the ragged layout's win (compute ∝ real candidates instead of
 ``nprobe × cap``) is visible in the BENCH_latency.json trajectory, not
-just in wall-clock.
+just in wall-clock. The ``*_ragged_adaptive`` rows run the same stages
+under the query-adaptive bucket (the smallest ladder rung fitting the
+measured query's probe set) next to the static worst-case bound, and the
+per-tier plan snapshot records the bucket ladder and the chosen bucket —
+on the Zipf-routed tier the adaptive sort-N sits strictly below the
+static ragged one.
 """
 
 from __future__ import annotations
@@ -30,6 +35,7 @@ from repro.core.engine import (
     ragged_flat_candidates,
     resolve_config,
 )
+from repro.core import worklist
 from repro.core.reduction import two_stage_reduce
 from repro.core.warpselect import warp_select
 from repro.kernels import ops
@@ -79,18 +85,25 @@ def _stage_fns(index, config):
         doc_ids, valid = gather_doc_ids(index, probe_cids)
         return scores, doc_ids, valid
 
-    @jax.jit
-    def stage_decompress_ragged(q, probe_scores, probe_cids):
+    def make_stage_decompress_ragged(cfg_r):
         # Worklist build + flat fused scoring in one stage: the worklist is
-        # part of the ragged layout's cost and is timed with it.
-        return ragged_flat_candidates(
-            index, q, probe_scores, probe_cids,
-            dataclasses.replace(
-                config_ragged,
-                gather="fused",
-                executor="kernel" if ops.on_tpu() else "reference",
-            ),
-        )
+        # part of the ragged layout's cost and is timed with it. A factory
+        # so the same stage can run under the static worst-case bound and
+        # under the query-adaptive bucket.
+        @jax.jit
+        def stage(q, probe_scores, probe_cids):
+            return ragged_flat_candidates(
+                index, q, probe_scores, probe_cids,
+                dataclasses.replace(
+                    cfg_r,
+                    gather="fused",
+                    executor="kernel" if ops.on_tpu() else "reference",
+                ),
+            )
+
+        return stage
+
+    stage_decompress_ragged = make_stage_decompress_ragged(config_ragged)
 
     @jax.jit
     def stage_reduce(scores, doc_ids, valid, mse, qmask):
@@ -117,6 +130,7 @@ def _stage_fns(index, config):
         stage_decompress,
         stage_decompress_fused,
         stage_decompress_ragged,
+        make_stage_decompress_ragged,
         stage_reduce,
         stage_reduce_ragged,
         config_ragged,
@@ -129,7 +143,7 @@ def run() -> None:
     tok = jnp.zeros((1, 32), jnp.int32)
     tok_mask = jnp.ones((1, 32), bool)
 
-    for tier in ("nfcorpus_like", "lifestyle_like", "pooled_like"):
+    for tier in ("nfcorpus_like", "lifestyle_like", "pooled_like", "zipf_like"):
         corpus, index, q, qmask, rel = get_setup(tier)
         cfg = WarpSearchConfig(nprobe=32, k=100, t_prime=2000, k_impute=64)
         q0, m0 = jnp.asarray(q[0]), jnp.asarray(qmask[0])
@@ -141,8 +155,8 @@ def run() -> None:
         t_enc = time_fn(enc, tok, tok_mask)
 
         # --- stage breakdown (Fig. 9) ---
-        (s_sel, s_dec, s_dec_fused, s_dec_ragged, s_red, s_red_ragged,
-         cfg_ragged) = _stage_fns(index, cfg)
+        (s_sel, s_dec, s_dec_fused, s_dec_ragged, make_s_dec_ragged, s_red,
+         s_red_ragged, cfg_ragged) = _stage_fns(index, cfg)
         sel = s_sel(q0, m0)
         t_sel = time_fn(s_sel, q0, m0)
         dec = s_dec(q0, sel.probe_scores, sel.probe_cids)
@@ -152,9 +166,30 @@ def run() -> None:
         t_dec_ragged = time_fn(
             s_dec_ragged, q0, sel.probe_scores, sel.probe_cids
         )
+        # Query-adaptive bucket for the measured query: the smallest
+        # ladder rung that fits its actual probe tile demand.
+        tile = ops.resolve_tile_c(index.cap, cfg_ragged.tile_c, layout="ragged")
+        bucket = worklist.pick_bucket(
+            cfg_ragged.worklist_buckets,
+            worklist.needed_worklist_tiles(
+                worklist.probe_tile_counts(sel.probe_sizes, tile)
+            ),
+        )
+        cfg_bucket = dataclasses.replace(
+            cfg_ragged, worklist_tiles=bucket, worklist_buckets=None
+        )
+        s_dec_adaptive = make_s_dec_ragged(cfg_bucket)
+        rag_a = s_dec_adaptive(q0, sel.probe_scores, sel.probe_cids)
+        t_dec_adaptive = time_fn(
+            s_dec_adaptive, q0, sel.probe_scores, sel.probe_cids
+        )
         t_red = time_fn(s_red, dec[0], dec[1], dec[2], sel.mse, m0)
         t_red_ragged = time_fn(
             s_red_ragged, rag[0], rag[1], rag[2], rag[3], sel.mse, m0, q_max=qm
+        )
+        t_red_adaptive = time_fn(
+            s_red_ragged, rag_a[0], rag_a[1], rag_a[2], rag_a[3], sel.mse, m0,
+            q_max=qm,
         )
 
         # Slot occupancy: real candidates in the probed clusters vs what
@@ -163,8 +198,8 @@ def run() -> None:
             np.asarray(index.cluster_sizes)[np.asarray(sel.probe_cids)].sum()
         )
         dense_slots = qm * cfg.nprobe * index.cap
-        tile = ops.resolve_tile_c(index.cap, cfg_ragged.tile_c, layout="ragged")
         ragged_slots = qm * cfg_ragged.worklist_tiles * tile
+        adaptive_slots = qm * bucket * tile
 
         emit(f"latency/{tier}/query_encoding", t_enc, "stage")
         emit(f"latency/{tier}/candidate_generation", t_sel, "stage=warpselect")
@@ -185,6 +220,7 @@ def run() -> None:
             f"real_slots={real_slots};padded_slots={dense_slots};"
             f"speedup_vs_two_step={t_dec / max(t_dec_fused, 1e-12):.2f}x",
         )
+        ladder = ",".join(str(b) for b in cfg_ragged.worklist_buckets)
         emit(
             f"latency/{tier}/decompression_ragged",
             t_dec_ragged,
@@ -194,6 +230,17 @@ def run() -> None:
             f"occupancy={real_slots / ragged_slots:.3f};"
             f"slots_vs_dense={ragged_slots / dense_slots:.3f}x;"
             f"speedup_vs_two_step={t_dec / max(t_dec_ragged, 1e-12):.2f}x",
+        )
+        emit(
+            f"latency/{tier}/decompression_ragged_adaptive",
+            t_dec_adaptive,
+            f"stage=ragged_worklist_adaptive;impl={impl};tile_c={tile};"
+            f"bucket={bucket};static_bound={cfg_ragged.worklist_tiles};"
+            f"ladder={ladder};"
+            f"real_slots={real_slots};padded_slots={adaptive_slots};"
+            f"occupancy={real_slots / adaptive_slots:.3f};"
+            f"slots_vs_static_ragged={adaptive_slots / ragged_slots:.3f}x;"
+            f"slots_vs_dense={adaptive_slots / dense_slots:.3f}x",
         )
         emit(
             f"latency/{tier}/scoring",
@@ -206,6 +253,15 @@ def run() -> None:
             f"stage=two_stage_reduce;sort_n={ragged_slots};"
             f"sort_n_vs_dense={ragged_slots / dense_slots:.3f}x;"
             f"speedup_vs_dense_sort={t_red / max(t_red_ragged, 1e-12):.2f}x",
+        )
+        emit(
+            f"latency/{tier}/scoring_ragged_adaptive",
+            t_red_adaptive,
+            f"stage=two_stage_reduce;sort_n={adaptive_slots};"
+            f"bucket={bucket};"
+            f"sort_n_vs_static_ragged={adaptive_slots / ragged_slots:.3f}x;"
+            f"sort_n_vs_dense={adaptive_slots / dense_slots:.3f}x;"
+            f"speedup_vs_dense_sort={t_red / max(t_red_adaptive, 1e-12):.2f}x",
         )
 
         # --- end-to-end engines (Fig. 1 / Tables 2-3) ---
@@ -220,10 +276,16 @@ def run() -> None:
         plan_ragged = retriever.plan(
             dataclasses.replace(cfg, gather="fused", layout="ragged")
         )
+        # The ragged plan snapshot names the bucket ladder (describe())
+        # AND the bucket the adaptive dispatcher chose for the measured
+        # query, so the recorded numbers are reproducible per rung.
         PLANS[tier] = {
             "warp_e2e": plan.describe(),
             "warp_e2e_fused": plan_fused.describe(),
-            "warp_e2e_ragged": plan_ragged.describe(),
+            "warp_e2e_ragged": {
+                **plan_ragged.describe(),
+                "chosen_bucket": plan_ragged.adaptive_bucket(q0, m0),
+            },
         }
         f_warp = lambda: plan.retrieve(q0, m0)
         t_warp = time_fn(lambda: f_warp())

@@ -4,9 +4,12 @@ Not a timing benchmark: a small-index correctness gate that runs everywhere
 (no TPU needed — kernels go through interpret/reference paths) and fails
 loudly if the two layouts ever return different top-k doc ids, or if the
 ragged worklist stops sorting strictly fewer reduction entries than the
-dense ``[Q, nprobe, cap]`` grid. Wired into the default suite list and
-into tier-1 (tests/test_ragged_layout.py), so layout drift is caught
-without TPU hardware.
+dense ``[Q, nprobe, cap]`` grid. On the Zipf-routed tier it additionally
+pins the query-adaptive win: the dispatcher's chosen bucket (hence the
+reduction sort-N) must sit strictly below the static worst-case ragged
+bound for every smoke query. Wired into the default suite list and into
+tier-1 (tests/test_ragged_layout.py), so layout drift is caught without
+TPU hardware.
 """
 
 from __future__ import annotations
@@ -20,8 +23,8 @@ from benchmarks.common import emit, get_setup
 from repro.core import Retriever, WarpSearchConfig
 
 
-def run() -> None:
-    corpus, index, q, qmask, rel = get_setup("nfcorpus_like")
+def _check_tier(tier: str, *, require_adaptive_win: bool) -> None:
+    corpus, index, q, qmask, rel = get_setup(tier)
     retriever = Retriever.from_index(index)
     cfg = WarpSearchConfig(nprobe=32, k=100, t_prime=2000, k_impute=64)
     qm = q.shape[1]
@@ -34,28 +37,53 @@ def run() -> None:
         sort_n_dense = qm * dense.describe()["slots_per_qtoken"]
         sort_n_ragged = qm * ragged.describe()["slots_per_qtoken"]
         assert sort_n_ragged < sort_n_dense, (
-            f"ragged worklist ({sort_n_ragged} sort entries) must undercut "
-            f"the dense grid ({sort_n_dense}) on the smoke index"
+            f"{tier}: ragged worklist ({sort_n_ragged} sort entries) must "
+            f"undercut the dense grid ({sort_n_dense}) on the smoke index"
         )
+        tile = ragged.describe()["tile_c"]
+        static_bound = ragged.config.worklist_tiles
+        buckets = []
         for i in range(4):
             a = dense.retrieve(q[i], qmask[i])
             b = ragged.retrieve(q[i], qmask[i])
             np.testing.assert_array_equal(
                 np.asarray(a.doc_ids), np.asarray(b.doc_ids),
-                err_msg=f"layout drift: gather={gather}, query {i}",
+                err_msg=f"layout drift: tier={tier}, gather={gather}, query {i}",
             )
             np.testing.assert_allclose(
                 np.asarray(a.scores), np.asarray(b.scores),
                 rtol=1e-4, atol=1e-4,
             )
+            buckets.append(ragged.adaptive_bucket(q[i], qmask[i]))
         ab = dense.retrieve_batch(jnp.asarray(q[:2]), jnp.asarray(qmask[:2]))
         bb = ragged.retrieve_batch(jnp.asarray(q[:2]), jnp.asarray(qmask[:2]))
         np.testing.assert_array_equal(
             np.asarray(ab.doc_ids), np.asarray(bb.doc_ids)
         )
+        if require_adaptive_win:
+            # Zipf-routed clusters: every smoke query's adaptive bucket
+            # (hence its reduction sort-N) must undercut the static bound.
+            assert all(b is not None and b < static_bound for b in buckets), (
+                f"{tier}: adaptive buckets {buckets} must sit strictly "
+                f"below the static worklist bound {static_bound}"
+            )
+        sort_n_adaptive = (
+            qm * max(b for b in buckets if b is not None) * tile
+            if any(b is not None for b in buckets)
+            else sort_n_ragged
+        )
         emit(
-            f"parity/ragged_vs_dense/{gather}",
+            f"parity/ragged_vs_dense/{tier}/{gather}",
             0.0,
             f"ok;sort_n_ragged={sort_n_ragged};sort_n_dense={sort_n_dense};"
-            f"ratio={sort_n_ragged / sort_n_dense:.3f}",
+            f"ratio={sort_n_ragged / sort_n_dense:.3f};"
+            f"sort_n_adaptive={sort_n_adaptive};"
+            f"adaptive_buckets={buckets};static_bound={static_bound}",
         )
+
+
+def run() -> None:
+    # Balanced tier: parity + ragged-undercuts-dense. Zipf tier: the same,
+    # plus the adaptive bucket strictly below the static ragged bound.
+    _check_tier("nfcorpus_like", require_adaptive_win=False)
+    _check_tier("zipf_like", require_adaptive_win=True)

@@ -14,6 +14,11 @@ import json
 import os
 import time
 
+# Default suite order. Dataset tiers (benchmarks.common.SETUPS) include
+# the Zipf-skewed "zipf_like" tier: the parity suite asserts the
+# query-adaptive ragged bucket undercuts the static bound there, and the
+# latency suite records the bucket ladder + chosen bucket per tier in the
+# BENCH_latency.json plan snapshots.
 SUITES = ["parity", "index_size", "quality", "latency", "scaling", "roofline"]
 
 SNAPSHOT_PATH = os.path.join(

@@ -26,6 +26,7 @@ over ``model``.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -51,6 +52,7 @@ __all__ = [
     "stack_shards",
     "sharded_search",
     "make_sharded_search_fn",
+    "sharded_probe_sizes",
 ]
 
 
@@ -304,6 +306,44 @@ def make_sharded_search_fn(
         check_vma=False,
     )
     return jax.jit(fn)
+
+
+@functools.partial(jax.jit, static_argnames=("config", "query_batch"))
+def sharded_probe_sizes(
+    sidx: ShardedWarpIndex,
+    q: jax.Array,
+    qmask: jax.Array,
+    config: WarpSearchConfig,
+    query_batch: bool = False,
+) -> jax.Array:
+    """Per-shard WARP_SELECT probe sizes, outside ``shard_map``.
+
+    The adaptive ragged dispatcher must pick ONE worklist bucket before
+    entering the shard_map body (one program, no per-shard branching), so
+    it re-runs stage 1 here as a vmap over the stacked per-shard centroid
+    and cluster-size arrays — the same ``warp_select`` the body runs on
+    its local slice, hence the same probe selection — and resolves the
+    bucket as the max demand over shards. Returns probe sizes
+    ``i32[S, Q, nprobe]`` (``i32[S, B, Q, nprobe]`` with ``query_batch``).
+    The duplicated work is one centroid matmul + top-k per shard — small
+    next to decompression/reduction, and stage 2+3 are never re-run.
+    """
+
+    def per_shard(centroids, sizes):
+        def one(q_i, m_i):
+            return warp_select(
+                q_i,
+                centroids,
+                sizes,
+                nprobe=config.nprobe,
+                t_prime=config.t_prime,
+                k_impute=config.k_impute,
+                qmask=m_i,
+            ).probe_sizes
+
+        return jax.vmap(one)(q, qmask) if query_batch else one(q, qmask)
+
+    return jax.vmap(per_shard)(sidx.centroids, sidx.cluster_sizes)
 
 
 def resolve_sharded_config(

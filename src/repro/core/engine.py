@@ -34,6 +34,7 @@ from repro.core.reduction import TopKResult, two_stage_reduce
 from repro.core.types import WarpIndex, WarpSearchConfig
 from repro.core.warpselect import warp_select
 from repro.core.worklist import (
+    bucket_ladder,
     build_tile_worklist,
     worklist_bound,
     worklist_slot_positions,
@@ -50,31 +51,46 @@ __all__ = [
     "score_probed_clusters",
     "ragged_flat_candidates",
     "score_and_reduce",
+    "select_probes",
+    "finish_from_probes",
 ]
 
 
 def resolve_layout_fields(config: WarpSearchConfig, cluster_sizes, cap: int) -> WarpSearchConfig:
-    """Concretize ``layout="auto"`` and the ragged worklist bound.
+    """Concretize ``layout="auto"``, the ragged worklist bound, and the
+    adaptive bucket ladder.
 
     ``cluster_sizes`` may be [C] or a sharded [S, C] stack (the bound
     covers every shard). "auto" picks by measured padding waste: ragged
     wins when the worklist slot bound (sum of the nprobe largest clusters'
     tile counts, times tile_c) undercuts the dense ``nprobe * cap`` slots
-    per query token. Shared by the local and sharded resolvers so the two
-    paths cannot drift.
+    per query token. A ragged resolution also records the bucket ladder
+    (``core.worklist.bucket_ladder``) whose top rung is the static bound;
+    ``Retriever`` plans dispatch each retrieve to the smallest rung that
+    fits the actual probe set. Shared by the local and sharded resolvers
+    so the two paths cannot drift.
     """
     if config.layout == "dense":
-        if config.worklist_tiles is None:
+        if config.worklist_tiles is None and config.worklist_buckets is None:
             return config
-        return dataclasses.replace(config, worklist_tiles=None)
+        return dataclasses.replace(
+            config, worklist_tiles=None, worklist_buckets=None
+        )
     tile = ops.resolve_tile_c(cap, config.tile_c, layout="ragged")
     bound = worklist_bound(cluster_sizes, config.nprobe, tile)
     layout = config.layout
     if layout == "auto":
         layout = "ragged" if bound * tile < config.nprobe * cap else "dense"
     if layout == "dense":
-        return dataclasses.replace(config, layout="dense", worklist_tiles=None)
-    return dataclasses.replace(config, layout="ragged", worklist_tiles=bound)
+        return dataclasses.replace(
+            config, layout="dense", worklist_tiles=None, worklist_buckets=None
+        )
+    return dataclasses.replace(
+        config,
+        layout="ragged",
+        worklist_tiles=bound,
+        worklist_buckets=bucket_ladder(bound),
+    )
 
 
 def resolve_config(index: WarpIndex, config: WarpSearchConfig) -> WarpSearchConfig:
@@ -98,7 +114,11 @@ def resolve_config(index: WarpIndex, config: WarpSearchConfig) -> WarpSearchConf
         k_impute=config.resolved_k_impute(index.n_centroids),
         executor=config.resolved_executor(ops.on_tpu()),
     )
-    if config.layout == "dense" and config.worklist_tiles is None:
+    if (
+        config.layout == "dense"
+        and config.worklist_tiles is None
+        and config.worklist_buckets is None
+    ):
         # Skip the host-side cluster-size stats (and stay agnostic to
         # index kinds without a flat cluster_sizes array, e.g. segmented).
         return config
@@ -405,6 +425,49 @@ def score_and_reduce(
         impl=config.reduce_impl,
         n_docs=index.n_docs or None,
     )
+
+
+@functools.partial(jax.jit, static_argnames=("config", "query_batch"))
+def select_probes(index, q, qmask, config, query_batch: bool = False):
+    """Stage 1 alone (WARP_SELECT), jit'd per config.
+
+    ``Retriever``'s adaptive ragged dispatcher runs this first, picks the
+    worklist bucket from the probe sizes on the host, then finishes with
+    ``finish_from_probes`` compiled for that bucket — the probe set is
+    computed once, not re-derived per rung. ``query_batch`` maps over a
+    leading [B] query axis.
+    """
+
+    def one(q_i, m_i):
+        return warp_select(
+            q_i,
+            index.centroids,
+            index.cluster_sizes,
+            nprobe=config.nprobe,
+            t_prime=config.t_prime,
+            k_impute=config.k_impute,
+            qmask=m_i,
+        )
+
+    return jax.vmap(one)(q, qmask) if query_batch else one(q, qmask)
+
+
+@functools.partial(jax.jit, static_argnames=("config", "query_batch"))
+def finish_from_probes(index, q, qmask, sel, config, query_batch: bool = False) -> TopKResult:
+    """Stages 2+3 from a precomputed WARP_SELECT output, jit'd per config.
+
+    ``select_probes`` -> ``finish_from_probes`` composes to exactly
+    ``_search_one`` (same stage functions, same order), so adaptive
+    dispatch inherits the dense==ragged parity guarantees.
+    """
+
+    def one(q_i, m_i, sel_i):
+        return score_and_reduce(
+            index, q_i, m_i, sel_i.probe_scores, sel_i.probe_cids, sel_i.mse,
+            config, probe_sizes=sel_i.probe_sizes,
+        )
+
+    return jax.vmap(one)(q, qmask, sel) if query_batch else one(q, qmask, sel)
 
 
 @functools.partial(jax.jit, static_argnames=("config",))

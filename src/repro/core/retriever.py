@@ -31,8 +31,21 @@ same three exported stages (``warp_select`` -> ``score_probed_clusters`` ->
              [Q, nprobe, cap] grid vs flat tile worklist sized by the real
              candidates (auto = by measured padding waste at plan time)
 
+Ragged plans are **query-adaptive**: resolution records a bucket ladder
+(``core.worklist.bucket_ladder`` — ascending power-of-two worklist tile
+bounds topped by the static worst case) and every retrieve dispatches to
+the pipeline compiled for the smallest bucket that fits the query's actual
+probe set, so compute and the reduction's sort-N track the real candidate
+demand with no per-query recompilation. Bucket selection is a tiny
+host-side reduction over the WARP_SELECT probe sizes; on sharded indexes
+it resolves as the max over shards (the ``shard_map`` body stays one
+unbranched program), on segmented indexes over combined per-segment tile
+counts. Any fitting bucket yields bit-identical top-k doc ids (smaller
+buckets only trim all-padding tiles).
+
 Plans are cached per config, so repeated ``retrieve`` calls with the same
-config reuse the compiled pipeline.
+config reuse the compiled pipeline (per-bucket compilation is lazy and
+cached inside the plan).
 """
 
 from __future__ import annotations
@@ -42,9 +55,11 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import distributed as dist
 from repro.core import engine
+from repro.core import worklist as wl
 from repro.core.index import build_index
 from repro.core.reduction import TopKResult
 from repro.core.types import IndexBuildConfig, WarpIndex, WarpSearchConfig
@@ -73,6 +88,9 @@ class SearchPlan:
     _single: Callable[..., TopKResult] = dataclasses.field(repr=False)
     _batch: Callable[..., TopKResult] = dataclasses.field(repr=False)
     _index: Any = dataclasses.field(repr=False)
+    # Host-side bucket probe of the adaptive ragged dispatcher (None on
+    # dense / single-rung plans): (q, qmask) -> chosen worklist bucket.
+    _bucket_for: Any = dataclasses.field(repr=False, default=None)
 
     @property
     def t_prime(self) -> int:
@@ -95,6 +113,20 @@ class SearchPlan:
         if qmask is None:
             qmask = jnp.ones(q.shape[:2], bool)
         return self._batch(self._index, q, jnp.asarray(qmask, bool))
+
+    def adaptive_bucket(self, q: jax.Array, qmask: jax.Array | None = None) -> int | None:
+        """The worklist bucket the adaptive dispatcher would run this
+        single query with (q f32[Q, D]) — the smallest ladder rung that
+        fits the query's actual probe tile demand. ``None`` on plans with
+        no adaptive dispatch (dense layout, or a single-rung ladder).
+        Benchmarks snapshot this next to ``describe()`` so recorded
+        numbers name the bucket that ran."""
+        if self._bucket_for is None:
+            return None
+        q = jnp.asarray(q, jnp.float32)
+        if qmask is None:
+            qmask = jnp.ones(q.shape[:-1], bool)
+        return self._bucket_for(q, jnp.asarray(qmask, bool))
 
     def describe(self) -> dict:
         """Snapshot of every resolved pipeline choice (JSON-serializable) —
@@ -128,6 +160,12 @@ class SearchPlan:
             "layout": cfg.layout,
             "tile_c": tile,
             "worklist_tiles": cfg.worklist_tiles,
+            # The adaptive bucket ladder (None on dense plans); the top
+            # rung equals worklist_tiles. The bucket actually chosen is
+            # per-query — see ``adaptive_bucket``.
+            "worklist_buckets": (
+                list(cfg.worklist_buckets) if cfg.worklist_buckets else None
+            ),
             "slots_per_qtoken": slots,
             "dense_slots_per_qtoken": dense_slots,
             "expected_slot_occupancy": round(
@@ -276,14 +314,16 @@ class Retriever:
             return cached
         resolved = self._resolve(config)
         self._validate(resolved)
+        single, bucket_for = self._compile_single(resolved)
         plan = SearchPlan(
             config=resolved,
             n_shards=self.n_shards,
             backend=jax.default_backend(),
             index_geometry=self._geometry(),
-            _single=self._compile_single(resolved),
+            _single=single,
             _batch=self._compile_batch(resolved),
             _index=self.index,
+            _bucket_for=bucket_for,
         )
         self._plans[config] = plan
         self._plans[resolved] = plan
@@ -312,17 +352,56 @@ class Retriever:
         if self.is_sharded:
             return dist.resolve_sharded_config(self.index, config)
         if self.is_segmented:
-            # Delta segments each carry their own CSR geometry; a shared
-            # static worklist bound across segments is future work.
-            if config.layout == "ragged":
-                raise ValueError(
-                    "layout='ragged' is not supported on a segmented index "
-                    "yet; compact() the delta segments into the base first, "
-                    "or plan with layout='dense'"
-                )
-            if config.layout == "auto":
-                config = dataclasses.replace(config, layout="dense")
+            return self._resolve_segmented(config)
         return engine.resolve_config(self.index, config)
+
+    def _resolve_segmented(self, config: WarpSearchConfig) -> WarpSearchConfig:
+        """Segmented analogue of ``engine.resolve_config``: t' from the
+        total token count across segments, and the ragged worklist bound
+        from the COMBINED per-segment CSR geometries — one flat worklist
+        spans base + deltas, so a probed cluster's tile count is the sum
+        of its per-segment tile counts (``worklist_bound_segmented``).
+        "auto" compares that bound against the dense segmented cost,
+        ``nprobe * sum_s cap_s`` slots per query token (each segment pads
+        to its own cap on the dense path).
+        """
+        idx = self.index
+        if idx.n_tokens == 0:
+            raise ValueError(
+                "segmented index has n_tokens == 0 — nothing to retrieve. "
+                "Build or load a non-empty index before planning a search."
+            )
+        config = dataclasses.replace(
+            config,
+            t_prime=config.resolved_t_prime(idx.n_tokens),
+            k_impute=config.resolved_k_impute(idx.n_centroids),
+            executor=config.resolved_executor(ops.on_tpu()),
+        )
+        if config.layout == "dense":
+            if config.worklist_tiles is None and config.worklist_buckets is None:
+                return config
+            return dataclasses.replace(
+                config, worklist_tiles=None, worklist_buckets=None
+            )
+        tile = ops.resolve_tile_c(idx.cap, config.tile_c, layout="ragged")
+        bound = wl.worklist_bound_segmented(
+            idx.per_segment_cluster_sizes(), config.nprobe, tile
+        )
+        dense_slots = config.nprobe * sum(s.cap for s in idx.segments)
+        layout = config.layout
+        if layout == "auto":
+            layout = "ragged" if bound * tile < dense_slots else "dense"
+        if layout == "dense":
+            return dataclasses.replace(
+                config, layout="dense", worklist_tiles=None,
+                worklist_buckets=None,
+            )
+        return dataclasses.replace(
+            config,
+            layout="ragged",
+            worklist_tiles=bound,
+            worklist_buckets=wl.bucket_ladder(bound),
+        )
 
     def _validate(self, cfg: WarpSearchConfig) -> None:
         idx = self.index
@@ -369,24 +448,161 @@ class Retriever:
             geo["n_segments"] = idx.n_segments
         return geo
 
-    def _compile_single(self, cfg: WarpSearchConfig) -> Callable[..., TopKResult]:
-        if self.is_sharded:
-            return dist.make_sharded_search_fn(
-                self.index, cfg, self.mesh, self.shard_axes, query_batch=False
-            )
-        if self.is_segmented:
-            from repro.store.segments import make_segmented_search_fn
+    @staticmethod
+    def _is_adaptive(cfg: WarpSearchConfig) -> bool:
+        return (
+            cfg.layout == "ragged"
+            and cfg.worklist_buckets is not None
+            and len(cfg.worklist_buckets) > 1
+        )
 
-            return make_segmented_search_fn(self.index, cfg, query_batch=False)
-        return lambda index, q, qmask: engine._search_one(index, q, qmask, cfg)
+    def _compile_single(self, cfg: WarpSearchConfig):
+        """-> (search fn, bucket probe | None) for single-query dispatch."""
+        if self._is_adaptive(cfg):
+            return self._adaptive_dispatch(cfg, query_batch=False)
+        return self._static_fn(cfg, query_batch=False), None
 
     def _compile_batch(self, cfg: WarpSearchConfig) -> Callable[..., TopKResult]:
+        if self._is_adaptive(cfg):
+            # The batch dispatcher picks one bucket covering the whole
+            # batch (max demand over batch elements): one program per call.
+            return self._adaptive_dispatch(cfg, query_batch=True)[0]
+        return self._static_fn(cfg, query_batch=True)
+
+    def _static_fn(self, cfg: WarpSearchConfig, *, query_batch: bool):
         if self.is_sharded:
             return dist.make_sharded_search_fn(
-                self.index, cfg, self.mesh, self.shard_axes, query_batch=True
+                self.index, cfg, self.mesh, self.shard_axes,
+                query_batch=query_batch,
             )
         if self.is_segmented:
             from repro.store.segments import make_segmented_search_fn
 
-            return make_segmented_search_fn(self.index, cfg, query_batch=True)
-        return lambda index, q, qmask: engine._search_many(index, q, qmask, cfg)
+            return make_segmented_search_fn(
+                self.index, cfg, query_batch=query_batch
+            )
+        if query_batch:
+            return lambda index, q, qmask: engine._search_many(index, q, qmask, cfg)
+        return lambda index, q, qmask: engine._search_one(index, q, qmask, cfg)
+
+    def _adaptive_dispatch(self, cfg: WarpSearchConfig, *, query_batch: bool):
+        """Build the query-adaptive ragged dispatcher.
+
+        Returns (run fn, bucket probe). Per call the probe computes the
+        actual worklist tile demand of the selected probe set (host-side,
+        from WARP_SELECT probe metadata), picks the smallest ladder rung
+        that fits, and runs the pipeline compiled for that rung —
+        compilation per rung is lazy and cached, so steady state is one
+        cheap stage-1 (or none: the local path reuses its probe output)
+        plus one compiled call.
+        """
+        buckets = cfg.worklist_buckets
+        tile = ops.resolve_tile_c(self.index.cap, cfg.tile_c, layout="ragged")
+        # memory="full" builds one flat worklist over all Q query tokens
+        # (demand amortizes across tokens); "scan_qtokens" builds one per
+        # token, so the bucket must fit the worst single token.
+        amortized = cfg.memory == "full"
+        # The sharded/segmented pre-passes re-run stage 1 in a SEPARATE
+        # XLA program from the search body; a last-ulp centroid-score
+        # difference could flip a top-nprobe tie and shift the true demand
+        # by ~one cluster swap, which amortizes to about one tile over Q.
+        # One tile of headroom makes a boundary-straddling rung choice
+        # safe; the local path reuses the body's own probe output and
+        # needs none.
+        PREPASS_SLACK = 1
+
+        def bucket_cfg(b: int) -> WarpSearchConfig:
+            return dataclasses.replace(
+                cfg, worklist_tiles=b, worklist_buckets=None
+            )
+
+        def lazy_bucket_runner(bucket_for, make_fn):
+            """Shared dispatch shape of the pre-pass paths: pick the rung,
+            lazily compile-and-cache its pipeline, run it."""
+            cache: dict = {}
+
+            def run(index, q, qmask):
+                b = bucket_for(q, qmask)
+                fn = cache.get(b)
+                if fn is None:
+                    fn = cache[b] = make_fn(b)
+                return fn(index, q, qmask)
+
+            return run, bucket_for
+
+        if self.is_sharded:
+
+            def bucket_for(q, qmask):
+                # One bucket for all shards (max demand): the shard_map
+                # body is a single program and stays unbranched.
+                sizes = dist.sharded_probe_sizes(
+                    self.index, q, qmask, cfg, query_batch
+                )
+                needed = wl.needed_worklist_tiles(
+                    wl.probe_tile_counts(sizes, tile), amortized=amortized
+                )
+                return wl.pick_bucket(buckets, needed + PREPASS_SLACK)
+
+            return lazy_bucket_runner(
+                bucket_for,
+                lambda b: dist.make_sharded_search_fn(
+                    self.index, bucket_cfg(b), self.mesh, self.shard_axes,
+                    query_batch=query_batch,
+                ),
+            )
+
+        if self.is_segmented:
+            from repro.store.segments import (
+                make_segmented_search_fn,
+                segmented_probe_cids,
+            )
+
+            idx = self.index
+            combined_sizes = idx.combined_cluster_sizes()
+            # Combined per-cluster tile demand: one flat worklist spans
+            # the segments, so a probed cluster costs the SUM of its
+            # per-segment tile counts.
+            per_seg = idx.per_segment_cluster_sizes()
+            cluster_tiles = ((per_seg + tile - 1) // tile).sum(axis=0)
+            centroids = idx.base.centroids
+
+            def bucket_for(q, qmask):
+                cids = segmented_probe_cids(
+                    centroids, combined_sizes, q, qmask, cfg, query_batch
+                )
+                # The segmented ragged path always builds the full-Q
+                # worklist (no scan_qtokens variant), so demand amortizes.
+                needed = wl.needed_worklist_tiles(
+                    cluster_tiles[np.asarray(cids)], amortized=True
+                )
+                return wl.pick_bucket(buckets, needed + PREPASS_SLACK)
+
+            return lazy_bucket_runner(
+                bucket_for,
+                lambda b: make_segmented_search_fn(
+                    idx, bucket_cfg(b), query_batch=query_batch
+                ),
+            )
+
+        # Local path: stage 1 runs ONCE (select_probes), the bucket is
+        # read off its probe sizes, and stages 2+3 finish under the
+        # bucket's static bound — no duplicated work at all.
+        def bucket_from_sel(sel):
+            needed = wl.needed_worklist_tiles(
+                wl.probe_tile_counts(sel.probe_sizes, tile),
+                amortized=amortized,
+            )
+            return wl.pick_bucket(buckets, needed)
+
+        def bucket_for(q, qmask):
+            sel = engine.select_probes(self.index, q, qmask, cfg, query_batch)
+            return bucket_from_sel(sel)
+
+        def run(index, q, qmask):
+            sel = engine.select_probes(index, q, qmask, cfg, query_batch)
+            b = bucket_from_sel(sel)
+            return engine.finish_from_probes(
+                index, q, qmask, sel, bucket_cfg(b), query_batch
+            )
+
+        return run, bucket_for

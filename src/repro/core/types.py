@@ -115,10 +115,17 @@ class WarpSearchConfig:
               grid steps). Must be a positive multiple of 8 (TPU sublane
               quantum) when given.
 
-    ``worklist_tiles`` is a RESOLVED field like ``t_prime``: the static
-    per-query-token worklist tile bound, derived from index statistics by
-    ``engine.resolve_config`` / ``Retriever.plan`` when layout="ragged".
-    Callers never set it directly.
+    ``worklist_tiles`` and ``worklist_buckets`` are RESOLVED fields like
+    ``t_prime``, derived from index statistics by ``engine.resolve_config``
+    / ``Retriever.plan`` when layout="ragged"; callers never set them
+    directly. ``worklist_tiles`` is the static worst-case per-query-token
+    worklist tile bound; ``worklist_buckets`` is the adaptive bucket
+    ladder (``core.worklist.bucket_ladder``) — ascending power-of-two tile
+    bounds topped by ``worklist_tiles`` — from which ``Retriever`` plans
+    dispatch each retrieve to the smallest bucket that fits the query's
+    actual probe set (compiled once per rung, no per-query recompilation).
+    The engine's jit'd stages read only ``worklist_tiles``; dispatchers
+    rewrite it per call from the ladder.
 
     The booleans ``use_kernel`` / ``scan_qtokens`` / ``fused_gather`` are
     deprecated shims: passing them emits ``DeprecationWarning`` and rewrites
@@ -140,8 +147,10 @@ class WarpSearchConfig:
     reduce_impl: str = "scan"  # "scan" | "segment" (see reduction.py)
     sum_impl: str = "gather"  # "gather" | "lut" (byte-LUT; see kernels/ref.py)
     # Resolved by engine.resolve_config when layout="ragged" (static
-    # per-qtoken worklist tile bound); never set by callers.
+    # per-qtoken worklist tile bound + adaptive bucket ladder); never set
+    # by callers.
     worklist_tiles: int | None = None
+    worklist_buckets: tuple[int, ...] | None = None
     # Deprecated boolean shims (None = not passed). Mapped in __post_init__.
     use_kernel: bool | None = None
     scan_qtokens: bool | None = None
@@ -171,6 +180,14 @@ class WarpSearchConfig:
         _check_choice("layout", self.layout, LAYOUT_STRATEGIES)
         _check_choice("reduce_impl", self.reduce_impl, REDUCE_IMPLS)
         _check_choice("sum_impl", self.sum_impl, SUM_IMPLS)
+        if self.worklist_buckets is not None and not isinstance(
+            self.worklist_buckets, tuple
+        ):
+            # Normalize to a tuple so resolved configs stay hashable (they
+            # are jit static args and plan-cache keys).
+            object.__setattr__(
+                self, "worklist_buckets", tuple(self.worklist_buckets)
+            )
         if self.tile_c is not None and (self.tile_c < 8 or self.tile_c % 8):
             raise ValueError(
                 f"WarpSearchConfig.tile_c={self.tile_c} must be a positive "

@@ -4,27 +4,76 @@ Every dense stage downstream of WARP_SELECT is shaped ``[Q, nprobe, cap]``
 where ``cap`` is the *global max* cluster size — the Pallas grid, the
 gathered doc-id tensors, and the reduction's global sort all pay for
 padding slots that are masked out. Cluster-size skew is structural in
-routed multi-vector indexes (CITADEL; XTR-style top-k' retrieval inherits
-it), so the mean cluster is typically 60–75% of ``cap`` *before* tile
-rounding. The paper's engine (§4.4–4.5) instead iterates exactly the
-tokens in each probed cluster's stride.
+routed multi-vector indexes (CITADEL's dynamic lexical routing is built
+around it; XTR-style top-k' retrieval inherits it), so the mean cluster is
+typically 60–75% of ``cap`` *before* tile rounding — and on Zipf-routed
+real corpora far less. The paper's engine (§4.4–4.5) instead iterates
+exactly the tokens in each probed cluster's stride.
 
 This module is the TPU-shaped analogue of that pointer-chasing loop: the
 selected probes are flattened into a **tile worklist** — per-(query-token,
 probe) tile counts ``ceil(size / tile_c)`` prefix-summed into a flat,
-statically-bounded list of ``tile_c``-row tiles, each entry carrying the
-scalar-prefetchable ``(qtoken, tile row start, valid rows, probe score)``.
-A 1-D grid over worklist tiles then does compute proportional to the real
-candidate count (rounded up to tiles), and the downstream reduction sorts
-``W * tile_c`` flat slots instead of ``Q * nprobe * cap_pad``.
+statically-bounded list of ``tile_c``-row tiles. A 1-D grid over worklist
+tiles then does compute proportional to the real candidate count (rounded
+up to tiles), and the downstream reduction sorts ``W * tile_c`` flat slots
+instead of ``Q * nprobe * cap_pad``.
 
-The static bound is derived from index statistics at plan time
-(``worklist_bound``): a query token probes ``nprobe`` *distinct* clusters,
-so its tile count is at most the sum of the ``nprobe`` largest clusters'
-tile counts — far tighter than ``nprobe * ceil(cap / tile_c)`` under skew.
-Worklist entries beyond the true total are padding tiles with
-``nvalid == 0``; the kernel early-exits on them (``pl.when``) and the
-reduction drops their slots via the valid mask.
+Worklist entry layout
+---------------------
+Each of the ``W = n_qtokens * tiles_per_qtoken`` entries describes one
+``tile_c``-row tile of one probed cluster run and carries four (five on
+segmented indexes) scalar-prefetchable fields:
+
+======== ======== ==========================================================
+field    dtype    meaning
+======== ======== ==========================================================
+row0     i32[W]   CSR row of the tile's slot 0 — *segment-local* when a
+                  ``seg`` array is present, global otherwise
+nvalid   i32[W]   valid rows in this tile; ``0`` marks a padding tile (the
+                  kernel early-exits, the reduction's mask drops its slots)
+qtok     i32[W]   owning query token (selects the v-table block)
+pscore   f32[W]   centroid probe score ``S_cq`` of the cluster (added to
+                  every valid slot's residual sum, Eq. 5)
+seg      i32[W]   owning segment of the tile's rows (``None`` on
+                  single-geometry indexes) — selects which segment's
+                  ``packed_codes`` / ``token_doc_ids`` array ``row0``
+                  indexes into
+======== ======== ==========================================================
+
+Entries are query-token-major (all of qtoken 0's tiles, then qtoken 1's,
+…), each probed cluster contributing ``ceil(size / tile_c)`` consecutive
+tiles; on a segmented index each probed cluster contributes one run *per
+segment* that holds rows of it. Entries beyond the true total are padding
+tiles with ``nvalid == 0``.
+
+Static bounds and the bucket ladder
+-----------------------------------
+The worklist length must be static under jit. Two bounds exist:
+
+- ``worklist_bound`` — the data-independent worst case, derived from index
+  statistics at plan time: a query token probes ``nprobe`` *distinct*
+  clusters, so its tile count is at most the sum of the ``nprobe`` largest
+  clusters' tile counts (``worklist_bound_segmented`` is the analogue over
+  per-segment CSR geometries: per-cluster tile counts are summed across
+  segments first). Far tighter than ``nprobe * ceil(cap / tile_c)`` under
+  skew, but still a worst case: on Zipf-routed corpora most queries probe
+  mostly-small clusters and use a fraction of it.
+
+- the **bucket ladder** (``bucket_ladder``) — a small ascending tuple of
+  power-of-two tile counts topped by the static worst case, resolved into
+  ``WarpSearchConfig.worklist_buckets`` at plan time. At retrieve time the
+  dispatcher computes the *actual* tile demand of the selected probes
+  (``needed_worklist_tiles`` over the WARP_SELECT probe sizes — a tiny
+  host-side reduction) and runs the pipeline compiled for the smallest
+  bucket that fits (``pick_bucket``). Each rung is an ordinary static
+  shape, compiled once and cached, so compute and the reduction's sort-N
+  track the query's real probe set with NO per-query recompilation. The
+  top rung *is* the static bound, so a fitting bucket always exists.
+
+Exactness: any bucket ``>= needed`` yields a worklist whose non-padding
+entries are identical — smaller buckets only trim all-padding tiles — so
+top-k doc ids are invariant across rungs (scores agree to float32
+summation order; the reduction's scan tree depends on sort length).
 """
 
 from __future__ import annotations
@@ -39,8 +88,19 @@ __all__ = [
     "TileWorklist",
     "build_tile_worklist",
     "worklist_bound",
+    "worklist_bound_segmented",
     "worklist_slot_positions",
+    "bucket_ladder",
+    "probe_tile_counts",
+    "needed_worklist_tiles",
+    "pick_bucket",
 ]
+
+# Default number of rungs in the adaptive bucket ladder (incl. the static
+# worst-case top rung). Each rung that a workload actually hits compiles
+# one pipeline variant, so the ladder is kept short; unused rungs cost
+# nothing (compilation is lazy, keyed by the resolved config).
+DEFAULT_BUCKET_RUNGS = 4
 
 
 class TileWorklist(NamedTuple):
@@ -48,13 +108,16 @@ class TileWorklist(NamedTuple):
 
     All arrays are length ``W = n_qtokens * tiles_per_qtoken`` (the static
     bound); entries past the true tile count are padding with
-    ``nvalid == 0``.
+    ``nvalid == 0``. See the module docstring for the per-field meaning.
+    ``seg`` is ``None`` on single-geometry indexes; on segmented indexes it
+    names the segment whose arrays ``row0`` indexes into.
     """
 
-    row0: jax.Array  # i32[W] global packed-codes row of the tile's slot 0
+    row0: jax.Array  # i32[W] packed-codes row of the tile's slot 0
     nvalid: jax.Array  # i32[W] valid slots in this tile (0 => padding tile)
     qtok: jax.Array  # i32[W] owning query token (0 on padding tiles)
     pscore: jax.Array  # f32[W] centroid probe score S_cq of the cluster
+    seg: jax.Array | None = None  # i32[W] owning segment (segmented only)
 
 
 def worklist_bound(cluster_sizes, nprobe: int, tile_c: int) -> int:
@@ -74,6 +137,97 @@ def worklist_bound(cluster_sizes, nprobe: int, tile_c: int) -> int:
     return max(1, int(tiles[:nprobe].sum()))
 
 
+def worklist_bound_segmented(
+    per_segment_sizes, nprobe: int, tile_c: int
+) -> int:
+    """Static per-query-token tile bound for a segmented index.
+
+    ``per_segment_sizes`` is ``[S, C]`` — one cluster-size row per segment
+    over the SAME centroid space (base + deltas). Unlike the sharded
+    ``[S, C]`` case (max over shards: each shard runs its own worklist),
+    a segmented search runs ONE worklist spanning every segment, so a
+    probed cluster contributes ``sum_s ceil(size_s / tile_c)`` tiles and
+    the bound is the top-``nprobe`` sum of those *combined* tile counts.
+    """
+    sizes = np.asarray(per_segment_sizes, np.int64)
+    if sizes.ndim != 2:
+        raise ValueError(
+            f"per_segment_sizes must be [n_segments, n_centroids], "
+            f"got shape {sizes.shape}"
+        )
+    tiles = ((sizes + tile_c - 1) // tile_c).sum(axis=0)  # [C] combined
+    tiles = -np.sort(-tiles)
+    return max(1, int(tiles[:nprobe].sum()))
+
+
+def bucket_ladder(bound: int, *, max_rungs: int = DEFAULT_BUCKET_RUNGS) -> tuple[int, ...]:
+    """Ascending ladder of worklist tile bounds topped by ``bound``.
+
+    Rungs below the top are powers of two (halving from the largest power
+    of two strictly below ``bound``), at most ``max_rungs`` total — e.g.
+    ``bound=100`` -> ``(16, 32, 64, 100)``. The dispatcher picks the
+    smallest rung that fits the query's actual tile demand; the top rung
+    is the static worst case, so every demand fits somewhere.
+    """
+    if bound <= 1 or max_rungs <= 1:
+        return (max(1, bound),)
+    rungs = [bound]
+    p = 1 << (bound - 1).bit_length() - 1  # largest power of two < bound
+    while len(rungs) < max_rungs and p >= 1:
+        rungs.append(p)
+        p //= 2
+    return tuple(sorted(rungs))
+
+
+def probe_tile_counts(probe_sizes, tile_c: int) -> np.ndarray:
+    """Per-probe tile counts ``ceil(size / tile_c)`` as a host array.
+
+    ``probe_sizes`` is the WARP_SELECT probe metadata
+    (``WarpSelectOut.probe_sizes``), any leading batch/shard dims —
+    ``[..., Q, nprobe]``.
+    """
+    sizes = np.asarray(probe_sizes, np.int64)
+    return (sizes + tile_c - 1) // tile_c
+
+
+def needed_worklist_tiles(tiles, *, amortized: bool = True) -> int:
+    """Actual per-query-token tile demand of a selected probe set.
+
+    ``tiles`` is ``[..., Q, nprobe]`` per-probe tile counts
+    (``probe_tile_counts``, or combined-across-segments counts on a
+    segmented index); leading dims are batch and/or shard.
+
+    With ``amortized`` (the ``memory="full"`` layout) the worklist is one
+    flat list over all Q query tokens, so the demand is
+    ``ceil(total_tiles / Q)`` — per-query-token slack is shared. With
+    ``amortized=False`` (``memory="scan_qtokens"`` builds one worklist per
+    scan step) the demand is the max single-token tile count. Either way
+    the max over leading dims is returned: one static bucket must cover
+    every batch element / shard (the shard_map body is one program).
+    """
+    t = np.asarray(tiles, np.int64)
+    per_qtok = t.sum(axis=-1)  # [..., Q]
+    if amortized:
+        qm = per_qtok.shape[-1]
+        need = -(-per_qtok.sum(axis=-1) // max(1, qm))
+    else:
+        need = per_qtok
+    return max(1, int(need.max()) if need.size else 1)
+
+
+def pick_bucket(buckets: tuple[int, ...], needed: int) -> int:
+    """Smallest ladder rung that fits ``needed`` tiles per query token.
+
+    The top rung is the static worst-case bound, which any realizable
+    probe set fits by construction; it is also the fallback, so a caller
+    holding a stale ladder can never under-allocate below the static path.
+    """
+    for b in buckets:
+        if b >= needed:
+            return b
+    return buckets[-1]
+
+
 def build_tile_worklist(
     starts: jax.Array,
     sizes: jax.Array,
@@ -81,16 +235,24 @@ def build_tile_worklist(
     *,
     tile_c: int,
     tiles_per_qtoken: int,
+    seg: jax.Array | None = None,
 ) -> TileWorklist:
     """Flatten [Q, P] probes into a tile worklist of static length
     ``Q * tiles_per_qtoken``.
 
     starts/sizes i32[Q, P] (CSR row start / true size of each probed
-    cluster), probe_scores f32[Q, P]. Probes are laid out query-token-major
-    (all of qtoken 0's tiles, then qtoken 1's, ...), each cluster
-    contributing ``ceil(size / tile_c)`` consecutive tiles; empty clusters
+    cluster run), probe_scores f32[Q, P]. Probes are laid out query-token-
+    major (all of qtoken 0's tiles, then qtoken 1's, ...), each cluster
+    run contributing ``ceil(size / tile_c)`` consecutive tiles; empty runs
     contribute none. ``tiles_per_qtoken`` must be a valid bound
-    (``worklist_bound``) or tiles are silently truncated.
+    (``worklist_bound`` / a fitting bucket) or tiles are silently
+    truncated.
+
+    ``seg`` (optional i32[Q, P]) tags each probe run with the segment its
+    rows live in; the per-tile segment id rides along as
+    ``TileWorklist.seg`` so one flat worklist can span base + delta CSR
+    geometries (``P`` is then ``nprobe * n_segments``, each probed cluster
+    expanded into its per-segment runs).
     """
     qm, p = starts.shape
     w = qm * tiles_per_qtoken
@@ -116,11 +278,16 @@ def build_tile_worklist(
     nvalid = jnp.where(used, nvalid, 0)
     qtok = jnp.where(used, e // p, 0)
     pscore = jnp.where(used, flat_pscores[e], 0.0)
+    seg_out = None
+    if seg is not None:
+        flat_seg = seg.reshape(-1).astype(jnp.int32)
+        seg_out = jnp.where(used, flat_seg[e], 0).astype(jnp.int32)
     return TileWorklist(
         row0=jnp.where(used, row0, 0).astype(jnp.int32),
         nvalid=nvalid.astype(jnp.int32),
         qtok=qtok.astype(jnp.int32),
         pscore=pscore.astype(jnp.float32),
+        seg=seg_out,
     )
 
 
@@ -132,6 +299,9 @@ def worklist_slot_positions(
     Returns (pos i32[W * tile_c] clamped into [0, n_tokens), valid
     bool[W * tile_c]). Clamp floor is 0 so an empty index can never
     produce a wraparound (-1) gather; all its slots are invalid anyway.
+    On segmented worklists the positions are segment-local and the caller
+    clamps per segment length instead (``n_tokens`` here is the single-
+    geometry token count).
     """
     lane = jnp.arange(tile_c, dtype=jnp.int32)
     pos = wl.row0[:, None] + lane[None, :]

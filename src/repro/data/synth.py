@@ -7,6 +7,17 @@ noise, and queries are perturbed copies of tokens from a designated
 "relevant" document — giving a non-trivial nearest-neighbor structure that
 exercises the same failure modes (cluster boundary effects, imputation
 error) the paper's datasets do.
+
+``topic_skew`` adds the heavy-tailed routing structure of real corpora:
+topic popularity follows a Zipf law (P(topic r) ∝ r^-skew), so the
+k-means clusters the index builds over these embeddings inherit the skew —
+a few head clusters hold a large share of the tokens while the tail stays
+small. This is the regime CITADEL's dynamic lexical routing and XTR's
+token-retrieval analysis describe, and the one where query-adaptive ragged
+worklists beat the static worst-case bound: the static bound must cover a
+query probing the head clusters, while most queries probe mostly-tail
+clusters and need a fraction of it. The default ``topic_skew=0`` keeps the
+historical balanced behavior (uniform topics) for existing tiers/tests.
 """
 
 from __future__ import annotations
@@ -45,12 +56,22 @@ def make_corpus(
     mean_doc_len: int = 24,
     n_topics: int = 32,
     topic_strength: float = 2.0,
+    topic_skew: float = 0.0,
     seed: int = 0,
 ) -> SynthCorpus:
+    """``topic_skew > 0`` draws each document's topic from a Zipf law
+    (P(topic r) ∝ (r+1)^-skew) instead of uniformly, so index cluster
+    sizes become heavy-tailed like skew-routed real corpora; 0 (default)
+    keeps balanced topics."""
     rng = np.random.default_rng(seed)
     topics = _normalize(rng.standard_normal((n_topics, dim), dtype=np.float32))
     doc_lens = np.maximum(4, rng.poisson(mean_doc_len, n_docs)).astype(np.int32)
-    topic_of_doc = rng.integers(0, n_topics, n_docs).astype(np.int32)
+    if topic_skew > 0.0:
+        p = np.arange(1, n_topics + 1, dtype=np.float64) ** -topic_skew
+        p /= p.sum()
+        topic_of_doc = rng.choice(n_topics, n_docs, p=p).astype(np.int32)
+    else:
+        topic_of_doc = rng.integers(0, n_topics, n_docs).astype(np.int32)
 
     n_tokens = int(doc_lens.sum())
     token_doc_ids = np.repeat(np.arange(n_docs, dtype=np.int32), doc_lens)

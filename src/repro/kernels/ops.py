@@ -26,6 +26,7 @@ __all__ = [
     "fused_gather_selective_sum",
     "ragged_selective_sum",
     "ragged_fused_gather_selective_sum",
+    "segmented_ragged_fused_gather_selective_sum",
     "resolve_tile_c",
     "embedding_bag",
     "on_tpu",
@@ -233,6 +234,82 @@ def ragged_fused_gather_selective_sum(
         nbits=nbits, dim=dim, n_tokens=n_tokens, tile_c=tile_c,
         interpret=not on_tpu(),
     )
+
+
+def segmented_ragged_fused_gather_selective_sum(
+    packed_list: tuple[jax.Array, ...],
+    row0: jax.Array,
+    nvalid: jax.Array,
+    seg: jax.Array,
+    qtok: jax.Array,
+    pscore: jax.Array,
+    v: jax.Array,
+    *,
+    nbits: int,
+    dim: int,
+    tile_c: int,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Single-pass worklist probe + decompression + scoring across segments.
+
+    ``packed_list`` holds each segment's resident ``u8[N_s, PB]`` codes
+    (base first, deltas in append order); worklist arrays
+    row0/nvalid/seg/qtok i32[W] + pscore f32[W] (``core.worklist`` with
+    per-probe segment runs), v f32[Q, D, 2^b] -> flat scores
+    f32[W * tile_c] (invalid slots zeroed).
+
+    Kernel path: the ragged Pallas kernel is per-resident-array, so the
+    worklist is replayed once per segment with other segments' entries
+    masked to ``nvalid = 0`` — those tiles hit the kernel's ``pl.when``
+    early-exit, so real work stays proportional to the true tile count and
+    only grid-step overhead scales with ``n_segments``. Each slot is valid
+    in exactly one segment and masked slots are exactly 0, so the
+    per-segment outputs sum to the combined result. Kernel-vs-reference
+    routing is PER SEGMENT: a delta smaller than one code tile scores via
+    the jnp reference without de-optimizing the (possibly huge) base;
+    b=8 or an empty worklist fall back entirely (same rules as the
+    single-geometry dispatch).
+
+    A single-segment call degenerates to
+    ``ragged_fused_gather_selective_sum`` exactly.
+    """
+    _check_packable_dim(dim, nbits, byte_wise=use_kernel)
+    if len(packed_list) == 1:
+        return ragged_fused_gather_selective_sum(
+            packed_list[0], row0, nvalid, qtok, pscore, v,
+            nbits=nbits, dim=dim, tile_c=tile_c,
+            n_tokens=packed_list[0].shape[0], use_kernel=use_kernel,
+        )
+    if (
+        not use_kernel
+        or nbits == 8  # 256 select-accumulate unrolls: ref lowers better
+        or row0.shape[0] == 0
+    ):
+        return ref.segmented_ragged_fused_gather_score(
+            packed_list, row0, nvalid, seg, qtok, pscore, v,
+            nbits=nbits, dim=dim, tile_c=tile_c,
+        )
+    out = jnp.zeros((row0.shape[0] * tile_c,), jnp.float32)
+    pscore_f32 = pscore.astype(jnp.float32)
+    for s, codes in enumerate(packed_list):
+        if codes.shape[0] == 0:
+            continue  # empty segment: owns no worklist entries
+        nvalid_s = jnp.where(seg == s, nvalid, 0)
+        if codes.shape[0] < tile_c:
+            # Sub-tile segment (e.g. a tiny fresh delta): reference path
+            # for THIS segment only; masked slots are exactly 0 either
+            # way, so the sum stays the combined result.
+            out = out + ref.ragged_fused_gather_score(
+                codes, row0, nvalid_s, qtok, pscore_f32, v,
+                nbits=nbits, dim=dim, tile_c=tile_c,
+            )
+            continue
+        out = out + ragged_fused_gather_score_kernel_call(
+            codes, row0, nvalid_s, qtok, pscore_f32, v,
+            nbits=nbits, dim=dim, n_tokens=codes.shape[0], tile_c=tile_c,
+            interpret=not on_tpu(),
+        )
+    return out
 
 
 def embedding_bag(

@@ -22,6 +22,8 @@ __all__ = [
     "fused_reduce_scores",
     "fused_gather_score",
     "ragged_fused_gather_score",
+    "segmented_ragged_gather_codes",
+    "segmented_ragged_fused_gather_score",
 ]
 
 
@@ -219,6 +221,77 @@ def ragged_fused_gather_score(
         wl, tile_c=tile_c, n_tokens=packed_codes.shape[0]
     )
     gathered = packed_codes[pos]  # [W * tile_c, PB]
+    qtok_slot = jnp.repeat(qtok, tile_c)
+    scores = ragged_selective_sum(gathered, qtok_slot, v, nbits=nbits, dim=dim)
+    scores = scores + jnp.repeat(pscore, tile_c)
+    return jnp.where(valid, scores, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_c",))
+def segmented_ragged_gather_codes(
+    packed_list: tuple[jax.Array, ...],
+    row0: jax.Array,
+    nvalid: jax.Array,
+    seg: jax.Array,
+    *,
+    tile_c: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Gather a segmented worklist's code rows into one flat stream.
+
+    ``packed_list`` holds each segment's resident ``u8[N_s, PB]`` codes;
+    worklist entries carry *segment-local* ``row0`` plus the owning ``seg``
+    id (``core.worklist``). Per segment the slot positions are clamped
+    into that segment's row range (floor 0, same rule as
+    ``worklist_slot_positions``) and the right segment's rows are selected
+    per slot — returns (codes u8[W * tile_c, PB], valid bool[W * tile_c]).
+    Shared by the segmented materialize path and the fused oracle so slot
+    semantics have exactly one definition.
+    """
+    w = row0.shape[0]
+    pb = packed_list[0].shape[1]
+    lane = jnp.arange(tile_c, dtype=jnp.int32)
+    pos = row0[:, None] + lane[None, :]  # [W, tile_c] segment-local
+    valid = lane[None, :] < nvalid[:, None]
+    gathered = jnp.zeros((w, tile_c, pb), jnp.uint8)
+    for s, codes in enumerate(packed_list):
+        n_s = codes.shape[0]
+        if n_s == 0:
+            continue  # empty segment holds no worklist entries
+        pos_s = jnp.clip(pos, 0, n_s - 1)
+        own = (seg == s)[:, None, None]
+        gathered = jnp.where(own, codes[pos_s], gathered)
+    return gathered.reshape(w * tile_c, pb), valid.reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("nbits", "dim", "tile_c"))
+def segmented_ragged_fused_gather_score(
+    packed_list: tuple[jax.Array, ...],
+    row0: jax.Array,
+    nvalid: jax.Array,
+    seg: jax.Array,
+    qtok: jax.Array,
+    pscore: jax.Array,
+    v: jax.Array,
+    *,
+    nbits: int,
+    dim: int,
+    tile_c: int,
+) -> jax.Array:
+    """Semantics oracle for segmented ragged worklist scoring.
+
+    The segmented analogue of ``ragged_fused_gather_score``: one flat
+    worklist spans the base plus delta segments, each entry's ``seg``
+    naming the segment whose (segment-local) ``row0`` rows it scores.
+    Returns flat f32[W * tile_c] where slot (w, c) is
+    ``pscore[w] + sum_d v[qtok[w], d, code_d]`` of row ``row0[w] + c`` of
+    segment ``seg[w]`` when ``c < nvalid[w]`` and exactly 0 otherwise.
+    Scoring goes through ``ragged_selective_sum`` (same d-chunk order as
+    the dense path) so a slot's score is bit-identical across layouts and
+    segmentations.
+    """
+    gathered, valid = segmented_ragged_gather_codes(
+        packed_list, row0, nvalid, seg, tile_c=tile_c
+    )
     qtok_slot = jnp.repeat(qtok, tile_c)
     scores = ragged_selective_sum(gathered, qtok_slot, v, nbits=nbits, dim=dim)
     scores = scores + jnp.repeat(pscore, tile_c)

@@ -24,11 +24,41 @@ with scores equal up to floating-point summation order (the reduction's
 ``associative_scan`` tree shape depends on the candidate-array length, so
 the last ulp can differ) — that identity is the subsystem's correctness
 anchor (tests/test_segments.py).
+
+Execution layouts over base + deltas
+------------------------------------
+``make_segmented_search_fn`` compiles one of two stage-2+3 shapes behind
+the shared stage-1 above:
+
+- ``layout="dense"`` runs ``engine.score_and_reduce`` per segment (each
+  padded to its own ``[Q, nprobe, cap_s]``) and merges the per-segment
+  top-k lists with doc-id offsets — ``nprobe * sum_s cap_s`` candidate
+  slots per query token.
+
+- ``layout="ragged"`` builds ONE flat tile worklist spanning every
+  segment (``core.worklist``): each probed cluster contributes its
+  per-segment CSR runs as consecutive tiles, every entry carrying a
+  segment id next to its segment-local ``row0``, so gather, implicit
+  decompression, and the reduction's sort all run once over flat slots
+  sized by the real candidate count. Doc ids are globalized per slot
+  (segment-local id + ``doc_starts[seg]``), so a single
+  ``two_stage_reduce`` over all slots replaces the per-segment merge.
+  Exactness carries over unchanged: the probe set, t' crossing, and m_i
+  come from the one shared stage-1; a document's tokens all live in one
+  segment, so its (doc, qtoken) runs are intact in the flat stream and
+  the reduction's segmented max/sum see exactly the same values — top-k
+  doc ids match the dense segmented path bit-for-bit, scores to float32
+  summation order. Token-less segments are filtered out at compile time
+  (they contribute no worklist runs). ``memory="scan_qtokens"`` bounds
+  only the dense stages; the segmented ragged path always builds the
+  full-Q worklist (its working set is already proportional to the real
+  candidates).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 import os
 import shutil
 
@@ -37,9 +67,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine, kmeans, quantization
-from repro.core.reduction import TopKResult
+from repro.core.reduction import TopKResult, two_stage_reduce
 from repro.core.types import WarpIndex, WarpSearchConfig
 from repro.core.warpselect import warp_select
+from repro.core.worklist import build_tile_worklist
+from repro.kernels import ops, ref
 from repro.store import format as store_format
 
 __all__ = [
@@ -49,6 +81,7 @@ __all__ = [
     "load_segmented",
     "compact",
     "make_segmented_search_fn",
+    "segmented_probe_cids",
 ]
 
 
@@ -107,6 +140,14 @@ class SegmentedWarpIndex:
         for d in self.deltas:
             sizes += np.asarray(d.cluster_sizes, np.int32)
         return jnp.asarray(sizes)
+
+    def per_segment_cluster_sizes(self) -> np.ndarray:
+        """Host ``[n_segments, n_centroids]`` cluster sizes (base first) —
+        the geometry the segmented ragged worklist bound is derived from
+        (``core.worklist.worklist_bound_segmented``)."""
+        return np.stack(
+            [np.asarray(s.cluster_sizes, np.int64) for s in self.segments]
+        )
 
     def nbytes(self) -> int:
         """Resident footprint; centroid/codec tables are shared references
@@ -247,19 +288,75 @@ def load_segmented(
 # ---------------------------------------------------------------------------
 
 
+@functools.partial(jax.jit, static_argnames=("config", "query_batch"))
+def segmented_probe_cids(
+    centroids: jax.Array,
+    combined_sizes: jax.Array,
+    q: jax.Array,
+    qmask: jax.Array,
+    config: WarpSearchConfig,
+    query_batch: bool = False,
+) -> jax.Array:
+    """Stage-1 probe centroid ids alone, for adaptive bucket selection.
+
+    Runs the same ``warp_select`` the segmented search body runs — frozen
+    base centroids, COMBINED cluster sizes — so the returned
+    ``probe_cids`` (i32[Q, nprobe]; leading [B] with ``query_batch``) name
+    exactly the clusters the search will expand into per-segment worklist
+    runs. The dispatcher gathers precomputed combined per-cluster tile
+    counts at these ids to size the worklist bucket on the host.
+    """
+
+    def one(q_i, m_i):
+        return warp_select(
+            q_i,
+            centroids,
+            combined_sizes,
+            nprobe=config.nprobe,
+            t_prime=config.t_prime,
+            k_impute=config.k_impute,
+            qmask=m_i,
+        ).probe_cids
+
+    return jax.vmap(one)(q, qmask) if query_batch else one(q, qmask)
+
+
+def _segmented_slot_doc_ids(
+    segments, doc_starts, row0, nvalid, seg_ids, *, tile_c: int
+) -> jax.Array:
+    """Global doc id of every worklist slot: the owning segment's
+    ``token_doc_ids`` row plus that segment's global doc-id offset.
+    Invalid slots return an arbitrary (masked) id."""
+    lane = jnp.arange(tile_c, dtype=jnp.int32)
+    pos = row0[:, None] + lane[None, :]  # [W, tile_c] segment-local
+    out = jnp.zeros(pos.shape, jnp.int32)
+    for s, (sub, start) in enumerate(zip(segments, doc_starts)):
+        n_s = sub.token_doc_ids.shape[0]
+        if n_s == 0:
+            continue
+        pos_s = jnp.clip(pos, 0, n_s - 1)
+        ids = sub.token_doc_ids[pos_s].astype(jnp.int32) + jnp.int32(start)
+        out = jnp.where((seg_ids == s)[:, None], ids, out)
+    return out.reshape(-1)
+
+
 def make_segmented_search_fn(
     seg: SegmentedWarpIndex, config: WarpSearchConfig, *, query_batch: bool
 ):
     """Compile the staged pipeline over base + deltas.
 
     One shared ``warp_select`` over the frozen centroids with COMBINED
-    cluster sizes (global t' crossing -> global m_i), then per-segment
-    stage 2+3 with segment-local doc ids, then a top-k merge with doc-id
-    offsets. ``config`` must be resolved (concrete t'/k_impute/executor).
+    cluster sizes (global t' crossing -> global m_i), then stage 2+3 in
+    the config's layout — per-segment dense grids merged with doc-id
+    offsets, or one flat segmented tile worklist reduced globally (see
+    the module docstring) — ``config`` must be resolved (concrete
+    t'/k_impute/executor; ``worklist_tiles`` when ragged).
     """
     doc_starts = seg.doc_starts
     combined_sizes = seg.combined_cluster_sizes()
     cfg = config
+    if cfg.layout == "ragged":
+        return _make_segmented_ragged_fn(seg, cfg, query_batch=query_batch)
 
     def single(segments, sizes, q, qmask):
         sel = warp_select(
@@ -305,6 +402,122 @@ def make_segmented_search_fn(
 
     def run(index: SegmentedWarpIndex, q, qmask):
         return compiled(index.segments, combined_sizes, q, qmask)
+
+    return run
+
+
+def _make_segmented_ragged_fn(
+    seg: SegmentedWarpIndex, cfg: WarpSearchConfig, *, query_batch: bool
+):
+    """Ragged stage 2+3 over base + deltas: one flat segmented worklist.
+
+    Each probed cluster is expanded into its per-segment CSR runs (the
+    probe axis becomes ``nprobe * n_active_segments``, empty runs
+    contribute no tiles), scored in one pass, doc ids globalized per slot,
+    and reduced by a single ``two_stage_reduce`` — no per-segment merge.
+    """
+    if cfg.worklist_tiles is None:
+        raise ValueError(
+            "segmented layout='ragged' needs a resolved worklist bound "
+            "(worklist_tiles); plan through Retriever.plan"
+        )
+    combined_sizes = seg.combined_cluster_sizes()
+    # Token-less segments contribute no candidates and would break the
+    # per-segment gathers; the active set (and its doc-id offsets) is
+    # static plan-time structure.
+    active_ids = tuple(
+        i for i, s in enumerate(seg.segments) if s.n_tokens > 0
+    )
+    active_starts = tuple(seg.doc_starts[i] for i in active_ids)
+    base = seg.base
+    tile = ops.resolve_tile_c(seg.cap, cfg.tile_c, layout="ragged")
+    n_docs_total = seg.n_docs
+    nprobe = cfg.nprobe
+
+    def single(segments, sizes, q, qmask):
+        qm = q.shape[0]
+        n_seg = len(segments)
+        sel = warp_select(
+            q,
+            segments[0].centroids,
+            sizes,
+            nprobe=nprobe,
+            t_prime=cfg.t_prime,
+            k_impute=cfg.k_impute,
+            qmask=qmask,
+        )
+        # Per-probe segment runs: [Q, P] cluster probes -> [Q, P * S]
+        # (starts are segment-local CSR rows; the seg tag picks the array).
+        starts = jnp.stack(
+            [s.cluster_offsets[sel.probe_cids] for s in segments], axis=-1
+        ).astype(jnp.int32)  # [Q, P, S]
+        run_sizes = jnp.stack(
+            [s.cluster_sizes[sel.probe_cids] for s in segments], axis=-1
+        ).astype(jnp.int32)
+        seg_ids = jnp.broadcast_to(
+            jnp.arange(n_seg, dtype=jnp.int32), (qm, nprobe, n_seg)
+        )
+        pscores = jnp.broadcast_to(
+            sel.probe_scores[..., None], (qm, nprobe, n_seg)
+        )
+        wl = build_tile_worklist(
+            starts.reshape(qm, -1),
+            run_sizes.reshape(qm, -1),
+            pscores.reshape(qm, -1),
+            seg=seg_ids.reshape(qm, -1),
+            tile_c=tile,
+            tiles_per_qtoken=cfg.worklist_tiles,
+        )
+        qtok_slot = jnp.repeat(wl.qtok, tile)
+        packed_list = tuple(s.packed_codes for s in segments)
+        v = q[:, :, None] * segments[0].bucket_weights[None, None, :]
+        if cfg.gather == "fused":
+            scores = ops.segmented_ragged_fused_gather_selective_sum(
+                packed_list, wl.row0, wl.nvalid, wl.seg, wl.qtok, wl.pscore,
+                v, nbits=base.nbits, dim=base.dim, tile_c=tile,
+                use_kernel=cfg.wants_kernel,
+            )
+            lane = jnp.arange(tile, dtype=jnp.int32)
+            slot_valid = (lane[None, :] < wl.nvalid[:, None]).reshape(-1)
+        else:
+            codes, slot_valid = ref.segmented_ragged_gather_codes(
+                packed_list, wl.row0, wl.nvalid, wl.seg, tile_c=tile
+            )
+            res = ops.ragged_selective_sum(
+                codes, qtok_slot, v,
+                nbits=base.nbits, dim=base.dim, impl=cfg.sum_impl,
+            )
+            scores = jnp.where(
+                slot_valid, res + jnp.repeat(wl.pscore, tile), 0.0
+            )
+        doc = _segmented_slot_doc_ids(
+            segments, active_starts, wl.row0, wl.nvalid, wl.seg, tile_c=tile
+        )
+        valid = slot_valid & qmask[qtok_slot]
+        return two_stage_reduce(
+            doc,
+            qtok_slot,
+            scores,
+            valid,
+            sel.mse,
+            q_max=qm,
+            k=cfg.k,
+            impl=cfg.reduce_impl,
+            n_docs=n_docs_total or None,
+            pad_to_k=True,
+        )
+
+    if query_batch:
+        body = lambda segments, sizes, q, qmask: jax.vmap(
+            lambda qq, mm: single(segments, sizes, qq, mm)
+        )(q, qmask)
+    else:
+        body = single
+    compiled = jax.jit(body)
+
+    def run(index: SegmentedWarpIndex, q, qmask):
+        active = tuple(index.segments[i] for i in active_ids)
+        return compiled(active, combined_sizes, q, qmask)
 
     return run
 

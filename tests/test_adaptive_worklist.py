@@ -1,0 +1,415 @@
+"""Query-adaptive ragged worklists (bucket ladder) and segmented ragged
+execution: ladder/demand unit oracles, forced-bucket parity (every rung
+that fits returns dense-identical top-k), adaptive dispatch across
+local/batched/sharded surfaces, and segmented dense==ragged parity."""
+
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    IndexBuildConfig,
+    Retriever,
+    WarpSearchConfig,
+    build_index,
+)
+from repro.core import engine
+from repro.core.worklist import (
+    bucket_ladder,
+    needed_worklist_tiles,
+    pick_bucket,
+    probe_tile_counts,
+    worklist_bound,
+    worklist_bound_segmented,
+)
+from repro.data import make_corpus, make_queries
+from repro.kernels import ops
+
+
+# ---- ladder / demand oracles ----
+
+
+def test_bucket_ladder_shape():
+    assert bucket_ladder(100) == (16, 32, 64, 100)
+    assert bucket_ladder(64) == (8, 16, 32, 64)
+    assert bucket_ladder(1) == (1,)
+    assert bucket_ladder(2) == (1, 2)
+    assert bucket_ladder(100, max_rungs=2) == (64, 100)
+    assert bucket_ladder(7, max_rungs=8) == (1, 2, 4, 7)
+    for bound in (3, 17, 256, 999):
+        ladder = bucket_ladder(bound)
+        assert ladder[-1] == bound  # top rung IS the static bound
+        assert list(ladder) == sorted(set(ladder))  # ascending, unique
+
+
+def test_needed_tiles_amortized_vs_scan():
+    # Two query tokens: 10 and 2 tiles. Amortized (one flat worklist over
+    # Q) needs ceil(12/2)=6; per-token (scan_qtokens) needs max=10.
+    tiles = np.array([[4, 6], [1, 1]])
+    assert needed_worklist_tiles(tiles, amortized=True) == 6
+    assert needed_worklist_tiles(tiles, amortized=False) == 10
+    # Leading dims (batch / shard): max over them.
+    stacked = np.stack([tiles, tiles * 2])
+    assert needed_worklist_tiles(stacked, amortized=True) == 12
+    assert needed_worklist_tiles(stacked, amortized=False) == 20
+    assert needed_worklist_tiles(np.zeros((2, 3)), amortized=True) == 1
+
+
+def test_probe_tile_counts_and_pick_bucket():
+    sizes = np.array([[0, 1, 32, 33]])
+    np.testing.assert_array_equal(
+        probe_tile_counts(sizes, 32), [[0, 1, 1, 2]]
+    )
+    ladder = (16, 32, 64, 100)
+    assert pick_bucket(ladder, 1) == 16
+    assert pick_bucket(ladder, 16) == 16
+    assert pick_bucket(ladder, 17) == 32
+    assert pick_bucket(ladder, 99) == 100
+    assert pick_bucket(ladder, 100) == 100
+    assert pick_bucket(ladder, 10_000) == 100  # top rung is the fallback
+
+
+def test_worklist_bound_segmented_sums_across_segments():
+    # One cluster split 40/30 across two segments: 2 + 1 tiles (tile 32),
+    # NOT ceil(70/32) = 3 of a combined geometry and NOT max-over-rows
+    # (the sharded rule).
+    per_seg = np.array([[40, 10], [30, 0]])
+    assert worklist_bound_segmented(per_seg, nprobe=1, tile_c=32) == 3
+    assert worklist_bound_segmented(per_seg, nprobe=2, tile_c=32) == 4
+    assert worklist_bound(per_seg, nprobe=1, tile_c=32) == 2  # sharded rule
+    with pytest.raises(ValueError, match="n_segments"):
+        worklist_bound_segmented(np.array([40, 10]), nprobe=1, tile_c=32)
+
+
+# ---- zipf fixture: skewed clusters so the adaptive bound has headroom ----
+
+
+@pytest.fixture(scope="module")
+def zipf_setup():
+    corpus = make_corpus(
+        n_docs=600, mean_doc_len=16, seed=11,
+        topic_skew=1.8, n_topics=192, topic_strength=4.0,
+    )
+    idx = build_index(
+        corpus.emb, corpus.token_doc_ids, corpus.n_docs,
+        IndexBuildConfig(n_centroids=96, nbits=4, kmeans_iters=3),
+    )
+    q, qmask, rel = make_queries(corpus, n_queries=6, seed=12)
+    return corpus, idx, q, qmask
+
+
+BASE = dict(nprobe=16, k=20, t_prime=1000, k_impute=32)
+
+
+# ---- adaptive dispatch: local ----
+
+
+@pytest.mark.parametrize("gather", ["materialize", "fused"])
+def test_adaptive_matches_dense_and_undercuts_static(zipf_setup, gather):
+    _, idx, q, qmask = zipf_setup
+    r = Retriever.from_index(idx)
+    dense = r.plan(WarpSearchConfig(**BASE, gather=gather))
+    ragged = r.plan(WarpSearchConfig(**BASE, gather=gather, layout="ragged"))
+    static_bound = ragged.config.worklist_tiles
+    assert ragged.config.worklist_buckets[-1] == static_bound
+    below = 0
+    for i in range(4):
+        a = dense.retrieve(q[i], qmask[i])
+        b = ragged.retrieve(q[i], qmask[i])
+        np.testing.assert_array_equal(
+            np.asarray(a.doc_ids), np.asarray(b.doc_ids)
+        )
+        np.testing.assert_allclose(
+            np.asarray(a.scores), np.asarray(b.scores), rtol=1e-4, atol=1e-4
+        )
+        bucket = ragged.adaptive_bucket(q[i], qmask[i])
+        assert bucket in ragged.config.worklist_buckets
+        below += bucket < static_bound
+    # Zipf-skewed clusters: the adaptive bucket must beat the static
+    # worst case on every probe set of this fixture.
+    assert below == 4
+
+
+def test_adaptive_batched_matches_dense(zipf_setup):
+    _, idx, q, qmask = zipf_setup
+    r = Retriever.from_index(idx)
+    dense = r.plan(WarpSearchConfig(**BASE))
+    ragged = r.plan(WarpSearchConfig(**BASE, layout="ragged"))
+    a = dense.retrieve_batch(q[:4], qmask[:4])
+    b = ragged.retrieve_batch(q[:4], qmask[:4])
+    np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+
+
+def test_adaptive_scan_qtokens_uses_per_token_demand(zipf_setup):
+    _, idx, q, qmask = zipf_setup
+    r = Retriever.from_index(idx)
+    cfg = WarpSearchConfig(**BASE, memory="scan_qtokens")
+    dense = r.plan(cfg)
+    ragged = r.plan(dataclasses.replace(cfg, layout="ragged"))
+    a = dense.retrieve(q[0], qmask[0])
+    b = ragged.retrieve(q[0], qmask[0])
+    np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+    # scan_qtokens builds one worklist per token: its bucket must cover
+    # the worst single token, >= the amortized full-layout bucket.
+    full = r.plan(WarpSearchConfig(**BASE, layout="ragged"))
+    assert ragged.adaptive_bucket(q[0], qmask[0]) >= full.adaptive_bucket(
+        q[0], qmask[0]
+    )
+
+
+def test_forced_bucket_parity_and_dispatch_floor(zipf_setup):
+    """Every ladder rung that fits the query's demand returns
+    dense-identical top-k; rungs below the demand are never dispatched
+    (the chosen bucket always fits)."""
+    _, idx, q, qmask = zipf_setup
+    r = Retriever.from_index(idx)
+    dense = r.plan(WarpSearchConfig(**BASE))
+    ragged = r.plan(WarpSearchConfig(**BASE, layout="ragged"))
+    cfg = ragged.config
+    tile = ops.resolve_tile_c(idx.cap, cfg.tile_c, layout="ragged")
+    q0, m0 = jnp.asarray(q[0]), jnp.asarray(qmask[0])
+    sel = engine.select_probes(idx, q0, m0, cfg)
+    needed = needed_worklist_tiles(probe_tile_counts(sel.probe_sizes, tile))
+    chosen = ragged.adaptive_bucket(q[0], qmask[0])
+    assert chosen == pick_bucket(cfg.worklist_buckets, needed)
+    want = np.asarray(dense.retrieve(q[0], qmask[0]).doc_ids)
+    fitting = 0
+    for bucket in cfg.worklist_buckets:
+        if bucket < needed:
+            # An under-sized rung would truncate real tiles; the
+            # dispatcher must never choose it.
+            assert chosen > bucket
+            continue
+        fitting += 1
+        forced = dataclasses.replace(
+            cfg, worklist_tiles=bucket, worklist_buckets=None
+        )
+        got = engine._search_one(idx, q0, m0, forced)
+        np.testing.assert_array_equal(
+            want, np.asarray(got.doc_ids),
+            err_msg=f"forced bucket {bucket} diverged from dense",
+        )
+    assert fitting >= 2  # the ladder must expose real adaptivity here
+
+
+def test_single_rung_ladder_plans_static(zipf_setup):
+    """A degenerate ladder (one rung) must not build a dispatcher."""
+    _, idx, q, qmask = zipf_setup
+    r = Retriever.from_index(idx)
+    plan = r.plan(WarpSearchConfig(nprobe=1, k=5, t_prime=500, layout="ragged"))
+    if len(plan.config.worklist_buckets) == 1:
+        assert plan.adaptive_bucket(q[0], qmask[0]) is None
+    res = plan.retrieve(q[0], qmask[0])
+    assert res.doc_ids.shape == (5,)
+
+
+# ---- segmented ragged execution ----
+
+
+@pytest.fixture(scope="module")
+def segmented_setup():
+    from repro.store.segments import SegmentedWarpIndex, quantize_segment
+
+    corpus = make_corpus(
+        n_docs=420, mean_doc_len=16, seed=21,
+        topic_skew=1.3, n_topics=64, topic_strength=3.0,
+    )
+    tdi = corpus.token_doc_ids
+    cut1, cut2 = 300, 370  # base + two deltas
+    base_sel = tdi < cut1
+    base = build_index(
+        corpus.emb[base_sel], tdi[base_sel], cut1,
+        IndexBuildConfig(n_centroids=48, nbits=4, kmeans_iters=3),
+    )
+    d1_sel = (tdi >= cut1) & (tdi < cut2)
+    d1 = quantize_segment(
+        base, corpus.emb[d1_sel], tdi[d1_sel] - cut1, cut2 - cut1
+    )
+    d2_sel = tdi >= cut2
+    d2 = quantize_segment(
+        base, corpus.emb[d2_sel], tdi[d2_sel] - cut2, corpus.n_docs - cut2
+    )
+    seg = SegmentedWarpIndex(
+        base=base, deltas=(d1, d2), doc_starts=(0, cut1, cut2)
+    )
+    q, qmask, rel = make_queries(corpus, n_queries=4, seed=22)
+    return corpus, seg, q, qmask
+
+
+SEG_VARIANTS = [
+    dict(),
+    dict(gather="fused"),
+    dict(gather="fused", executor="kernel"),
+    dict(sum_impl="lut"),
+    dict(reduce_impl="segment"),
+]
+
+
+@pytest.mark.parametrize(
+    "overrides", SEG_VARIANTS, ids=[str(v) for v in SEG_VARIANTS]
+)
+def test_segmented_ragged_matches_dense(segmented_setup, overrides):
+    _, seg, q, qmask = segmented_setup
+    r = Retriever.from_index(seg)
+    dense = r.plan(WarpSearchConfig(**BASE, **overrides))
+    ragged = r.plan(WarpSearchConfig(**BASE, layout="ragged", **overrides))
+    assert ragged.config.worklist_tiles >= 1
+    for i in range(2):
+        a = dense.retrieve(q[i], qmask[i])
+        b = ragged.retrieve(q[i], qmask[i])
+        np.testing.assert_array_equal(
+            np.asarray(a.doc_ids), np.asarray(b.doc_ids)
+        )
+        np.testing.assert_allclose(
+            np.asarray(a.scores), np.asarray(b.scores), rtol=1e-4, atol=1e-4
+        )
+
+
+def test_segmented_ragged_batched_and_adaptive(segmented_setup):
+    _, seg, q, qmask = segmented_setup
+    r = Retriever.from_index(seg)
+    dense = r.plan(WarpSearchConfig(**BASE))
+    ragged = r.plan(WarpSearchConfig(**BASE, layout="ragged"))
+    a = dense.retrieve_batch(q[:3], qmask[:3])
+    b = ragged.retrieve_batch(q[:3], qmask[:3])
+    np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+    bucket = ragged.adaptive_bucket(q[0], qmask[0])
+    if bucket is not None:
+        assert bucket in ragged.config.worklist_buckets
+        assert bucket <= ragged.config.worklist_tiles
+
+
+def test_segmented_ragged_bound_matches_oracle(segmented_setup):
+    _, seg, *_ = segmented_setup
+    r = Retriever.from_index(seg)
+    plan = r.plan(WarpSearchConfig(**BASE, layout="ragged"))
+    tile = ops.resolve_tile_c(seg.cap, None, layout="ragged")
+    want = worklist_bound_segmented(
+        seg.per_segment_cluster_sizes(), BASE["nprobe"], tile
+    )
+    assert plan.config.worklist_tiles == want
+    assert plan.config.worklist_buckets[-1] == want
+    d = plan.describe()
+    assert d["layout"] == "ragged" and d["n_segments"] == 3
+
+
+def test_segmented_auto_concretizes(segmented_setup):
+    _, seg, *_ = segmented_setup
+    r = Retriever.from_index(seg)
+    auto = r.plan(WarpSearchConfig(**BASE, layout="auto")).config
+    assert auto.layout in ("dense", "ragged")
+    tile = ops.resolve_tile_c(seg.cap, None, layout="ragged")
+    bound = worklist_bound_segmented(
+        seg.per_segment_cluster_sizes(), BASE["nprobe"], tile
+    )
+    dense_slots = BASE["nprobe"] * sum(s.cap for s in seg.segments)
+    want = "ragged" if bound * tile < dense_slots else "dense"
+    assert auto.layout == want
+
+
+def test_segmented_ragged_subtile_delta_kernel_routing(segmented_setup):
+    """A delta smaller than one code tile must not break (or de-optimize)
+    the kernel path: ops routes that segment through the reference and
+    keeps the rest on the kernel — parity with dense holds."""
+    from repro.store.segments import SegmentedWarpIndex, quantize_segment
+
+    corpus, seg, q, qmask = segmented_setup
+    # One extra doc (~16 tokens < tile_c=32) as its own delta.
+    tiny = quantize_segment(
+        seg.base, corpus.emb[:10], np.zeros(10, np.int32), 1
+    )
+    assert tiny.n_tokens < 32
+    seg2 = SegmentedWarpIndex(
+        base=seg.base,
+        deltas=(*seg.deltas, tiny),
+        doc_starts=(*seg.doc_starts, seg.n_docs),
+    )
+    r = Retriever.from_index(seg2)
+    cfg = WarpSearchConfig(**BASE, gather="fused", executor="kernel")
+    a = r.plan(cfg).retrieve(q[0], qmask[0])
+    b = r.plan(dataclasses.replace(cfg, layout="ragged")).retrieve(
+        q[0], qmask[0]
+    )
+    np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+
+
+def test_segmented_forced_buckets(segmented_setup):
+    """Dense==ragged parity on a segmented index for every fitting rung."""
+    _, seg, q, qmask = segmented_setup
+    from repro.store.segments import make_segmented_search_fn
+
+    r = Retriever.from_index(seg)
+    dense = r.plan(WarpSearchConfig(**BASE))
+    ragged = r.plan(WarpSearchConfig(**BASE, layout="ragged"))
+    cfg = ragged.config
+    chosen = ragged.adaptive_bucket(q[0], qmask[0])
+    needed_floor = chosen if chosen is not None else cfg.worklist_tiles
+    want = np.asarray(dense.retrieve(q[0], qmask[0]).doc_ids)
+    for bucket in cfg.worklist_buckets:
+        if bucket < needed_floor:
+            continue  # an under-sized rung truncates; dispatch skips it
+        forced = dataclasses.replace(
+            cfg, worklist_tiles=bucket, worklist_buckets=None
+        )
+        fn = make_segmented_search_fn(seg, forced, query_batch=False)
+        got = fn(seg, jnp.asarray(q[0]), jnp.asarray(qmask[0]))
+        np.testing.assert_array_equal(
+            want, np.asarray(got.doc_ids),
+            err_msg=f"segmented forced bucket {bucket} diverged",
+        )
+
+
+# ---- 2-shard shard_map adaptive parity (forced multi-device subprocess) ----
+
+TWO_SHARD_ADAPTIVE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import dataclasses
+import numpy as np, jax.numpy as jnp
+from repro.core import (Retriever, WarpSearchConfig, IndexBuildConfig,
+                        build_sharded_index)
+from repro.data import make_corpus, make_queries
+
+corpus = make_corpus(n_docs=400, mean_doc_len=16, seed=3,
+                     topic_skew=1.5, n_topics=96, topic_strength=3.5)
+q, qmask, rel = make_queries(corpus, n_queries=3, seed=4)
+sidx = build_sharded_index(corpus.emb, corpus.token_doc_ids, corpus.n_docs, 2,
+                           IndexBuildConfig(n_centroids=32, nbits=4, kmeans_iters=3))
+r = Retriever.from_index(sidx)
+base = WarpSearchConfig(nprobe=16, k=10, t_prime=1500, k_impute=32)
+for overrides in (dict(), dict(gather="fused")):
+    dense = r.plan(dataclasses.replace(base, **overrides))
+    ragged = r.plan(dataclasses.replace(base, layout="ragged", **overrides))
+    assert len(ragged.config.worklist_buckets) > 1
+    for i in range(3):
+        a = dense.retrieve(q[i], qmask[i])
+        b = ragged.retrieve(q[i], qmask[i])
+        np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+        bucket = ragged.adaptive_bucket(q[i], qmask[i])
+        assert bucket in ragged.config.worklist_buckets
+    ab = dense.retrieve_batch(q[:2], qmask[:2])
+    bb = ragged.retrieve_batch(q[:2], qmask[:2])
+    np.testing.assert_array_equal(np.asarray(ab.doc_ids), np.asarray(bb.doc_ids))
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_two_shard_adaptive_parity_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run(
+        [sys.executable, "-c", TWO_SHARD_ADAPTIVE_SCRIPT],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout
