@@ -1,0 +1,279 @@
+"""Profile-driven tile autotune sweep for the fused gather–score kernels.
+
+Sweeps (tier, layout, tile_c, buffering) over the benchmark dataset tiers
+and times the kernels' ``probe`` carve-outs (``kernels/
+fused_gather_score.py``) to separate DMA time from compute time per
+point:
+
+  probe="full"     the product kernel (DMA + unpack + accumulate)
+  probe="dma"      tile DMAs only (unpack+accumulate replaced by a
+                   per-slot sink)
+  probe="compute"  unpack+accumulate only (no copies issued; explicit
+                   double-buffered kernel only — the single-buffered
+                   BlockSpec pipeline always fetches, so its compute time
+                   is derived as ``max(total - dma, 0)``)
+
+``overlap_frac = clamp((dma + compute - total) / min(dma, compute), 0, 1)``
+— 0 when the two phases serialize, 1 when the shorter phase fully hides
+behind the longer one.
+
+The winner (lowest full-kernel time) per (index geometry bucket, layout)
+is recorded into a versioned ``kernels/autotune.py`` table, written to
+``BENCH_autotune.json`` (stamped with the bench schema version), and
+installed as the in-process default so a subsequent latency suite in the
+same run plans with ``tile_source="autotune"``.
+
+Honesty notes: on TPU the sweep runs the compiled kernels at full probe
+shapes — wall-clock-honest, and the only timings that should steer real
+hardware (the table keys entries by the backend they were measured on).
+Off-TPU the kernels run under ``interpret=True`` at deliberately reduced
+shapes (fewer query tokens/probes, fewer timing reps) — the sweep stays
+runnable for CI plumbing and schema validation, but Python-rate interpret
+timings rank tile sizes only within their own regime and never apply on
+TPU.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax.numpy as jnp
+
+from benchmarks.common import BENCH_SCHEMA_VERSION, emit, get_setup, time_fn
+from repro.core.warpselect import warp_select
+from repro.core.worklist import build_tile_worklist, worklist_bound
+from repro.kernels import autotune, ops
+from repro.kernels.fused_gather_score import (
+    BUFFERINGS,
+    fused_gather_score_kernel_call,
+    ragged_fused_gather_score_kernel_call,
+)
+
+DEFAULT_TILES = (16, 32, 64, 128)
+# Two tiers bound the sweep's suite time while spanning the geometry
+# regimes the latency tiers exercise: near-balanced clusters and the
+# Zipf-routed heavy tail.
+DEFAULT_TIERS = ("nfcorpus_like", "zipf_like")
+LAYOUTS = ("dense", "ragged")
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def overlap_frac(total_s: float, dma_s: float, compute_s: float) -> float:
+    """Achieved DMA/compute overlap in [0, 1] from the three probe times."""
+    denom = min(dma_s, compute_s)
+    if denom <= 0.0:
+        return 0.0
+    return max(0.0, min(1.0, (dma_s + compute_s - total_s) / denom))
+
+
+def _probe_times(make_call, *, buffering: str, warmup: int, iters: int) -> dict:
+    """Time the full/dma/compute carve-outs of one kernel configuration.
+
+    ``make_call(probe)`` -> zero-arg jit'd callable. Returns seconds:
+    {"total_s", "dma_s", "compute_s", "overlap_frac"}.
+    """
+    t_full = time_fn(make_call("full"), warmup=warmup, iters=iters)
+    t_dma = time_fn(make_call("dma"), warmup=warmup, iters=iters)
+    if buffering == "double":
+        t_comp = time_fn(make_call("compute"), warmup=warmup, iters=iters)
+    else:
+        # The BlockSpec pipeline cannot skip its fetches; serial residual.
+        t_comp = max(t_full - t_dma, 0.0)
+    return {
+        "total_s": t_full,
+        "dma_s": t_dma,
+        "compute_s": t_comp,
+        "overlap_frac": overlap_frac(t_full, t_dma, t_comp),
+    }
+
+
+def dense_point(
+    index, starts, sizes, pscores, v, *, tile_c: int, buffering: str,
+    warmup: int = 1, iters: int = 2,
+) -> dict:
+    """DMA/compute split of the dense fused kernel at one (tile, schedule).
+
+    starts/sizes i32[Q, P], pscores f32[Q, P], v f32[Q, D, 2^b] — the
+    probe set the kernel scores (typically from ``warp_select``).
+    """
+    cap_pad = _round_up(max(index.cap, tile_c), tile_c)
+
+    def make_call(probe):
+        def call():
+            return fused_gather_score_kernel_call(
+                index.packed_codes, starts, sizes, pscores, v,
+                nbits=index.nbits, dim=index.dim, n_tokens=index.n_tokens,
+                cap_pad=cap_pad, tile_c=tile_c, buffering=buffering,
+                probe=probe, interpret=not ops.on_tpu(),
+            )
+
+        return call
+
+    return _probe_times(make_call, buffering=buffering, warmup=warmup, iters=iters)
+
+
+def ragged_point(
+    index, starts, sizes, pscores, v, *, tile_c: int, buffering: str,
+    tiles_per_qtoken: int | None = None, warmup: int = 1, iters: int = 2,
+) -> dict:
+    """DMA/compute split of the ragged worklist kernel at one point.
+
+    Builds the tile worklist (``core.worklist``) from the same [Q, P]
+    probe set the dense point scores; the bound defaults to the index's
+    static worst case for this tile size.
+    """
+    if tiles_per_qtoken is None:
+        tiles_per_qtoken = worklist_bound(
+            index.cluster_sizes, starts.shape[1], tile_c
+        )
+    wl = build_tile_worklist(
+        starts, sizes, pscores, tile_c=tile_c, tiles_per_qtoken=tiles_per_qtoken
+    )
+
+    def make_call(probe):
+        def call():
+            return ragged_fused_gather_score_kernel_call(
+                index.packed_codes, wl.row0, wl.nvalid, wl.qtok, wl.pscore, v,
+                nbits=index.nbits, dim=index.dim, n_tokens=index.n_tokens,
+                tile_c=tile_c, buffering=buffering, probe=probe,
+                interpret=not ops.on_tpu(),
+            )
+
+        return call
+
+    return _probe_times(make_call, buffering=buffering, warmup=warmup, iters=iters)
+
+
+def sweep_probe_set(index, q, qmask, *, nprobe: int, qtokens: int):
+    """One measured query's probe set at sweep shape: (starts, sizes,
+    pscores, v) with Q=qtokens, P=nprobe."""
+    q0 = jnp.asarray(q[0][:qtokens], jnp.float32)
+    m0 = jnp.asarray(qmask[0][:qtokens], bool)
+    sel = warp_select(
+        q0, index.centroids, index.cluster_sizes,
+        nprobe=nprobe, t_prime=min(index.n_tokens, 1000),
+        k_impute=min(index.n_centroids, max(64, nprobe)), qmask=m0,
+    )
+    starts = index.cluster_offsets[sel.probe_cids].astype(jnp.int32)
+    sizes = index.cluster_sizes[sel.probe_cids].astype(jnp.int32)
+    v = q0[:, :, None] * index.bucket_weights[None, None, :]
+    return starts, sizes, sel.probe_scores, v
+
+
+def run(
+    tiers=DEFAULT_TIERS,
+    tiles=DEFAULT_TILES,
+    bufferings=BUFFERINGS,
+    out_path: str | None = None,
+    install: bool = True,
+    nbits: int = 4,
+) -> autotune.AutotuneTable:
+    """Sweep, record winners, persist the table, install it in-process.
+
+    Returns the built ``AutotuneTable``. ``install=False`` leaves the
+    process default untouched (used by the smoke test); ``out_path=None``
+    writes to ``autotune.default_table_path()``.
+    """
+    on_tpu = ops.on_tpu()
+    # Off-TPU the interpret-mode kernel body runs at Python rate: shrink
+    # the probe set and timing reps so the sweep stays CI-feasible. The
+    # reduced shapes are recorded in the snapshot.
+    nprobe, qtokens = (32, 32) if on_tpu else (2, 4)
+    warmup, iters = (2, 5) if on_tpu else (1, 2)
+    backend = autotune.backend_kind()
+    table = autotune.AutotuneTable()
+    sweep_rows = []
+
+    for tier in tiers:
+        _, index, q, qmask, _ = get_setup(tier, nbits=nbits)
+        nprobe_t = min(nprobe, index.n_centroids)
+        starts, sizes, pscores, v = sweep_probe_set(
+            index, q, qmask, nprobe=nprobe_t, qtokens=qtokens
+        )
+        for layout in LAYOUTS:
+            point_fn = dense_point if layout == "dense" else ragged_point
+            best = None
+            for tile_c in tiles:
+                if index.n_tokens < tile_c:
+                    emit(
+                        f"autotune/{tier}/{layout}/tile{tile_c}",
+                        0.0,
+                        f"skipped=n_tokens({index.n_tokens})<tile_c",
+                    )
+                    continue
+                for buffering in bufferings:
+                    pt = point_fn(
+                        index, starts, sizes, pscores, v,
+                        tile_c=tile_c, buffering=buffering,
+                        warmup=warmup, iters=iters,
+                    )
+                    row = {
+                        "tier": tier,
+                        "layout": layout,
+                        "tile_c": tile_c,
+                        "buffering": buffering,
+                        "total_us": pt["total_s"] * 1e6,
+                        "dma_us": pt["dma_s"] * 1e6,
+                        "compute_us": pt["compute_s"] * 1e6,
+                        "overlap_frac": round(pt["overlap_frac"], 4),
+                    }
+                    sweep_rows.append(row)
+                    emit(
+                        f"autotune/{tier}/{layout}/tile{tile_c}_{buffering}",
+                        pt["total_s"],
+                        f"dma_ms={pt['dma_s'] * 1e3:.3f};"
+                        f"compute_ms={pt['compute_s'] * 1e3:.3f};"
+                        f"overlap_frac={pt['overlap_frac']:.3f}",
+                    )
+                    if best is None or pt["total_s"] < best[2]["total_s"]:
+                        best = (tile_c, buffering, pt)
+            if best is None:
+                continue
+            tile_c, buffering, pt = best
+            tuned = autotune.TunedTile(
+                tile_c=tile_c,
+                buffering=buffering,
+                dma_us=pt["dma_s"] * 1e6,
+                compute_us=pt["compute_s"] * 1e6,
+                total_us=pt["total_s"] * 1e6,
+                measured_on=backend,
+            )
+            key = table.record(
+                layout, tuned, nbits=index.nbits, dim=index.dim,
+                cap=index.cap, n_tokens=index.n_tokens,
+            )
+            emit(
+                f"autotune/{tier}/{layout}/winner",
+                pt["total_s"],
+                f"tile_c={tile_c};buffering={buffering};"
+                f"overlap_frac={pt['overlap_frac']:.3f};key={key}",
+            )
+
+    path = out_path or autotune.default_table_path()
+    doc = table.to_json()
+    doc["bench_schema"] = BENCH_SCHEMA_VERSION
+    doc["generated_unix"] = int(time.time())
+    doc["backend"] = backend
+    doc["sweep"] = {
+        "tiers": list(tiers),
+        "tiles": list(tiles),
+        "bufferings": list(bufferings),
+        "nprobe": nprobe,
+        "qtokens": qtokens,
+        "warmup": warmup,
+        "iters": iters,
+        "records": sweep_rows,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    emit("autotune/table", 0.0, f"path={path};entries={len(table)}")
+    if install:
+        # Same-process latency suites plan against the fresh table, so
+        # their snapshots record tile_source="autotune".
+        autotune.set_default_table(table)
+    return table

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.bench_autotune import dense_point, ragged_point, sweep_probe_set
 from benchmarks.common import PLANS, candidate_traffic_bytes, emit, get_setup, time_fn
 from repro.core import Retriever, WarpSearchConfig, plaid_style_search, xtr_reference
 from repro.core.engine import (
@@ -57,6 +58,13 @@ def _stage_fns(index, config):
             nprobe=config.nprobe, t_prime=config.t_prime,
             k_impute=config.k_impute, qmask=qmask,
         )
+
+    @jax.jit
+    def stage_gather(probe_cids):
+        # The two-step path's "DMA": the XLA gather that materializes the
+        # [Q, P, cap, PB] candidate tensor. Timed alone so the two-step
+        # decompression row can report its data-movement / compute split.
+        return gather_candidates(index, probe_cids)
 
     @jax.jit
     def stage_decompress(q, probe_scores, probe_cids):
@@ -127,6 +135,7 @@ def _stage_fns(index, config):
 
     return (
         stage_select,
+        stage_gather,
         stage_decompress,
         stage_decompress_fused,
         stage_decompress_ragged,
@@ -155,12 +164,13 @@ def run() -> None:
         t_enc = time_fn(enc, tok, tok_mask)
 
         # --- stage breakdown (Fig. 9) ---
-        (s_sel, s_dec, s_dec_fused, s_dec_ragged, make_s_dec_ragged, s_red,
-         s_red_ragged, cfg_ragged) = _stage_fns(index, cfg)
+        (s_sel, s_gather, s_dec, s_dec_fused, s_dec_ragged, make_s_dec_ragged,
+         s_red, s_red_ragged, cfg_ragged) = _stage_fns(index, cfg)
         sel = s_sel(q0, m0)
         t_sel = time_fn(s_sel, q0, m0)
         dec = s_dec(q0, sel.probe_scores, sel.probe_cids)
         t_dec = time_fn(s_dec, q0, sel.probe_scores, sel.probe_cids)
+        t_gather = time_fn(s_gather, sel.probe_cids)
         t_dec_fused = time_fn(s_dec_fused, q0, sel.probe_scores, sel.probe_cids)
         rag = s_dec_ragged(q0, sel.probe_scores, sel.probe_cids)
         t_dec_ragged = time_fn(
@@ -183,6 +193,42 @@ def run() -> None:
         t_dec_adaptive = time_fn(
             s_dec_adaptive, q0, sel.probe_scores, sel.probe_cids
         )
+        # DMA/compute split of the fused decompression kernels, via the
+        # probe carve-outs (bench_autotune.dense_point/ragged_point) at the
+        # tile/buffering a plan would resolve for this index. On TPU the
+        # split runs at the full measured probe set; off-TPU interpret-mode
+        # kernels are Python-rate, so the split is measured at reduced
+        # shapes — the split_shapes label records which regime produced it.
+        d_choice = ops.resolve_tile_choice(
+            index.cap, cfg.tile_c, layout="dense",
+            n_tokens=index.n_tokens, nbits=index.nbits, dim=index.dim,
+        )
+        r_choice = ops.resolve_tile_choice(
+            index.cap, cfg_ragged.tile_c, layout="ragged",
+            n_tokens=index.n_tokens, nbits=index.nbits, dim=index.dim,
+        )
+        if ops.on_tpu():
+            sp_starts = index.cluster_offsets[sel.probe_cids].astype(jnp.int32)
+            sp_sizes = index.cluster_sizes[sel.probe_cids].astype(jnp.int32)
+            sp_pscores = sel.probe_scores
+            sp_v = q0[:, :, None] * index.bucket_weights[None, None, :]
+            split_label, sp_warm, sp_iters = "full", 2, 5
+        else:
+            sp_starts, sp_sizes, sp_pscores, sp_v = sweep_probe_set(
+                index, q, qmask, nprobe=2, qtokens=4
+            )
+            split_label, sp_warm, sp_iters = "reduced", 1, 2
+        sp_dense = dense_point(
+            index, sp_starts, sp_sizes, sp_pscores, sp_v,
+            tile_c=d_choice.tile_c, buffering=d_choice.buffering,
+            warmup=sp_warm, iters=sp_iters,
+        )
+        sp_ragged = ragged_point(
+            index, sp_starts, sp_sizes, sp_pscores, sp_v,
+            tile_c=r_choice.tile_c, buffering=r_choice.buffering,
+            warmup=sp_warm, iters=sp_iters,
+        )
+
         t_red = time_fn(s_red, dec[0], dec[1], dec[2], sel.mse, m0)
         t_red_ragged = time_fn(
             s_red_ragged, rag[0], rag[1], rag[2], rag[3], sel.mse, m0, q_max=qm
@@ -208,7 +254,12 @@ def run() -> None:
             t_dec,
             f"stage=implicit_two_step;real_slots={real_slots};"
             f"padded_slots={dense_slots};"
-            f"occupancy={real_slots / dense_slots:.3f};sort_n={dense_slots}",
+            f"occupancy={real_slots / dense_slots:.3f};sort_n={dense_slots};"
+            # Two-step has no overlap by construction: the XLA gather
+            # materializes the candidate tensor before scoring reads it.
+            f"dma_ms={t_gather * 1e3:.3f};"
+            f"compute_ms={max(t_dec - t_gather, 0.0) * 1e3:.3f};"
+            f"overlap_frac=0.000;split=gather_vs_score",
         )
         b_two, b_fused = candidate_traffic_bytes(index, qm, cfg.nprobe)
         impl = "kernel" if ops.on_tpu() else "jnp_ref"
@@ -218,7 +269,12 @@ def run() -> None:
             f"stage=fused_gather;impl={impl};fused_bytes={b_fused};"
             f"two_step_bytes={b_two};bytes_ratio={b_two / max(1, b_fused):.2f}x;"
             f"real_slots={real_slots};padded_slots={dense_slots};"
-            f"speedup_vs_two_step={t_dec / max(t_dec_fused, 1e-12):.2f}x",
+            f"speedup_vs_two_step={t_dec / max(t_dec_fused, 1e-12):.2f}x;"
+            f"dma_ms={sp_dense['dma_s'] * 1e3:.3f};"
+            f"compute_ms={sp_dense['compute_s'] * 1e3:.3f};"
+            f"overlap_frac={sp_dense['overlap_frac']:.3f};"
+            f"split_shapes={split_label};split_tile_c={d_choice.tile_c};"
+            f"split_buffering={d_choice.buffering}",
         )
         ladder = ",".join(str(b) for b in cfg_ragged.worklist_buckets)
         emit(
@@ -229,7 +285,12 @@ def run() -> None:
             f"real_slots={real_slots};padded_slots={ragged_slots};"
             f"occupancy={real_slots / ragged_slots:.3f};"
             f"slots_vs_dense={ragged_slots / dense_slots:.3f}x;"
-            f"speedup_vs_two_step={t_dec / max(t_dec_ragged, 1e-12):.2f}x",
+            f"speedup_vs_two_step={t_dec / max(t_dec_ragged, 1e-12):.2f}x;"
+            f"dma_ms={sp_ragged['dma_s'] * 1e3:.3f};"
+            f"compute_ms={sp_ragged['compute_s'] * 1e3:.3f};"
+            f"overlap_frac={sp_ragged['overlap_frac']:.3f};"
+            f"split_shapes={split_label};split_tile_c={r_choice.tile_c};"
+            f"split_buffering={r_choice.buffering}",
         )
         emit(
             f"latency/{tier}/decompression_ragged_adaptive",
@@ -240,7 +301,15 @@ def run() -> None:
             f"real_slots={real_slots};padded_slots={adaptive_slots};"
             f"occupancy={real_slots / adaptive_slots:.3f};"
             f"slots_vs_static_ragged={adaptive_slots / ragged_slots:.3f}x;"
-            f"slots_vs_dense={adaptive_slots / dense_slots:.3f}x",
+            f"slots_vs_dense={adaptive_slots / dense_slots:.3f}x;"
+            # Same per-tile kernel schedule as the static ragged row — the
+            # adaptive bucket changes the worklist bound, not the tile DMA
+            # pipeline — so the kernel split carries over.
+            f"dma_ms={sp_ragged['dma_s'] * 1e3:.3f};"
+            f"compute_ms={sp_ragged['compute_s'] * 1e3:.3f};"
+            f"overlap_frac={sp_ragged['overlap_frac']:.3f};"
+            f"split_shapes={split_label};split_tile_c={r_choice.tile_c};"
+            f"split_buffering={r_choice.buffering}",
         )
         emit(
             f"latency/{tier}/scoring",

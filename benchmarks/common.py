@@ -21,10 +21,18 @@ __all__ = [
     "emit",
     "get_setup",
     "candidate_traffic_bytes",
+    "BENCH_SCHEMA_VERSION",
     "SETUPS",
     "RECORDS",
     "PLANS",
 ]
+
+# Stamped into every BENCH_* snapshot as "bench_schema" so records stay
+# comparable across PRs: bump when row fields or measurement protocol
+# change meaning. v1 = the implicit pre-versioned schema (no stamp);
+# v2 = DMA/compute split fields (dma_ms/compute_ms/overlap_frac) on
+# decompression stage rows + autotune sweep snapshots.
+BENCH_SCHEMA_VERSION = 2
 
 # Every emit() also lands here so run.py can snapshot a suite's metrics to
 # JSON (BENCH_latency.json) for cross-PR perf trajectories.

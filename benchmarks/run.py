@@ -18,8 +18,11 @@ import time
 # the Zipf-skewed "zipf_like" tier: the parity suite asserts the
 # query-adaptive ragged bucket undercuts the static bound there, and the
 # latency suite records the bucket ladder + chosen bucket per tier in the
-# BENCH_latency.json plan snapshots.
-SUITES = ["parity", "index_size", "quality", "latency", "scaling", "roofline"]
+# BENCH_latency.json plan snapshots. "autotune" runs before "latency" so
+# the tile table it installs in-process steers the latency suite's plans
+# (their snapshots then record tile_source="autotune").
+SUITES = ["parity", "index_size", "quality", "autotune", "latency", "scaling",
+          "roofline"]
 
 SNAPSHOT_PATH = os.path.join(
     os.path.dirname(__file__), "..", "BENCH_latency.json"
@@ -32,12 +35,16 @@ INDEX_SIZE_SNAPSHOT_PATH = os.path.join(
 def write_index_size_snapshot(path: str = INDEX_SIZE_SNAPSHOT_PATH) -> None:
     """Persist the measured on-disk index footprint (per-component bytes
     from the store manifest) so size regressions show up in diffs."""
-    from benchmarks.common import RECORDS
+    from benchmarks.common import BENCH_SCHEMA_VERSION, RECORDS
 
     rows = [r for r in RECORDS if r["name"].startswith("index_size/")]
     if not rows:
         return
-    snap = {"generated_unix": int(time.time()), "metrics": rows}
+    snap = {
+        "bench_schema": BENCH_SCHEMA_VERSION,
+        "generated_unix": int(time.time()),
+        "metrics": rows,
+    }
     with open(path, "w") as f:
         json.dump(snap, f, indent=1, sort_keys=True)
     print(f"bench/index_size/snapshot,0.0,{os.path.abspath(path)}", flush=True)
@@ -48,12 +55,13 @@ def write_latency_snapshot(path: str = SNAPSHOT_PATH) -> None:
     trajectory to diff against (only rows under latency/), together with the
     resolved SearchPlans (strategies, t', k_impute, geometry) that produced
     them — a wall-clock number without its plan is not reproducible."""
-    from benchmarks.common import PLANS, RECORDS
+    from benchmarks.common import BENCH_SCHEMA_VERSION, PLANS, RECORDS
 
     rows = [r for r in RECORDS if r["name"].startswith("latency/")]
     if not rows:
         return
     snap = {
+        "bench_schema": BENCH_SCHEMA_VERSION,
         "generated_unix": int(time.time()),
         "metrics": rows,
         "search_plans": PLANS,

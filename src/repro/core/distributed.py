@@ -366,7 +366,14 @@ def resolve_sharded_config(
         k_impute=config.resolved_k_impute(sidx.n_centroids),
         executor=config.resolved_executor(ops.on_tpu()),
     )
-    return resolve_layout_fields(config, sidx.cluster_sizes, sidx.cap)
+    return resolve_layout_fields(
+        config,
+        sidx.cluster_sizes,
+        sidx.cap,
+        n_tokens=sidx.resolved_n_tokens(),
+        nbits=sidx.nbits,
+        dim=sidx.dim,
+    )
 
 
 def sharded_search(

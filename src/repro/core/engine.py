@@ -48,6 +48,7 @@ __all__ = [
     "gather_doc_ids",
     "resolve_config",
     "resolve_layout_fields",
+    "resolve_tile_fields",
     "score_probed_clusters",
     "ragged_flat_candidates",
     "score_and_reduce",
@@ -56,8 +57,57 @@ __all__ = [
 ]
 
 
-def resolve_layout_fields(config: WarpSearchConfig, cluster_sizes, cap: int) -> WarpSearchConfig:
-    """Concretize ``layout="auto"``, the ragged worklist bound, and the
+def resolve_tile_fields(
+    config: WarpSearchConfig,
+    *,
+    cap: int,
+    layout: str,
+    n_tokens: int | None = None,
+    nbits: int | None = None,
+    dim: int | None = None,
+) -> WarpSearchConfig:
+    """Concretize the candidate tile: write the resolved ``tile_c`` (with
+    its provenance in ``tile_source``) and the concrete DMA ``buffering``
+    into the config, so plan-time and run-time tiling cannot diverge and
+    jit cache keys name the tile that actually runs.
+
+    With the full index geometry the autotune table
+    (``kernels/autotune.py``) is consulted first; an explicit ``tile_c``
+    always wins, the analytic heuristic backstops. Re-resolving an
+    already-resolved config (``tile_source`` set) is a no-op — the
+    recorded provenance survives, instead of degrading to "config" because
+    the previous resolution made ``tile_c`` concrete.
+    """
+    if config.tile_source is not None and config.tile_c is not None:
+        return config
+    choice = ops.resolve_tile_choice(
+        cap,
+        config.tile_c,
+        layout=layout,
+        n_tokens=n_tokens,
+        nbits=nbits,
+        dim=dim,
+        buffering=config.buffering,
+    )
+    return dataclasses.replace(
+        config,
+        tile_c=choice.tile_c,
+        tile_source=choice.source,
+        buffering=choice.buffering,
+    )
+
+
+def resolve_layout_fields(
+    config: WarpSearchConfig,
+    cluster_sizes,
+    cap: int,
+    *,
+    n_tokens: int | None = None,
+    nbits: int | None = None,
+    dim: int | None = None,
+) -> WarpSearchConfig:
+    """Concretize ``layout="auto"``, the candidate tile (autotune table or
+    heuristic; ``resolve_tile_fields``), the ragged worklist bound, and the
     adaptive bucket ladder.
 
     ``cluster_sizes`` may be [C] or a sharded [S, C] stack (the bound
@@ -68,25 +118,31 @@ def resolve_layout_fields(config: WarpSearchConfig, cluster_sizes, cap: int) -> 
     (``core.worklist.bucket_ladder``) whose top rung is the static bound;
     ``Retriever`` plans dispatch each retrieve to the smallest rung that
     fits the actual probe set. Shared by the local and sharded resolvers
-    so the two paths cannot drift.
+    so the two paths cannot drift. The geometry kwargs
+    (``n_tokens``/``nbits``/``dim``) enable the autotune lookup; without
+    them tile resolution is purely explicit-override-or-heuristic.
     """
+    geo = dict(n_tokens=n_tokens, nbits=nbits, dim=dim)
     if config.layout == "dense":
+        config = resolve_tile_fields(config, cap=cap, layout="dense", **geo)
         if config.worklist_tiles is None and config.worklist_buckets is None:
             return config
         return dataclasses.replace(
             config, worklist_tiles=None, worklist_buckets=None
         )
-    tile = ops.resolve_tile_c(cap, config.tile_c, layout="ragged")
+    ragged = resolve_tile_fields(config, cap=cap, layout="ragged", **geo)
+    tile = ragged.tile_c
     bound = worklist_bound(cluster_sizes, config.nprobe, tile)
     layout = config.layout
     if layout == "auto":
         layout = "ragged" if bound * tile < config.nprobe * cap else "dense"
     if layout == "dense":
+        config = resolve_tile_fields(config, cap=cap, layout="dense", **geo)
         return dataclasses.replace(
             config, layout="dense", worklist_tiles=None, worklist_buckets=None
         )
     return dataclasses.replace(
-        config,
+        ragged,
         layout="ragged",
         worklist_tiles=bound,
         worklist_buckets=bucket_ladder(bound),
@@ -114,15 +170,17 @@ def resolve_config(index: WarpIndex, config: WarpSearchConfig) -> WarpSearchConf
         k_impute=config.resolved_k_impute(index.n_centroids),
         executor=config.resolved_executor(ops.on_tpu()),
     )
+    geo = dict(n_tokens=index.n_tokens, nbits=index.nbits, dim=index.dim)
     if (
         config.layout == "dense"
         and config.worklist_tiles is None
         and config.worklist_buckets is None
     ):
         # Skip the host-side cluster-size stats (and stay agnostic to
-        # index kinds without a flat cluster_sizes array, e.g. segmented).
-        return config
-    return resolve_layout_fields(config, index.cluster_sizes, index.cap)
+        # index kinds without a flat cluster_sizes array, e.g. segmented) —
+        # but still concretize the tile choice.
+        return resolve_tile_fields(config, cap=index.cap, layout="dense", **geo)
+    return resolve_layout_fields(config, index.cluster_sizes, index.cap, **geo)
 
 
 def _csr_positions(index: WarpIndex, probe_cids: jax.Array):
@@ -186,6 +244,7 @@ def _fused_score_probed(
             n_tokens=index.n_tokens,
             use_kernel=config.wants_kernel,
             tile_c=config.tile_c,
+            buffering=config.buffering,
         )[0]
         doc_ids, valid = gather_doc_ids(index, cids_i)
         return cand, doc_ids, valid
@@ -210,6 +269,7 @@ def _fused_score_probed(
         n_tokens=index.n_tokens,
         use_kernel=config.wants_kernel,
         tile_c=config.tile_c,
+        buffering=config.buffering,
     )
     doc_ids, valid = gather_doc_ids(index, probe_cids)
     return cand, doc_ids, valid
@@ -329,6 +389,7 @@ def ragged_flat_candidates(
                 tile_c=tile,
                 n_tokens=index.n_tokens,
                 use_kernel=config.wants_kernel,
+                buffering=config.buffering,
             )
         else:
             packed = index.packed_codes[pos]  # flat [n_slots, PB] gather

@@ -159,6 +159,12 @@ class SearchPlan:
             "memory": cfg.memory,
             "layout": cfg.layout,
             "tile_c": tile,
+            # Tile provenance: "config" (explicit override), "autotune"
+            # (measured entry from kernels/autotune.py matched this index
+            # geometry on this backend), or "heuristic" (analytic
+            # fallback); the DMA schedule rides with it.
+            "tile_source": cfg.tile_source or "heuristic",
+            "buffering": cfg.buffering,
             "worklist_tiles": cfg.worklist_tiles,
             # The adaptive bucket ladder (None on dense plans); the top
             # rung equals worklist_tiles. The bucket actually chosen is
@@ -377,13 +383,20 @@ class Retriever:
             k_impute=config.resolved_k_impute(idx.n_centroids),
             executor=config.resolved_executor(ops.on_tpu()),
         )
+        geo = dict(n_tokens=idx.n_tokens, nbits=idx.nbits, dim=idx.dim)
         if config.layout == "dense":
+            config = engine.resolve_tile_fields(
+                config, cap=idx.cap, layout="dense", **geo
+            )
             if config.worklist_tiles is None and config.worklist_buckets is None:
                 return config
             return dataclasses.replace(
                 config, worklist_tiles=None, worklist_buckets=None
             )
-        tile = ops.resolve_tile_c(idx.cap, config.tile_c, layout="ragged")
+        ragged = engine.resolve_tile_fields(
+            config, cap=idx.cap, layout="ragged", **geo
+        )
+        tile = ragged.tile_c
         bound = wl.worklist_bound_segmented(
             idx.per_segment_cluster_sizes(), config.nprobe, tile
         )
@@ -392,12 +405,15 @@ class Retriever:
         if layout == "auto":
             layout = "ragged" if bound * tile < dense_slots else "dense"
         if layout == "dense":
+            config = engine.resolve_tile_fields(
+                config, cap=idx.cap, layout="dense", **geo
+            )
             return dataclasses.replace(
                 config, layout="dense", worklist_tiles=None,
                 worklist_buckets=None,
             )
         return dataclasses.replace(
-            config,
+            ragged,
             layout="ragged",
             worklist_tiles=bound,
             worklist_buckets=wl.bucket_ladder(bound),

@@ -24,6 +24,8 @@ MEMORY_STRATEGIES = ("full", "scan_qtokens")
 LAYOUT_STRATEGIES = ("dense", "ragged", "auto")
 REDUCE_IMPLS = ("scan", "segment")
 SUM_IMPLS = ("gather", "lut")
+BUFFERING_STRATEGIES = ("auto", "double", "single")
+TILE_SOURCES = ("config", "autotune", "heuristic")
 
 
 @jax.tree_util.register_dataclass
@@ -109,16 +111,30 @@ class WarpSearchConfig:
               ``nprobe * cap``; "auto" — picks by measured padding waste
               from index statistics at plan time.
     tile_c:   candidate-tile row count for the fused kernel and the ragged
-              worklist. ``None`` -> per-layout heuristic (dense: up to 128,
-              capped at the padded cap; ragged: up to 32 — smaller tiles
-              track ragged cluster sizes more tightly at the cost of more
-              grid steps). Must be a positive multiple of 8 (TPU sublane
-              quantum) when given.
+              worklist. ``None`` -> an autotuned entry matching the index
+              geometry (``kernels/autotune.py``) when one exists, else the
+              per-layout analytic heuristic (dense: up to 128, capped at
+              the padded cap; ragged: up to 32 — smaller tiles track
+              ragged cluster sizes more tightly at the cost of more grid
+              steps). Must be a positive multiple of 8 (TPU sublane
+              quantum) when given. Plan resolution writes the CONCRETE
+              tile back into this field (with its provenance in
+              ``tile_source``), so plan-time and run-time tiling cannot
+              diverge.
+    buffering: DMA schedule of the fused gather–score kernels: "double" —
+              explicit [2, tile_c, PB] VMEM scratch with manual slot
+              rotation so the next tile's copy overlaps this tile's
+              unpack+accumulate; "single" — the default BlockSpec-driven
+              pipeline. Bit-identical outputs. "auto" -> the autotuned
+              entry's schedule when the table supplied the tile, else the
+              kernel default ("double").
 
-    ``worklist_tiles`` and ``worklist_buckets`` are RESOLVED fields like
-    ``t_prime``, derived from index statistics by ``engine.resolve_config``
-    / ``Retriever.plan`` when layout="ragged"; callers never set them
-    directly. ``worklist_tiles`` is the static worst-case per-query-token
+    ``worklist_tiles``, ``worklist_buckets``, and ``tile_source`` are
+    RESOLVED fields like ``t_prime``, derived from index statistics by
+    ``engine.resolve_config`` / ``Retriever.plan``; callers never set them
+    directly. ``tile_source`` records where the concrete ``tile_c`` came
+    from ("config" | "autotune" | "heuristic") — ``SearchPlan.describe()``
+    surfaces it so benchmark snapshots name the provenance. ``worklist_tiles`` is the static worst-case per-query-token
     worklist tile bound; ``worklist_buckets`` is the adaptive bucket
     ladder (``core.worklist.bucket_ladder``) — ascending power-of-two tile
     bounds topped by ``worklist_tiles`` — from which ``Retriever`` plans
@@ -143,14 +159,16 @@ class WarpSearchConfig:
     executor: str = "auto"  # "auto" | "kernel" | "reference"
     memory: str = "full"  # "full" | "scan_qtokens"
     layout: str = "dense"  # "dense" | "ragged" | "auto" (see core/worklist.py)
-    tile_c: int | None = None  # candidate tile rows; None -> heuristic
+    tile_c: int | None = None  # candidate tile rows; None -> autotune/heuristic
+    buffering: str = "auto"  # "auto" | "double" | "single" (kernel DMA schedule)
     reduce_impl: str = "scan"  # "scan" | "segment" (see reduction.py)
     sum_impl: str = "gather"  # "gather" | "lut" (byte-LUT; see kernels/ref.py)
-    # Resolved by engine.resolve_config when layout="ragged" (static
-    # per-qtoken worklist tile bound + adaptive bucket ladder); never set
-    # by callers.
+    # Resolved by engine.resolve_config / Retriever.plan (static per-qtoken
+    # worklist tile bound + adaptive bucket ladder; tile_c provenance);
+    # never set by callers.
     worklist_tiles: int | None = None
     worklist_buckets: tuple[int, ...] | None = None
+    tile_source: str | None = None  # "config" | "autotune" | "heuristic"
     # Deprecated boolean shims (None = not passed). Mapped in __post_init__.
     use_kernel: bool | None = None
     scan_qtokens: bool | None = None
@@ -180,6 +198,9 @@ class WarpSearchConfig:
         _check_choice("layout", self.layout, LAYOUT_STRATEGIES)
         _check_choice("reduce_impl", self.reduce_impl, REDUCE_IMPLS)
         _check_choice("sum_impl", self.sum_impl, SUM_IMPLS)
+        _check_choice("buffering", self.buffering, BUFFERING_STRATEGIES)
+        if self.tile_source is not None:
+            _check_choice("tile_source", self.tile_source, TILE_SOURCES)
         if self.worklist_buckets is not None and not isinstance(
             self.worklist_buckets, tuple
         ):

@@ -1,0 +1,274 @@
+"""Profile-driven tile autotune table for the fused gather–score kernels.
+
+``ops.resolve_tile_c`` picks the candidate tile size analytically
+(``min(layout default, next_pow2(cap))``). That heuristic is a decent
+prior but a constant: the real optimum moves with the index geometry
+(cluster cap, corpus size, code width) and with the DMA schedule, and the
+paper's whole premise is that the decompression path lives on the memory
+roofline where such constants matter. This module makes the winning
+configuration a *measured, stored* artifact instead:
+
+  - ``benchmarks/bench_autotune.py`` sweeps (tier, layout, tile_c,
+    buffering), timing the kernels' ``probe`` carve-outs ("full" / "dma" /
+    "compute" — see ``fused_gather_score.py``) to split DMA time from
+    compute time and compute the achieved overlap fraction.
+  - The winner per (index geometry bucket, layout) lands in an
+    ``AutotuneTable`` — a versioned JSON document, persisted by default at
+    the repo root as ``BENCH_autotune.json`` (override with the
+    ``REPRO_AUTOTUNE_TABLE`` env var).
+  - Plan resolution (``core/retriever.py`` / ``core/engine.py``) consults
+    the table through ``ops.resolve_tile_choice``: a matching entry wins,
+    otherwise the analytic heuristic stands, and ``SearchPlan.describe()``
+    records which one supplied the tile (``tile_source``).
+
+Geometry keys bucket ``cap`` and ``n_tokens`` to the next power of two:
+exact values shift with every corpus rebuild, but the kernel-relevant
+regime (how many tiles per probe, how big the resident array is relative
+to a tile) is log-scale. ``nbits`` / ``dim`` / ``layout`` are exact — they
+change the kernel's inner loop, not just its trip count.
+
+Backend matching: an entry only applies on the backend kind it was
+measured on (``"tpu"`` vs ``"interpret"``). Interpret-mode sweeps run the
+kernel body in Python — their timings rank tile sizes for CI plumbing and
+schema checks, not for hardware — so they must never steer a real TPU run,
+and vice versa.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import jax
+
+from repro.kernels.fused_gather_score import (
+    BUFFERINGS,
+    validate_tile_c,
+)
+
+__all__ = [
+    "AUTOTUNE_TABLE_VERSION",
+    "TunedTile",
+    "AutotuneTable",
+    "backend_kind",
+    "geometry_key",
+    "default_table_path",
+    "get_default_table",
+    "set_default_table",
+]
+
+AUTOTUNE_TABLE_VERSION = 1
+
+# Env override for the table location; default is BENCH_autotune.json at
+# the repo root, next to the other BENCH_* snapshots.
+TABLE_PATH_ENV = "REPRO_AUTOTUNE_TABLE"
+DEFAULT_TABLE_FILENAME = "BENCH_autotune.json"
+
+LAYOUTS = ("dense", "ragged")
+
+
+def backend_kind() -> str:
+    """The measurement domain entries are keyed to: "tpu" when the Pallas
+    kernels compile for hardware, "interpret" everywhere else."""
+    return "tpu" if jax.default_backend() == "tpu" else "interpret"
+
+
+def _pow2_bucket(x: int) -> int:
+    """Next power of two >= x (>= 1); log-scale geometry bucketing."""
+    return 1 << max(0, int(x - 1).bit_length()) if x > 1 else 1
+
+
+def geometry_key(
+    layout: str,
+    *,
+    nbits: int,
+    dim: int,
+    cap: int,
+    n_tokens: int,
+) -> str:
+    """Stable table key for one (index geometry bucket, layout).
+
+    cap / n_tokens are pow2-bucketed (regime, not exact value); layout /
+    nbits / dim are exact (they change the kernel inner loop).
+    """
+    if layout not in LAYOUTS:
+        raise ValueError(f"layout={layout!r} not in {LAYOUTS}")
+    return (
+        f"layout={layout}|nbits={int(nbits)}|dim={int(dim)}"
+        f"|cap_bucket={_pow2_bucket(int(cap))}"
+        f"|ntok_bucket={_pow2_bucket(int(n_tokens))}"
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedTile:
+    """One sweep winner: the tile choice plus the measurements behind it,
+    kept so later sweeps (and humans) can audit why an entry won."""
+
+    tile_c: int
+    buffering: str  # "double" | "single"
+    dma_us: float  # DMA-only probe time
+    compute_us: float  # compute-only probe time
+    total_us: float  # full-kernel time
+    measured_on: str  # "tpu" | "interpret"
+
+    def __post_init__(self):
+        validate_tile_c(self.tile_c, where="TunedTile.tile_c")
+        if self.buffering not in BUFFERINGS:
+            raise ValueError(
+                f"TunedTile.buffering={self.buffering!r} not in {BUFFERINGS}"
+            )
+        if self.measured_on not in ("tpu", "interpret"):
+            raise ValueError(
+                f"TunedTile.measured_on={self.measured_on!r} must be "
+                "'tpu' or 'interpret'"
+            )
+
+    @property
+    def overlap_frac(self) -> float:
+        """Achieved DMA/compute overlap: 0 = fully serialized
+        (total = dma + compute), 1 = perfect (total = max of the two)."""
+        hidden = self.dma_us + self.compute_us - self.total_us
+        denom = min(self.dma_us, self.compute_us)
+        if denom <= 0.0:
+            return 0.0
+        return max(0.0, min(1.0, hidden / denom))
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "TunedTile":
+        return cls(
+            tile_c=int(d["tile_c"]),
+            buffering=str(d["buffering"]),
+            dma_us=float(d["dma_us"]),
+            compute_us=float(d["compute_us"]),
+            total_us=float(d["total_us"]),
+            measured_on=str(d["measured_on"]),
+        )
+
+
+class AutotuneTable:
+    """Versioned (geometry key -> TunedTile) map with JSON persistence.
+
+    A version bump invalidates the whole table on load (the keying or the
+    measurement protocol changed; stale winners are worse than the
+    heuristic because they carry false authority).
+    """
+
+    def __init__(self, entries: dict[str, TunedTile] | None = None):
+        self.entries: dict[str, TunedTile] = dict(entries or {})
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def record(
+        self,
+        layout: str,
+        tuned: TunedTile,
+        *,
+        nbits: int,
+        dim: int,
+        cap: int,
+        n_tokens: int,
+    ) -> str:
+        """Insert/overwrite the winner for one geometry bucket; returns
+        the key written."""
+        key = geometry_key(
+            layout, nbits=nbits, dim=dim, cap=cap, n_tokens=n_tokens
+        )
+        self.entries[key] = tuned
+        return key
+
+    def lookup(
+        self,
+        layout: str,
+        *,
+        nbits: int,
+        dim: int,
+        cap: int,
+        n_tokens: int,
+        backend: str | None = None,
+    ) -> TunedTile | None:
+        """The tuned winner for this geometry, or None (-> heuristic).
+
+        Entries measured on a different backend kind than the current one
+        (``backend`` overrides auto-detection for tests) do not apply:
+        interpret-mode timings must not steer TPU runs or vice versa.
+        """
+        key = geometry_key(
+            layout, nbits=nbits, dim=dim, cap=cap, n_tokens=n_tokens
+        )
+        tuned = self.entries.get(key)
+        if tuned is None:
+            return None
+        if tuned.measured_on != (backend or backend_kind()):
+            return None
+        return tuned
+
+    def to_json(self) -> dict:
+        return {
+            "autotune_table_version": AUTOTUNE_TABLE_VERSION,
+            "entries": {k: t.to_json() for k, t in sorted(self.entries.items())},
+        }
+
+    @classmethod
+    def from_json(cls, doc: dict) -> "AutotuneTable":
+        if doc.get("autotune_table_version") != AUTOTUNE_TABLE_VERSION:
+            # Version mismatch: treat as empty rather than mis-applying
+            # entries keyed under a different protocol.
+            return cls()
+        return cls(
+            {k: TunedTile.from_json(v) for k, v in doc.get("entries", {}).items()}
+        )
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=2, sort_keys=True)
+            f.write("\n")
+
+    @classmethod
+    def load(cls, path: str) -> "AutotuneTable":
+        with open(path) as f:
+            return cls.from_json(json.load(f))
+
+
+def default_table_path() -> str:
+    """REPRO_AUTOTUNE_TABLE env override, else BENCH_autotune.json at the
+    repo root (alongside the other BENCH_* snapshots)."""
+    env = os.environ.get(TABLE_PATH_ENV)
+    if env:
+        return env
+    root = os.path.dirname(
+        os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    )
+    return os.path.join(root, DEFAULT_TABLE_FILENAME)
+
+
+# Process-wide default table, lazily loaded from default_table_path().
+# ``None`` = not loaded yet; an empty table = loaded, nothing tuned.
+_default_table: AutotuneTable | None = None
+
+
+def get_default_table() -> AutotuneTable:
+    """The table plan resolution consults; loads lazily, caches, and
+    degrades to an empty table (pure heuristic) when no file exists or it
+    fails to parse — a corrupt table must never break search."""
+    global _default_table
+    if _default_table is None:
+        path = default_table_path()
+        try:
+            _default_table = AutotuneTable.load(path)
+        except (OSError, ValueError, KeyError, TypeError):
+            _default_table = AutotuneTable()
+    return _default_table
+
+
+def set_default_table(table: AutotuneTable | None) -> None:
+    """Install an in-process table (the sweep installs its result so the
+    same benchmark run's latency suite sees it); ``None`` resets to lazy
+    file loading."""
+    global _default_table
+    _default_table = table

@@ -11,11 +11,16 @@ over the *resident* index:
      probe) CSR cluster ``starts`` / ``sizes`` (from ``cluster_offsets``)
      and the centroid probe scores live in SMEM before the kernel body
      runs, MoE block-sparse style.
-  2. The ``packed_codes`` BlockSpec uses *unblocked* indexing with an
-     index map that reads the prefetched ``starts``: grid step (q, p, j)
-     DMAs rows ``[starts[q,p] + j*TILE_C, +TILE_C)`` of the packed-code
-     array straight from HBM into VMEM. No pre-gathered copy exists in
-     HBM at any point.
+  2. The packed-code tile for grid step (q, p, j) — rows
+     ``[starts[q,p] + j*TILE_C, +TILE_C)`` of the resident array — is
+     DMA'd straight from HBM into VMEM. No pre-gathered copy exists in
+     HBM at any point. With ``buffering="double"`` (the default) the
+     DMA is an explicit ``pltpu.make_async_copy`` into a
+     ``[2, TILE_C, PB]`` scratch with manual slot rotation: tile j+1's
+     copy is issued before tile j's unpack+accumulate runs, so the DMA
+     engine and the VPU/MXU overlap instead of serializing.
+     ``buffering="single"`` keeps the original BlockSpec-driven fetch
+     (the default Pallas pipeline) — same bits, no manual overlap.
   3. In VMEM the b-bit codes are unpacked with shift/AND (VPU, 8-bit
      lanes) and scored with the 2^b select-accumulate against the
      per-query-token v-table (MXU matvec per bucket), exactly the
@@ -24,23 +29,49 @@ over the *resident* index:
      cluster size are masked to 0, so the output is the final
      ``[Q, nprobe, cap]`` candidate-score tensor in one write.
 
-End-of-array clamp: the index map clamps the row start to
-``n_tokens - TILE_C`` so the DMA never reads out of bounds. When the clamp
-engages, the wanted rows sit ``shift`` rows deeper in the fetched tile; a
-dynamic roll re-aligns them. Valid slots (``c < size``) always land inside
-the clamped tile because ``start + size <= n_tokens`` for every cluster —
-the overhang is exactly the masked tail. This removes any need to pad the
-resident ``packed_codes`` (which would itself be an HBM copy).
+End-of-array clamp: the fetch start is clamped to ``n_tokens - TILE_C`` so
+the DMA never reads out of bounds. When the clamp engages, the wanted rows
+sit ``shift`` rows deeper in the fetched tile; a dynamic roll re-aligns
+them. Valid slots (``c < size``) always land inside the clamped tile
+because ``start + size <= n_tokens`` for every cluster — the overhang is
+exactly the masked tail. This removes any need to pad the resident
+``packed_codes`` (which would itself be an HBM copy). The clamp+roll is
+computed identically under both bufferings (the double-buffered kernel
+clamps inside its copy descriptor, the single-buffered one inside the
+BlockSpec index map), so the two paths are bit-exact.
 
-VMEM budget per grid step: one ``[TILE_C, PB]`` uint8 code tile
-(TILE_C=128, b=4, D=128 -> 8 KiB), the ``[D, 2^b]`` f32 v-table (8 KiB at
-b=4), and a ``[TILE_C]`` f32 output stripe — ~17 KiB total, far under the
+Double-buffer slot rotation: grid steps are numbered by their linear step
+index; step s computes on ``scratch[s % 2]`` and issues the DMA for step
+s+1 into ``scratch[(s+1) % 2]`` before waiting on its own slot. At most
+two copies are in flight, always on distinct slots, and a slot's semaphore
+is waited exactly once per started copy. On the ragged grid the
+``pl.when`` early-exit is preserved: a padding tile (``nvalid == 0``)
+neither starts nor waits a DMA — its slot's start/wait guards read the
+same prefetched ``nvalid``, so semaphore accounting stays balanced and
+real work (DMA *and* compute) stays proportional to the true tile count.
+
+VMEM budget per grid step: two ``[TILE_C, PB]`` uint8 code tiles
+(TILE_C=128, b=4, D=128 -> 16 KiB), the ``[D, 2^b]`` f32 v-table (8 KiB at
+b=4), and a ``[TILE_C]`` f32 output stripe — ~25 KiB total, far under the
 ~16 MiB VMEM. TILE_C trades DMA efficiency against the masked-tail waste
-for small clusters; ops.py picks ``min(128, next_pow2(cap))`` and pads
-``cap`` up to a TILE_C multiple.
+for small clusters; ``ops.resolve_tile_c`` consults the profile-driven
+autotune table (``kernels/autotune.py``) when one matches the index
+geometry and otherwise picks ``min(128, next_pow2(cap))`` analytically.
+``validate_tile_c`` rejects tiles the double-buffered scratch cannot
+satisfy with a directed error.
+
+The ``probe`` knob carves the kernel into measurable halves for the
+autotune sweep (``benchmarks/bench_autotune.py``): "full" is the product
+path; "dma" runs the tile DMAs but replaces unpack+accumulate with a
+trivial per-slot sink; "compute" (double-buffered only) runs
+unpack+accumulate on whatever is resident in scratch without issuing any
+copies. total/dma/compute timings give the DMA-vs-compute split and the
+achieved overlap fraction.
 
 Off-TPU the kernel runs under ``interpret=True`` (pure-Python body over an
-XLA grid loop) — bit-identical semantics, used by the parity tests.
+XLA grid loop) — bit-identical semantics, used by the parity tests; DMAs
+execute synchronously there, so interpret-mode overlap fractions are ~0
+by construction and only TPU runs measure real overlap.
 """
 
 from __future__ import annotations
@@ -55,8 +86,13 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = [
     "fused_gather_score_kernel_call",
     "ragged_fused_gather_score_kernel_call",
+    "validate_tile_c",
     "DEFAULT_TILE_C",
     "DEFAULT_RAGGED_TILE_C",
+    "DEFAULT_BUFFERING",
+    "BUFFERINGS",
+    "KERNEL_PROBES",
+    "DB_SCRATCH_BYTES_MAX",
 ]
 
 DEFAULT_TILE_C = 128
@@ -66,6 +102,99 @@ DEFAULT_TILE_C = 128
 # sublane dimension well above the 8-row quantum while roughly quartering
 # the tail waste vs the dense default.
 DEFAULT_RAGGED_TILE_C = 32
+
+# Candidate-tile DMA scheduling: "double" = explicit [2, tile_c, PB] VMEM
+# scratch with manual slot rotation (tile j+1's copy overlaps tile j's
+# unpack+accumulate); "single" = the original BlockSpec-driven fetch.
+BUFFERINGS = ("double", "single")
+DEFAULT_BUFFERING = "double"
+
+# Autotune-sweep measurement carve-outs; "full" is the product path.
+KERNEL_PROBES = ("full", "dma", "compute")
+
+# Ceiling for the double-buffered code scratch (2 * tile_c * PB u8 bytes).
+# Deliberately far below the ~16 MiB/core VMEM: the scratch shares VMEM
+# with the v-table block, the output stripe, and the compiler's own
+# temporaries, and a tile this large has long since stopped helping DMA
+# efficiency.
+DB_SCRATCH_BYTES_MAX = 4 << 20
+
+
+def validate_tile_c(tile_c: int, *, pb: int | None = None, where: str = "tile_c") -> int:
+    """Directed rejection of candidate-tile sizes the kernels can't run.
+
+    Every consumer of a tile size — the dense/ragged kernel calls, the
+    worklist builder, ``ops.resolve_tile_c`` — funnels through this check,
+    so a bad ``cfg.tile_c`` fails with direction instead of a shape error
+    deep in a kernel. With ``pb`` (packed bytes per row) known, also
+    rejects tiles whose ``[2, tile_c, PB]`` double-buffered VMEM scratch
+    would exceed ``DB_SCRATCH_BYTES_MAX``.
+    """
+    if not isinstance(tile_c, (int,)) or isinstance(tile_c, bool):
+        raise ValueError(f"{where}={tile_c!r} must be an int")
+    if tile_c < 8 or tile_c % 8:
+        raise ValueError(
+            f"{where}={tile_c} must be a positive multiple of 8 (the TPU "
+            "sublane quantum); the fused gather-score kernels tile "
+            "candidate rows in sublane-aligned blocks"
+        )
+    if pb is not None and 2 * tile_c * pb > DB_SCRATCH_BYTES_MAX:
+        raise ValueError(
+            f"{where}={tile_c}: the double-buffered code scratch "
+            f"[2, {tile_c}, {pb}] u8 needs {2 * tile_c * pb} bytes of VMEM, "
+            f"over the {DB_SCRATCH_BYTES_MAX}-byte budget — lower tile_c "
+            "(or nbits/dim) so two in-flight code tiles fit"
+        )
+    return tile_c
+
+
+def _check_buffering(buffering: str) -> None:
+    if buffering not in BUFFERINGS:
+        raise ValueError(
+            f"buffering={buffering!r} is not a valid DMA schedule; expected "
+            f"one of {BUFFERINGS}"
+        )
+
+
+def _check_probe(probe: str, buffering: str) -> None:
+    if probe not in KERNEL_PROBES:
+        raise ValueError(
+            f"probe={probe!r} is not a valid kernel carve-out; expected one "
+            f"of {KERNEL_PROBES}"
+        )
+    if probe == "compute" and buffering != "double":
+        raise ValueError(
+            "probe='compute' isolates the unpack+accumulate half by "
+            "skipping the tile DMAs, which only the double-buffered kernel "
+            "can do (the single-buffered BlockSpec pipeline always "
+            "fetches); use buffering='double'"
+        )
+
+
+def _unpack_score(packed, v, *, nbits: int, dim: int, tile_c: int):
+    """Shared compute half: b-bit shift/AND unpack + 2^b select-accumulate.
+
+    packed u8[TILE_C, PB] (already roll-aligned), v f32[D, 2^b]
+    -> acc f32[TILE_C]. One definition keeps the single- and
+    double-buffered kernels bit-identical by construction.
+    """
+    nb = 1 << nbits
+    per_byte = 8 // nbits
+    mask = jnp.uint8(nb - 1)
+    parts = [
+        (packed >> jnp.uint8(slot * nbits)) & mask for slot in range(per_byte)
+    ]
+    codes = jnp.stack(parts, axis=-1).reshape(tile_c, dim)  # [TILE_C, D]
+    acc = jnp.zeros((tile_c,), jnp.float32)
+    for bucket in range(nb):
+        sel = (codes == jnp.uint8(bucket)).astype(jnp.float32)
+        acc = acc + sel @ v[:, bucket]
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Dense grid: (Q, nprobe, cap_pad / tile_c)
+# ---------------------------------------------------------------------------
 
 
 def _fused_kernel(
@@ -80,10 +209,9 @@ def _fused_kernel(
     dim: int,
     n_tokens: int,
     tile_c: int,
+    probe: str,
 ):
     q, p, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
-    nb = 1 << nbits
-    per_byte = 8 // nbits
 
     start = starts_ref[q, p]
     row0 = start + j * tile_c  # wanted global row of this tile's slot 0
@@ -91,17 +219,83 @@ def _fused_kernel(
     shift = jnp.maximum(0, row0 - (n_tokens - tile_c))
     packed = jnp.roll(packed_ref[...], -shift, axis=0)  # [TILE_C, PB]
 
-    mask = jnp.uint8(nb - 1)
-    parts = [
-        (packed >> jnp.uint8(slot * nbits)) & mask for slot in range(per_byte)
-    ]
-    codes = jnp.stack(parts, axis=-1).reshape(tile_c, dim)  # [TILE_C, D]
+    if probe == "dma":
+        # DMA-only carve-out: the pipeline fetch + roll ran; sink one lane
+        # per slot so the store cannot be elided, skip unpack+accumulate.
+        out_ref[0, 0] = packed[:, 0].astype(jnp.float32)
+        return
 
-    v = v_ref[0]  # [D, 2^b]
-    acc = jnp.zeros((tile_c,), jnp.float32)
-    for bucket in range(nb):
-        sel = (codes == jnp.uint8(bucket)).astype(jnp.float32)
-        acc = acc + sel @ v[:, bucket]
+    acc = _unpack_score(packed, v_ref[0], nbits=nbits, dim=dim, tile_c=tile_c)
+
+    c = j * tile_c + jax.lax.broadcasted_iota(jnp.int32, (tile_c,), 0)
+    valid = c < sizes_ref[q, p]
+    out_ref[0, 0] = jnp.where(valid, acc + pscore_ref[q, p], 0.0)
+
+
+def _fused_kernel_db(
+    starts_ref,  # SMEM i32[Q, P]   cluster row starts (prefetched)
+    sizes_ref,  # SMEM i32[Q, P]   cluster sizes (prefetched)
+    pscore_ref,  # SMEM f32[Q, P]   centroid probe scores (prefetched)
+    packed_hbm,  # ANY  u8[N, PB]   the resident index (never gathered)
+    v_ref,  # VMEM f32[1, D, 2^b]  this query token's v-table
+    out_ref,  # VMEM f32[1, 1, TILE_C]
+    scratch_ref,  # VMEM u8[2, TILE_C, PB]  double-buffered code tiles
+    sem_ref,  # DMA semaphores [2]
+    *,
+    nbits: int,
+    dim: int,
+    n_tokens: int,
+    tile_c: int,
+    probe: str,
+):
+    q, p, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    n_p, n_j = pl.num_programs(1), pl.num_programs(2)
+    # Linear step index drives the slot rotation: step s computes on
+    # scratch[s % 2] while the DMA for step s+1 fills scratch[(s+1) % 2].
+    step = (q * n_p + p) * n_j + j
+    total = pl.num_programs(0) * n_p * n_j
+
+    def tile_dma(slot, qq, pp, jj):
+        # Same end-of-array clamp as the single-buffered index map; the
+        # roll below re-aligns, so the two bufferings are bit-exact.
+        start = jnp.minimum(
+            starts_ref[qq, pp] + jj * tile_c, n_tokens - tile_c
+        )
+        return pltpu.make_async_copy(
+            packed_hbm.at[pl.ds(start, tile_c), :],
+            scratch_ref.at[slot],
+            sem_ref.at[slot],
+        )
+
+    if probe != "compute":
+
+        @pl.when(step == 0)
+        def _():
+            # Warm-up: the first tile has nobody to prefetch it.
+            tile_dma(0, q, p, 0).start()
+
+        @pl.when(step + 1 < total)
+        def _():
+            # Issue tile s+1's copy before waiting on our own — this is
+            # the overlap. Decode the next grid step from its linear index
+            # (j fastest, then p, then q — the TPU grid iteration order).
+            nxt = step + 1
+            j2 = nxt % n_j
+            p2 = (nxt // n_j) % n_p
+            q2 = nxt // (n_j * n_p)
+            tile_dma(nxt % 2, q2, p2, j2).start()
+
+        tile_dma(step % 2, q, p, j).wait()
+
+    row0 = starts_ref[q, p] + j * tile_c
+    shift = jnp.maximum(0, row0 - (n_tokens - tile_c))
+    packed = jnp.roll(scratch_ref[step % 2], -shift, axis=0)  # [TILE_C, PB]
+
+    if probe == "dma":
+        out_ref[0, 0] = packed[:, 0].astype(jnp.float32)
+        return
+
+    acc = _unpack_score(packed, v_ref[0], nbits=nbits, dim=dim, tile_c=tile_c)
 
     c = j * tile_c + jax.lax.broadcasted_iota(jnp.int32, (tile_c,), 0)
     valid = c < sizes_ref[q, p]
@@ -110,7 +304,10 @@ def _fused_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("nbits", "dim", "n_tokens", "cap_pad", "tile_c", "interpret"),
+    static_argnames=(
+        "nbits", "dim", "n_tokens", "cap_pad", "tile_c", "buffering",
+        "probe", "interpret",
+    ),
 )
 def fused_gather_score_kernel_call(
     packed_codes: jax.Array,
@@ -124,6 +321,8 @@ def fused_gather_score_kernel_call(
     n_tokens: int,
     cap_pad: int,
     tile_c: int = DEFAULT_TILE_C,
+    buffering: str = DEFAULT_BUFFERING,
+    probe: str = "full",
     interpret: bool = False,
 ) -> jax.Array:
     """Fused CSR probe + selective sum.
@@ -134,10 +333,17 @@ def fused_gather_score_kernel_call(
 
     ``cap_pad`` must be a tile_c multiple and n_tokens >= tile_c (ops.py
     enforces both; it falls back to the jnp reference otherwise).
+    ``buffering`` picks the DMA schedule ("double": explicit
+    [2, tile_c, PB] scratch, manual slot rotation; "single": the original
+    BlockSpec pipeline) — bit-identical outputs. ``probe`` carves the
+    kernel for the autotune sweep ("full" | "dma" | "compute").
     """
     n, pb = packed_codes.shape
     qm, p = starts.shape
     nb = 1 << nbits
+    _check_buffering(buffering)
+    _check_probe(probe, buffering)
+    validate_tile_c(tile_c, pb=pb)
     if n != n_tokens or n < tile_c:
         raise ValueError(f"n_tokens={n_tokens} (array {n}) < tile_c={tile_c}")
     if cap_pad % tile_c:
@@ -145,37 +351,65 @@ def fused_gather_score_kernel_call(
     if v.shape != (qm, dim, nb):
         raise ValueError(f"v shape {v.shape} != {(qm, dim, nb)}")
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
-        grid=(qm, p, cap_pad // tile_c),  # dense: every probe pays cap_pad
-        in_specs=[
-            pl.BlockSpec(
-                (tile_c, pb),
-                lambda q, pp, j, starts, sizes, ps: (
-                    jnp.minimum(starts[q, pp] + j * tile_c, n_tokens - tile_c),
-                    0,
+    grid = (qm, p, cap_pad // tile_c)  # dense: every probe pays cap_pad
+    v_spec = pl.BlockSpec((1, dim, nb), lambda q, pp, j, *_: (q, 0, 0))
+    out_spec = pl.BlockSpec((1, 1, tile_c), lambda q, pp, j, *_: (q, pp, j))
+    if buffering == "double":
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                # The resident codes stay in HBM; the kernel body issues
+                # explicit double-buffered copies of its tile rows.
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                v_spec,
+            ],
+            out_specs=out_spec,
+            scratch_shapes=[
+                pltpu.VMEM((2, tile_c, pb), jnp.uint8),
+                pltpu.SemaphoreType.DMA((2,)),
+            ],
+        )
+        kernel = _fused_kernel_db
+    else:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(
+                    (tile_c, pb),
+                    lambda q, pp, j, starts, sizes, ps: (
+                        jnp.minimum(
+                            starts[q, pp] + j * tile_c, n_tokens - tile_c
+                        ),
+                        0,
+                    ),
+                    indexing_mode=pl.Unblocked(),
                 ),
-                indexing_mode=pl.Unblocked(),
-            ),
-            pl.BlockSpec((1, dim, nb), lambda q, pp, j, *_: (q, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec(
-            (1, 1, tile_c), lambda q, pp, j, *_: (q, pp, j)
-        ),
-    )
+                v_spec,
+            ],
+            out_specs=out_spec,
+        )
+        kernel = _fused_kernel
     return pl.pallas_call(
         functools.partial(
-            _fused_kernel,
+            kernel,
             nbits=nbits,
             dim=dim,
             n_tokens=n_tokens,
             tile_c=tile_c,
+            probe=probe,
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((qm, p, cap_pad), jnp.float32),
         interpret=interpret,
     )(starts, sizes, probe_scores.astype(jnp.float32),
       packed_codes, v.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Ragged grid: 1-D over worklist tiles
+# ---------------------------------------------------------------------------
 
 
 def _ragged_kernel(
@@ -191,6 +425,7 @@ def _ragged_kernel(
     dim: int,
     n_tokens: int,
     tile_c: int,
+    probe: str,
 ):
     w = pl.program_id(0)
     nvalid = nvalid_ref[w]
@@ -203,26 +438,90 @@ def _ragged_kernel(
 
     @pl.when(nvalid > 0)
     def _():
-        nb = 1 << nbits
-        per_byte = 8 // nbits
         row0 = row0_ref[w]
         # The index map clamped the fetch start into [0, n_tokens - tile_c];
         # wanted rows sit ``shift`` rows deeper in the fetched tile.
         shift = jnp.maximum(0, row0 - (n_tokens - tile_c))
         packed = jnp.roll(packed_ref[...], -shift, axis=0)  # [TILE_C, PB]
 
-        mask = jnp.uint8(nb - 1)
-        parts = [
-            (packed >> jnp.uint8(slot * nbits)) & mask
-            for slot in range(per_byte)
-        ]
-        codes = jnp.stack(parts, axis=-1).reshape(tile_c, dim)  # [TILE_C, D]
+        if probe == "dma":
+            out_ref[0] = packed[:, 0].astype(jnp.float32)
+            return
 
-        v = v_ref[0]  # [D, 2^b]
-        acc = jnp.zeros((tile_c,), jnp.float32)
-        for bucket in range(nb):
-            sel = (codes == jnp.uint8(bucket)).astype(jnp.float32)
-            acc = acc + sel @ v[:, bucket]
+        acc = _unpack_score(
+            packed, v_ref[0], nbits=nbits, dim=dim, tile_c=tile_c
+        )
+
+        c = jax.lax.broadcasted_iota(jnp.int32, (tile_c,), 0)
+        out_ref[0] = jnp.where(c < nvalid, acc + pscore_ref[w], 0.0)
+
+
+def _ragged_kernel_db(
+    row0_ref,  # SMEM i32[W]  tile row starts (prefetched)
+    nvalid_ref,  # SMEM i32[W]  valid slots per tile (0 => padding tile)
+    qtok_ref,  # SMEM i32[W]  owning query token per tile (prefetched)
+    pscore_ref,  # SMEM f32[W]  centroid probe score per tile (prefetched)
+    packed_hbm,  # ANY  u8[N, PB]  the resident index (never gathered)
+    v_ref,  # VMEM f32[1, D, 2^b]  the owning query token's v-table
+    out_ref,  # VMEM f32[1, TILE_C]
+    scratch_ref,  # VMEM u8[2, TILE_C, PB]  double-buffered code tiles
+    sem_ref,  # DMA semaphores [2]
+    *,
+    nbits: int,
+    dim: int,
+    n_tokens: int,
+    tile_c: int,
+    probe: str,
+):
+    w = pl.program_id(0)
+    nw = pl.num_programs(0)
+    nvalid = nvalid_ref[w]
+
+    def tile_dma(slot, ww):
+        start = jnp.clip(row0_ref[ww], 0, n_tokens - tile_c)
+        return pltpu.make_async_copy(
+            packed_hbm.at[pl.ds(start, tile_c), :],
+            scratch_ref.at[slot],
+            sem_ref.at[slot],
+        )
+
+    if probe != "compute":
+        # pl.when early-exit composes with the rotation: a padding tile
+        # (nvalid == 0) neither starts nor waits a DMA. Each step's start
+        # and wait are guarded by the SAME prefetched nvalid, so every
+        # started copy is waited exactly once and slots never collide —
+        # steps s and s+1 use opposite slots by construction.
+        @pl.when((w == 0) & (nvalid_ref[0] > 0))
+        def _():
+            tile_dma(0, 0).start()
+
+        # Clamp the lookahead read so the last step stays in bounds; the
+        # w + 1 < nw conjunct makes the clamped value irrelevant.
+        nv_next = nvalid_ref[jnp.minimum(w + 1, nw - 1)]
+
+        @pl.when((w + 1 < nw) & (nv_next > 0))
+        def _():
+            tile_dma((w + 1) % 2, w + 1).start()
+
+    @pl.when(nvalid == 0)
+    def _():
+        out_ref[0] = jnp.zeros((tile_c,), jnp.float32)
+
+    @pl.when(nvalid > 0)
+    def _():
+        if probe != "compute":
+            tile_dma(w % 2, w).wait()
+        row0 = row0_ref[w]
+        shift = jnp.maximum(0, row0 - (n_tokens - tile_c))
+        packed = jnp.roll(scratch_ref[w % 2], -shift, axis=0)  # [TILE_C, PB]
+
+        if probe == "dma":
+            out_ref[0] = packed[:, 0].astype(jnp.float32)
+            return
+
+        acc = _unpack_score(
+            packed, v_ref[0], nbits=nbits, dim=dim, tile_c=tile_c
+        )
 
         c = jax.lax.broadcasted_iota(jnp.int32, (tile_c,), 0)
         out_ref[0] = jnp.where(c < nvalid, acc + pscore_ref[w], 0.0)
@@ -230,7 +529,10 @@ def _ragged_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("nbits", "dim", "n_tokens", "tile_c", "interpret"),
+    static_argnames=(
+        "nbits", "dim", "n_tokens", "tile_c", "buffering", "probe",
+        "interpret",
+    ),
 )
 def ragged_fused_gather_score_kernel_call(
     packed_codes: jax.Array,
@@ -244,6 +546,8 @@ def ragged_fused_gather_score_kernel_call(
     dim: int,
     n_tokens: int,
     tile_c: int = DEFAULT_RAGGED_TILE_C,
+    buffering: str = DEFAULT_BUFFERING,
+    probe: str = "full",
     interpret: bool = False,
 ) -> jax.Array:
     """Worklist-driven fused CSR probe + selective sum (ragged layout).
@@ -253,9 +557,11 @@ def ragged_fused_gather_score_kernel_call(
     global max cluster size — this variant runs a 1-D grid over the tiles
     of a prefix-summed tile worklist (``core.worklist``): one grid step per
     *real* candidate tile, plus statically-bounded padding tiles that
-    early-exit via ``pl.when``. Per step, the prefetched ``row0`` drives an
-    unblocked DMA of the tile's code rows straight from the resident index
-    and ``qtok`` picks the owning query token's v-table block.
+    early-exit via ``pl.when``. Per step, the prefetched ``row0`` drives a
+    DMA of the tile's code rows straight from the resident index —
+    explicit double-buffered copies under ``buffering="double"`` (padding
+    tiles skip the DMA too), the default BlockSpec pipeline under
+    "single" — and ``qtok`` picks the owning query token's v-table block.
 
     packed_codes u8[N, PB], row0/nvalid/qtok i32[W], pscore f32[W],
     v f32[Q, D, 2^b] -> flat scores f32[W * tile_c] with invalid slots
@@ -265,6 +571,9 @@ def ragged_fused_gather_score_kernel_call(
     (w,) = row0.shape
     qm = v.shape[0]
     nb = 1 << nbits
+    _check_buffering(buffering)
+    _check_probe(probe, buffering)
+    validate_tile_c(tile_c, pb=pb)
     if n != n_tokens:
         raise ValueError(
             f"static n_tokens={n_tokens} does not match packed_codes rows {n}"
@@ -277,29 +586,48 @@ def ragged_fused_gather_score_kernel_call(
     if v.shape != (qm, dim, nb):
         raise ValueError(f"v shape {v.shape} != {(qm, dim, nb)}")
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=4,
-        grid=(w,),
-        in_specs=[
-            pl.BlockSpec(
-                (tile_c, pb),
-                lambda i, row0, nvalid, qtok, ps: (
-                    jnp.clip(row0[i], 0, n_tokens - tile_c),
-                    0,
-                ),
-                indexing_mode=pl.Unblocked(),
-            ),
-            pl.BlockSpec((1, dim, nb), lambda i, row0, nvalid, qtok, ps: (qtok[i], 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, tile_c), lambda i, *_: (i, 0)),
+    v_spec = pl.BlockSpec(
+        (1, dim, nb), lambda i, row0, nvalid, qtok, ps: (qtok[i], 0, 0)
     )
+    out_spec = pl.BlockSpec((1, tile_c), lambda i, *_: (i, 0))
+    if buffering == "double":
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=(w,),
+            in_specs=[pl.BlockSpec(memory_space=pltpu.ANY), v_spec],
+            out_specs=out_spec,
+            scratch_shapes=[
+                pltpu.VMEM((2, tile_c, pb), jnp.uint8),
+                pltpu.SemaphoreType.DMA((2,)),
+            ],
+        )
+        kernel = _ragged_kernel_db
+    else:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=(w,),
+            in_specs=[
+                pl.BlockSpec(
+                    (tile_c, pb),
+                    lambda i, row0, nvalid, qtok, ps: (
+                        jnp.clip(row0[i], 0, n_tokens - tile_c),
+                        0,
+                    ),
+                    indexing_mode=pl.Unblocked(),
+                ),
+                v_spec,
+            ],
+            out_specs=out_spec,
+        )
+        kernel = _ragged_kernel
     out = pl.pallas_call(
         functools.partial(
-            _ragged_kernel,
+            kernel,
             nbits=nbits,
             dim=dim,
             n_tokens=n_tokens,
             tile_c=tile_c,
+            probe=probe,
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((w, tile_c), jnp.float32),

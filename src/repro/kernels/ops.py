@@ -8,17 +8,21 @@ force the pure-jnp reference with ``use_kernel=False``.
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import autotune, ref
 from repro.kernels.decompress_score import selective_sum_kernel_call
 from repro.kernels.embedding_bag import embedding_bag_kernel_call
 from repro.kernels.fused_gather_score import (
+    DEFAULT_BUFFERING,
     DEFAULT_RAGGED_TILE_C,
     DEFAULT_TILE_C,
     fused_gather_score_kernel_call,
     ragged_fused_gather_score_kernel_call,
+    validate_tile_c,
 )
 
 __all__ = [
@@ -28,6 +32,8 @@ __all__ = [
     "ragged_fused_gather_selective_sum",
     "segmented_ragged_fused_gather_selective_sum",
     "resolve_tile_c",
+    "resolve_tile_choice",
+    "TileChoice",
     "embedding_bag",
     "on_tpu",
 ]
@@ -57,20 +63,114 @@ def _check_packable_dim(dim: int, nbits: int, *, byte_wise: bool) -> None:
         )
 
 
-def resolve_tile_c(cap: int, tile_c: int | None = None, *, layout: str = "dense") -> int:
-    """Candidate tile row count for the fused kernels and worklists.
+@dataclasses.dataclass(frozen=True)
+class TileChoice:
+    """A resolved candidate-tile decision and where it came from.
 
-    An explicit ``tile_c`` wins. Otherwise: power-of-two >= 8 (the TPU
-    sublane quantum) capped at the layout default — 128 for the dense grid
-    (DMA efficiency; the masked tail is paid once per probe anyway) and 32
-    for ragged worklists (the per-cluster tail waste is < tile_c rows, so a
-    tighter tile tracks skewed cluster sizes better) — and at the padded
-    cap so tiny indexes don't over-pad.
+    source: "config" (explicit ``cfg.tile_c`` override), "autotune" (a
+    measured winner from ``kernels/autotune.py`` matched this index
+    geometry on this backend), or "heuristic" (the analytic fallback).
+    ``buffering`` is concrete ("double" | "single"): the tuned entry's
+    schedule when the table supplied the tile, else the kernel default.
     """
+
+    tile_c: int
+    source: str
+    buffering: str
+
+
+def resolve_tile_choice(
+    cap: int,
+    tile_c: int | None = None,
+    *,
+    layout: str = "dense",
+    n_tokens: int | None = None,
+    nbits: int | None = None,
+    dim: int | None = None,
+    buffering: str = "auto",
+    table: "autotune.AutotuneTable | None" = None,
+) -> TileChoice:
+    """Candidate tile row count for the fused kernels and worklists, with
+    provenance — the single resolver every consumer funnels through.
+
+    Precedence:
+      1. An explicit ``tile_c`` wins unconditionally (source="config").
+      2. With the full index geometry (``n_tokens``/``nbits``/``dim``),
+         the autotune table is consulted: a backend-matched entry for this
+         (geometry bucket, layout) supplies tile AND DMA schedule
+         (source="autotune").
+      3. The analytic heuristic: power-of-two >= 8 (the TPU sublane
+         quantum) capped at the layout default — 128 for the dense grid
+         (DMA efficiency; the masked tail is paid once per probe anyway)
+         and 32 for ragged worklists (the per-cluster tail waste is
+         < tile_c rows, so a tighter tile tracks skewed cluster sizes
+         better) — and at the padded cap so tiny indexes don't over-pad
+         (source="heuristic").
+
+    ``buffering="auto"`` resolves to the tuned entry's schedule when the
+    table supplied the tile, else ``DEFAULT_BUFFERING``; an explicit
+    "double"/"single" always stands. The returned tile is validated
+    against the double-buffered scratch budget when the geometry gives
+    the packed byte width.
+    """
+    pb = dim * nbits // 8 if (dim is not None and nbits is not None) else None
     if tile_c is not None:
-        return tile_c
-    default = DEFAULT_RAGGED_TILE_C if layout == "ragged" else DEFAULT_TILE_C
-    return min(default, 1 << max(3, (cap - 1).bit_length() if cap > 1 else 3))
+        chosen = TileChoice(
+            tile_c,
+            "config",
+            DEFAULT_BUFFERING if buffering == "auto" else buffering,
+        )
+    else:
+        tuned = None
+        if n_tokens is not None and nbits is not None and dim is not None:
+            tuned = (table or autotune.get_default_table()).lookup(
+                "ragged" if layout == "ragged" else "dense",
+                nbits=nbits, dim=dim, cap=cap, n_tokens=n_tokens,
+            )
+        if tuned is not None:
+            chosen = TileChoice(
+                tuned.tile_c,
+                "autotune",
+                tuned.buffering if buffering == "auto" else buffering,
+            )
+        else:
+            default = (
+                DEFAULT_RAGGED_TILE_C if layout == "ragged" else DEFAULT_TILE_C
+            )
+            tile = min(
+                default, 1 << max(3, (cap - 1).bit_length() if cap > 1 else 3)
+            )
+            chosen = TileChoice(
+                tile,
+                "heuristic",
+                DEFAULT_BUFFERING if buffering == "auto" else buffering,
+            )
+    validate_tile_c(
+        chosen.tile_c, pb=pb, where=f"tile_c ({chosen.source})"
+    )
+    return chosen
+
+
+def resolve_tile_c(
+    cap: int,
+    tile_c: int | None = None,
+    *,
+    layout: str = "dense",
+    n_tokens: int | None = None,
+    nbits: int | None = None,
+    dim: int | None = None,
+) -> int:
+    """``resolve_tile_choice`` without the provenance — the tile alone.
+
+    Callers that only know ``cap`` (no geometry kwargs) get the explicit
+    override or the analytic heuristic, never an autotuned entry; plan
+    resolution passes the geometry and persists the full choice into the
+    config, so by execution time ``cfg.tile_c`` is concrete and this
+    returns it unchanged.
+    """
+    return resolve_tile_choice(
+        cap, tile_c, layout=layout, n_tokens=n_tokens, nbits=nbits, dim=dim
+    ).tile_c
 
 
 def selective_sum(
@@ -128,6 +228,7 @@ def fused_gather_selective_sum(
     use_kernel: bool = True,
     tile_c: int | None = None,
     impl: str = "fused",
+    buffering: str = "auto",
 ) -> jax.Array:
     """Single-pass CSR probe + implicit decompression + scoring.
 
@@ -140,11 +241,17 @@ def fused_gather_selective_sum(
     or an index too small to tile — falls back to the jnp reference, which
     gathers but is semantically identical.
 
+    ``buffering`` picks the kernel's DMA schedule ("double" | "single",
+    bit-identical; see fused_gather_score.py); "auto" takes the kernel
+    default — plan resolution passes the concrete resolved choice.
+
     With ``use_kernel`` the dim must fill whole packed bytes — the Pallas
     kernel reshapes codes as [PB, per_byte] and cannot skip a padded
     trailing byte; the jnp reference (gather-based) handles any dim.
     """
     _check_packable_dim(dim, nbits, byte_wise=use_kernel and impl == "fused")
+    if buffering == "auto":
+        buffering = DEFAULT_BUFFERING
     starts = cluster_offsets[probe_cids].astype(jnp.int32)  # [Q, P]
     sizes = cluster_sizes[probe_cids].astype(jnp.int32)  # [Q, P]
     tile = resolve_tile_c(cap, tile_c)
@@ -163,7 +270,7 @@ def fused_gather_selective_sum(
     out = fused_gather_score_kernel_call(
         packed_codes, starts, sizes, probe_scores, v,
         nbits=nbits, dim=dim, n_tokens=n_tokens, cap_pad=cap_pad,
-        tile_c=tile, interpret=not on_tpu(),
+        tile_c=tile, buffering=buffering, interpret=not on_tpu(),
     )
     return out[:, :, :cap]
 
@@ -207,6 +314,7 @@ def ragged_fused_gather_selective_sum(
     tile_c: int,
     n_tokens: int,
     use_kernel: bool = True,
+    buffering: str = "auto",
 ) -> jax.Array:
     """Single-pass worklist probe + implicit decompression + scoring.
 
@@ -216,9 +324,13 @@ def ragged_fused_gather_selective_sum(
 
     Routes to the ragged Pallas scalar-prefetch kernel (interpret off-TPU);
     b=8 or an index smaller than one code tile falls back to the jnp
-    reference, which gathers but is semantically identical.
+    reference, which gathers but is semantically identical. ``buffering``
+    as in ``fused_gather_selective_sum``.
     """
     _check_packable_dim(dim, nbits, byte_wise=use_kernel)
+    if buffering == "auto":
+        buffering = DEFAULT_BUFFERING
+    validate_tile_c(tile_c, pb=packed_codes.shape[-1])
     if (
         not use_kernel
         or nbits == 8  # 256 select-accumulate unrolls: ref lowers better
@@ -232,7 +344,7 @@ def ragged_fused_gather_selective_sum(
     return ragged_fused_gather_score_kernel_call(
         packed_codes, row0, nvalid, qtok, pscore, v,
         nbits=nbits, dim=dim, n_tokens=n_tokens, tile_c=tile_c,
-        interpret=not on_tpu(),
+        buffering=buffering, interpret=not on_tpu(),
     )
 
 
@@ -249,6 +361,7 @@ def segmented_ragged_fused_gather_selective_sum(
     dim: int,
     tile_c: int,
     use_kernel: bool = True,
+    buffering: str = "auto",
 ) -> jax.Array:
     """Single-pass worklist probe + decompression + scoring across segments.
 
@@ -274,11 +387,14 @@ def segmented_ragged_fused_gather_selective_sum(
     ``ragged_fused_gather_selective_sum`` exactly.
     """
     _check_packable_dim(dim, nbits, byte_wise=use_kernel)
+    if buffering == "auto":
+        buffering = DEFAULT_BUFFERING
     if len(packed_list) == 1:
         return ragged_fused_gather_selective_sum(
             packed_list[0], row0, nvalid, qtok, pscore, v,
             nbits=nbits, dim=dim, tile_c=tile_c,
             n_tokens=packed_list[0].shape[0], use_kernel=use_kernel,
+            buffering=buffering,
         )
     if (
         not use_kernel
@@ -307,7 +423,7 @@ def segmented_ragged_fused_gather_selective_sum(
         out = out + ragged_fused_gather_score_kernel_call(
             codes, row0, nvalid_s, qtok, pscore_f32, v,
             nbits=nbits, dim=dim, n_tokens=codes.shape[0], tile_c=tile_c,
-            interpret=not on_tpu(),
+            buffering=buffering, interpret=not on_tpu(),
         )
     return out
 

@@ -475,7 +475,7 @@ def _make_segmented_ragged_fn(
             scores = ops.segmented_ragged_fused_gather_selective_sum(
                 packed_list, wl.row0, wl.nvalid, wl.seg, wl.qtok, wl.pscore,
                 v, nbits=base.nbits, dim=base.dim, tile_c=tile,
-                use_kernel=cfg.wants_kernel,
+                use_kernel=cfg.wants_kernel, buffering=cfg.buffering,
             )
             lane = jnp.arange(tile, dtype=jnp.int32)
             slot_valid = (lane[None, :] < wl.nvalid[:, None]).reshape(-1)

@@ -7,6 +7,13 @@ import pytest
 # NOTE: no XLA_FLAGS device-count override here — smoke tests and benches
 # must see the real single CPU device. Only launch/dryrun.py forces 512.
 
+# Hermetic tile resolution: a committed BENCH_autotune.json at the repo
+# root must not steer plan resolution during tests (assertions compare
+# against the analytic heuristic). Tests that exercise the autotune table
+# install one explicitly via kernels.autotune.set_default_table or point
+# this env var at their own file.
+os.environ.setdefault("REPRO_AUTOTUNE_TABLE", os.devnull)
+
 # The container may lack hypothesis; fall back to the deterministic stub so
 # the suite still collects and the property tests run (smoke-level sampling).
 try:

@@ -1,0 +1,492 @@
+"""Double-buffered (pipelined) fused gather-score kernels + autotune table.
+
+The explicit-DMA double-buffered kernels must be bit-identical to the
+single-buffered BlockSpec pipeline across every layout (dense grid, ragged
+worklist, segmented replay) and tile size — the schedule moves bytes
+earlier, it must never change them. Plus the tile autotune subsystem:
+table round-trip/versioning/backend matching, resolver precedence, plan
+consultation, and the 2-point sweep smoke validating the emitted schema.
+"""
+
+import dataclasses
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import IndexBuildConfig, WarpSearchConfig, build_index
+from repro.core.engine import resolve_config
+from repro.core.retriever import Retriever
+from repro.core.worklist import build_tile_worklist, worklist_bound
+from repro.data import make_corpus, make_queries
+from repro.kernels import autotune, ops, ref
+from repro.kernels.fused_gather_score import (
+    DB_SCRATCH_BYTES_MAX,
+    fused_gather_score_kernel_call,
+    ragged_fused_gather_score_kernel_call,
+    validate_tile_c,
+)
+
+DIM = 128
+NBITS = 4
+PB = DIM * NBITS // 8
+TILES = (16, 32, 64, 128)
+
+
+def _round_up(x, m):
+    return ((x + m - 1) // m) * m
+
+
+def _probe_problem(rng, *, n_tok, n_clusters, q, p):
+    """Random CSR index + probe set: (packed, starts, sizes, pscores, v, cap)."""
+    cuts = np.sort(rng.choice(n_tok + 1, size=n_clusters - 1, replace=True))
+    offsets = np.concatenate([[0], cuts, [n_tok]]).astype(np.int32)
+    csizes = np.diff(offsets).astype(np.int32)
+    packed = rng.integers(0, 256, (n_tok, PB), dtype=np.uint8)
+    cids = rng.integers(0, n_clusters, (q, p)).astype(np.int32)
+    starts = offsets[cids]
+    sizes = np.take(csizes, cids).astype(np.int32)
+    pscores = rng.standard_normal((q, p)).astype(np.float32)
+    v = rng.standard_normal((q, DIM, 1 << NBITS)).astype(np.float32)
+    return packed, starts, sizes, pscores, v, int(csizes.max())
+
+
+def _dense_call(packed, starts, sizes, pscores, v, *, tile_c, buffering,
+                n_tok, cap_pad):
+    return fused_gather_score_kernel_call(
+        jnp.asarray(packed), jnp.asarray(starts), jnp.asarray(sizes),
+        jnp.asarray(pscores), jnp.asarray(v),
+        nbits=NBITS, dim=DIM, n_tokens=n_tok, cap_pad=cap_pad,
+        tile_c=tile_c, buffering=buffering, interpret=not ops.on_tpu(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parity matrix: double == single (bit-exact) == oracle, per layout x tile
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.tpu_kernel
+@pytest.mark.parametrize("tile_c", TILES)
+def test_dense_double_buffer_parity(tile_c, rng):
+    n_tok = 300
+    packed, starts, sizes, pscores, v, cap = _probe_problem(
+        rng, n_tok=n_tok, n_clusters=8, q=2, p=3
+    )
+    cap_pad = _round_up(max(cap, tile_c), tile_c)
+    dbl = _dense_call(packed, starts, sizes, pscores, v, tile_c=tile_c,
+                      buffering="double", n_tok=n_tok, cap_pad=cap_pad)
+    sgl = _dense_call(packed, starts, sizes, pscores, v, tile_c=tile_c,
+                      buffering="single", n_tok=n_tok, cap_pad=cap_pad)
+    # Bit-exact: the DMA schedule must not change a single ulp.
+    np.testing.assert_array_equal(np.asarray(dbl), np.asarray(sgl))
+    want = ref.fused_gather_score(
+        jnp.asarray(packed), jnp.asarray(starts), jnp.asarray(sizes),
+        jnp.asarray(pscores), jnp.asarray(v), nbits=NBITS, dim=DIM, cap=cap,
+    )
+    np.testing.assert_allclose(
+        np.asarray(dbl)[:, :, :cap], np.asarray(want), rtol=1e-4, atol=1e-4
+    )
+
+
+def _ragged_arrays(starts, sizes, pscores, *, tile_c):
+    wl = build_tile_worklist(
+        jnp.asarray(starts), jnp.asarray(sizes), jnp.asarray(pscores),
+        tile_c=tile_c,
+        tiles_per_qtoken=worklist_bound(
+            np.maximum(sizes.max(axis=0), 1), starts.shape[1], tile_c
+        ),
+    )
+    return wl
+
+
+def _ragged_call(packed, wl, v, *, tile_c, buffering, n_tok):
+    return ragged_fused_gather_score_kernel_call(
+        jnp.asarray(packed), wl.row0, wl.nvalid, wl.qtok, wl.pscore,
+        jnp.asarray(v), nbits=NBITS, dim=DIM, n_tokens=n_tok, tile_c=tile_c,
+        buffering=buffering, interpret=not ops.on_tpu(),
+    )
+
+
+@pytest.mark.tpu_kernel
+@pytest.mark.parametrize("tile_c", TILES)
+def test_ragged_double_buffer_parity(tile_c, rng):
+    n_tok = 300
+    packed, starts, sizes, pscores, v, _ = _probe_problem(
+        rng, n_tok=n_tok, n_clusters=8, q=2, p=3
+    )
+    wl = _ragged_arrays(starts, sizes, pscores, tile_c=tile_c)
+    dbl = _ragged_call(packed, wl, v, tile_c=tile_c, buffering="double",
+                       n_tok=n_tok)
+    sgl = _ragged_call(packed, wl, v, tile_c=tile_c, buffering="single",
+                       n_tok=n_tok)
+    np.testing.assert_array_equal(np.asarray(dbl), np.asarray(sgl))
+    want = ref.ragged_fused_gather_score(
+        jnp.asarray(packed), wl.row0, wl.nvalid, wl.qtok, wl.pscore,
+        jnp.asarray(v), nbits=NBITS, dim=DIM, tile_c=tile_c,
+    )
+    np.testing.assert_allclose(np.asarray(dbl), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.tpu_kernel
+@pytest.mark.parametrize("tile_c", [16, 32])
+def test_segmented_double_buffer_parity(tile_c, rng):
+    """Segmented replay: per-segment double-buffered kernels sum to the
+    segmented oracle; includes a sub-tile delta segment (routed to the
+    reference for that segment only)."""
+    n_base, n_delta = 200, tile_c - 8  # delta below one tile on purpose
+    base = rng.integers(0, 256, (n_base, PB), dtype=np.uint8)
+    delta = rng.integers(0, 256, (n_delta, PB), dtype=np.uint8)
+    q = 2
+    w = 6
+    # Hand-built worklist: tiles alternate segments; one padding tile.
+    row0 = np.array([0, 0, tile_c, 0, 2 * tile_c, 0], np.int32)
+    nvalid = np.array([tile_c, n_delta, tile_c, 4, tile_c - 3, 0], np.int32)
+    seg = np.array([0, 1, 0, 1, 0, 0], np.int32)
+    qtok = np.array([0, 0, 1, 1, 1, 0], np.int32)
+    pscore = rng.standard_normal(w).astype(np.float32)
+    v = rng.standard_normal((q, DIM, 1 << NBITS)).astype(np.float32)
+
+    out = {}
+    for buffering in ("double", "single"):
+        out[buffering] = ops.segmented_ragged_fused_gather_selective_sum(
+            (jnp.asarray(base), jnp.asarray(delta)),
+            jnp.asarray(row0), jnp.asarray(nvalid), jnp.asarray(seg),
+            jnp.asarray(qtok), jnp.asarray(pscore), jnp.asarray(v),
+            nbits=NBITS, dim=DIM, tile_c=tile_c, use_kernel=True,
+        )
+    np.testing.assert_array_equal(
+        np.asarray(out["double"]), np.asarray(out["single"])
+    )
+    want = ref.segmented_ragged_fused_gather_score(
+        (jnp.asarray(base), jnp.asarray(delta)),
+        jnp.asarray(row0), jnp.asarray(nvalid), jnp.asarray(seg),
+        jnp.asarray(qtok), jnp.asarray(pscore), jnp.asarray(v),
+        nbits=NBITS, dim=DIM, tile_c=tile_c,
+    )
+    np.testing.assert_allclose(np.asarray(out["double"]), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Edge cases: end-clamp+roll, padding-tile early exit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.tpu_kernel
+def test_dense_end_clamp_engages_identically(rng):
+    """n_tokens barely above tile_c: the last tile's DMA start clamps to
+    n_tokens - tile_c and the roll re-aligns — under both bufferings."""
+    tile_c, n_tok = 32, 37  # final cluster tiles overhang the array end
+    offsets = np.array([0, 20, 37], np.int32)
+    csizes = np.diff(offsets).astype(np.int32)
+    packed = rng.integers(0, 256, (n_tok, PB), dtype=np.uint8)
+    cids = np.array([[0, 1], [1, 0]], np.int32)
+    starts, sizes = offsets[cids], np.take(csizes, cids).astype(np.int32)
+    pscores = rng.standard_normal((2, 2)).astype(np.float32)
+    v = rng.standard_normal((2, DIM, 1 << NBITS)).astype(np.float32)
+    cap = int(csizes.max())
+    cap_pad = _round_up(max(cap, tile_c), tile_c)
+    dbl = _dense_call(packed, starts, sizes, pscores, v, tile_c=tile_c,
+                      buffering="double", n_tok=n_tok, cap_pad=cap_pad)
+    sgl = _dense_call(packed, starts, sizes, pscores, v, tile_c=tile_c,
+                      buffering="single", n_tok=n_tok, cap_pad=cap_pad)
+    np.testing.assert_array_equal(np.asarray(dbl), np.asarray(sgl))
+    want = ref.fused_gather_score(
+        jnp.asarray(packed), jnp.asarray(starts), jnp.asarray(sizes),
+        jnp.asarray(pscores), jnp.asarray(v), nbits=NBITS, dim=DIM, cap=cap,
+    )
+    np.testing.assert_allclose(
+        np.asarray(dbl)[:, :, :cap], np.asarray(want), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.tpu_kernel
+def test_ragged_padding_tiles_early_exit_zero(rng):
+    """Padding tiles (nvalid == 0) — leading, interior runs, trailing —
+    write exactly 0.0 and skip/balance the DMA rotation under double
+    buffering (a wait without a start would deadlock interpret mode too)."""
+    tile_c, n_tok = 16, 200
+    packed = rng.integers(0, 256, (n_tok, PB), dtype=np.uint8)
+    row0 = np.array([0, 16, 0, 0, 48, 0, 0], np.int32)
+    nvalid = np.array([0, 16, 0, 0, 9, 0, 0], np.int32)  # first tile padding
+    qtok = np.zeros(7, np.int32)
+    pscore = np.ones(7, np.float32)
+    v = rng.standard_normal((1, DIM, 1 << NBITS)).astype(np.float32)
+    outs = {}
+    for buffering in ("double", "single"):
+        outs[buffering] = np.asarray(ragged_fused_gather_score_kernel_call(
+            jnp.asarray(packed), jnp.asarray(row0), jnp.asarray(nvalid),
+            jnp.asarray(qtok), jnp.asarray(pscore), jnp.asarray(v),
+            nbits=NBITS, dim=DIM, n_tokens=n_tok, tile_c=tile_c,
+            buffering=buffering, interpret=not ops.on_tpu(),
+        ).reshape(7, tile_c))
+    np.testing.assert_array_equal(outs["double"], outs["single"])
+    for w in (0, 2, 3, 5, 6):
+        np.testing.assert_array_equal(outs["double"][w], 0.0)
+    assert np.any(outs["double"][1] != 0.0)
+    np.testing.assert_array_equal(outs["double"][4][9:], 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Directed errors + probe carve-outs
+# ---------------------------------------------------------------------------
+
+
+def test_validate_tile_c_directed_errors():
+    with pytest.raises(ValueError, match="multiple of 8"):
+        validate_tile_c(12)
+    with pytest.raises(ValueError, match="multiple of 8"):
+        validate_tile_c(0)
+    with pytest.raises(ValueError, match="must be an int"):
+        validate_tile_c("32")
+    # Over the double-buffered VMEM scratch budget.
+    big = DB_SCRATCH_BYTES_MAX  # 2 * big * 64 bytes >> budget
+    with pytest.raises(ValueError, match="VMEM"):
+        validate_tile_c(big, pb=64)
+    assert validate_tile_c(32, pb=64) == 32
+
+
+def test_buffering_and_probe_validation(rng):
+    packed, starts, sizes, pscores, v, cap = _probe_problem(
+        rng, n_tok=100, n_clusters=4, q=1, p=2
+    )
+    kwargs = dict(nbits=NBITS, dim=DIM, n_tokens=100, cap_pad=32, tile_c=16,
+                  interpret=True)
+    with pytest.raises(ValueError, match="buffering"):
+        fused_gather_score_kernel_call(
+            jnp.asarray(packed), jnp.asarray(starts), jnp.asarray(sizes),
+            jnp.asarray(pscores), jnp.asarray(v), buffering="triple", **kwargs
+        )
+    with pytest.raises(ValueError, match="probe='compute'"):
+        fused_gather_score_kernel_call(
+            jnp.asarray(packed), jnp.asarray(starts), jnp.asarray(sizes),
+            jnp.asarray(pscores), jnp.asarray(v), buffering="single",
+            probe="compute", **kwargs
+        )
+
+
+@pytest.mark.tpu_kernel
+@pytest.mark.parametrize("probe", ["dma", "compute"])
+def test_probe_carve_outs_run(probe, rng):
+    """The autotune sweep's measurement carve-outs compile and produce the
+    right shape (their numeric content is schedule-internal)."""
+    n_tok = 120
+    packed, starts, sizes, pscores, v, cap = _probe_problem(
+        rng, n_tok=n_tok, n_clusters=4, q=1, p=2
+    )
+    out = _dense_call(packed, starts, sizes, pscores, v, tile_c=16,
+                      buffering="double", n_tok=n_tok,
+                      cap_pad=_round_up(max(cap, 16), 16))
+    probed = fused_gather_score_kernel_call(
+        jnp.asarray(packed), jnp.asarray(starts), jnp.asarray(sizes),
+        jnp.asarray(pscores), jnp.asarray(v),
+        nbits=NBITS, dim=DIM, n_tokens=n_tok,
+        cap_pad=_round_up(max(cap, 16), 16), tile_c=16,
+        buffering="double", probe=probe, interpret=not ops.on_tpu(),
+    )
+    assert probed.shape == out.shape
+
+
+# ---------------------------------------------------------------------------
+# Autotune table: round-trip, versioning, backend matching, resolver
+# ---------------------------------------------------------------------------
+
+
+def _tuned(tile_c=64, buffering="single", measured_on="interpret"):
+    return autotune.TunedTile(
+        tile_c=tile_c, buffering=buffering, dma_us=10.0, compute_us=20.0,
+        total_us=25.0, measured_on=measured_on,
+    )
+
+
+GEO = dict(nbits=4, dim=128, cap=100, n_tokens=3000)
+
+
+def test_autotune_table_round_trip(tmp_path):
+    table = autotune.AutotuneTable()
+    key = table.record("dense", _tuned(), **GEO)
+    assert key == (
+        "layout=dense|nbits=4|dim=128|cap_bucket=128|ntok_bucket=4096"
+    )
+    path = str(tmp_path / "table.json")
+    table.save(path)
+    loaded = autotune.AutotuneTable.load(path)
+    hit = loaded.lookup("dense", **GEO, backend="interpret")
+    assert hit == _tuned()
+    # Same geometry bucket, different exact values -> same entry.
+    assert loaded.lookup(
+        "dense", nbits=4, dim=128, cap=70, n_tokens=2100, backend="interpret"
+    ) == _tuned()
+    # Different layout / different bucket -> miss.
+    assert loaded.lookup("ragged", **GEO, backend="interpret") is None
+    assert loaded.lookup(
+        "dense", nbits=4, dim=128, cap=300, n_tokens=3000, backend="interpret"
+    ) is None
+
+
+def test_autotune_version_mismatch_empties_table(tmp_path):
+    table = autotune.AutotuneTable()
+    table.record("dense", _tuned(), **GEO)
+    doc = table.to_json()
+    doc["autotune_table_version"] = autotune.AUTOTUNE_TABLE_VERSION + 1
+    path = tmp_path / "stale.json"
+    path.write_text(json.dumps(doc))
+    assert len(autotune.AutotuneTable.load(str(path))) == 0
+
+
+def test_autotune_backend_mismatch_never_applies():
+    table = autotune.AutotuneTable()
+    table.record("dense", _tuned(measured_on="tpu"), **GEO)
+    assert table.lookup("dense", **GEO, backend="interpret") is None
+    assert table.lookup("dense", **GEO, backend="tpu") == _tuned(
+        measured_on="tpu"
+    )
+
+
+def test_tuned_tile_validation_and_overlap():
+    with pytest.raises(ValueError, match="multiple of 8"):
+        _tuned(tile_c=12)
+    with pytest.raises(ValueError, match="buffering"):
+        _tuned(buffering="triple")
+    with pytest.raises(ValueError, match="measured_on"):
+        _tuned(measured_on="gpu")
+    # dma=10, compute=20, total=25 -> 5us hidden of a 10us possible.
+    assert _tuned().overlap_frac == pytest.approx(0.5)
+    full = autotune.TunedTile(64, "double", 10.0, 20.0, 20.0, "interpret")
+    assert full.overlap_frac == pytest.approx(1.0)
+
+
+def test_resolve_tile_choice_precedence():
+    table = autotune.AutotuneTable()
+    table.record("dense", _tuned(tile_c=64, buffering="single"), **GEO)
+    # 1. Explicit config wins over the table.
+    got = ops.resolve_tile_choice(100, 32, layout="dense", table=table, **{
+        k: GEO[k] for k in ("n_tokens", "nbits", "dim")
+    })
+    assert (got.tile_c, got.source) == (32, "config")
+    # 2. Table hit (backend-matched: this container is interpret).
+    got = ops.resolve_tile_choice(
+        100, None, layout="dense", n_tokens=3000, nbits=4, dim=128,
+        table=table,
+    )
+    assert (got.tile_c, got.source, got.buffering) == (64, "autotune", "single")
+    # Explicit buffering overrides the tuned schedule.
+    got = ops.resolve_tile_choice(
+        100, None, layout="dense", n_tokens=3000, nbits=4, dim=128,
+        table=table, buffering="double",
+    )
+    assert got.buffering == "double"
+    # 3. No geometry -> never consults the table; analytic heuristic.
+    got = ops.resolve_tile_choice(100, None, layout="dense", table=table)
+    assert (got.tile_c, got.source, got.buffering) == (128, "heuristic", "double")
+    got = ops.resolve_tile_choice(100, None, layout="ragged", table=table)
+    assert (got.tile_c, got.source) == (32, "heuristic")
+    # Tiny cap: power-of-two >= 8 capped at padded cap.
+    assert ops.resolve_tile_choice(5, None).tile_c == 8
+
+
+@pytest.fixture(scope="module")
+def small_index():
+    corpus = make_corpus(n_docs=150, mean_doc_len=12, seed=21)
+    idx = build_index(
+        corpus.emb, corpus.token_doc_ids, corpus.n_docs,
+        IndexBuildConfig(n_centroids=16, nbits=4, kmeans_iters=2),
+    )
+    q, qmask, _ = make_queries(corpus, n_queries=2, seed=22)
+    return idx, q, qmask
+
+
+def test_plan_consults_autotune_table(small_index):
+    """An installed table steers plan resolution (tile_c + buffering +
+    provenance in describe()) without changing the retrieved top-k."""
+    idx, q, qmask = small_index
+    cfg = WarpSearchConfig(nprobe=4, k=10, t_prime=300, k_impute=16)
+    r = Retriever.from_index(idx)
+    base_plan = r.plan(cfg)
+    base = base_plan.retrieve(q[0], qmask[0])
+    assert base_plan.describe()["tile_source"] == "heuristic"
+
+    table = autotune.AutotuneTable()
+    table.record(
+        "dense", _tuned(tile_c=16, buffering="single"),
+        nbits=idx.nbits, dim=idx.dim, cap=idx.cap, n_tokens=idx.n_tokens,
+    )
+    autotune.set_default_table(table)
+    try:
+        # Fresh Retriever: plans are cached per config, and the baseline
+        # plan above was resolved before the table was installed.
+        tuned_plan = Retriever.from_index(idx).plan(cfg)
+        desc = tuned_plan.describe()
+        assert desc["tile_c"] == 16
+        assert desc["tile_source"] == "autotune"
+        assert desc["buffering"] == "single"
+        tuned = tuned_plan.retrieve(q[0], qmask[0])
+    finally:
+        autotune.set_default_table(None)
+    np.testing.assert_array_equal(
+        np.asarray(base.doc_ids), np.asarray(tuned.doc_ids)
+    )
+    np.testing.assert_allclose(
+        np.asarray(base.scores), np.asarray(tuned.scores), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_resolved_config_records_buffering(small_index):
+    """Default resolution concretizes buffering to the kernel default and
+    stamps tile provenance; explicit tile_c resolves as config."""
+    idx, _, _ = small_index
+    cfg = resolve_config(idx, WarpSearchConfig(nprobe=4, k=10))
+    assert cfg.buffering == "double"
+    assert cfg.tile_source in ("autotune", "heuristic")
+    cfg = resolve_config(idx, WarpSearchConfig(nprobe=4, k=10, tile_c=16))
+    assert (cfg.tile_c, cfg.tile_source) == (16, "config")
+    with pytest.raises(ValueError, match="buffering"):
+        WarpSearchConfig(nprobe=4, k=10, buffering="triple")
+
+
+@pytest.mark.tpu_kernel(requires_tpu=True)
+def test_double_buffering_selected_on_tpu(small_index):
+    """On real hardware the resolved plan runs the explicit double-buffered
+    DMA schedule by default (the overlap is the point of this PR)."""
+    idx, q, qmask = small_index
+    cfg = resolve_config(
+        idx, WarpSearchConfig(nprobe=4, k=10, gather="fused", executor="kernel")
+    )
+    assert cfg.buffering == "double"
+    assert autotune.backend_kind() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Sweep smoke: schema of the emitted table
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.tpu_kernel
+def test_bench_autotune_two_point_sweep_schema(tmp_path):
+    """2-point sweep (one tier, one tile, double-buffered only) writes a
+    loadable versioned table whose entries carry the measurement fields."""
+    from benchmarks import bench_autotune
+
+    out = str(tmp_path / "BENCH_autotune.json")
+    table = bench_autotune.run(
+        tiers=("nfcorpus_like",), tiles=(16,), bufferings=("double",),
+        out_path=out, install=False,
+    )
+    assert len(table) == 2  # dense + ragged winners
+    doc = json.loads(open(out).read())
+    assert doc["autotune_table_version"] == autotune.AUTOTUNE_TABLE_VERSION
+    assert doc["bench_schema"] >= 2
+    assert doc["backend"] == autotune.backend_kind()
+    assert doc["sweep"]["records"], "sweep must record per-point timings"
+    for rec in doc["sweep"]["records"]:
+        assert {"tier", "layout", "tile_c", "buffering", "total_us",
+                "dma_us", "compute_us", "overlap_frac"} <= set(rec)
+    loaded = autotune.AutotuneTable.load(out)
+    assert len(loaded) == 2
+    for entry in loaded.entries.values():
+        assert entry.tile_c == 16
+        assert entry.measured_on == autotune.backend_kind()
+        assert 0.0 <= entry.overlap_frac <= 1.0
