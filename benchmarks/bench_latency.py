@@ -28,7 +28,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.bench_autotune import dense_point, ragged_point, sweep_probe_set
-from benchmarks.common import PLANS, candidate_traffic_bytes, emit, get_setup, time_fn
+from benchmarks.common import (
+    PLANS,
+    candidate_traffic_bytes,
+    emit,
+    get_setup,
+    make_query_stream,
+    time_fn,
+)
 from repro.core import Retriever, WarpSearchConfig, plaid_style_search, xtr_reference
 from repro.core.engine import (
     gather_candidates,
@@ -356,6 +363,25 @@ def run() -> None:
                 "chosen_bucket": plan_ragged.adaptive_bucket(q0, m0),
             },
         }
+        if tier == "zipf_like":
+            # Rung distribution of the shared seeded traffic stream (the
+            # same stream the serving suite replays), so latency and
+            # serving records agree on the traffic → ladder mapping.
+            sq, sm, sids = make_query_stream(tier, 64, seed=11, pool=16)
+            rung_of: dict[int, int] = {}
+            hist: dict[int, int] = {}
+            for j in range(len(sids)):
+                pid = int(sids[j])
+                if pid not in rung_of:
+                    rung_of[pid] = plan_ragged.adaptive_bucket(sq[j], sm[j])
+                hist[rung_of[pid]] = hist.get(rung_of[pid], 0) + 1
+            PLANS[tier]["warp_e2e_ragged"]["stream_rungs"] = {
+                str(k): v for k, v in sorted(hist.items())
+            }
+            emit(
+                f"latency/{tier}/stream_rungs", 0.0,
+                "|".join(f"{k}:{v}" for k, v in sorted(hist.items())),
+            )
         f_warp = lambda: plan.retrieve(q0, m0)
         t_warp = time_fn(lambda: f_warp())
         t_warp_fused = time_fn(lambda: plan_fused.retrieve(q0, m0))

@@ -20,6 +20,7 @@ __all__ = [
     "time_fn",
     "emit",
     "get_setup",
+    "make_query_stream",
     "candidate_traffic_bytes",
     "BENCH_SCHEMA_VERSION",
     "SETUPS",
@@ -118,3 +119,44 @@ def get_setup(name: str, nbits: int = 4):
     q, qmask, rel = make_queries(corpus, n_queries=16, seed=1)
     _CACHE[key] = (corpus, index, q, qmask, rel)
     return _CACHE[key]
+
+
+def make_query_stream(
+    tier: str,
+    n: int,
+    seed: int,
+    *,
+    pool: int = 32,
+    skew: float | None = None,
+    tokens_per_query: int | tuple[int, int] = (2, 24),
+):
+    """Seeded Zipf-skewed query stream over a tier's corpus, shared by the
+    latency and serving suites so traffic replays are deterministic
+    across benchmarks.
+
+    Draws a ``pool``-query pool from the tier's corpus (varied active
+    lengths by default — the traffic shape that exercises the adaptive
+    worklist ladder) and replays ``n`` arrivals whose query popularity
+    follows ``P(rank r) ∝ (r+1)^-skew`` — ``skew`` defaults to the tier's
+    corpus ``topic_skew`` (0 = uniform), so skewed tiers get matching
+    skewed *traffic* and realistic cache hit rates.
+
+    Returns ``(q f32[n, Qm, D], qmask bool[n, Qm], pool_ids i32[n])`` —
+    ``pool_ids`` names which pool query each arrival replays (cache-hit
+    accounting needs it).
+    """
+    corpus = get_setup(tier)[0]
+    pq, pmask, _ = make_queries(
+        corpus, n_queries=pool, tokens_per_query=tokens_per_query,
+        seed=seed + 1,
+    )
+    if skew is None:
+        skew = SETUPS[tier].get("corpus", {}).get("topic_skew", 0.0)
+    rng = np.random.default_rng(seed)
+    if skew > 0.0:
+        p = np.arange(1, pool + 1, dtype=np.float64) ** -float(skew)
+        p /= p.sum()
+        ids = rng.choice(pool, n, p=p).astype(np.int32)
+    else:
+        ids = rng.integers(0, pool, n).astype(np.int32)
+    return pq[ids], pmask[ids], ids

@@ -21,8 +21,8 @@ import time
 # BENCH_latency.json plan snapshots. "autotune" runs before "latency" so
 # the tile table it installs in-process steers the latency suite's plans
 # (their snapshots then record tile_source="autotune").
-SUITES = ["parity", "index_size", "quality", "autotune", "latency", "scaling",
-          "roofline"]
+SUITES = ["parity", "index_size", "quality", "autotune", "latency", "serving",
+          "scaling", "roofline"]
 
 SNAPSHOT_PATH = os.path.join(
     os.path.dirname(__file__), "..", "BENCH_latency.json"
@@ -30,6 +30,30 @@ SNAPSHOT_PATH = os.path.join(
 INDEX_SIZE_SNAPSHOT_PATH = os.path.join(
     os.path.dirname(__file__), "..", "BENCH_index_size.json"
 )
+SERVING_SNAPSHOT_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_serving.json"
+)
+
+
+def write_serving_snapshot(path: str = SERVING_SNAPSHOT_PATH) -> None:
+    """Persist the serving suite's metrics plus its structured per-arm
+    summaries (QPS, latency percentiles, cache hit rate, shed fraction,
+    rung occupancy) so throughput regressions show up in diffs."""
+    from benchmarks.bench_serving import SUMMARY
+    from benchmarks.common import BENCH_SCHEMA_VERSION, RECORDS
+
+    rows = [r for r in RECORDS if r["name"].startswith("serving/")]
+    if not rows:
+        return
+    snap = {
+        "bench_schema": BENCH_SCHEMA_VERSION,
+        "generated_unix": int(time.time()),
+        "metrics": rows,
+        "arms": SUMMARY,
+    }
+    with open(path, "w") as f:
+        json.dump(snap, f, indent=1, sort_keys=True)
+    print(f"bench/serving/snapshot,0.0,{os.path.abspath(path)}", flush=True)
 
 
 def write_index_size_snapshot(path: str = INDEX_SIZE_SNAPSHOT_PATH) -> None:
@@ -92,6 +116,8 @@ def main() -> None:
             write_latency_snapshot()
         if name == "index_size":
             write_index_size_snapshot()
+        if name == "serving":
+            write_serving_snapshot()
 
 
 if __name__ == "__main__":

@@ -446,6 +446,15 @@ def score_and_reduce(
     """
     qm = q.shape[0]
     if config.layout == "ragged":
+        # Masked query tokens contribute no worklist tiles: their
+        # candidates are dropped by the qmask filter below anyway, so
+        # zeroing their probe sizes only removes all-dropped tiles —
+        # top-k is unchanged while worklist demand (and the adaptive
+        # bucket the dispatcher picks) tracks the *active* token count
+        # instead of the padded query length.
+        if probe_sizes is None:
+            probe_sizes = index.cluster_sizes[probe_cids]
+        probe_sizes = jnp.where(qmask[:, None], probe_sizes, 0)
         scores, doc_ids, qtok, valid = ragged_flat_candidates(
             index, q, probe_scores, probe_cids, config, probe_sizes
         )

@@ -51,6 +51,8 @@ cached inside the plan).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 from typing import Any, Callable
 
 import jax
@@ -91,6 +93,9 @@ class SearchPlan:
     # Host-side bucket probe of the adaptive ragged dispatcher (None on
     # dense / single-rung plans): (q, qmask) -> chosen worklist bucket.
     _bucket_for: Any = dataclasses.field(repr=False, default=None)
+    # Forced-rung batch dispatch (None on non-adaptive plans):
+    # bucket -> compiled (index, q, qmask) -> TopKResult at that rung.
+    _batch_at: Any = dataclasses.field(repr=False, default=None)
 
     @property
     def t_prime(self) -> int:
@@ -113,6 +118,35 @@ class SearchPlan:
         if qmask is None:
             qmask = jnp.ones(q.shape[:2], bool)
         return self._batch(self._index, q, jnp.asarray(qmask, bool))
+
+    def retrieve_batch_at(
+        self, q: jax.Array, qmask: jax.Array | None = None, *, bucket: int
+    ) -> TopKResult:
+        """Query batch at a FORCED worklist rung (adaptive plans only).
+
+        ``bucket`` must be a ladder rung that fits every batch element's
+        true tile demand — the bucket-aware scheduler guarantees this by
+        grouping requests by their admission-time ``adaptive_bucket`` and
+        dispatching each batch at the max rung of its members. Any
+        fitting rung returns top-k doc ids bit-identical to
+        ``retrieve_batch`` (worklist exactness: smaller rungs only trim
+        all-padding tiles); an under-sized rung would silently truncate,
+        hence the ladder-membership check.
+        """
+        if self._batch_at is None:
+            raise ValueError(
+                "retrieve_batch_at needs an adaptive ragged plan "
+                "(layout='ragged' with a multi-rung bucket ladder)"
+            )
+        if bucket not in (self.config.worklist_buckets or ()):
+            raise ValueError(
+                f"bucket {bucket} is not a rung of this plan's ladder "
+                f"{self.config.worklist_buckets}"
+            )
+        q = jnp.asarray(q, jnp.float32)
+        if qmask is None:
+            qmask = jnp.ones(q.shape[:2], bool)
+        return self._batch_at(bucket)(self._index, q, jnp.asarray(qmask, bool))
 
     def adaptive_bucket(self, q: jax.Array, qmask: jax.Array | None = None) -> int | None:
         """The worklist bucket the adaptive dispatcher would run this
@@ -139,7 +173,27 @@ class SearchPlan:
         cluster size actually fills. A dense plan with low
         ``expected_slot_occupancy`` is the signal to migrate to
         ``layout="ragged"`` (or "auto"); see README "Performance tuning".
+
+        The snapshot carries a ``fingerprint`` — a short stable hash of
+        every other field (see ``fingerprint()``); the serving cache keys
+        results on it so two plans that resolved identically share
+        entries and any resolved difference (nprobe, layout, tile, k,
+        geometry, ...) keeps them apart.
         """
+        d = self._describe_core()
+        d["fingerprint"] = self.fingerprint()
+        return d
+
+    def fingerprint(self) -> str:
+        """Stable 16-hex-digit digest of the resolved plan snapshot
+        (``describe()`` minus the fingerprint itself) — the plan
+        component of serving cache keys."""
+        blob = json.dumps(
+            self._describe_core(), sort_keys=True, default=str
+        ).encode()
+        return hashlib.sha1(blob).hexdigest()[:16]
+
+    def _describe_core(self) -> dict:
         cfg = self.config
         geo = self.index_geometry
         cap = geo["cap"]
@@ -321,15 +375,17 @@ class Retriever:
         resolved = self._resolve(config)
         self._validate(resolved)
         single, bucket_for = self._compile_single(resolved)
+        batch, batch_at = self._compile_batch(resolved)
         plan = SearchPlan(
             config=resolved,
             n_shards=self.n_shards,
             backend=jax.default_backend(),
             index_geometry=self._geometry(),
             _single=single,
-            _batch=self._compile_batch(resolved),
+            _batch=batch,
             _index=self.index,
             _bucket_for=bucket_for,
+            _batch_at=batch_at,
         )
         self._plans[config] = plan
         self._plans[resolved] = plan
@@ -475,15 +531,18 @@ class Retriever:
     def _compile_single(self, cfg: WarpSearchConfig):
         """-> (search fn, bucket probe | None) for single-query dispatch."""
         if self._is_adaptive(cfg):
-            return self._adaptive_dispatch(cfg, query_batch=False)
+            run, bucket_for, _ = self._adaptive_dispatch(cfg, query_batch=False)
+            return run, bucket_for
         return self._static_fn(cfg, query_batch=False), None
 
-    def _compile_batch(self, cfg: WarpSearchConfig) -> Callable[..., TopKResult]:
+    def _compile_batch(self, cfg: WarpSearchConfig):
+        """-> (batch fn, forced-rung accessor | None)."""
         if self._is_adaptive(cfg):
             # The batch dispatcher picks one bucket covering the whole
             # batch (max demand over batch elements): one program per call.
-            return self._adaptive_dispatch(cfg, query_batch=True)[0]
-        return self._static_fn(cfg, query_batch=True)
+            run, _, fn_at = self._adaptive_dispatch(cfg, query_batch=True)
+            return run, fn_at
+        return self._static_fn(cfg, query_batch=True), None
 
     def _static_fn(self, cfg: WarpSearchConfig, *, query_batch: bool):
         if self.is_sharded:
@@ -532,19 +591,36 @@ class Retriever:
                 cfg, worklist_tiles=b, worklist_buckets=None
             )
 
-        def lazy_bucket_runner(bucket_for, make_fn):
-            """Shared dispatch shape of the pre-pass paths: pick the rung,
-            lazily compile-and-cache its pipeline, run it."""
+        def lazy_fn_at(make_fn):
+            """Lazily compile-and-cache one pipeline per forced rung —
+            also surfaced as ``SearchPlan.retrieve_batch_at``'s accessor."""
             cache: dict = {}
 
-            def run(index, q, qmask):
-                b = bucket_for(q, qmask)
+            def fn_at(b):
                 fn = cache.get(b)
                 if fn is None:
                     fn = cache[b] = make_fn(b)
-                return fn(index, q, qmask)
+                return fn
 
-            return run, bucket_for
+            return fn_at
+
+        def lazy_bucket_runner(bucket_for, make_fn):
+            """Shared dispatch shape of the pre-pass paths: pick the rung,
+            lazily compile-and-cache its pipeline, run it."""
+            fn_at = lazy_fn_at(make_fn)
+
+            def run(index, q, qmask):
+                return fn_at(bucket_for(q, qmask))(index, q, qmask)
+
+            return run, bucket_for, fn_at
+
+        def masked_tiles(tiles, qmask):
+            # Masked query tokens build no worklist tiles (the engine
+            # zeroes their probe sizes — see ``score_and_reduce``), so
+            # demand must be computed over active tokens only; otherwise
+            # short queries and batch padding rows would inflate the rung.
+            m = np.asarray(qmask, bool)
+            return tiles * m[..., None]
 
         if self.is_sharded:
 
@@ -554,9 +630,11 @@ class Retriever:
                 sizes = dist.sharded_probe_sizes(
                     self.index, q, qmask, cfg, query_batch
                 )
-                needed = wl.needed_worklist_tiles(
-                    wl.probe_tile_counts(sizes, tile), amortized=amortized
+                tiles = masked_tiles(
+                    wl.probe_tile_counts(sizes, tile),
+                    np.asarray(qmask, bool)[None],  # broadcast over shards
                 )
+                needed = wl.needed_worklist_tiles(tiles, amortized=amortized)
                 return wl.pick_bucket(buckets, needed + PREPASS_SLACK)
 
             return lazy_bucket_runner(
@@ -588,9 +666,8 @@ class Retriever:
                 )
                 # The segmented ragged path always builds the full-Q
                 # worklist (no scan_qtokens variant), so demand amortizes.
-                needed = wl.needed_worklist_tiles(
-                    cluster_tiles[np.asarray(cids)], amortized=True
-                )
+                tiles = masked_tiles(cluster_tiles[np.asarray(cids)], qmask)
+                needed = wl.needed_worklist_tiles(tiles, amortized=True)
                 return wl.pick_bucket(buckets, needed + PREPASS_SLACK)
 
             return lazy_bucket_runner(
@@ -603,22 +680,36 @@ class Retriever:
         # Local path: stage 1 runs ONCE (select_probes), the bucket is
         # read off its probe sizes, and stages 2+3 finish under the
         # bucket's static bound — no duplicated work at all.
-        def bucket_from_sel(sel):
-            needed = wl.needed_worklist_tiles(
-                wl.probe_tile_counts(sel.probe_sizes, tile),
-                amortized=amortized,
+        def bucket_from_sel(sel, qmask):
+            tiles = masked_tiles(
+                wl.probe_tile_counts(sel.probe_sizes, tile), qmask
             )
+            needed = wl.needed_worklist_tiles(tiles, amortized=amortized)
             return wl.pick_bucket(buckets, needed)
 
         def bucket_for(q, qmask):
             sel = engine.select_probes(self.index, q, qmask, cfg, query_batch)
-            return bucket_from_sel(sel)
+            return bucket_from_sel(sel, qmask)
+
+        def make_fn(b):
+            # Forced rung: the same select_probes -> finish_from_probes
+            # composition the adaptive run uses, so dispatching at a
+            # request's own chosen rung is bit-identical to ``run``.
+            fcfg = bucket_cfg(b)
+
+            def fn(index, q, qmask):
+                sel = engine.select_probes(index, q, qmask, cfg, query_batch)
+                return engine.finish_from_probes(
+                    index, q, qmask, sel, fcfg, query_batch
+                )
+
+            return fn
 
         def run(index, q, qmask):
             sel = engine.select_probes(index, q, qmask, cfg, query_batch)
-            b = bucket_from_sel(sel)
+            b = bucket_from_sel(sel, qmask)
             return engine.finish_from_probes(
                 index, q, qmask, sel, bucket_cfg(b), query_batch
             )
 
-        return run, bucket_for
+        return run, bucket_for, lazy_fn_at(make_fn)

@@ -90,11 +90,17 @@ def make_queries(
     n_queries: int = 16,
     *,
     query_maxlen: int = 32,
-    tokens_per_query: int = 8,
+    tokens_per_query: int | tuple[int, int] = 8,
     noise: float = 0.35,
     seed: int = 1,
 ):
     """Queries as noisy copies of tokens from a sampled "relevant" doc.
+
+    ``tokens_per_query`` may be an ``(lo, hi)`` range: each query then
+    draws its active-token count uniformly from ``[lo, hi]`` — the
+    varied-length traffic that spreads adaptive worklist demand across
+    ladder rungs (a short query probes as many clusters per token but
+    amortizes over fewer active tokens).
 
     Returns (q f32[n_queries, query_maxlen, dim], qmask bool[..., maxlen],
     relevant_doc i32[n_queries]).
@@ -109,7 +115,12 @@ def make_queries(
     relevant = rng.integers(0, n_docs, n_queries).astype(np.int32)
     for i, d in enumerate(relevant):
         lo, hi = doc_offsets[d], doc_offsets[d + 1]
-        n_tok = min(tokens_per_query, hi - lo, query_maxlen)
+        want = (
+            int(rng.integers(tokens_per_query[0], tokens_per_query[1] + 1))
+            if isinstance(tokens_per_query, tuple)
+            else tokens_per_query
+        )
+        n_tok = min(want, hi - lo, query_maxlen)
         picks = rng.choice(np.arange(lo, hi), size=n_tok, replace=False)
         vecs = corpus.emb[picks] + noise * rng.standard_normal((n_tok, dim)).astype(
             np.float32

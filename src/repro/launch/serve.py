@@ -10,6 +10,12 @@ meshed over the ``data`` axis).
       --nprobe 16 --max-batch 8
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \
       PYTHONPATH=src python -m repro.launch.serve --n-shards 4
+
+``--traffic poisson`` switches from submit-all-then-drain to an open-loop
+Poisson arrival process (rate calibrated to the measured service rate)
+with Zipf-skewed query popularity (``--zipf-skew``) for ``--duration-s``
+seconds — the traffic shape that exercises the bucket-aware scheduler's
+per-rung batching and the result cache.
 """
 
 from __future__ import annotations
@@ -18,10 +24,72 @@ import argparse
 import time
 
 import jax
+import numpy as np
 
 from repro.core import IndexBuildConfig, Retriever, WarpSearchConfig, index_stats
 from repro.data import make_corpus, make_queries
-from repro.serving import BatchPolicy, RetrievalServer
+from repro.serving import AdmissionPolicy, BatchPolicy, Overloaded, RetrievalServer
+
+
+def _run_poisson(server, corpus, args) -> None:
+    """Open-loop wall-clock traffic: Poisson arrivals at ~70% of the
+    measured service rate, Zipf-skewed query popularity over a small
+    pool (repeats are what make the result cache earn its keep)."""
+    pool = 16
+    pq, pmask, _ = make_queries(
+        corpus, n_queries=pool, tokens_per_query=(2, 24), seed=1
+    )
+    rng = np.random.default_rng(7)
+    if args.zipf_skew > 0:
+        p = np.arange(1, pool + 1, dtype=np.float64) ** -args.zipf_skew
+        p /= p.sum()
+    else:
+        p = np.full(pool, 1.0 / pool)
+
+    # Warm + calibrate through the real serving path (compile happens on
+    # the first dispatch; don't let it masquerade as queueing delay).
+    for _ in range(2):
+        if server.result_cache is not None:  # calibrate misses, not hits
+            server.result_cache.clear()
+        for j in range(args.max_batch):
+            server.submit(pq[j % pool], pmask[j % pool])
+        t0 = time.perf_counter()
+        server.drain()
+        t_batch = time.perf_counter() - t0
+    rate = 0.7 * args.max_batch / max(t_batch, 1e-4)
+    for c in (server.result_cache, server._rung_cache):
+        if c is not None:
+            c.clear()
+    print(f"poisson traffic: rate={rate:.1f} qps, skew={args.zipf_skew}, "
+          f"{args.duration_s:.0f}s")
+
+    t_end = time.monotonic() + args.duration_s
+    next_arrival = time.monotonic()
+    submitted = shed = 0
+    while time.monotonic() < t_end:
+        now = time.monotonic()
+        if now >= next_arrival:
+            i = int(rng.choice(pool, p=p))
+            try:
+                server.submit(pq[i], pmask[i])
+                submitted += 1
+            except Overloaded:
+                shed += 1
+            next_arrival += float(rng.exponential(1.0 / rate))
+            continue
+        if server.step() == 0:  # dispatches full/expired batches only
+            time.sleep(min(max(next_arrival - now, 0.0), 1e-3))
+    server.drain()
+    s = server.summary()
+    print(
+        f"submitted={submitted} served={s['served']} shed={shed} "
+        f"batches={s['batches']} padded={s['padded_slots']} "
+        f"promoted={s['promoted']} cache_hits={s['cache_hits']} "
+        f"reloads={s['reloads']}"
+    )
+    print(f"rung occupancy: {s['rung_occupancy'] or '(single FIFO)'}")
+    if s.get("result_cache"):
+        print(f"result cache: {s['result_cache']}")
 
 
 def main() -> None:
@@ -41,6 +109,17 @@ def main() -> None:
     ap.add_argument("--memory", choices=["full", "scan_qtokens"], default="full")
     ap.add_argument("--sum-impl", choices=["gather", "lut"], default="lut")
     ap.add_argument("--reduce-impl", choices=["scan", "segment"], default="segment")
+    ap.add_argument("--layout", choices=["dense", "ragged"], default="dense",
+                    help="ragged enables the adaptive worklist ladder the "
+                         "bucket-aware scheduler batches per rung")
+    ap.add_argument("--traffic", choices=["closed", "poisson"], default="closed",
+                    help="closed = submit all then drain; poisson = open-loop "
+                         "arrivals at a calibrated rate for --duration-s")
+    ap.add_argument("--zipf-skew", type=float, default=1.6,
+                    help="query popularity skew for --traffic poisson "
+                         "(0 = uniform)")
+    ap.add_argument("--duration-s", type=float, default=5.0,
+                    help="wall-clock length of the poisson traffic run")
     args = ap.parse_args()
 
     corpus = make_corpus(args.n_docs, mean_doc_len=20, seed=0)
@@ -66,10 +145,15 @@ def main() -> None:
             nprobe=args.nprobe, k=args.k,
             gather=args.gather, executor=args.executor, memory=args.memory,
             sum_impl=args.sum_impl, reduce_impl=args.reduce_impl,
+            layout=args.layout,
         ),
         BatchPolicy(max_batch=args.max_batch, max_wait_s=args.max_wait_ms / 1e3),
+        admission=AdmissionPolicy(max_queue_depth=16 * args.max_batch),
     )
     print(f"search plan: {server.plan.describe()}")
+    if args.traffic == "poisson":
+        _run_poisson(server, corpus, args)
+        return
     q, qmask, rel = make_queries(corpus, n_queries=args.queries, seed=1)
 
     t0 = time.perf_counter()

@@ -1,4 +1,30 @@
-from repro.serving.batcher import PENDING, BatchPolicy, RetrievalServer
+from repro.serving.admission import (
+    AdmissionGate,
+    AdmissionPolicy,
+    CompactionPolicy,
+    Overloaded,
+)
+from repro.serving.batcher import (
+    PENDING,
+    BatchPolicy,
+    ResultAlreadyTaken,
+    RetrievalServer,
+)
+from repro.serving.cache import LRUCache, query_key
 from repro.serving.generate import generate
+from repro.serving.scheduler import BucketScheduler
 
-__all__ = ["PENDING", "BatchPolicy", "RetrievalServer", "generate"]
+__all__ = [
+    "AdmissionGate",
+    "AdmissionPolicy",
+    "BatchPolicy",
+    "BucketScheduler",
+    "CompactionPolicy",
+    "LRUCache",
+    "Overloaded",
+    "PENDING",
+    "ResultAlreadyTaken",
+    "RetrievalServer",
+    "generate",
+    "query_key",
+]

@@ -1,0 +1,124 @@
+"""Admission control and background maintenance policies for serving.
+
+Unbounded queueing converts overload into unbounded latency: every
+admitted request waits behind the whole backlog, so *all* requests miss
+the SLO instead of a few being rejected. The gate here sheds at the door
+with a typed ``Overloaded`` rejection (clients can back off or retry
+against a replica) and keeps the queue short enough that admitted
+requests stay inside the latency budget:
+
+- **queue-depth gate**: reject when the scheduler backlog reaches
+  ``max_queue_depth``. With service rate mu (batches/s x batch size) the
+  depth bound is the classic SLO inversion — a request admitted behind
+  ``d`` others waits ~``d / mu + max_wait_s``, so
+  ``max_queue_depth ~= (slo_s - max_wait_s) * mu`` keeps the p99 of
+  admitted requests under ``slo_s``.
+- **token bucket**: a sustained-rate cap (``rate_per_s``, burst
+  ``burst``) that smooths arrival spikes before they even hit the queue;
+  disabled when ``rate_per_s`` is None.
+
+``CompactionPolicy`` is the background-maintenance half: delta segments
+accumulated by ``store.add_documents`` slow search (every probe expands
+per-segment runs) until ``store.compact()`` folds them back. The policy
+triggers compaction from the server loop (``RetrievalServer.maintain``)
+when the store's ``delta_stats`` cross either threshold — segment count
+or delta-token fraction — with a minimum interval so a write-heavy burst
+cannot wedge the server into back-to-back compactions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+__all__ = ["Overloaded", "AdmissionPolicy", "AdmissionGate", "CompactionPolicy"]
+
+
+class Overloaded(RuntimeError):
+    """Typed load-shed rejection: the server refused the request at the
+    door (queue depth or rate cap). Clients should back off and retry;
+    nothing was enqueued."""
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionPolicy:
+    """SLO gate knobs. ``max_queue_depth`` bounds the scheduler backlog;
+    ``rate_per_s``/``burst`` arm the token bucket (None = depth-only)."""
+
+    max_queue_depth: int = 64
+    rate_per_s: float | None = None
+    burst: int = 16
+
+
+class AdmissionGate:
+    """Stateful admission check over an ``AdmissionPolicy``.
+
+    ``check(queue_depth)`` raises ``Overloaded`` or returns None; the
+    token bucket refills continuously on the injected clock (the same
+    fake-clock pattern the batcher tests use, so shedding is
+    deterministic under test).
+    """
+
+    def __init__(
+        self,
+        policy: AdmissionPolicy = AdmissionPolicy(),
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.policy = policy
+        self.clock = clock
+        self._tokens = float(policy.burst)
+        self._last = clock()
+        self.shed = 0
+        self.admitted = 0
+
+    def _refill(self) -> None:
+        now = self.clock()
+        rate = self.policy.rate_per_s
+        if rate:
+            self._tokens = min(
+                float(self.policy.burst),
+                self._tokens + (now - self._last) * rate,
+            )
+        self._last = now
+
+    def check(self, queue_depth: int) -> None:
+        """Admit or raise ``Overloaded``; admission consumes one token
+        when the rate cap is armed."""
+        if queue_depth >= self.policy.max_queue_depth:
+            self.shed += 1
+            raise Overloaded(
+                f"queue depth {queue_depth} at limit "
+                f"{self.policy.max_queue_depth}; retry with backoff"
+            )
+        if self.policy.rate_per_s is not None:
+            self._refill()
+            if self._tokens < 1.0:
+                self.shed += 1
+                raise Overloaded(
+                    f"rate limit {self.policy.rate_per_s}/s exceeded "
+                    f"(burst {self.policy.burst}); retry with backoff"
+                )
+            self._tokens -= 1.0
+        self.admitted += 1
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactionPolicy:
+    """When the server should fold delta segments back into the base.
+
+    Triggers when ``store.segments.delta_stats`` reports
+    ``n_delta_segments > max_delta_segments`` OR ``delta_token_frac >
+    max_delta_frac``, at most once per ``min_interval_s`` (on the
+    server's clock).
+    """
+
+    max_delta_segments: int = 4
+    max_delta_frac: float = 0.25
+    min_interval_s: float = 30.0
+
+    def should_compact(self, stats: dict) -> bool:
+        return (
+            stats["n_delta_segments"] > self.max_delta_segments
+            or stats["delta_token_frac"] > self.max_delta_frac
+        )

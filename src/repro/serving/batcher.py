@@ -1,33 +1,55 @@
 """Request batcher for the retrieval engine (production serving shape).
 
 WARP's jit'd search has a static query-batch dimension, so the server
-collects incoming queries into fixed-size batches: a batch is dispatched
-when it is full OR when the oldest request has waited ``max_wait_s``
-(classic deadline-based continuous batching). Under-full batches are padded
-with masked queries — padding work is bounded by the batch size, and the
-paper's own multi-thread scaling argument (Fig. 10) maps onto batching here:
-on TPU, intra-query parallelism is the mesh, inter-query parallelism is the
-batch.
+collects incoming queries into fixed-size batches dispatched on the
+classic deadline rule: a batch goes when it is full OR when its oldest
+request has waited ``max_wait_s``. Under-full batches are padded with
+masked queries — padding work is bounded by the batch size, and the
+paper's own multi-thread scaling argument (Fig. 10) maps onto batching
+here: on TPU, intra-query parallelism is the mesh, inter-query
+parallelism is the batch.
 
-The server dispatches through the unified ``Retriever`` plan, so it serves
-single-device AND document-sharded indexes with the same code: pass a
-``WarpIndex``, a ``ShardedWarpIndex``, or a pre-built ``Retriever`` (e.g.
-one holding a multi-host mesh).
+On top of that deadline core the server composes the serving subsystem:
 
-The clock is injectable so tests drive deadline behavior deterministically.
+- **bucket-aware continuous batching** (``serving/scheduler.py``): on
+  adaptive ragged plans the admission-time probe pre-pass
+  (``SearchPlan.adaptive_bucket``) tags every request with the worklist
+  rung it needs, requests queue per rung, and each batch executes at the
+  smallest rung its members need (``SearchPlan.retrieve_batch_at``)
+  instead of the queue-wide worst case — with age-based promotion as a
+  starvation guard. Results are bit-identical to direct retrieval at any
+  fitting rung (worklist exactness).
+- **two-level cache** (``serving/cache.py``): an encoded-query (rung)
+  cache and an LRU result cache, both keyed on (query hash, plan
+  fingerprint, index epoch) — a result-cache hit completes the request
+  at submit time.
+- **admission control + maintenance** (``serving/admission.py``): an
+  SLO gate that sheds load with a typed ``Overloaded`` instead of
+  queueing unboundedly, and a compaction-trigger policy that runs
+  ``store.compact()`` + ``reload()`` from the server loop.
 
-Request lifecycle: ``submit`` -> ``poll`` returns the ``PENDING`` sentinel
-until the request's batch has been dispatched, then pops and returns the
-``(scores, doc_ids)`` pair exactly once; polling an id that was never
-submitted (or already popped) raises ``KeyError``. ``result`` is the
-blocking convenience wrapper that drives the server loop until the request
+The server dispatches through the unified ``Retriever`` plan, so it
+serves single-device, document-sharded, AND segmented indexes with the
+same code. The clock is injectable so tests drive deadline/shedding
+behavior deterministically.
+
+Request lifecycle: ``submit`` -> ``poll`` returns the ``PENDING``
+sentinel until the request's batch has been dispatched (or returns
+immediately after a cache hit), then pops and returns the
+``(scores, doc_ids)`` pair exactly once; polling an id that was already
+popped raises ``ResultAlreadyTaken`` (a ``KeyError`` subclass), an id
+that was never submitted a plain ``KeyError`` — client retry logic can
+tell a double-read from a lost id. ``result`` is the blocking
+convenience wrapper that drives the server loop until the request
 completes.
 
 ``reload`` hot-swaps the served index (e.g. after ``repro.store.compact``
 folded delta segments into a fresh base): the new plan is compiled from
 the originally *requested* config — data-dependent resolutions like t'
-re-materialize against the new geometry — and queued requests simply
-dispatch through the new plan on their next ``step``; nothing is dropped.
+re-materialize against the new geometry — queued requests re-home onto
+the new plan's rung ladder and dispatch on their next ``step``, and the
+index epoch bump invalidates every cache entry from the old index;
+nothing is dropped, nothing stale is served.
 """
 
 from __future__ import annotations
@@ -35,7 +57,6 @@ from __future__ import annotations
 import dataclasses
 import os
 import time
-from collections import deque
 from typing import Callable
 
 import jax.numpy as jnp
@@ -44,8 +65,20 @@ import numpy as np
 from repro.core import Retriever, WarpSearchConfig
 from repro.core.distributed import ShardedWarpIndex
 from repro.core.types import WarpIndex
+from repro.serving.admission import (
+    AdmissionGate,
+    AdmissionPolicy,
+    CompactionPolicy,
+)
+from repro.serving.cache import LRUCache, query_key
+from repro.serving.scheduler import BatchPolicy, BucketScheduler
 
-__all__ = ["BatchPolicy", "RetrievalServer", "PENDING"]
+__all__ = [
+    "BatchPolicy",
+    "RetrievalServer",
+    "ResultAlreadyTaken",
+    "PENDING",
+]
 
 
 class _PendingType:
@@ -68,10 +101,11 @@ class _PendingType:
 PENDING = _PendingType()
 
 
-@dataclasses.dataclass(frozen=True)
-class BatchPolicy:
-    max_batch: int = 8
-    max_wait_s: float = 0.005
+class ResultAlreadyTaken(KeyError):
+    """The request completed and its result was already popped by a
+    previous ``poll``/``result`` call — results are delivered exactly
+    once. Subclasses ``KeyError`` so pre-existing handlers keep working;
+    distinct from the plain ``KeyError`` raised for never-submitted ids."""
 
 
 @dataclasses.dataclass
@@ -80,6 +114,7 @@ class _Pending:
     q: np.ndarray
     qmask: np.ndarray
     arrival: float
+    qkey: str | None = None  # content hash (None with caching disabled)
 
 
 class RetrievalServer:
@@ -89,6 +124,12 @@ class RetrievalServer:
         config: WarpSearchConfig = WarpSearchConfig(),
         policy: BatchPolicy = BatchPolicy(),
         clock: Callable[[], float] = time.monotonic,
+        *,
+        bucket_aware: bool = True,
+        cache_size: int = 256,
+        admission: AdmissionPolicy | AdmissionGate | None = None,
+        compaction: CompactionPolicy | None = None,
+        store_path: str | None = None,
     ):
         self.retriever = (
             index if isinstance(index, Retriever) else Retriever.from_index(index)
@@ -100,34 +141,116 @@ class RetrievalServer:
         self.config = self.plan.config
         self.policy = policy
         self.clock = clock
-        self._queue: deque[_Pending] = deque()
+        self.bucket_aware = bucket_aware
+        self.index_epoch = 0
+        self._fingerprint = self.plan.fingerprint()
+        if isinstance(admission, AdmissionPolicy):
+            admission = AdmissionGate(admission, clock)
+        self.admission = admission
+        self.compaction = compaction
+        self.store_path = store_path
+        self._last_compact = -float("inf")
+        if cache_size:
+            self.result_cache: LRUCache | None = LRUCache(cache_size)
+            self._rung_cache: LRUCache | None = LRUCache(cache_size)
+        else:
+            self.result_cache = self._rung_cache = None
+        self.scheduler = self._make_scheduler()
         self._inflight: set[int] = set()
         self._results: dict[int, tuple[np.ndarray, np.ndarray]] = {}
         self._next_id = 0
-        self.stats = {"batches": 0, "padded_slots": 0, "served": 0, "reloads": 0}
+        self.stats = {
+            "batches": 0,
+            "padded_slots": 0,
+            "served": 0,
+            "reloads": 0,
+            "cache_hits": 0,
+            "compactions": 0,
+        }
+
+    def _make_scheduler(self) -> BucketScheduler:
+        """One FIFO per ladder rung on bucket-aware adaptive plans; a
+        single queue (the classic deadline batcher) otherwise."""
+        rungs = None
+        if self.bucket_aware and self._is_adaptive():
+            rungs = self.config.worklist_buckets
+        return BucketScheduler(self.policy, self.clock, rungs=rungs)
+
+    def _is_adaptive(self) -> bool:
+        return (
+            self.config.layout == "ragged"
+            and self.config.worklist_buckets is not None
+            and len(self.config.worklist_buckets) > 1
+        )
+
+    def _cache_key(self, qkey: str) -> tuple:
+        return (qkey, self._fingerprint, self.index_epoch)
+
+    def _rung_for(self, q, qmask, qkey: str | None):
+        """Admission-time probe pre-pass (level-1 cached): the worklist
+        rung this query needs, or None off the bucket-aware path."""
+        if not (self.bucket_aware and self._is_adaptive()):
+            return None
+        if self._rung_cache is not None and qkey is not None:
+            hit = self._rung_cache.get(self._cache_key(qkey))
+            if hit is not None:
+                return hit[0]
+            rung = self.plan.adaptive_bucket(q, qmask)
+            # Tupled so a legitimately-None rung is distinguishable from
+            # a cache miss.
+            self._rung_cache.put(self._cache_key(qkey), (rung,))
+            return rung
+        return self.plan.adaptive_bucket(q, qmask)
 
     # ---- client API ----
     def submit(self, q: np.ndarray, qmask: np.ndarray | None = None) -> int:
+        """Admit one query; returns its request id.
+
+        Raises ``Overloaded`` (nothing enqueued, no id burned) when the
+        admission gate sheds. A result-cache hit completes the request
+        immediately — ``poll`` returns its pair on the first call.
+        """
         if qmask is None:
             qmask = np.ones(q.shape[:-1], bool)
+        if self.admission is not None:
+            self.admission.check(len(self.scheduler))
+        qkey = (
+            query_key(q, qmask) if self.result_cache is not None else None
+        )
         rid = self._next_id
         self._next_id += 1
-        self._queue.append(_Pending(rid, q, qmask, self.clock()))
+        if qkey is not None:
+            hit = self.result_cache.get(self._cache_key(qkey))
+            if hit is not None:
+                self._results[rid] = hit
+                self.stats["cache_hits"] += 1
+                self.stats["served"] += 1
+                return rid
+        rung = self._rung_for(q, qmask, qkey)
+        self.scheduler.push(
+            _Pending(rid, q, qmask, self.clock(), qkey), rung
+        )
         self._inflight.add(rid)
         return rid
 
     def poll(self, req_id: int):
         """Non-blocking result check.
 
-        Completed -> pops and returns ``(scores, doc_ids)`` (exactly once).
-        Submitted but not yet served -> the ``PENDING`` sentinel.
-        Unknown or already-popped id -> ``KeyError``.
+        Completed -> pops and returns ``(scores, doc_ids)`` (exactly
+        once). Submitted but not yet served -> the ``PENDING`` sentinel.
+        Already-popped id -> ``ResultAlreadyTaken`` (a ``KeyError``);
+        never-submitted id -> plain ``KeyError``.
         """
         if req_id in self._results:
             return self._results.pop(req_id)
         if req_id in self._inflight:
             return PENDING
-        raise KeyError(f"unknown or already-consumed request id {req_id}")
+        if 0 <= req_id < self._next_id:
+            raise ResultAlreadyTaken(
+                f"result for request id {req_id} was already retrieved "
+                f"(results pop exactly once)"
+            )
+        raise KeyError(f"request id {req_id} was never submitted")
 
     def result(self, req_id: int, timeout: float | None = None):
         """Blocking helper: drive the server loop until ``req_id`` completes.
@@ -160,7 +283,10 @@ class RetrievalServer:
         zero-copy path a post-``compact()`` pickup wants. The new plan is
         compiled *before* the swap, so in-flight ``submit``/``poll``
         callers never observe a half-reloaded server; queued requests are
-        preserved and dispatch through the new plan.
+        preserved — re-homed onto the new plan's rung ladder (an old
+        ladder's rung could truncate against new geometry) — and dispatch
+        through the new plan on their next ``step``. The index epoch bump
+        invalidates every cache entry keyed against the old index.
         """
         if config is not None:
             self._requested_config = config
@@ -168,7 +294,8 @@ class RetrievalServer:
         if isinstance(index, (str, os.PathLike)):
             from repro.store import load_index  # deferred: store dep on core
 
-            index = load_index(os.fspath(index))
+            self.store_path = os.fspath(index)
+            index = load_index(self.store_path)
         if isinstance(index, Retriever):
             retriever = index
         else:
@@ -185,20 +312,56 @@ class RetrievalServer:
         self.retriever = retriever
         self.plan = plan
         self.config = plan.config
+        self.index_epoch += 1
+        self._fingerprint = plan.fingerprint()
+        if self.result_cache is not None:
+            self.result_cache.purge_epochs_below(self.index_epoch)
+            self._rung_cache.purge_epochs_below(self.index_epoch)
+        # Re-home queued requests: their rungs were probed against the
+        # old plan's ladder and geometry.
+        pending = []
+        old_sched = self.scheduler
+        while len(old_sched):
+            got = old_sched.next_batch(force=True)
+            if got is None:
+                break
+            pending.extend(got[1])
+        self.scheduler = self._make_scheduler()
+        for p in sorted(pending, key=lambda p: p.arrival):
+            self.scheduler.push(p, self._rung_for(p.q, p.qmask, p.qkey))
         self.stats["reloads"] += 1
 
+    def maintain(self) -> bool:
+        """One background-maintenance tick: compact + reload when the
+        compaction policy's delta thresholds are crossed (at most once
+        per ``min_interval_s``). Returns True when a compaction ran;
+        call it from the serving loop between batches."""
+        if self.compaction is None or self.store_path is None:
+            return False
+        if self.clock() - self._last_compact < self.compaction.min_interval_s:
+            return False
+        from repro.store import compact, delta_stats  # deferred: store dep
+
+        if not self.compaction.should_compact(delta_stats(self.store_path)):
+            return False
+        compact(self.store_path)
+        self._last_compact = self.clock()
+        self.reload(self.store_path)
+        self.stats["compactions"] += 1
+        return True
+
     # ---- server loop ----
+    def next_deadline(self) -> float | None:
+        """Earliest queued-batch deadline (None when idle) — open-loop
+        drivers advance their clock to this between arrivals."""
+        return self.scheduler.next_deadline()
+
     def step(self, *, force: bool = False) -> int:
         """Dispatch at most one batch; returns number of requests served."""
-        if not self._queue:
+        got = self.scheduler.next_batch(force=force)
+        if got is None:
             return 0
-        full = len(self._queue) >= self.policy.max_batch
-        expired = (self.clock() - self._queue[0].arrival) >= self.policy.max_wait_s
-        if not (full or expired or force):
-            return 0
-
-        take = min(len(self._queue), self.policy.max_batch)
-        batch = [self._queue.popleft() for _ in range(take)]
+        rung, batch = got
         b = self.policy.max_batch
         qm, d = batch[0].q.shape
         q = np.zeros((b, qm, d), np.float32)
@@ -206,17 +369,48 @@ class RetrievalServer:
         for i, p in enumerate(batch):
             q[i] = p.q
             mask[i] = p.qmask
-        res = self.plan.retrieve_batch(jnp.asarray(q), jnp.asarray(mask))
+        qd, md = jnp.asarray(q), jnp.asarray(mask)
+        if rung is None:
+            res = self.plan.retrieve_batch(qd, md)
+        else:
+            # The batch executes at its rung — every member (and each
+            # backfilled lower-rung rider) fits it, and padding rows are
+            # fully masked so they add no worklist demand.
+            res = self.plan.retrieve_batch_at(qd, md, bucket=rung)
         scores = np.asarray(res.scores)
         docs = np.asarray(res.doc_ids)
         for i, p in enumerate(batch):
-            self._results[p.req_id] = (scores[i], docs[i])
+            pair = (scores[i], docs[i])
+            self._results[p.req_id] = pair
             self._inflight.discard(p.req_id)
+            if self.result_cache is not None and p.qkey is not None:
+                self.result_cache.put(self._cache_key(p.qkey), pair)
         self.stats["batches"] += 1
-        self.stats["padded_slots"] += b - take
-        self.stats["served"] += take
-        return take
+        self.stats["padded_slots"] += b - len(batch)
+        self.stats["served"] += len(batch)
+        return len(batch)
 
     def drain(self) -> None:
-        while self._queue:
+        while len(self.scheduler):
             self.step(force=True)
+
+    def summary(self) -> dict:
+        """Merged serving statistics: dispatch counters, per-rung batch
+        occupancy, cache hit rates, shed/admitted counts, epoch."""
+        out = dict(self.stats)
+        out["queue_depth"] = len(self.scheduler)
+        out["promoted"] = self.scheduler.stats["promoted"]
+        out["rungs"] = {
+            str(r): dict(s) for r, s in self.scheduler.stats["rungs"].items()
+        }
+        out["rung_occupancy"] = {
+            str(r): v for r, v in self.scheduler.occupancy().items()
+        }
+        out["index_epoch"] = self.index_epoch
+        if self.result_cache is not None:
+            out["result_cache"] = self.result_cache.stats()
+            out["rung_cache"] = self._rung_cache.stats()
+        if self.admission is not None:
+            out["shed"] = self.admission.shed
+            out["admitted"] = self.admission.admitted
+        return out

@@ -1,0 +1,198 @@
+"""Bucket-aware continuous batching: per-rung queues + deadline dispatch.
+
+The deadline batcher treats the queue as one FIFO, so a batch executes at
+whatever worklist rung its most expensive member needs — one heavy query
+drags seven light ones through the top rung. With the query-adaptive
+ladder (``core/worklist.py::bucket_ladder``) the rung is known per query
+at admission time from the cheap probe pre-pass
+(``SearchPlan.adaptive_bucket``), so the scheduler keeps **one FIFO per
+ladder rung** and forms batches per rung: each batch compiles/executes at
+the smallest rung its members need (``SearchPlan.retrieve_batch_at``),
+not the queue-wide max.
+
+Dispatch rules (``next_batch``):
+
+- a rung is *dispatchable* when it is full (``max_batch``) or its oldest
+  member has waited ``max_wait_s`` — the existing ``BatchPolicy``
+  deadline semantics, applied per rung;
+- among dispatchable rungs the one with the oldest head goes first
+  (most-overdue-first, so no rung's deadline is sacrificed to another's);
+- spare batch slots are backfilled from *lower* rungs, oldest first — a
+  light query executes exactly at any rung >= its own (worklist
+  exactness), and riding along beats padding;
+- **starvation guard**: a query older than ``promote_after_s`` is
+  promoted one rung up, so a lone light query on an otherwise-idle rung
+  merges into the next heavier batch instead of waiting alone. Promotion
+  is always exact (bigger rung), never the reverse.
+
+Each dispatched batch is tagged with its rung so the server can route it
+through ``retrieve_batch_at`` (or ``retrieve_batch`` when the plan has no
+ladder — ``rung=None`` degenerates to the classic single-FIFO batcher).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable
+
+__all__ = ["BatchPolicy", "BucketScheduler"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPolicy:
+    """Deadline-batching knobs (per rung on bucket-aware plans).
+
+    ``promote_after_s`` is the starvation guard: a queued request older
+    than this is promoted one worklist rung up so it can merge into a
+    heavier batch. It only matters on multi-rung (adaptive ragged) plans;
+    the default is 4x the dispatch deadline so promotion is a fallback,
+    not the steady state.
+    """
+
+    max_batch: int = 8
+    max_wait_s: float = 0.005
+    promote_after_s: float = 0.02
+
+
+class BucketScheduler:
+    """Per-rung FIFO queues with deadline dispatch and age promotion.
+
+    ``rungs`` is the plan's ascending bucket ladder (None for
+    non-adaptive plans — everything then queues under the single ``None``
+    rung and the scheduler degenerates to the classic deadline batcher).
+    Queued items only need an ``arrival`` attribute (the batcher's
+    ``_Pending``); the scheduler never looks at query payloads.
+    """
+
+    def __init__(
+        self,
+        policy: BatchPolicy,
+        clock: Callable[[], float] = time.monotonic,
+        *,
+        rungs: tuple[int, ...] | None = None,
+    ):
+        self.policy = policy
+        self.clock = clock
+        self.rungs = tuple(rungs) if rungs else None
+        self._queues: dict = {}
+        # Per-rung dispatch accounting (occupancy = requests / slots).
+        self.stats: dict = {"promoted": 0, "rungs": {}}
+
+    # ---- queue state ----
+    def __len__(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    @property
+    def depth(self) -> int:
+        return len(self)
+
+    def push(self, item, rung=None) -> None:
+        """Enqueue ``item`` under ``rung`` (a ladder bucket, or None on
+        non-adaptive plans)."""
+        if rung is not None and self.rungs is not None and rung not in self.rungs:
+            raise ValueError(f"rung {rung} not in ladder {self.rungs}")
+        self._queues.setdefault(rung, deque()).append(item)
+
+    def next_deadline(self) -> float | None:
+        """Earliest instant any queued rung's deadline expires (head
+        arrival + max_wait_s), or None when idle — the benchmark's
+        open-loop simulator advances its virtual clock to this."""
+        heads = [q[0].arrival for q in self._queues.values() if q]
+        if not heads:
+            return None
+        return min(heads) + self.policy.max_wait_s
+
+    # ---- dispatch ----
+    def _promote(self, now: float) -> None:
+        """Starvation guard: move items that have waited ``promote_after_s``
+        since arrival (or since their last promotion — the climb is a
+        ratchet, one rung per interval, not a jump to the top) one ladder
+        rung up, merging by arrival so FIFO age order survives."""
+        if self.rungs is None or len(self.rungs) < 2:
+            return
+        # Top-down so a just-promoted item is not re-examined in the same
+        # pass.
+        for i, rung in reversed(list(enumerate(self.rungs[:-1]))):
+            q = self._queues.get(rung)
+            if not q:
+                continue
+            stale, keep = [], []
+            for p in q:
+                last = getattr(p, "_promote_stamp", p.arrival)
+                old = now - last >= self.policy.promote_after_s
+                (stale if old else keep).append(p)
+            if not stale:
+                continue
+            self._queues[rung] = deque(keep)
+            up = self.rungs[i + 1]
+            merged = sorted(
+                [*self._queues.get(up, ()), *stale], key=lambda p: p.arrival
+            )
+            self._queues[up] = deque(merged)
+            for p in stale:
+                p._promote_stamp = now
+            self.stats["promoted"] += len(stale)
+
+    def _dispatchable(self, rung, now: float, force: bool) -> bool:
+        q = self._queues.get(rung)
+        if not q:
+            return False
+        if force or len(q) >= self.policy.max_batch:
+            return True
+        return (now - q[0].arrival) >= self.policy.max_wait_s
+
+    def next_batch(self, *, force: bool = False):
+        """-> ``(rung, items)`` for at most one batch, or None.
+
+        ``items`` is FIFO from the chosen rung, backfilled from lower
+        rungs' heads when slots remain (exact: a lower-rung query fits
+        any higher rung). ``force`` dispatches the oldest-head rung even
+        if under-full and before its deadline (the blocking ``result``
+        driver and ``drain`` use this).
+        """
+        now = self.clock()
+        self._promote(now)
+        ready = [
+            r for r in self._queues
+            if self._dispatchable(r, now, force)
+        ]
+        if not ready:
+            return None
+        # Most-overdue head first; ties break toward the smaller rung
+        # (cheaper program). None sorts as rung -1 (non-adaptive queue).
+        rung = min(
+            ready,
+            key=lambda r: (self._queues[r][0].arrival, -1 if r is None else r),
+        )
+        q = self._queues[rung]
+        take = min(len(q), self.policy.max_batch)
+        items = [q.popleft() for _ in range(take)]
+        backfilled = 0
+        if rung is not None:
+            lower = sorted(
+                (r for r in self._queues if r is not None and r < rung),
+                reverse=True,
+            )
+            for r in lower:
+                lq = self._queues[r]
+                while lq and len(items) < self.policy.max_batch:
+                    items.append(lq.popleft())
+                    backfilled += 1
+        rs = self.stats["rungs"].setdefault(
+            "none" if rung is None else rung,
+            {"batches": 0, "requests": 0, "slots": 0, "backfilled": 0},
+        )
+        rs["batches"] += 1
+        rs["requests"] += len(items)
+        rs["slots"] += self.policy.max_batch
+        rs["backfilled"] += backfilled
+        return rung, items
+
+    def occupancy(self) -> dict:
+        """Per-rung mean batch occupancy (requests / dispatched slots)."""
+        return {
+            r: round(s["requests"] / s["slots"], 4) if s["slots"] else 0.0
+            for r, s in self.stats["rungs"].items()
+        }

@@ -28,6 +28,7 @@ from repro.store.segments import (
     SegmentedWarpIndex,
     add_documents,
     compact,
+    delta_stats,
     load_segmented,
     make_segmented_search_fn,
     quantize_segment,
@@ -41,6 +42,7 @@ __all__ = [
     "build_index_chunked",
     "build_index_to_store",
     "compact",
+    "delta_stats",
     "inspect_index",
     "list_segment_dirs",
     "load_index",

@@ -80,6 +80,7 @@ __all__ = [
     "add_documents",
     "load_segmented",
     "compact",
+    "delta_stats",
     "make_segmented_search_fn",
     "segmented_probe_cids",
 ]
@@ -283,6 +284,37 @@ def load_segmented(
     )
 
 
+def delta_stats(path: str) -> dict:
+    """Host-side delta accumulation statistics of the store at ``path``,
+    read from manifests only (no array loads) — the inputs a
+    compaction-trigger policy (``serving.admission.CompactionPolicy``)
+    thresholds on.
+
+    Returns ``n_delta_segments``, ``base_tokens`` / ``delta_tokens`` /
+    ``base_docs`` / ``delta_docs``, and ``delta_token_frac`` =
+    delta_tokens / (base + delta tokens) (0.0 on an empty store).
+    """
+    manifest = store_format.read_manifest(path)
+    static = manifest.get("static", {})
+    base_tokens = int(static.get("n_tokens", static.get("n_tokens_total", 0)))
+    base_docs = int(static.get("n_docs", 0))
+    delta_tokens = delta_docs = 0
+    seg_dirs = store_format.list_segment_dirs(path)
+    for seg_dir in seg_dirs:
+        seg_static = store_format.read_manifest(seg_dir)["static"]
+        delta_tokens += int(seg_static["n_tokens"])
+        delta_docs += int(seg_static["n_docs"])
+    total = base_tokens + delta_tokens
+    return {
+        "n_delta_segments": len(seg_dirs),
+        "base_tokens": base_tokens,
+        "delta_tokens": delta_tokens,
+        "base_docs": base_docs,
+        "delta_docs": delta_docs,
+        "delta_token_frac": (delta_tokens / total) if total else 0.0,
+    }
+
+
 # ---------------------------------------------------------------------------
 # search
 # ---------------------------------------------------------------------------
@@ -454,6 +486,11 @@ def _make_segmented_ragged_fn(
         run_sizes = jnp.stack(
             [s.cluster_sizes[sel.probe_cids] for s in segments], axis=-1
         ).astype(jnp.int32)
+        # Masked query tokens emit no worklist runs (their slots are
+        # dropped by the qmask filter below anyway) — mirrors the
+        # suppression in ``engine.score_and_reduce`` so demand tracks
+        # active tokens on the segmented path too.
+        run_sizes = jnp.where(qmask[:, None, None], run_sizes, 0)
         seg_ids = jnp.broadcast_to(
             jnp.arange(n_seg, dtype=jnp.int32), (qm, nprobe, n_seg)
         )

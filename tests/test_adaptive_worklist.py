@@ -174,7 +174,11 @@ def test_forced_bucket_parity_and_dispatch_floor(zipf_setup):
     tile = ops.resolve_tile_c(idx.cap, cfg.tile_c, layout="ragged")
     q0, m0 = jnp.asarray(q[0]), jnp.asarray(qmask[0])
     sel = engine.select_probes(idx, q0, m0, cfg)
-    needed = needed_worklist_tiles(probe_tile_counts(sel.probe_sizes, tile))
+    # Masked query tokens emit no worklist tiles (engine.score_and_reduce
+    # zeroes their probe sizes), so the dispatcher's demand oracle masks
+    # the per-probe tile counts the same way.
+    tiles = probe_tile_counts(sel.probe_sizes, tile) * np.asarray(m0)[:, None]
+    needed = needed_worklist_tiles(tiles)
     chosen = ragged.adaptive_bucket(q[0], qmask[0])
     assert chosen == pick_bucket(cfg.worklist_buckets, needed)
     want = np.asarray(dense.retrieve(q[0], qmask[0]).doc_ids)

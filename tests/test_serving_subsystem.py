@@ -1,0 +1,392 @@
+"""Production serving subsystem: bucket-aware continuous batching,
+two-level caching, admission control, background compaction.
+
+The load-bearing claim is EXACTNESS: bucket-aware scheduling (per-rung
+batches, backfill, promotion) and result caching are pure dispatch-order
+optimizations — every served result must carry the same doc ids as a
+direct ``plan.retrieve`` of that query (scores equal to float32
+summation order, since a batch may dispatch at a larger ladder rung than
+the query's own). Verified across local / sharded / segmented plans with
+caching on and off.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    IndexBuildConfig,
+    Retriever,
+    WarpSearchConfig,
+    build_index,
+    build_sharded_index,
+)
+from repro.data import make_corpus, make_queries
+from repro.serving import (
+    PENDING,
+    AdmissionPolicy,
+    BatchPolicy,
+    BucketScheduler,
+    CompactionPolicy,
+    Overloaded,
+    ResultAlreadyTaken,
+    RetrievalServer,
+)
+
+RAGGED = WarpSearchConfig(nprobe=8, k=5, t_prime=400, layout="ragged")
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(n_docs=250, mean_doc_len=12, seed=0)
+
+
+@pytest.fixture(scope="module")
+def queries(corpus):
+    # Varied active lengths spread adaptive worklist demand across rungs.
+    q, qmask, rel = make_queries(
+        corpus, n_queries=10, tokens_per_query=(2, 24), seed=1
+    )
+    return q, qmask, rel
+
+
+@pytest.fixture(scope="module")
+def local_retriever(corpus):
+    return Retriever.from_index(
+        build_index(
+            corpus.emb, corpus.token_doc_ids, corpus.n_docs,
+            IndexBuildConfig(n_centroids=32, nbits=4, kmeans_iters=2),
+        )
+    )
+
+
+def _serve_all(retriever, q, qmask, *, cache_size, n=8):
+    clock = _FakeClock()
+    srv = RetrievalServer(
+        retriever, RAGGED, BatchPolicy(max_batch=4, max_wait_s=10.0),
+        clock=clock, bucket_aware=True, cache_size=cache_size,
+    )
+    ids = [srv.submit(q[i], qmask[i]) for i in range(n)]
+    srv.drain()
+    return srv, ids
+
+
+def _assert_matches_direct(srv, ids, q, qmask):
+    for i, rid in enumerate(ids):
+        scores, docs = srv.poll(rid)
+        direct = srv.plan.retrieve(q[i], qmask[i])
+        np.testing.assert_array_equal(docs, np.asarray(direct.doc_ids))
+        np.testing.assert_allclose(
+            scores, np.asarray(direct.scores), rtol=1e-5, atol=1e-6
+        )
+
+
+@pytest.mark.parametrize("cache_size", [0, 64])
+def test_bucket_aware_exactness_local(local_retriever, queries, cache_size):
+    q, qmask, _ = queries
+    srv, ids = _serve_all(local_retriever, q, qmask, cache_size=cache_size)
+    _assert_matches_direct(srv, ids, q, qmask)
+    # Varied-length traffic must actually spread across ladder rungs —
+    # otherwise this test degenerates to the single-FIFO batcher.
+    assert len(srv.summary()["rungs"]) >= 2
+
+
+@pytest.mark.parametrize("cache_size", [0, 64])
+def test_bucket_aware_exactness_sharded(corpus, queries, cache_size):
+    sidx = build_sharded_index(
+        corpus.emb, corpus.token_doc_ids, corpus.n_docs,
+        n_shards=len(jax.devices()),
+        config=IndexBuildConfig(n_centroids=16, nbits=4, kmeans_iters=2),
+    )
+    q, qmask, _ = queries
+    srv, ids = _serve_all(
+        Retriever.from_index(sidx), q, qmask, cache_size=cache_size, n=6
+    )
+    _assert_matches_direct(srv, ids, q, qmask)
+
+
+@pytest.mark.parametrize("cache_size", [0, 64])
+def test_bucket_aware_exactness_segmented(tmp_path, cache_size):
+    from repro.store import add_documents, save_index
+
+    c1 = make_corpus(n_docs=150, mean_doc_len=10, seed=4)
+    c2 = make_corpus(n_docs=40, mean_doc_len=10, seed=5)
+    cfg = IndexBuildConfig(n_centroids=16, nbits=4, kmeans_iters=2)
+    path = str(tmp_path / "idx")
+    save_index(build_index(c1.emb, c1.token_doc_ids, c1.n_docs, cfg), path,
+               build_config=cfg)
+    add_documents(path, c2.emb, c2.token_doc_ids, c2.n_docs)  # stays delta
+
+    q, qmask, _ = make_queries(c1, n_queries=6, tokens_per_query=(2, 20),
+                               seed=6)
+    srv, ids = _serve_all(
+        Retriever.from_store(path), q, qmask, cache_size=cache_size, n=6
+    )
+    _assert_matches_direct(srv, ids, q, qmask)
+
+
+def test_cache_hit_bit_identical_to_miss(local_retriever, queries):
+    """A result-cache hit must return byte-for-byte what a cache miss
+    computes for the same (query, plan fingerprint, index epoch)."""
+    q, qmask, _ = queries
+    clock = _FakeClock()
+
+    def fresh(cache_size):
+        return RetrievalServer(
+            local_retriever, RAGGED,
+            BatchPolicy(max_batch=4, max_wait_s=10.0),
+            clock=clock, bucket_aware=True, cache_size=cache_size,
+        )
+
+    warm = fresh(64)
+    cold = fresh(0)
+    for i in range(4):
+        # Serve each query alone in both servers so the only variable is
+        # the cache, then re-submit to the warm server: a guaranteed hit.
+        r_seed = warm.submit(q[i], qmask[i])
+        warm.drain()
+        warm.poll(r_seed)
+        r_hit = warm.submit(q[i], qmask[i])
+        hs, hd = warm.poll(r_hit)  # completed at submit: no drain needed
+        r_miss = cold.submit(q[i], qmask[i])
+        cold.drain()
+        ms_, md = cold.poll(r_miss)
+        np.testing.assert_array_equal(hd, md)
+        np.testing.assert_array_equal(hs, ms_)
+    assert warm.result_cache.stats()["hits"] == 4
+
+
+def test_cache_invalidation_across_reload(tmp_path):
+    """Warm cache -> add_documents + compact + reload: the epoch bumps,
+    stale entries are purged, and the same query re-executes against the
+    grown index (new delta doc retrievable, not a stale cached answer)."""
+    from repro.store import add_documents, compact, save_index
+
+    c1 = make_corpus(n_docs=120, mean_doc_len=10, seed=4)
+    c2 = make_corpus(n_docs=30, mean_doc_len=10, seed=5)
+    cfg = IndexBuildConfig(n_centroids=16, nbits=4, kmeans_iters=2)
+    path = str(tmp_path / "idx")
+    save_index(build_index(c1.emb, c1.token_doc_ids, c1.n_docs, cfg), path,
+               build_config=cfg)
+
+    clock = _FakeClock()
+    srv = RetrievalServer(
+        Retriever.from_store(path), WarpSearchConfig(nprobe=8, k=5),
+        BatchPolicy(max_batch=4, max_wait_s=10.0), clock=clock,
+        cache_size=64,
+    )
+    # The query is doc 0 of the (future) delta batch — pre-reload it can't
+    # surface, post-reload it must.
+    qv = np.asarray(c2.emb[:4], np.float32)
+    qm = np.ones(4, bool)
+    rid = srv.submit(qv, qm)
+    srv.drain()
+    _, docs_before = srv.poll(rid)
+    assert c1.n_docs not in docs_before
+    assert srv.result_cache.stats()["size"] == 1
+    epoch_before = srv.index_epoch
+
+    add_documents(path, c2.emb, c2.token_doc_ids, c2.n_docs)
+    compact(path)
+    srv.reload(path)
+    assert srv.index_epoch == epoch_before + 1
+    assert srv.result_cache.stats()["size"] == 0  # stale epoch purged
+
+    rid = srv.submit(qv, qm)
+    assert srv.result_cache.stats()["hits"] == 0  # NOT served from cache
+    srv.drain()
+    _, docs_after = srv.poll(rid)
+    assert c1.n_docs + 0 in docs_after
+
+
+def test_background_compaction_trigger(tmp_path):
+    """maintain() compacts + reloads when the delta share crosses the
+    policy threshold, and is a no-op below it / inside min_interval_s."""
+    from repro.store import add_documents, list_segment_dirs, save_index
+
+    c1 = make_corpus(n_docs=120, mean_doc_len=10, seed=4)
+    c2 = make_corpus(n_docs=60, mean_doc_len=10, seed=5)
+    cfg = IndexBuildConfig(n_centroids=16, nbits=4, kmeans_iters=2)
+    path = str(tmp_path / "idx")
+    save_index(build_index(c1.emb, c1.token_doc_ids, c1.n_docs, cfg), path,
+               build_config=cfg)
+
+    clock = _FakeClock()
+    clock.t = 100.0
+    srv = RetrievalServer(
+        Retriever.from_store(path), WarpSearchConfig(nprobe=8, k=5),
+        BatchPolicy(max_batch=4, max_wait_s=10.0), clock=clock,
+        compaction=CompactionPolicy(max_delta_segments=4,
+                                    max_delta_frac=0.25,
+                                    min_interval_s=30.0),
+        store_path=path,
+    )
+    assert srv.maintain() is False  # no deltas yet
+
+    add_documents(path, c2.emb, c2.token_doc_ids, c2.n_docs)  # ~33% delta
+    clock.t += 31.0
+    assert srv.maintain() is True
+    assert srv.stats["compactions"] == 1
+    assert srv.stats["reloads"] == 1
+    assert list_segment_dirs(path) == []  # deltas folded into the base
+    assert srv.retriever.n_docs == c1.n_docs + c2.n_docs
+    clock.t += 1.0
+    assert srv.maintain() is False  # inside min_interval_s
+
+
+def test_admission_overload_sheds_and_bounds_latency():
+    """Deterministic-clock overload: arrivals at ~2x the service rate must
+    shed via Overloaded, and every ADMITTED request's latency stays under
+    the queue-depth SLO bound — the bound the gate exists to enforce
+    (admitted requests wait behind at most depth/batch batches plus the
+    deadline, never behind an unbounded backlog)."""
+    corpus = make_corpus(n_docs=100, mean_doc_len=10, seed=7)
+    idx = build_index(
+        corpus.emb, corpus.token_doc_ids, corpus.n_docs,
+        IndexBuildConfig(n_centroids=16, nbits=4, kmeans_iters=2),
+    )
+    q, qmask, _ = make_queries(corpus, n_queries=8, seed=8)
+    clock = _FakeClock()
+    max_batch, depth, t_svc, max_wait = 4, 8, 0.01, 0.02
+    srv = RetrievalServer(
+        idx, WarpSearchConfig(nprobe=8, k=5),
+        BatchPolicy(max_batch=max_batch, max_wait_s=max_wait),
+        clock=clock, cache_size=0,
+        admission=AdmissionPolicy(max_queue_depth=depth),
+    )
+    arrival: dict[int, float] = {}
+    completion: dict[int, float] = {}
+    shed = 0
+    busy_until = 0.0  # the server executes one batch at a time
+
+    def collect(at: float):
+        for r in list(arrival):
+            if r not in completion and srv.poll(r) is not PENDING:
+                completion[r] = at
+
+    def service(force=False):
+        nonlocal busy_until
+        while len(srv.scheduler):
+            if clock.t < busy_until:
+                return  # mid-batch; the queue keeps growing meanwhile
+            d = srv.next_deadline()
+            if not (force or len(srv.scheduler) >= max_batch
+                    or (d is not None and clock.t >= d)):
+                return
+            srv.step(force=True)
+            busy_until = clock.t + t_svc  # deterministic service time
+            collect(busy_until)
+
+    gap = 0.00125  # 800/s arrivals vs 400/s service capacity: 2x overload
+    for kk in range(40):
+        clock.t = kk * gap
+        service()
+        try:
+            rid = srv.submit(q[kk % 8], qmask[kk % 8])
+            arrival[rid] = clock.t
+        except Overloaded:
+            shed += 1
+    while len(srv.scheduler):  # drain the admitted backlog
+        clock.t = max(clock.t, busy_until)
+        service(force=True)
+
+    assert shed > 0
+    assert srv.admission.shed == shed
+    assert len(completion) == len(arrival)  # everything admitted served
+    lat = [completion[r] - arrival[r] for r in arrival]
+    # Depth-gate SLO: at most depth/max_batch full batches ahead plus the
+    # in-flight batch plus the request's own, plus the deadline wait and
+    # one arrival-gap of dispatch-check slack. The gate exists exactly so
+    # this bound holds for every ADMITTED request no matter the offered
+    # load (the shed ones are the ones that would have blown it).
+    slo = max_wait + (depth // max_batch + 2) * t_svc + gap
+    assert max(lat) <= slo + 1e-9
+
+
+def test_scheduler_starvation_promotion():
+    clock = _FakeClock()
+    sched = BucketScheduler(
+        BatchPolicy(max_batch=4, max_wait_s=10.0, promote_after_s=1.0),
+        clock, rungs=(2, 4, 8, 16),
+    )
+
+    class Item:
+        def __init__(self, name, arrival):
+            self.name, self.arrival = name, arrival
+
+    sched.push(Item("old", 0.0), rung=2)
+    clock.t = 2.0  # "old" is now stale past promote_after_s
+    for j in range(3):
+        sched.push(Item(f"new{j}", 2.0), rung=8)
+    # Nothing full or past deadline yet — but the promotion pass ran.
+    assert sched.next_batch() is None
+    assert sched.stats["promoted"] == 1
+    # The climb is a per-interval ratchet: re-checking at the same
+    # instant must NOT promote again (no cascade to the top rung).
+    assert sched.next_batch() is None
+    assert sched.stats["promoted"] == 1
+    rung, items = sched.next_batch(force=True)
+    # The stale rung-2 item now sits at rung 4 and, being the most
+    # overdue head, dispatches first (at rung 4 — still exact: 4 >= 2).
+    assert rung == 4
+    assert [i.name for i in items] == ["old"]
+    rung2, items2 = sched.next_batch(force=True)
+    assert rung2 == 8 and len(items2) == 3
+
+
+def test_poll_already_taken_vs_never_submitted(local_retriever, queries):
+    q, qmask, _ = queries
+    clock = _FakeClock()
+    srv = RetrievalServer(
+        local_retriever, RAGGED, BatchPolicy(max_batch=2, max_wait_s=10.0),
+        clock=clock,
+    )
+    rid = srv.submit(q[0], qmask[0])
+    srv.drain()
+    srv.poll(rid)
+    with pytest.raises(ResultAlreadyTaken, match="already retrieved"):
+        srv.poll(rid)
+    # ResultAlreadyTaken subclasses KeyError (old callers keep working)...
+    assert issubclass(ResultAlreadyTaken, KeyError)
+    # ...but an id that was NEVER submitted is a plain KeyError with a
+    # directed message, not ResultAlreadyTaken.
+    with pytest.raises(KeyError, match="never submitted") as ei:
+        srv.poll(10_000)
+    assert not isinstance(ei.value, ResultAlreadyTaken)
+
+
+# ---- benchmark-harness serving smoke (tier-1 schema guard) ----
+
+
+def test_bench_serving_smoke(tmp_path):
+    import os
+    import sys
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if root not in sys.path:
+        sys.path.insert(0, root)
+    import json
+
+    from benchmarks import bench_serving, run as bench_run
+
+    bench_serving.run(micro=True)
+    snap_path = str(tmp_path / "BENCH_serving.json")
+    bench_run.write_serving_snapshot(snap_path)
+    with open(snap_path) as f:
+        snap = json.load(f)
+    assert snap["bench_schema"] >= 2
+    assert all(r["name"].startswith("serving/") for r in snap["metrics"])
+    full = snap["arms"]["cache_on_bucket_on"]
+    for key in ("p50_ms", "p99_ms", "qps", "cache_hit_rate", "shed_frac",
+                "rung_occupancy"):
+        assert key in full
+    assert full["cache_hit_rate"] > 0.0
+    assert full["distinct_rungs"] >= 2
