@@ -33,12 +33,11 @@ arms that still exercises every moving part and the snapshot schema.
 
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
-from benchmarks.common import emit, get_setup, make_query_stream
+from benchmarks.common import emit, get_setup, make_query_stream, percentiles
 from repro.core import Retriever, WarpSearchConfig
+from repro.obs import Stopwatch
 from repro.serving import (
     PENDING,
     AdmissionPolicy,
@@ -82,10 +81,10 @@ def _drive(server, clock, qs, ms, arrivals):
             latencies.append(clock.t - arrival_of[r])
 
     def dispatch(*, force: bool = False) -> int:
-        w0 = time.perf_counter()
-        served = server.step(force=force)
+        with Stopwatch() as sw:
+            served = server.step(force=force)
         if served:
-            clock.t += time.perf_counter() - w0
+            clock.t += sw.elapsed
             collect()
         return served
 
@@ -154,9 +153,9 @@ def _run_arm(
     hit_rate = (
         summary["result_cache"]["hit_rate"] if cache_size else 0.0
     )
-    p50, p95, p99 = (
-        (np.percentile(lat, [50, 95, 99]) if lat.size else (0.0,) * 3)
-    )
+    # THE percentile definition (obs/metrics.py::percentiles) — the same
+    # statistic the serving layer and every other suite report.
+    p50, p95, p99 = percentiles(lat)
     emit(f"serving/{arm}/p50", float(p50), f"n={lat.size}")
     emit(f"serving/{arm}/p95", float(p95))
     emit(f"serving/{arm}/p99", float(p99))
@@ -212,11 +211,11 @@ def run(micro: bool = False) -> None:
     for it in range(4):
         for _ in range(b):
             cal.submit(qs[0], ms[0])  # one query -> one rung -> one batch
-        w0 = time.perf_counter()
-        cal.step(force=True)
+        with Stopwatch() as sw:
+            cal.step(force=True)
         if it > 0:  # first step compiles the rung's batch program
-            samples.append(time.perf_counter() - w0)
-    t_batch = max(float(np.median(samples)), 1e-4)
+            samples.append(sw.elapsed)
+    t_batch = max(percentiles(samples, (50.0,))[0], 1e-4)
     rate = 0.7 * b / t_batch
     rng = np.random.default_rng(17)
     arrivals = np.cumsum(rng.exponential(1.0 / rate, n))

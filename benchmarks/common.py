@@ -7,17 +7,18 @@ the TPU performance story lives in the dry-run roofline artifacts.
 
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import IndexBuildConfig, build_index
 from repro.data import make_corpus, make_queries
+from repro.obs import percentiles
+from repro.obs import time_fn as _obs_time_fn
 
 __all__ = [
     "time_fn",
+    "percentiles",
     "emit",
     "get_setup",
     "make_query_stream",
@@ -46,17 +47,16 @@ PLANS: dict[str, dict] = {}
 
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 5, **kwargs) -> float:
-    """Median wall time (seconds) of a jit'd callable, post-warmup."""
-    for _ in range(warmup):
-        out = fn(*args, **kwargs)
-        jax.block_until_ready(out)
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        out = fn(*args, **kwargs)
-        jax.block_until_ready(out)
-        times.append(time.perf_counter() - t0)
-    return float(np.median(times))
+    """Median wall time (seconds) of a jit'd callable, post-warmup.
+
+    Thin wrapper over the repo's single timing primitive
+    (``obs/metrics.py::time_fn``) with the JAX sync baked in — kept so
+    every benchmark keeps its one-line call shape.
+    """
+    return _obs_time_fn(
+        fn, *args, warmup=warmup, iters=iters,
+        sync=jax.block_until_ready, **kwargs,
+    )
 
 
 def candidate_traffic_bytes(index, qm: int, nprobe: int) -> tuple[int, int]:

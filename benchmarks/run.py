@@ -22,7 +22,7 @@ import time
 # the tile table it installs in-process steers the latency suite's plans
 # (their snapshots then record tile_source="autotune").
 SUITES = ["parity", "index_size", "quality", "autotune", "latency", "serving",
-          "scaling", "roofline"]
+          "obs", "scaling", "roofline"]
 
 SNAPSHOT_PATH = os.path.join(
     os.path.dirname(__file__), "..", "BENCH_latency.json"
@@ -33,6 +33,30 @@ INDEX_SIZE_SNAPSHOT_PATH = os.path.join(
 SERVING_SNAPSHOT_PATH = os.path.join(
     os.path.dirname(__file__), "..", "BENCH_serving.json"
 )
+OBS_SNAPSHOT_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_obs.json"
+)
+
+
+def write_obs_snapshot(path: str = OBS_SNAPSHOT_PATH) -> None:
+    """Persist the observability-overhead arms (no_obs / disabled /
+    metrics / tracing) so instrumentation cost regressions show up in
+    diffs — the disabled arm's margin is the suite's acceptance bound."""
+    from benchmarks.bench_obs import SUMMARY
+    from benchmarks.common import BENCH_SCHEMA_VERSION, RECORDS
+
+    rows = [r for r in RECORDS if r["name"].startswith("obs/")]
+    if not rows:
+        return
+    snap = {
+        "bench_schema": BENCH_SCHEMA_VERSION,
+        "generated_unix": int(time.time()),
+        "metrics": rows,
+        "arms": SUMMARY,
+    }
+    with open(path, "w") as f:
+        json.dump(snap, f, indent=1, sort_keys=True)
+    print(f"bench/obs/snapshot,0.0,{os.path.abspath(path)}", flush=True)
 
 
 def write_serving_snapshot(path: str = SERVING_SNAPSHOT_PATH) -> None:
@@ -118,6 +142,8 @@ def main() -> None:
             write_index_size_snapshot()
         if name == "serving":
             write_serving_snapshot()
+        if name == "obs":
+            write_obs_snapshot()
 
 
 if __name__ == "__main__":

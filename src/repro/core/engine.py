@@ -51,9 +51,14 @@ __all__ = [
     "resolve_tile_fields",
     "score_probed_clusters",
     "ragged_flat_candidates",
+    "score_candidates",
+    "reduce_candidates",
     "score_and_reduce",
     "select_probes",
     "finish_from_probes",
+    "score_from_probes",
+    "reduce_from_scored",
+    "kernel_dma_compute_split",
 ]
 
 
@@ -419,6 +424,83 @@ def ragged_flat_candidates(
     return one(starts, sizes, probe_scores, v)
 
 
+def score_candidates(
+    index: WarpIndex,
+    q: jax.Array,
+    qmask: jax.Array,
+    probe_scores: jax.Array,
+    probe_cids: jax.Array,
+    config: WarpSearchConfig,
+    *,
+    probe_sizes: jax.Array | None = None,
+):
+    """Stage 2 alone: implicit decompression over the probe set down to a
+    flat candidate stream ``(doc_ids, qtok, scores, valid)``, each [N] —
+    N = Q * worklist_tiles * tile_c ragged, Q * nprobe * cap dense.
+
+    Candidates of masked query tokens come back invalid; on the ragged
+    path their probe sizes are zeroed first so they also contribute no
+    worklist tiles — top-k is unchanged (their candidates are dropped by
+    the mask either way) while worklist demand (and the adaptive bucket
+    the dispatcher picks) tracks the *active* token count instead of the
+    padded query length.
+    """
+    qm = q.shape[0]
+    if config.layout == "ragged":
+        if probe_sizes is None:
+            probe_sizes = index.cluster_sizes[probe_cids]
+        probe_sizes = jnp.where(qmask[:, None], probe_sizes, 0)
+        scores, doc_ids, qtok, valid = ragged_flat_candidates(
+            index, q, probe_scores, probe_cids, config, probe_sizes
+        )
+        return doc_ids, qtok, scores, valid & qmask[qtok]
+
+    p, cap = config.nprobe, index.cap
+    cand_scores, doc_ids, valid = score_probed_clusters(
+        index, q, probe_scores, probe_cids, config
+    )
+    valid = valid & qmask[:, None, None]
+    qtok = jnp.broadcast_to(
+        jnp.arange(qm, dtype=jnp.int32)[:, None, None], (qm, p, cap)
+    )
+    return (
+        doc_ids.reshape(-1),
+        qtok.reshape(-1),
+        cand_scores.reshape(-1),
+        valid.reshape(-1),
+    )
+
+
+def reduce_candidates(
+    index: WarpIndex,
+    doc_ids: jax.Array,
+    qtok: jax.Array,
+    scores: jax.Array,
+    valid: jax.Array,
+    mse: jax.Array,
+    config: WarpSearchConfig,
+    *,
+    q_max: int,
+) -> TopKResult:
+    """Stage 3 alone: the two-stage reduction over a flat candidate
+    stream. ``index.n_docs`` (shard-local on the distributed path) arms
+    the reduction's int32-overflow fallback. The ragged worklist may
+    bound fewer than ``k`` slots on skew-free tiny indexes, so that
+    layout pads the reduction to k (all-invalid slots)."""
+    return two_stage_reduce(
+        doc_ids,
+        qtok,
+        scores,
+        valid,
+        mse,
+        q_max=q_max,
+        k=config.k,
+        impl=config.reduce_impl,
+        n_docs=index.n_docs or None,
+        pad_to_k=config.layout == "ragged",
+    )
+
+
 def score_and_reduce(
     index: WarpIndex,
     q: jax.Array,
@@ -431,69 +513,26 @@ def score_and_reduce(
     probe_sizes: jax.Array | None = None,
 ) -> TopKResult:
     """Stages 2+3 of the pipeline: implicit decompression over the probe
-    set, then the two-stage reduction to top-k.
+    set, then the two-stage reduction to top-k — the composition of
+    ``score_candidates`` and ``reduce_candidates`` (one op sequence; the
+    split exists so the traced path can fence and time the stages
+    separately without a second pipeline definition).
 
     ``mse`` is the per-query-token missing similarity estimate — locally
     imputed by ``warp_select`` on the single-device path, globally merged
-    across shards on the distributed path. ``index.n_docs`` (shard-local on
-    the distributed path) arms the reduction's int32-overflow fallback.
+    across shards on the distributed path.
 
     With ``layout="ragged"`` the candidates flow through the flat tile
     worklist (``ragged_flat_candidates``) straight into the reduction — no
     [Q, nprobe, cap] tensor, and a sort over the worklist bound instead of
-    the padded capacity. The worklist may bound fewer than ``k`` slots on
-    skew-free tiny indexes, so the reduction pads to k (all-invalid slots).
+    the padded capacity.
     """
-    qm = q.shape[0]
-    if config.layout == "ragged":
-        # Masked query tokens contribute no worklist tiles: their
-        # candidates are dropped by the qmask filter below anyway, so
-        # zeroing their probe sizes only removes all-dropped tiles —
-        # top-k is unchanged while worklist demand (and the adaptive
-        # bucket the dispatcher picks) tracks the *active* token count
-        # instead of the padded query length.
-        if probe_sizes is None:
-            probe_sizes = index.cluster_sizes[probe_cids]
-        probe_sizes = jnp.where(qmask[:, None], probe_sizes, 0)
-        scores, doc_ids, qtok, valid = ragged_flat_candidates(
-            index, q, probe_scores, probe_cids, config, probe_sizes
-        )
-        # Candidates of masked query tokens are dropped here.
-        valid = valid & qmask[qtok]
-        return two_stage_reduce(
-            doc_ids,
-            qtok,
-            scores,
-            valid,
-            mse,
-            q_max=qm,
-            k=config.k,
-            impl=config.reduce_impl,
-            n_docs=index.n_docs or None,
-            pad_to_k=True,
-        )
-
-    p, cap = config.nprobe, index.cap
-    cand_scores, doc_ids, valid = score_probed_clusters(
-        index, q, probe_scores, probe_cids, config
+    doc_ids, qtok, scores, valid = score_candidates(
+        index, q, qmask, probe_scores, probe_cids, config,
+        probe_sizes=probe_sizes,
     )
-
-    # Candidates of masked query tokens are dropped here.
-    valid = valid & qmask[:, None, None]
-
-    qtok = jnp.broadcast_to(
-        jnp.arange(qm, dtype=jnp.int32)[:, None, None], (qm, p, cap)
-    )
-    return two_stage_reduce(
-        doc_ids.reshape(-1),
-        qtok.reshape(-1),
-        cand_scores.reshape(-1),
-        valid.reshape(-1),
-        mse,
-        q_max=qm,
-        k=config.k,
-        impl=config.reduce_impl,
-        n_docs=index.n_docs or None,
+    return reduce_candidates(
+        index, doc_ids, qtok, scores, valid, mse, config, q_max=q.shape[0]
     )
 
 
@@ -538,6 +577,157 @@ def finish_from_probes(index, q, qmask, sel, config, query_batch: bool = False) 
         )
 
     return jax.vmap(one)(q, qmask, sel) if query_batch else one(q, qmask, sel)
+
+
+@functools.partial(jax.jit, static_argnames=("config", "query_batch"))
+def score_from_probes(index, q, qmask, sel, config, query_batch: bool = False):
+    """Stage 2 from a precomputed WARP_SELECT output, jit'd per config.
+
+    Returns the flat candidate stream ``(doc_ids, qtok, scores, valid)``
+    (leading [B] axis under ``query_batch``). ``score_from_probes`` ->
+    ``reduce_from_scored`` composes to exactly ``finish_from_probes``
+    (same stage functions, same order), so the traced/profiled execution
+    path (``repro.obs``) that fences between the two stages inherits the
+    bit-parity guarantees of the fused dispatch.
+    """
+
+    def one(q_i, m_i, sel_i):
+        return score_candidates(
+            index, q_i, m_i, sel_i.probe_scores, sel_i.probe_cids, config,
+            probe_sizes=sel_i.probe_sizes,
+        )
+
+    return jax.vmap(one)(q, qmask, sel) if query_batch else one(q, qmask, sel)
+
+
+@functools.partial(jax.jit, static_argnames=("config", "query_batch"))
+def reduce_from_scored(index, scored, mse, config, query_batch: bool = False) -> TopKResult:
+    """Stage 3 from ``score_from_probes`` output, jit'd per config.
+
+    ``mse`` is the WARP_SELECT missing-similarity estimate (f32[Q], or
+    f32[B, Q] under ``query_batch``); its trailing axis is the padded
+    query length the reduction scatters over.
+    """
+    q_max = mse.shape[-1]
+
+    def one(sc_i, m_i):
+        doc_ids, qtok, scores, valid = sc_i
+        return reduce_candidates(
+            index, doc_ids, qtok, scores, valid, m_i, config, q_max=q_max
+        )
+
+    return jax.vmap(one)(scored, mse) if query_batch else one(scored, mse)
+
+
+def kernel_dma_compute_split(
+    index: WarpIndex,
+    q: jax.Array,
+    qmask: jax.Array,
+    sel,
+    config: WarpSearchConfig,
+    *,
+    warmup: int = 1,
+    iters: int = 2,
+) -> dict:
+    """DMA/compute carve-out timing of the fused gather-score kernel at
+    this query's actual probe set — the PR 6 ``probe`` measurement hooks
+    surfaced per-request for the tracing profiler.
+
+    Re-times the stage-2 kernel with ``probe="full"`` and ``probe="dma"``
+    (and ``probe="compute"`` under double buffering; single buffering
+    derives compute as full - dma), returning ``{"dma_ms", "compute_ms",
+    "overlap_frac", ...}`` median-of-``iters``. Returns ``{}`` whenever
+    the Pallas kernel is not on this config's path (materialize gather,
+    reference executor, nbits=8, or an index smaller than one tile) —
+    the reference has no halves to carve. Each call re-runs the kernel
+    ~3x(warmup+iters) times: armed only by ``obs.set_kernel_probes``.
+
+    Batched inputs ([B, Q, D]) are probed at batch element 0 — one
+    representative carve-out, not B of them.
+    """
+    from repro.obs.metrics import time_fn as _time_fn
+
+    if config.gather != "fused" or not config.wants_kernel:
+        return {}
+    if index.nbits == 8 or index.cap == 0:
+        return {}
+    if q.ndim == 3:
+        q = q[0]
+        qmask = qmask[0]
+        sel = jax.tree_util.tree_map(lambda a: a[0], sel)
+    ragged = config.layout == "ragged"
+    tile = ops.resolve_tile_c(
+        index.cap, config.tile_c, layout="ragged" if ragged else "dense"
+    )
+    if index.n_tokens < tile:
+        return {}
+    buffering = (
+        config.buffering if config.buffering in ("single", "double")
+        else ops.DEFAULT_BUFFERING
+    )
+    v = q[:, :, None] * index.bucket_weights[None, None, :]
+
+    if ragged:
+        bound = config.worklist_tiles
+        if bound is None:
+            return {}
+        starts = index.cluster_offsets[sel.probe_cids].astype(jnp.int32)
+        sizes = jnp.where(
+            qmask[:, None], sel.probe_sizes, 0
+        ).astype(jnp.int32)
+        wl = build_tile_worklist(
+            starts, sizes, sel.probe_scores, tile_c=tile,
+            tiles_per_qtoken=bound,
+        )
+        if wl.row0.shape[0] == 0:
+            return {}
+
+        def make(probe):
+            @functools.partial(jax.jit, static_argnames=("probe",))
+            def f(row0, nvalid, qtok, pscore, vv, probe=probe):
+                return ops.ragged_fused_gather_selective_sum(
+                    index.packed_codes, row0, nvalid, qtok, pscore, vv,
+                    nbits=index.nbits, dim=index.dim, tile_c=tile,
+                    n_tokens=index.n_tokens, use_kernel=True,
+                    buffering=buffering, probe=probe,
+                )
+
+            return lambda: f(wl.row0, wl.nvalid, wl.qtok, wl.pscore, v)
+    else:
+
+        def make(probe):
+            @functools.partial(jax.jit, static_argnames=("probe",))
+            def f(cids, pscores, vv, probe=probe):
+                return ops.fused_gather_selective_sum(
+                    index.packed_codes, index.cluster_offsets,
+                    index.cluster_sizes, cids, pscores, vv,
+                    nbits=index.nbits, dim=index.dim, cap=index.cap,
+                    n_tokens=index.n_tokens, use_kernel=True, tile_c=tile,
+                    buffering=buffering, probe=probe,
+                )
+
+            return lambda: f(sel.probe_cids, sel.probe_scores, v)
+
+    kw = dict(warmup=warmup, iters=iters, sync=jax.block_until_ready)
+    t_full = _time_fn(make("full"), **kw)
+    t_dma = _time_fn(make("dma"), **kw)
+    if buffering == "double":
+        t_comp = _time_fn(make("compute"), **kw)
+    else:
+        t_comp = max(t_full - t_dma, 0.0)
+    denom = min(t_dma, t_comp)
+    overlap = (
+        max(0.0, min(1.0, (t_dma + t_comp - t_full) / denom))
+        if denom > 0 else 0.0
+    )
+    return {
+        "kernel_full_ms": round(t_full * 1e3, 4),
+        "dma_ms": round(t_dma * 1e3, 4),
+        "compute_ms": round(t_comp * 1e3, 4),
+        "overlap_frac": round(overlap, 4),
+        "probe_tile_c": tile,
+        "probe_buffering": buffering,
+    }
 
 
 @functools.partial(jax.jit, static_argnames=("config",))

@@ -229,6 +229,7 @@ def fused_gather_selective_sum(
     tile_c: int | None = None,
     impl: str = "fused",
     buffering: str = "auto",
+    probe: str = "full",
 ) -> jax.Array:
     """Single-pass CSR probe + implicit decompression + scoring.
 
@@ -244,6 +245,11 @@ def fused_gather_selective_sum(
     ``buffering`` picks the kernel's DMA schedule ("double" | "single",
     bit-identical; see fused_gather_score.py); "auto" takes the kernel
     default — plan resolution passes the concrete resolved choice.
+    ``probe`` passes through the kernel's profiling carve-outs
+    ("full" | "dma" | "compute"): non-"full" values time one half of the
+    DMA/compute pipeline and return garbage scores, so they are rejected
+    whenever this call would fall back to the jnp reference (which has
+    no halves to carve).
 
     With ``use_kernel`` the dim must fill whole packed bytes — the Pallas
     kernel reshapes codes as [PB, per_byte] and cannot skip a padded
@@ -262,6 +268,13 @@ def fused_gather_selective_sum(
         or cap == 0
         or n_tokens < tile  # index smaller than one code tile
     ):
+        if probe != "full":
+            raise ValueError(
+                f"probe={probe!r} requires the Pallas kernel path, but "
+                "this call falls back to the jnp reference (use_kernel="
+                f"{use_kernel}, impl={impl!r}, nbits={nbits}, cap={cap}, "
+                f"n_tokens={n_tokens} vs tile {tile})"
+            )
         return ref.fused_gather_score(
             packed_codes, starts, sizes, probe_scores, v,
             nbits=nbits, dim=dim, cap=cap,
@@ -270,7 +283,8 @@ def fused_gather_selective_sum(
     out = fused_gather_score_kernel_call(
         packed_codes, starts, sizes, probe_scores, v,
         nbits=nbits, dim=dim, n_tokens=n_tokens, cap_pad=cap_pad,
-        tile_c=tile, buffering=buffering, interpret=not on_tpu(),
+        tile_c=tile, buffering=buffering, probe=probe,
+        interpret=not on_tpu(),
     )
     return out[:, :, :cap]
 
@@ -315,6 +329,7 @@ def ragged_fused_gather_selective_sum(
     n_tokens: int,
     use_kernel: bool = True,
     buffering: str = "auto",
+    probe: str = "full",
 ) -> jax.Array:
     """Single-pass worklist probe + implicit decompression + scoring.
 
@@ -325,7 +340,9 @@ def ragged_fused_gather_selective_sum(
     Routes to the ragged Pallas scalar-prefetch kernel (interpret off-TPU);
     b=8 or an index smaller than one code tile falls back to the jnp
     reference, which gathers but is semantically identical. ``buffering``
-    as in ``fused_gather_selective_sum``.
+    and the profiling ``probe`` carve-outs as in
+    ``fused_gather_selective_sum`` (non-"full" probes need the kernel
+    path and are rejected on the reference fallback).
     """
     _check_packable_dim(dim, nbits, byte_wise=use_kernel)
     if buffering == "auto":
@@ -337,6 +354,13 @@ def ragged_fused_gather_selective_sum(
         or n_tokens < tile_c  # index smaller than one code tile
         or row0.shape[0] == 0
     ):
+        if probe != "full":
+            raise ValueError(
+                f"probe={probe!r} requires the Pallas kernel path, but "
+                f"this call falls back to the jnp reference (use_kernel="
+                f"{use_kernel}, nbits={nbits}, n_tokens={n_tokens} vs "
+                f"tile {tile_c}, worklist len {row0.shape[0]})"
+            )
         return ref.ragged_fused_gather_score(
             packed_codes, row0, nvalid, qtok, pscore, v,
             nbits=nbits, dim=dim, tile_c=tile_c,
@@ -344,7 +368,7 @@ def ragged_fused_gather_selective_sum(
     return ragged_fused_gather_score_kernel_call(
         packed_codes, row0, nvalid, qtok, pscore, v,
         nbits=nbits, dim=dim, n_tokens=n_tokens, tile_c=tile_c,
-        buffering=buffering, interpret=not on_tpu(),
+        buffering=buffering, probe=probe, interpret=not on_tpu(),
     )
 
 

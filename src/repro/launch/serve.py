@@ -16,16 +16,26 @@ Poisson arrival process (rate calibrated to the measured service rate)
 with Zipf-skewed query popularity (``--zipf-skew``) for ``--duration-s``
 seconds — the traffic shape that exercises the bucket-aware scheduler's
 per-rung batching and the result cache.
+
+Observability (``repro.obs``): ``--trace-out trace.json`` records one
+span tree per request — admission, rung pre-pass, queue wait, batch
+dispatch, engine stages, reply — as Chrome trace-event JSON for
+https://ui.perfetto.dev; ``--metrics-dump metrics.prom`` (or ``.json``)
+writes the serving/engine metric registry at exit;
+``--metrics-interval-s`` flushes a one-line summary periodically during
+open-loop runs. See docs/observability.md.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core import IndexBuildConfig, Retriever, WarpSearchConfig, index_stats
 from repro.data import make_corpus, make_queries
 from repro.serving import AdmissionPolicy, BatchPolicy, Overloaded, RetrievalServer
@@ -63,11 +73,26 @@ def _run_poisson(server, corpus, args) -> None:
     print(f"poisson traffic: rate={rate:.1f} qps, skew={args.zipf_skew}, "
           f"{args.duration_s:.0f}s")
 
+    # Periodic flush on the SERVER's clock (injectable, like everything
+    # else in the serving stack) so a long open-loop run reports progress
+    # instead of going dark until the end.
+    interval = args.metrics_interval_s
+    next_flush = server.clock() + interval if interval > 0 else float("inf")
+
     t_end = time.monotonic() + args.duration_s
     next_arrival = time.monotonic()
     submitted = shed = 0
     while time.monotonic() < t_end:
         now = time.monotonic()
+        if server.clock() >= next_flush:
+            s = server.summary()
+            print(
+                f"[t+{args.duration_s - (t_end - now):.0f}s] "
+                f"submitted={submitted} served={s['served']} shed={shed} "
+                f"depth={s['queue_depth']} batches={s['batches']} "
+                f"cache_hits={s['cache_hits']}"
+            )
+            next_flush += interval
         if now >= next_arrival:
             i = int(rng.choice(pool, p=p))
             try:
@@ -120,7 +145,27 @@ def main() -> None:
                          "(0 = uniform)")
     ap.add_argument("--duration-s", type=float, default=5.0,
                     help="wall-clock length of the poisson traffic run")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record per-request/per-stage spans and write a "
+                         "Chrome trace-event JSON (open in "
+                         "https://ui.perfetto.dev)")
+    ap.add_argument("--metrics-dump", default=None, metavar="PATH",
+                    help="dump serving/engine metrics at exit — Prometheus "
+                         "text exposition, or a JSON snapshot when PATH "
+                         "ends in .json")
+    ap.add_argument("--metrics-interval-s", type=float, default=10.0,
+                    help="periodic summary flush interval for --traffic "
+                         "poisson, on the server's clock (0 disables)")
     args = ap.parse_args()
+
+    if args.trace_out:
+        # The tracer shares the server's clock (time.monotonic) so the
+        # retroactive queue-wait rows and the engine spans line up on one
+        # Perfetto timeline.
+        obs.set_tracer(obs.Tracer(clock=time.monotonic))
+    registry = None
+    if args.metrics_dump:
+        registry = obs.enable_metrics()  # the process REGISTRY
 
     corpus = make_corpus(args.n_docs, mean_doc_len=20, seed=0)
     t0 = time.perf_counter()
@@ -149,11 +194,32 @@ def main() -> None:
         ),
         BatchPolicy(max_batch=args.max_batch, max_wait_s=args.max_wait_ms / 1e3),
         admission=AdmissionPolicy(max_queue_depth=16 * args.max_batch),
+        registry=registry,
     )
     print(f"search plan: {server.plan.describe()}")
     if args.traffic == "poisson":
         _run_poisson(server, corpus, args)
-        return
+    else:
+        _run_closed(server, corpus, args)
+
+    tr = obs.STATE.tracer
+    if args.trace_out and tr is not None:
+        tr.export(args.trace_out)
+        print(f"trace: {len(tr.events())} events "
+              f"({tr.dropped} dropped) -> {args.trace_out}")
+    if args.metrics_dump:
+        if args.metrics_dump.endswith(".json"):
+            with open(args.metrics_dump, "w") as f:
+                json.dump(registry.snapshot(), f, indent=1, sort_keys=True)
+        else:
+            with open(args.metrics_dump, "w") as f:
+                f.write(registry.to_prometheus())
+        print(f"metrics: {len(registry.metrics())} series -> "
+              f"{args.metrics_dump}")
+
+
+def _run_closed(server, corpus, args) -> None:
+    """Closed-loop traffic: submit all queries, drain, check recall."""
     q, qmask, rel = make_queries(corpus, n_queries=args.queries, seed=1)
 
     t0 = time.perf_counter()

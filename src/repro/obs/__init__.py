@@ -1,0 +1,158 @@
+"""repro.obs — the observability substrate (tracing + metrics).
+
+WARP's performance story is a per-stage latency decomposition; this
+package makes that decomposition *always available* instead of living in
+one-off benchmark scripts. Two primitives:
+
+- ``obs.trace`` — request-scoped span tracing (context-manager spans,
+  injectable clock, bounded ring buffer, Chrome trace-event export for
+  Perfetto).
+- ``obs.metrics`` — a process-wide registry of counters / gauges /
+  fixed-bucket histograms with Prometheus text + JSON snapshot
+  exposition, plus the repo's single definition of ``time_fn`` and
+  ``percentiles``.
+
+Runtime state is a tri-level switch held in ``STATE``:
+
+  disabled (default)   instrumented hot paths pay one attribute check
+                       (``STATE.tracer is None`` / ``STATE.metrics is
+                       None``) — measured < 2% on the retrieve path
+                       (``benchmarks/bench_obs.py`` -> BENCH_obs.json).
+  metrics              ``enable_metrics()``: counters/histograms record;
+                       no spans, no forced synchronization beyond the
+                       retrieve-latency block.
+  tracing              ``set_tracer(Tracer(...))``: per-stage spans with
+                       ``jax.block_until_ready`` fences between engine
+                       stages (observer effect by design — a span's dur
+                       must mean "this stage", so the traced path trades
+                       async dispatch overlap for attribution).
+
+``set_kernel_probes(True)`` additionally re-times the fused gather-score
+kernel with the PR 6 ``probe`` carve-outs (dma-only / compute-only) on
+every traced retrieve — expensive, profiling sessions only.
+
+Layering: ``repro.obs`` imports nothing from the rest of ``repro`` —
+core, serving, store, and launch all import *it*. Instrument sparse call
+sites with the module-level one-liners (``count``/``gauge``/``observe``/
+``span``) — they no-op against a disabled ``STATE``; hot loops hold
+metric object references directly.
+"""
+
+from __future__ import annotations
+
+from repro.obs.metrics import (
+    DEFAULT_LATENCY_BUCKETS_S,
+    REGISTRY,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    Stopwatch,
+    percentiles,
+    time_fn,
+)
+from repro.obs.trace import (
+    NULL_SPAN,
+    NULL_TRACER,
+    NullTracer,
+    Span,
+    Tracer,
+    span_tree,
+)
+
+__all__ = [
+    # metrics
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "REGISTRY",
+    "DEFAULT_LATENCY_BUCKETS_S", "Stopwatch", "percentiles", "time_fn",
+    # tracing
+    "Span", "Tracer", "NullTracer", "NULL_TRACER", "NULL_SPAN",
+    "span_tree",
+    # runtime state
+    "STATE", "enable_metrics", "disable_metrics", "set_tracer", "tracer",
+    "set_kernel_probes", "disable_all",
+    # convenience instrumentation
+    "count", "gauge", "observe", "span",
+]
+
+
+class _ObsState:
+    """Process-wide observability switch (see module docstring)."""
+
+    __slots__ = ("metrics", "tracer", "kernel_probes")
+
+    def __init__(self):
+        self.metrics: MetricsRegistry | None = None
+        self.tracer: Tracer | None = None
+        self.kernel_probes: bool = False
+
+
+STATE = _ObsState()
+
+
+def enable_metrics(registry: MetricsRegistry | None = None) -> MetricsRegistry:
+    """Turn on metrics recording (into ``registry`` or the process
+    default ``REGISTRY``); returns the active registry."""
+    STATE.metrics = registry if registry is not None else REGISTRY
+    return STATE.metrics
+
+
+def disable_metrics() -> None:
+    STATE.metrics = None
+
+
+def set_tracer(t: Tracer | None) -> Tracer | None:
+    """Install (or with None, remove) the process tracer; returns it."""
+    STATE.tracer = t
+    return t
+
+
+def tracer():
+    """The active tracer, or ``NULL_TRACER`` — always safe to call
+    ``.span()`` on the result."""
+    t = STATE.tracer
+    return t if t is not None else NULL_TRACER
+
+
+def set_kernel_probes(on: bool) -> None:
+    """Arm the DMA/compute kernel carve-out timing on traced retrieves
+    (``core/engine.py::kernel_dma_compute_split``). Expensive — each
+    traced retrieve re-runs the gather-score kernel several times."""
+    STATE.kernel_probes = bool(on)
+
+
+def disable_all() -> None:
+    """Back to the zero-overhead default (tests reset through this)."""
+    STATE.metrics = None
+    STATE.tracer = None
+    STATE.kernel_probes = False
+
+
+# ---- sparse-call-site one-liners (no-ops when disabled) ----
+
+def count(name: str, n: float = 1.0, help: str = "", **labels) -> None:
+    reg = STATE.metrics
+    if reg is not None:
+        reg.counter(name, help, **labels).inc(n)
+
+
+def gauge(name: str, value: float, help: str = "", **labels) -> None:
+    reg = STATE.metrics
+    if reg is not None:
+        reg.gauge(name, help, **labels).set(value)
+
+
+def observe(
+    name: str, value: float, help: str = "", buckets=None, **labels
+) -> None:
+    reg = STATE.metrics
+    if reg is not None:
+        if buckets is None:
+            buckets = DEFAULT_LATENCY_BUCKETS_S
+        reg.histogram(name, help, buckets=buckets, **labels).observe(value)
+
+
+def span(name: str, **args):
+    """Context-manager span against the active tracer (``NULL_SPAN``
+    when tracing is off)."""
+    t = STATE.tracer
+    return t.span(name, **args) if t is not None else NULL_SPAN

@@ -64,6 +64,8 @@ class AdmissionGate:
         self,
         policy: AdmissionPolicy = AdmissionPolicy(),
         clock: Callable[[], float] = time.monotonic,
+        *,
+        registry=None,
     ):
         self.policy = policy
         self.clock = clock
@@ -71,6 +73,22 @@ class AdmissionGate:
         self._last = clock()
         self.shed = 0
         self.admitted = 0
+        # Optional mirror into a repro.obs MetricsRegistry; the plain ints
+        # stay the source of truth for the summary() keys.
+        if registry is not None:
+            self._c_shed = registry.counter(
+                "serving_shed_total", "Requests rejected at admission"
+            )
+            self._c_admitted = registry.counter(
+                "serving_admitted_total", "Requests admitted past the gate"
+            )
+        else:
+            self._c_shed = self._c_admitted = None
+
+    def _shed(self) -> None:
+        self.shed += 1
+        if self._c_shed is not None:
+            self._c_shed.inc()
 
     def _refill(self) -> None:
         now = self.clock()
@@ -86,7 +104,7 @@ class AdmissionGate:
         """Admit or raise ``Overloaded``; admission consumes one token
         when the rate cap is armed."""
         if queue_depth >= self.policy.max_queue_depth:
-            self.shed += 1
+            self._shed()
             raise Overloaded(
                 f"queue depth {queue_depth} at limit "
                 f"{self.policy.max_queue_depth}; retry with backoff"
@@ -94,13 +112,15 @@ class AdmissionGate:
         if self.policy.rate_per_s is not None:
             self._refill()
             if self._tokens < 1.0:
-                self.shed += 1
+                self._shed()
                 raise Overloaded(
                     f"rate limit {self.policy.rate_per_s}/s exceeded "
                     f"(burst {self.policy.burst}); retry with backoff"
                 )
             self._tokens -= 1.0
         self.admitted += 1
+        if self._c_admitted is not None:
+            self._c_admitted.inc()
 
 
 @dataclasses.dataclass(frozen=True)

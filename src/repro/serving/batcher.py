@@ -62,6 +62,7 @@ from typing import Callable
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import Retriever, WarpSearchConfig
 from repro.core.distributed import ShardedWarpIndex
 from repro.core.types import WarpIndex
@@ -130,7 +131,12 @@ class RetrievalServer:
         admission: AdmissionPolicy | AdmissionGate | None = None,
         compaction: CompactionPolicy | None = None,
         store_path: str | None = None,
+        registry: obs.MetricsRegistry | None = None,
     ):
+        # Serving counters live in a metrics registry — private per server
+        # by default so two servers (or two tests) never share counts;
+        # launch/serve.py passes the process registry for exposition.
+        self.metrics = registry if registry is not None else obs.MetricsRegistry()
         self.retriever = (
             index if isinstance(index, Retriever) else Retriever.from_index(index)
         )
@@ -145,28 +151,62 @@ class RetrievalServer:
         self.index_epoch = 0
         self._fingerprint = self.plan.fingerprint()
         if isinstance(admission, AdmissionPolicy):
-            admission = AdmissionGate(admission, clock)
+            admission = AdmissionGate(admission, clock, registry=self.metrics)
         self.admission = admission
         self.compaction = compaction
         self.store_path = store_path
         self._last_compact = -float("inf")
         if cache_size:
-            self.result_cache: LRUCache | None = LRUCache(cache_size)
-            self._rung_cache: LRUCache | None = LRUCache(cache_size)
+            self.result_cache: LRUCache | None = LRUCache(
+                cache_size, registry=self.metrics, name="result"
+            )
+            self._rung_cache: LRUCache | None = LRUCache(
+                cache_size, registry=self.metrics, name="rung"
+            )
         else:
             self.result_cache = self._rung_cache = None
         self.scheduler = self._make_scheduler()
         self._inflight: set[int] = set()
         self._results: dict[int, tuple[np.ndarray, np.ndarray]] = {}
         self._next_id = 0
-        self.stats = {
-            "batches": 0,
-            "padded_slots": 0,
-            "served": 0,
-            "reloads": 0,
-            "cache_hits": 0,
-            "compactions": 0,
+        # Legacy ``stats`` keys -> registry counters; the ``stats``
+        # property reconstructs the historical dict view from these.
+        self._c = {
+            "batches": self.metrics.counter(
+                "serving_batches_total", "Batches dispatched"
+            ),
+            "padded_slots": self.metrics.counter(
+                "serving_padded_slots_total",
+                "Masked padding slots in under-full batches",
+            ),
+            "served": self.metrics.counter(
+                "serving_requests_served_total", "Requests completed"
+            ),
+            "reloads": self.metrics.counter(
+                "serving_reloads_total", "Hot index swaps"
+            ),
+            "cache_hits": self.metrics.counter(
+                "serving_submit_cache_hits_total",
+                "Requests completed at submit time by the result cache",
+            ),
+            "compactions": self.metrics.counter(
+                "serving_compactions_total",
+                "Store compactions run by maintain()",
+            ),
         }
+        self._h_dispatch = self.metrics.histogram(
+            "serving_dispatch_seconds",
+            "Batch dispatch latency (retrieve + result distribution)",
+        )
+        self._g_epoch = self.metrics.gauge(
+            "serving_index_epoch", "Current served index epoch"
+        )
+
+    @property
+    def stats(self) -> dict:
+        """Legacy counter dict (batches/padded_slots/served/reloads/
+        cache_hits/compactions), reconstructed from the registry."""
+        return {k: int(c.value) for k, c in self._c.items()}
 
     def _make_scheduler(self) -> BucketScheduler:
         """One FIFO per ladder rung on bucket-aware adaptive plans; a
@@ -174,7 +214,9 @@ class RetrievalServer:
         rungs = None
         if self.bucket_aware and self._is_adaptive():
             rungs = self.config.worklist_buckets
-        return BucketScheduler(self.policy, self.clock, rungs=rungs)
+        return BucketScheduler(
+            self.policy, self.clock, rungs=rungs, registry=self.metrics
+        )
 
     def _is_adaptive(self) -> bool:
         return (
@@ -212,26 +254,32 @@ class RetrievalServer:
         """
         if qmask is None:
             qmask = np.ones(q.shape[:-1], bool)
-        if self.admission is not None:
-            self.admission.check(len(self.scheduler))
-        qkey = (
-            query_key(q, qmask) if self.result_cache is not None else None
-        )
-        rid = self._next_id
-        self._next_id += 1
-        if qkey is not None:
-            hit = self.result_cache.get(self._cache_key(qkey))
-            if hit is not None:
-                self._results[rid] = hit
-                self.stats["cache_hits"] += 1
-                self.stats["served"] += 1
-                return rid
-        rung = self._rung_for(q, qmask, qkey)
-        self.scheduler.push(
-            _Pending(rid, q, qmask, self.clock(), qkey), rung
-        )
-        self._inflight.add(rid)
-        return rid
+        with obs.span("submit", queue_depth=len(self.scheduler)) as sp:
+            if self.admission is not None:
+                with obs.span("admission"):
+                    self.admission.check(len(self.scheduler))
+            qkey = (
+                query_key(q, qmask) if self.result_cache is not None else None
+            )
+            rid = self._next_id
+            self._next_id += 1
+            sp.set(rid=rid)
+            if qkey is not None:
+                hit = self.result_cache.get(self._cache_key(qkey))
+                if hit is not None:
+                    self._results[rid] = hit
+                    self._c["cache_hits"].inc()
+                    self._c["served"].inc()
+                    sp.set(cache_hit=True)
+                    return rid
+            with obs.span("rung_prepass") as rp:
+                rung = self._rung_for(q, qmask, qkey)
+                rp.set(rung=rung)
+            self.scheduler.push(
+                _Pending(rid, q, qmask, self.clock(), qkey), rung
+            )
+            self._inflight.add(rid)
+            return rid
 
     def poll(self, req_id: int):
         """Non-blocking result check.
@@ -288,6 +336,7 @@ class RetrievalServer:
         through the new plan on their next ``step``. The index epoch bump
         invalidates every cache entry keyed against the old index.
         """
+        t0 = time.perf_counter()
         if config is not None:
             self._requested_config = config
         old = self.retriever
@@ -329,7 +378,12 @@ class RetrievalServer:
         self.scheduler = self._make_scheduler()
         for p in sorted(pending, key=lambda p: p.arrival):
             self.scheduler.push(p, self._rung_for(p.q, p.qmask, p.qkey))
-        self.stats["reloads"] += 1
+        self._c["reloads"].inc()
+        self._g_epoch.set(self.index_epoch)
+        self.metrics.histogram(
+            "serving_reload_seconds", "Hot index swap duration"
+        ).observe(time.perf_counter() - t0)
+        obs.tracer().instant("reload", epoch=self.index_epoch)
 
     def maintain(self) -> bool:
         """One background-maintenance tick: compact + reload when the
@@ -344,10 +398,11 @@ class RetrievalServer:
 
         if not self.compaction.should_compact(delta_stats(self.store_path)):
             return False
-        compact(self.store_path)
-        self._last_compact = self.clock()
-        self.reload(self.store_path)
-        self.stats["compactions"] += 1
+        with obs.span("compaction", store=self.store_path):
+            compact(self.store_path)
+            self._last_compact = self.clock()
+            self.reload(self.store_path)
+        self._c["compactions"].inc()
         return True
 
     # ---- server loop ----
@@ -362,32 +417,54 @@ class RetrievalServer:
         if got is None:
             return 0
         rung, batch = got
-        b = self.policy.max_batch
-        qm, d = batch[0].q.shape
-        q = np.zeros((b, qm, d), np.float32)
-        mask = np.zeros((b, qm), bool)
-        for i, p in enumerate(batch):
-            q[i] = p.q
-            mask[i] = p.qmask
-        qd, md = jnp.asarray(q), jnp.asarray(mask)
-        if rung is None:
-            res = self.plan.retrieve_batch(qd, md)
-        else:
-            # The batch executes at its rung — every member (and each
-            # backfilled lower-rung rider) fits it, and padding rows are
-            # fully masked so they add no worklist demand.
-            res = self.plan.retrieve_batch_at(qd, md, bucket=rung)
-        scores = np.asarray(res.scores)
-        docs = np.asarray(res.doc_ids)
-        for i, p in enumerate(batch):
-            pair = (scores[i], docs[i])
-            self._results[p.req_id] = pair
-            self._inflight.discard(p.req_id)
-            if self.result_cache is not None and p.qkey is not None:
-                self.result_cache.put(self._cache_key(p.qkey), pair)
-        self.stats["batches"] += 1
-        self.stats["padded_slots"] += b - len(batch)
-        self.stats["served"] += len(batch)
+        tr = obs.STATE.tracer
+        if tr is not None:
+            # Retroactive queue-wait rows: the wait is measured on the
+            # server clock (same clock as ``arrival``) but anchored so
+            # the interval *ends now* on the tracer's clock — the two
+            # clocks may have different epochs. ``tid=request id`` gives
+            # each request its own Perfetto row.
+            now_srv, now_tr = self.clock(), tr.clock()
+            for p in batch:
+                wait = max(now_srv - p.arrival, 0.0)
+                tr.add_event(
+                    "queue_wait", now_tr - wait, wait, tid=p.req_id,
+                    rung="none" if rung is None else rung,
+                )
+        t0 = time.perf_counter()
+        with obs.span(
+            "batch_dispatch",
+            rung="none" if rung is None else rung,
+            batch_size=len(batch), rids=[p.req_id for p in batch],
+        ):
+            b = self.policy.max_batch
+            qm, d = batch[0].q.shape
+            q = np.zeros((b, qm, d), np.float32)
+            mask = np.zeros((b, qm), bool)
+            for i, p in enumerate(batch):
+                q[i] = p.q
+                mask[i] = p.qmask
+            qd, md = jnp.asarray(q), jnp.asarray(mask)
+            if rung is None:
+                res = self.plan.retrieve_batch(qd, md)
+            else:
+                # The batch executes at its rung — every member (and each
+                # backfilled lower-rung rider) fits it, and padding rows
+                # are fully masked so they add no worklist demand.
+                res = self.plan.retrieve_batch_at(qd, md, bucket=rung)
+            with obs.span("reply"):
+                scores = np.asarray(res.scores)
+                docs = np.asarray(res.doc_ids)
+                for i, p in enumerate(batch):
+                    pair = (scores[i], docs[i])
+                    self._results[p.req_id] = pair
+                    self._inflight.discard(p.req_id)
+                    if self.result_cache is not None and p.qkey is not None:
+                        self.result_cache.put(self._cache_key(p.qkey), pair)
+        self._h_dispatch.observe(time.perf_counter() - t0)
+        self._c["batches"].inc()
+        self._c["padded_slots"].inc(b - len(batch))
+        self._c["served"].inc(len(batch))
         return len(batch)
 
     def drain(self) -> None:

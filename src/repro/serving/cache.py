@@ -67,13 +67,28 @@ class LRUCache:
     like the batcher it serves.
     """
 
-    def __init__(self, capacity: int = 256):
+    def __init__(self, capacity: int = 256, *, registry=None, name: str = "cache"):
         if capacity < 1:
             raise ValueError(f"capacity={capacity} must be >= 1")
         self.capacity = capacity
         self._d: OrderedDict = OrderedDict()
         self.hits = 0
         self.misses = 0
+        # Optional mirror into a repro.obs MetricsRegistry (the server
+        # passes its own, labeled per cache level); the plain ints stay
+        # the source of truth for ``stats()``.
+        if registry is not None:
+            self._c_hits = registry.counter(
+                "serving_cache_hits_total", "Cache lookups served", cache=name
+            )
+            self._c_misses = registry.counter(
+                "serving_cache_misses_total", "Cache lookups missed", cache=name
+            )
+            self._g_size = registry.gauge(
+                "serving_cache_size", "Entries resident in the cache", cache=name
+            )
+        else:
+            self._c_hits = self._c_misses = self._g_size = None
 
     def __len__(self) -> int:
         return len(self._d)
@@ -87,9 +102,13 @@ class LRUCache:
             v = self._d[key]
         except KeyError:
             self.misses += 1
+            if self._c_misses is not None:
+                self._c_misses.inc()
             return None
         self._d.move_to_end(key)
         self.hits += 1
+        if self._c_hits is not None:
+            self._c_hits.inc()
         return v
 
     def put(self, key, value) -> None:
@@ -97,6 +116,8 @@ class LRUCache:
         self._d.move_to_end(key)
         while len(self._d) > self.capacity:
             self._d.popitem(last=False)
+        if self._g_size is not None:
+            self._g_size.set(len(self._d))
 
     def purge_epochs_below(self, epoch: int) -> int:
         """Drop every entry whose key's trailing element (the index epoch)
@@ -106,10 +127,14 @@ class LRUCache:
         dead = [k for k in self._d if k[-1] < epoch]
         for k in dead:
             del self._d[k]
+        if self._g_size is not None:
+            self._g_size.set(len(self._d))
         return len(dead)
 
     def clear(self) -> None:
         self._d.clear()
+        if self._g_size is not None:
+            self._g_size.set(0)
 
     def stats(self) -> dict:
         total = self.hits + self.misses

@@ -37,6 +37,8 @@ import time
 from collections import deque
 from typing import Callable
 
+from repro.obs import MetricsRegistry
+
 __all__ = ["BatchPolicy", "BucketScheduler"]
 
 
@@ -72,13 +74,74 @@ class BucketScheduler:
         clock: Callable[[], float] = time.monotonic,
         *,
         rungs: tuple[int, ...] | None = None,
+        registry: MetricsRegistry | None = None,
     ):
         self.policy = policy
         self.clock = clock
         self.rungs = tuple(rungs) if rungs else None
         self._queues: dict = {}
-        # Per-rung dispatch accounting (occupancy = requests / slots).
-        self.stats: dict = {"promoted": 0, "rungs": {}}
+        # Dispatch accounting lives in the metrics registry (the server
+        # shares its own; standalone schedulers get a private one) —
+        # ``stats``/``occupancy`` reconstruct the legacy dict views.
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        self._c_promoted = self.metrics.counter(
+            "serving_promotions_total",
+            "Requests promoted one worklist rung up by the starvation guard",
+        )
+        self._g_depth = self.metrics.gauge(
+            "serving_queue_depth", "Requests queued across all rungs"
+        )
+        # Per-rung counters, created lazily at first dispatch; keys are
+        # the ladder rung or "none" (non-adaptive queue).
+        self._rung_c: dict = {}
+
+    def _rung_counters(self, rung) -> dict:
+        lab = "none" if rung is None else rung
+        rc = self._rung_c.get(lab)
+        if rc is None:
+            rung_l = str(lab)
+            rc = self._rung_c[lab] = {
+                "batches": self.metrics.counter(
+                    "serving_rung_batches_total",
+                    "Batches dispatched at this worklist rung", rung=rung_l,
+                ),
+                "requests": self.metrics.counter(
+                    "serving_rung_requests_total",
+                    "Requests dispatched at this worklist rung", rung=rung_l,
+                ),
+                "slots": self.metrics.counter(
+                    "serving_rung_slots_total",
+                    "Batch slots (incl. padding) dispatched at this rung",
+                    rung=rung_l,
+                ),
+                "backfilled": self.metrics.counter(
+                    "serving_rung_backfilled_total",
+                    "Lower-rung requests riding along in this rung's batches",
+                    rung=rung_l,
+                ),
+                "wait": self.metrics.histogram(
+                    "serving_queue_wait_seconds",
+                    "Admission-to-dispatch queue wait", rung=rung_l,
+                ),
+            }
+        return rc
+
+    @property
+    def stats(self) -> dict:
+        """Legacy dict view of the registry-backed dispatch accounting
+        (``{"promoted": n, "rungs": {rung: {batches, requests, slots,
+        backfilled}}}``) — ``RetrievalServer.summary()`` and existing
+        callers read this shape unchanged."""
+        return {
+            "promoted": int(self._c_promoted.value),
+            "rungs": {
+                lab: {
+                    k: int(rc[k].value)
+                    for k in ("batches", "requests", "slots", "backfilled")
+                }
+                for lab, rc in self._rung_c.items()
+            },
+        }
 
     # ---- queue state ----
     def __len__(self) -> int:
@@ -94,6 +157,7 @@ class BucketScheduler:
         if rung is not None and self.rungs is not None and rung not in self.rungs:
             raise ValueError(f"rung {rung} not in ladder {self.rungs}")
         self._queues.setdefault(rung, deque()).append(item)
+        self._g_depth.set(len(self))
 
     def next_deadline(self) -> float | None:
         """Earliest instant any queued rung's deadline expires (head
@@ -133,7 +197,7 @@ class BucketScheduler:
             self._queues[up] = deque(merged)
             for p in stale:
                 p._promote_stamp = now
-            self.stats["promoted"] += len(stale)
+            self._c_promoted.inc(len(stale))
 
     def _dispatchable(self, rung, now: float, force: bool) -> bool:
         q = self._queues.get(rung)
@@ -180,14 +244,14 @@ class BucketScheduler:
                 while lq and len(items) < self.policy.max_batch:
                     items.append(lq.popleft())
                     backfilled += 1
-        rs = self.stats["rungs"].setdefault(
-            "none" if rung is None else rung,
-            {"batches": 0, "requests": 0, "slots": 0, "backfilled": 0},
-        )
-        rs["batches"] += 1
-        rs["requests"] += len(items)
-        rs["slots"] += self.policy.max_batch
-        rs["backfilled"] += backfilled
+        rc = self._rung_counters(rung)
+        rc["batches"].inc()
+        rc["requests"].inc(len(items))
+        rc["slots"].inc(self.policy.max_batch)
+        rc["backfilled"].inc(backfilled)
+        for p in items:
+            rc["wait"].observe(max(now - p.arrival, 0.0))
+        self._g_depth.set(len(self))
         return rung, items
 
     def occupancy(self) -> dict:

@@ -38,10 +38,12 @@ import dataclasses
 import json
 import os
 import shutil
+import time
 from typing import Any
 
 import numpy as np
 
+from repro import obs
 from repro.core.distributed import ShardedWarpIndex
 from repro.core.types import WarpIndex
 
@@ -258,8 +260,11 @@ def save_index(
     ``build_config`` (an ``IndexBuildConfig`` or dict) is recorded in the
     manifest so ``add_documents``/rebuilds can recover the codec settings.
     """
+    t0 = time.perf_counter()
     if isinstance(index, ShardedWarpIndex):
-        return _save_sharded(index, path, build_config, overwrite)
+        out = _save_sharded(index, path, build_config, overwrite)
+        obs.observe("store_save_seconds", time.perf_counter() - t0)
+        return out
     if not isinstance(index, WarpIndex):
         raise TypeError(f"cannot save {type(index).__name__} (segmented "
                         "indexes are saved via their base + delta segments)")
@@ -277,6 +282,7 @@ def save_index(
         "arrays": arrays,
         "build_config": _config_dict(build_config),
     })
+    obs.observe("store_save_seconds", time.perf_counter() - t0)
     return path
 
 
@@ -375,11 +381,14 @@ def load_index(
     With ``mmap=True`` (default) every array is an ``np.memmap`` view of
     the on-disk binary: no full-file read happens at load time.
     """
+    t0 = time.perf_counter()
     recover_interrupted_compact(path)
     manifest = read_manifest(path)
     kind = manifest["kind"]
     if kind == KIND_SHARDED:
-        return _load_sharded(path, manifest, mmap)
+        out = _load_sharded(path, manifest, mmap)
+        obs.observe("store_load_seconds", time.perf_counter() - t0)
+        return out
     if kind == KIND_SEGMENT:
         raise ValueError(
             f"{path} is a delta segment; it has no centroids/codec of its "
@@ -392,7 +401,10 @@ def load_index(
     if with_segments and seg_dirs:
         from repro.store.segments import load_segmented  # circular-free: lazy
 
-        return load_segmented(base, seg_dirs, mmap=mmap)
+        out = load_segmented(base, seg_dirs, mmap=mmap)
+        obs.observe("store_load_seconds", time.perf_counter() - t0)
+        return out
+    obs.observe("store_load_seconds", time.perf_counter() - t0)
     return base
 
 

@@ -61,11 +61,13 @@ import dataclasses
 import functools
 import os
 import shutil
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import engine, kmeans, quantization
 from repro.core.reduction import TopKResult, two_stage_reduce
 from repro.core.types import WarpIndex, WarpSearchConfig
@@ -213,6 +215,7 @@ def add_documents(
     """Append a delta segment to the store at ``path``; returns the new
     segment directory. ``token_doc_ids`` are local to the new batch
     (``0 .. n_docs``); global ids are assigned by position at load time."""
+    t0 = time.perf_counter()
     manifest = store_format.read_manifest(path)
     if manifest["kind"] != store_format.KIND_SINGLE:
         raise NotImplementedError(
@@ -252,6 +255,8 @@ def add_documents(
         },
         "arrays": arrays,
     })
+    obs.observe("store_add_documents_seconds", time.perf_counter() - t0)
+    obs.count("store_documents_added_total", n_docs)
     return seg_dir
 
 
@@ -305,13 +310,17 @@ def delta_stats(path: str) -> dict:
         delta_tokens += int(seg_static["n_tokens"])
         delta_docs += int(seg_static["n_docs"])
     total = base_tokens + delta_tokens
+    frac = (delta_tokens / total) if total else 0.0
+    obs.gauge("store_delta_segments", len(seg_dirs))
+    obs.gauge("store_delta_tokens", delta_tokens)
+    obs.gauge("store_delta_token_frac", frac)
     return {
         "n_delta_segments": len(seg_dirs),
         "base_tokens": base_tokens,
         "delta_tokens": delta_tokens,
         "base_docs": base_docs,
         "delta_docs": delta_docs,
-        "delta_token_frac": (delta_tokens / total) if total else 0.0,
+        "delta_token_frac": frac,
     }
 
 
@@ -596,7 +605,11 @@ def compact(path: str) -> str:
     with os.fdopen(fd, "w") as f:
         f.write(str(os.getpid()))
     try:
-        return _compact_locked(path)
+        t0 = time.perf_counter()
+        with obs.span("store_compact", store=path):
+            out = _compact_locked(path)
+        obs.observe("store_compact_seconds", time.perf_counter() - t0)
+        return out
     finally:
         if os.path.exists(lock):
             os.remove(lock)
