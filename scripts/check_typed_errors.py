@@ -1,0 +1,143 @@
+#!/usr/bin/env python
+"""Lint: every public exception class under ``src/repro`` must be
+re-exported from its package ``__init__``.
+
+The resilience contract says failures surface as *typed* errors callers
+can catch by name (``StoreCorruption``, ``DeadlineExceeded``, ...).
+That contract breaks silently when an exception class is reachable only
+through a private module path — callers write ``except
+repro.store.format.StoreCorruption`` and the next refactor orphans them.
+This lint pins the contract: an exception defined in
+``repro.<pkg>.<module>`` must be importable as ``repro.<pkg>.<name>``
+(and listed in the package's ``__all__`` when one exists).
+
+Pure AST — no repro import, no jax, so it runs anywhere in <100ms:
+
+  python scripts/check_typed_errors.py
+
+Exit 0 when clean (prints the audited classes), 1 with one line per
+violation otherwise. Private classes (``_Foo``) and classes defined in
+the ``__init__`` itself are exempt.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src", "repro")
+
+# Builtin roots that mark a class as an exception type; the closure below
+# adds repo-defined exception classes so subclasses of subclasses count.
+BUILTIN_EXC = {
+    "BaseException", "Exception", "ArithmeticError", "AssertionError",
+    "AttributeError", "IOError", "KeyError", "LookupError", "OSError",
+    "RuntimeError", "TypeError", "ValueError", "NotImplementedError",
+}
+
+
+def _base_name(node: ast.expr) -> str | None:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+def _collect_classes(tree: ast.AST):
+    """-> [(class_name, [base names])] at module top level."""
+    return [
+        (n.name, [b for b in map(_base_name, n.bases) if b])
+        for n in ast.iter_child_nodes(tree)
+        if isinstance(n, ast.ClassDef)
+    ]
+
+
+def _init_exports(init_path: str):
+    """-> (imported names, __all__ entries or None) of an __init__.py."""
+    with open(init_path) as f:
+        tree = ast.parse(f.read(), init_path)
+    imported: set[str] = set()
+    dunder_all: list[str] | None = None
+    for n in ast.walk(tree):
+        if isinstance(n, (ast.Import, ast.ImportFrom)):
+            imported.update(a.asname or a.name for a in n.names)
+        elif isinstance(n, ast.Assign):
+            for t in n.targets:
+                if isinstance(t, ast.Name) and t.id == "__all__":
+                    dunder_all = [
+                        c.value for c in ast.walk(n.value)
+                        if isinstance(c, ast.Constant) and isinstance(c.value, str)
+                    ]
+        # Classes defined directly in the __init__ are exported by construction.
+        elif isinstance(n, ast.ClassDef):
+            imported.add(n.name)
+    return imported, dunder_all
+
+
+def main() -> int:
+    # Pass 1: every top-level class in every module, with its bases.
+    modules = []  # (pkg_dir, rel_module_path, classes)
+    for dirpath, _, filenames in os.walk(SRC):
+        for fn in sorted(filenames):
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            with open(path) as f:
+                modules.append(
+                    (path, _collect_classes(ast.parse(f.read(), path)))
+                )
+
+    # Fixpoint closure: a class is an exception if any base is.
+    exc_names = set(BUILTIN_EXC)
+    changed = True
+    while changed:
+        changed = False
+        for _, classes in modules:
+            for name, bases in classes:
+                if name not in exc_names and any(b in exc_names for b in bases):
+                    exc_names.add(name)
+                    changed = True
+
+    violations, audited = [], []
+    for path, classes in modules:
+        rel = os.path.relpath(path, REPO)
+        pkg_dir = os.path.dirname(path)
+        init = os.path.join(pkg_dir, "__init__.py")
+        basename = os.path.basename(path)
+        for name, bases in classes:
+            if name.startswith("_") or name in BUILTIN_EXC:
+                continue
+            if not any(b in exc_names for b in bases):
+                continue
+            if basename == "__init__.py" or not os.path.exists(init):
+                audited.append((rel, name))  # namespace pkg / defined in init
+                continue
+            imported, dunder_all = _init_exports(init)
+            pkg = os.path.relpath(pkg_dir, os.path.dirname(SRC)).replace(os.sep, ".")
+            if name not in imported:
+                violations.append(
+                    f"{rel}: public exception {name!r} is not imported in "
+                    f"{pkg}/__init__.py — callers cannot catch it as {pkg}.{name}"
+                )
+            elif dunder_all is not None and name not in dunder_all:
+                violations.append(
+                    f"{rel}: public exception {name!r} is imported in "
+                    f"{pkg}/__init__.py but missing from its __all__"
+                )
+            else:
+                audited.append((rel, name))
+
+    if violations:
+        print("\n".join(violations))
+        return 1
+    for rel, name in audited:
+        print(f"ok: {name} ({rel})")
+    print(f"{len(audited)} public exception class(es) audited, all exported")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

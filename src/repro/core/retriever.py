@@ -54,12 +54,14 @@ import dataclasses
 import hashlib
 import json
 import time
+import warnings
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import distributed as dist
 from repro.core import engine
 from repro.core import worklist as wl
@@ -124,6 +126,13 @@ class SearchPlan:
     # Stage-split recipe for the traced path (None on sharded/segmented
     # plans, which trace as a single engine span) — see ``_StagedLocal``.
     _staged: Any = dataclasses.field(repr=False, default=None)
+    # Executor fallback (kernel plans only): a zero-arg factory compiling
+    # the same pipeline with executor="reference" (bit-identical results),
+    # invoked when the kernel path fails at warmup or dispatch.
+    _fallback_factory: Any = dataclasses.field(repr=False, default=None)
+    # Mutable fallback state (the dataclass is frozen; the dict is not):
+    # {"active", "warned", "error", "single", "batch", "batch_at"}.
+    _fallback: dict = dataclasses.field(repr=False, default_factory=dict)
 
     @property
     def t_prime(self) -> int:
@@ -139,8 +148,7 @@ class SearchPlan:
         if qmask is None:
             qmask = jnp.ones((q.shape[0],), bool)
         return self._dispatch(
-            self._single, q, jnp.asarray(qmask, bool),
-            kind="single", query_batch=False,
+            q, jnp.asarray(qmask, bool), kind="single", query_batch=False,
         )
 
     def retrieve_batch(self, q: jax.Array, qmask: jax.Array | None = None) -> TopKResult:
@@ -149,12 +157,68 @@ class SearchPlan:
         if qmask is None:
             qmask = jnp.ones(q.shape[:2], bool)
         return self._dispatch(
-            self._batch, q, jnp.asarray(qmask, bool),
-            kind="batch", query_batch=True,
+            q, jnp.asarray(qmask, bool), kind="batch", query_batch=True,
         )
 
+    # ---- executor fallback ----
+    @property
+    def fallback_active(self) -> bool:
+        """Whether a kernel-path failure demoted this plan to the
+        reference executor (bit-identical results, no Pallas)."""
+        return bool(self._fallback.get("active"))
+
+    def warmup(self) -> bool:
+        """Compile-and-run the plan once on a dummy query so kernel-path
+        failures (lowering, launch) surface HERE, not on the first real
+        request. On failure the plan demotes itself to the reference
+        executor; returns True iff the fallback was activated. No-op on
+        plans already resolved to the reference executor."""
+        if self.config.executor != "kernel" or self._fallback_factory is None:
+            return False
+        if self._fallback.get("active"):
+            return True
+        geo = self.index_geometry
+        q = jnp.zeros((2, geo["dim"]), jnp.float32)
+        qmask = jnp.ones((2,), bool)
+        try:
+            jax.block_until_ready(self._single(self._index, q, qmask))
+        except Exception as e:  # noqa: BLE001 — any kernel failure demotes
+            self._activate_fallback(e)
+            return True
+        return False
+
+    def _activate_fallback(self, exc: BaseException) -> None:
+        single, batch, batch_at = self._fallback_factory()
+        fb = self._fallback
+        fb.update(
+            single=single, batch=batch, batch_at=batch_at,
+            error=repr(exc), active=True,
+        )
+        obs.count("warp_executor_fallbacks_total")
+        if not fb.get("warned"):
+            fb["warned"] = True
+            warnings.warn(
+                f"kernel executor failed ({exc!r}); plan demoted to the "
+                "bit-identical reference executor "
+                "(warp_executor_fallbacks_total)",
+                stacklevel=3,
+            )
+
+    def _active_fn(self, kind: str, bucket=None):
+        """The compiled callable for a dispatch kind, honoring fallback."""
+        fb = self._fallback
+        if fb.get("active"):
+            if kind == "batch_at":
+                return fb["batch_at"](bucket)
+            return fb[kind]
+        if kind == "single":
+            return self._single
+        if kind == "batch":
+            return self._batch
+        return self._batch_at(bucket)
+
     def _dispatch(
-        self, fn, q, qmask, *, kind: str, query_batch: bool, bucket=None
+        self, q, qmask, *, kind: str, query_batch: bool, bucket=None
     ) -> TopKResult:
         """Observability-aware dispatch (``repro.obs.STATE``).
 
@@ -164,12 +228,37 @@ class SearchPlan:
         ``warp_retrieve_seconds`` histogram (one ``block_until_ready`` —
         a latency metric over async dispatch would time the enqueue).
         Tracing: the stage-split path (``_run_traced``).
+
+        Kernel plans get one safety net on top: a failure escaping the
+        compiled callable demotes the plan to the reference executor
+        (``_activate_fallback``) and the dispatch reruns there — the
+        lazy counterpart to ``warmup()`` for failures that only strike a
+        specific shape/bucket.
         """
+        try:
+            return self._dispatch_modes(
+                q, qmask, kind=kind, query_batch=query_batch, bucket=bucket
+            )
+        except Exception as e:  # noqa: BLE001
+            if (
+                self.config.executor != "kernel"
+                or self._fallback_factory is None
+                or self._fallback.get("active")
+            ):
+                raise
+            self._activate_fallback(e)
+            return self._dispatch_modes(
+                q, qmask, kind=kind, query_batch=query_batch, bucket=bucket
+            )
+
+    def _dispatch_modes(
+        self, q, qmask, *, kind: str, query_batch: bool, bucket=None
+    ) -> TopKResult:
         if _OBS.tracer is not None:
             return self._run_traced(
-                fn, q, qmask, kind=kind, query_batch=query_batch,
-                bucket=bucket,
+                q, qmask, kind=kind, query_batch=query_batch, bucket=bucket,
             )
+        fn = self._active_fn(kind, bucket)
         if _OBS.metrics is not None:
             t0 = time.perf_counter()
             out = fn(self._index, q, qmask)
@@ -190,7 +279,7 @@ class SearchPlan:
         ).observe(dt)
 
     def _run_traced(
-        self, fn, q, qmask, *, kind: str, query_batch: bool, bucket=None
+        self, q, qmask, *, kind: str, query_batch: bool, bucket=None
     ) -> TopKResult:
         """Per-stage spans: warp_select -> bucket_pick -> gather_score ->
         reduce, with a ``block_until_ready`` fence after each stage so
@@ -210,7 +299,7 @@ class SearchPlan:
         ) as root:
             if stg is None:
                 with tr.span("engine"):
-                    out = fn(self._index, q, qmask)
+                    out = self._active_fn(kind, bucket)(self._index, q, qmask)
                     jax.block_until_ready(out)
             else:
                 cfg = stg.base_cfg
@@ -229,6 +318,10 @@ class SearchPlan:
                         sp.set(bucket=bucket)
                     root.set(bucket=bucket)
                 run_cfg = stg.cfg_at(bucket)
+                if self._fallback.get("active"):
+                    run_cfg = dataclasses.replace(
+                        run_cfg, executor="reference"
+                    )
                 with tr.span(
                     "gather_score", gather=run_cfg.gather,
                     executor=run_cfg.executor, tile_c=run_cfg.tile_c,
@@ -296,7 +389,7 @@ class SearchPlan:
         if qmask is None:
             qmask = jnp.ones(q.shape[:2], bool)
         return self._dispatch(
-            self._batch_at(bucket), q, jnp.asarray(qmask, bool),
+            q, jnp.asarray(qmask, bool),
             kind="batch_at", query_batch=True, bucket=bucket,
         )
 
@@ -528,6 +621,17 @@ class Retriever:
         self._validate(resolved)
         single, bucket_for = self._compile_single(resolved)
         batch, batch_at = self._compile_batch(resolved)
+
+        fallback_factory = None
+        if resolved.executor == "kernel":
+            def fallback_factory(_self=self, _cfg=resolved):
+                # Same resolved pipeline, reference executor: identical
+                # candidate sets + summation order -> bit-identical top-k.
+                ref_cfg = dataclasses.replace(_cfg, executor="reference")
+                fb_single, _ = _self._compile_single(ref_cfg)
+                fb_batch, fb_batch_at = _self._compile_batch(ref_cfg)
+                return fb_single, fb_batch, fb_batch_at
+
         plan = SearchPlan(
             config=resolved,
             n_shards=self.n_shards,
@@ -539,6 +643,7 @@ class Retriever:
             _bucket_for=bucket_for,
             _batch_at=batch_at,
             _staged=self._staged_recipe(resolved),
+            _fallback_factory=fallback_factory,
         )
         self._plans[config] = plan
         self._plans[resolved] = plan

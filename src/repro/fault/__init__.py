@@ -1,0 +1,63 @@
+"""repro.fault — deterministic fault injection for resilience testing.
+
+Production faults — a flipped bit in an mmap'd store, a compaction dying
+mid-swap, a kernel that refuses to lower on a new backend — are rare and
+unreproducible by nature. This package makes them *scheduled*: a
+``FaultPlan`` (scripted rules and/or a seeded random schedule) is
+installed process-wide, and the store / engine / serving layers consult
+named **injection points** at the places those faults would strike.
+
+The design mirrors ``repro.obs.STATE``: the default state is *disabled*
+and costs a single attribute check (``FAULTS.plan is None``) at each
+hook, so the hooks stay in production code permanently — the chaos suite
+(``tests/test_fault_injection.py``) exercises exactly the code paths
+that serve real traffic, not a parallel test harness.
+
+Named injection points (``SITES``):
+
+  ``store.array_read``      raw binary open / head-checksum read
+                            (``store/format.py::_load_entry``)
+  ``store.manifest_parse``  MANIFEST.json read + decode
+                            (``store/format.py::read_manifest``)
+  ``store.segment_load``    per-delta-segment array load
+                            (``store/format.py::load_segment_arrays``)
+  ``store.compact_step``    each checkpoint of the compact protocol, in
+                            order (``store/segments.py::_compact_locked``)
+  ``engine.kernel_call``    Pallas kernel dispatch (``kernels/ops.py``
+                            fused entry points; fires at trace time, i.e.
+                            once per compilation — modelling lowering /
+                            launch failures)
+  ``server.reload``         hot index swap (``serving/batcher.py``)
+
+A firing point raises — by default an ``InjectedFault``, or any exception
+the rule supplies (e.g. ``OSError`` to mimic a failing disk). The layers
+under test must convert every such failure into their typed error
+(``StoreCorruption``, ``DeadlineExceeded``, ``Overloaded``) or degrade
+gracefully; that conversion is what the chaos invariant asserts.
+"""
+
+from __future__ import annotations
+
+from repro.fault.plan import (
+    FAULTS,
+    SITES,
+    FaultPlan,
+    FaultRule,
+    InjectedFault,
+    active,
+    check,
+    install,
+    uninstall,
+)
+
+__all__ = [
+    "FAULTS",
+    "SITES",
+    "FaultPlan",
+    "FaultRule",
+    "InjectedFault",
+    "active",
+    "check",
+    "install",
+    "uninstall",
+]

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.kernels import autotune, ref
 from repro.kernels.decompress_score import selective_sum_kernel_call
 from repro.kernels.embedding_bag import embedding_bag_kernel_call
+from repro.fault import FAULTS as _FAULTS
 from repro.kernels.fused_gather_score import (
     DEFAULT_BUFFERING,
     DEFAULT_RAGGED_TILE_C,
@@ -41,6 +42,15 @@ __all__ = [
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _fault_kernel_call(op: str) -> None:
+    """``engine.kernel_call`` injection point (``repro.fault``): fires at
+    trace time — once per compilation, not per dispatch — modelling a
+    kernel that fails to lower or launch on this backend. Disabled cost:
+    one attribute check."""
+    if _FAULTS.plan is not None:
+        _FAULTS.plan.check("engine.kernel_call", op=op)
 
 
 def _round_up(x: int, m: int) -> int:
@@ -207,6 +217,7 @@ def selective_sum(
     n_pad = _round_up(n, tile)
     if n_pad != n:
         packed = jnp.pad(packed, ((0, 0), (0, n_pad - n), (0, 0)))
+    _fault_kernel_call("selective_sum")
     out = selective_sum_kernel_call(
         packed, v, nbits=nbits, dim=dim, tile_n=tile, interpret=not on_tpu()
     )
@@ -280,6 +291,7 @@ def fused_gather_selective_sum(
             nbits=nbits, dim=dim, cap=cap,
         )
     cap_pad = _round_up(cap, tile)
+    _fault_kernel_call("fused_gather_score")
     out = fused_gather_score_kernel_call(
         packed_codes, starts, sizes, probe_scores, v,
         nbits=nbits, dim=dim, n_tokens=n_tokens, cap_pad=cap_pad,
@@ -365,6 +377,7 @@ def ragged_fused_gather_selective_sum(
             packed_codes, row0, nvalid, qtok, pscore, v,
             nbits=nbits, dim=dim, tile_c=tile_c,
         )
+    _fault_kernel_call("ragged_fused_gather_score")
     return ragged_fused_gather_score_kernel_call(
         packed_codes, row0, nvalid, qtok, pscore, v,
         nbits=nbits, dim=dim, n_tokens=n_tokens, tile_c=tile_c,
@@ -429,6 +442,7 @@ def segmented_ragged_fused_gather_selective_sum(
             packed_list, row0, nvalid, seg, qtok, pscore, v,
             nbits=nbits, dim=dim, tile_c=tile_c,
         )
+    _fault_kernel_call("segmented_ragged_fused_gather_score")
     out = jnp.zeros((row0.shape[0] * tile_c,), jnp.float32)
     pscore_f32 = pscore.astype(jnp.float32)
     for s, codes in enumerate(packed_list):

@@ -18,6 +18,9 @@
   # manifest + measured per-component bytes
   PYTHONPATH=src python -m repro.launch.build_index inspect --index idx.warpidx
 
+  # stream every array against its recorded checksum (CI / post-copy)
+  PYTHONPATH=src python -m repro.launch.build_index verify --index idx.warpidx
+
 ``build --n-shards N`` produces a sharded store (loads back as a
 ``ShardedWarpIndex``); sharded bases do not take delta segments — compact
 and re-shard instead.
@@ -41,6 +44,7 @@ from repro.store import (
     compact,
     inspect_index,
     save_index,
+    verify_store,
 )
 
 
@@ -113,6 +117,18 @@ def cmd_inspect(args) -> None:
     print(json.dumps(inspect_index(args.index), indent=1, sort_keys=True))
 
 
+def cmd_verify(args) -> None:
+    """Exit 0 with a summary when clean; StoreCorruption (listing every
+    failing array) otherwise — run after a copy/restore or from CI."""
+    t0 = time.perf_counter()
+    report = verify_store(args.index, full=not args.head_only)
+    mode = "head-sampled" if args.head_only else "full-stream"
+    print(f"verified {args.index} in {time.perf_counter()-t0:.1f}s "
+          f"({mode}): {report['checked']} arrays ok, "
+          f"{report['unchecked']} without checksums, "
+          f"{report['dirs']} manifest dirs")
+
+
 def cmd_smoke(args) -> None:
     """Load the index and run a tiny search — lifecycle sanity check."""
     retriever = Retriever.from_store(args.index)
@@ -157,6 +173,14 @@ def main() -> None:
     i = sub.add_parser("inspect", help="print manifest + measured bytes")
     i.add_argument("--index", required=True)
     i.set_defaults(fn=cmd_inspect)
+
+    v = sub.add_parser("verify", help="check every array against its "
+                                      "recorded checksum")
+    v.add_argument("--index", required=True)
+    v.add_argument("--head-only", action="store_true",
+                   help="head samples only (the load_index fast check) "
+                        "instead of streaming every byte")
+    v.set_defaults(fn=cmd_verify)
 
     s = sub.add_parser("smoke", help="load + search sanity check")
     s.add_argument("--index", required=True)

@@ -82,6 +82,7 @@ def _run_poisson(server, corpus, args) -> None:
     t_end = time.monotonic() + args.duration_s
     next_arrival = time.monotonic()
     submitted = shed = 0
+    deadline_s = args.deadline_ms / 1e3 if args.deadline_ms > 0 else None
     while time.monotonic() < t_end:
         now = time.monotonic()
         if server.clock() >= next_flush:
@@ -96,7 +97,7 @@ def _run_poisson(server, corpus, args) -> None:
         if now >= next_arrival:
             i = int(rng.choice(pool, p=p))
             try:
-                server.submit(pq[i], pmask[i])
+                server.submit(pq[i], pmask[i], deadline_s=deadline_s)
                 submitted += 1
             except Overloaded:
                 shed += 1
@@ -108,6 +109,7 @@ def _run_poisson(server, corpus, args) -> None:
     s = server.summary()
     print(
         f"submitted={submitted} served={s['served']} shed={shed} "
+        f"expired={s['deadline_shed']} "
         f"batches={s['batches']} padded={s['padded_slots']} "
         f"promoted={s['promoted']} cache_hits={s['cache_hits']} "
         f"reloads={s['reloads']}"
@@ -145,6 +147,10 @@ def main() -> None:
                          "(0 = uniform)")
     ap.add_argument("--duration-s", type=float, default=5.0,
                     help="wall-clock length of the poisson traffic run")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request queueing deadline for --traffic "
+                         "poisson; expired requests are shed pre-dispatch "
+                         "with a typed DeadlineExceeded (0 = none)")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="record per-request/per-stage spans and write a "
                          "Chrome trace-event JSON (open in "
@@ -201,6 +207,9 @@ def main() -> None:
         _run_poisson(server, corpus, args)
     else:
         _run_closed(server, corpus, args)
+    h = server.health()
+    reasons = f" ({'; '.join(h['reasons'])})" if h["reasons"] else ""
+    print(f"health: {h['status']}{reasons}")
 
     tr = obs.STATE.tracer
     if args.trace_out and tr is not None:

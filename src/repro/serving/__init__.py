@@ -2,6 +2,7 @@ from repro.serving.admission import (
     AdmissionGate,
     AdmissionPolicy,
     CompactionPolicy,
+    DeadlineExceeded,
     Overloaded,
 )
 from repro.serving.batcher import (
@@ -20,6 +21,7 @@ __all__ = [
     "BatchPolicy",
     "BucketScheduler",
     "CompactionPolicy",
+    "DeadlineExceeded",
     "LRUCache",
     "Overloaded",
     "PENDING",

@@ -32,13 +32,27 @@ import dataclasses
 import time
 from typing import Callable
 
-__all__ = ["Overloaded", "AdmissionPolicy", "AdmissionGate", "CompactionPolicy"]
+__all__ = [
+    "Overloaded",
+    "DeadlineExceeded",
+    "AdmissionPolicy",
+    "AdmissionGate",
+    "CompactionPolicy",
+]
 
 
 class Overloaded(RuntimeError):
     """Typed load-shed rejection: the server refused the request at the
     door (queue depth or rate cap). Clients should back off and retry;
     nothing was enqueued."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """Typed per-request deadline miss: the request sat queued past the
+    ``deadline_s`` its submitter attached, so the server shed it
+    *pre-dispatch* — it never occupied a batch slot, and no result was
+    computed. Raised by ``poll``/``result`` exactly once for the shed id
+    (then ``ResultAlreadyTaken``, like any delivered outcome)."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,11 +145,20 @@ class CompactionPolicy:
     ``n_delta_segments > max_delta_segments`` OR ``delta_token_frac >
     max_delta_frac``, at most once per ``min_interval_s`` (on the
     server's clock).
+
+    A *failed* maintenance tick (compaction or the follow-up reload
+    raised) must not be retried immediately — the fault is usually
+    persistent (disk full, corrupt segment) and a tight retry loop would
+    starve serving. ``retry_backoff_s`` is the first retry delay,
+    doubled per consecutive failure up to ``retry_backoff_max_s``; the
+    server keeps serving the old epoch throughout.
     """
 
     max_delta_segments: int = 4
     max_delta_frac: float = 0.25
     min_interval_s: float = 30.0
+    retry_backoff_s: float = 5.0
+    retry_backoff_max_s: float = 60.0
 
     def should_compact(self, stats: dict) -> bool:
         return (

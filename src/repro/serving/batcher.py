@@ -50,6 +50,28 @@ re-materialize against the new geometry — queued requests re-home onto
 the new plan's rung ladder and dispatch on their next ``step``, and the
 index epoch bump invalidates every cache entry from the old index;
 nothing is dropped, nothing stale is served.
+
+Resilience semantics (every failure is a *typed* error or a *metered*
+degradation, never a silent wrong answer):
+
+- **deadlines**: ``submit(..., deadline_s=)`` attaches a per-request
+  deadline; a request still queued when it expires is shed *pre-dispatch*
+  (it never occupies a batch slot) and its ``poll`` raises
+  ``DeadlineExceeded`` exactly once (``serving_deadline_shed_total``).
+- **validate-then-swap reload**: everything that can fail — store load,
+  plan compilation, kernel warmup — runs before any server state is
+  mutated, so a failed ``reload`` leaves epoch, caches, and the queued
+  backlog exactly as they were. Store-path reloads quarantine corrupt
+  delta segments (``load_index(quarantine_segments=True)``) instead of
+  refusing to serve.
+- **maintenance backoff**: a failed ``maintain`` tick rolls the on-disk
+  swap protocol back (``recover_interrupted_compact``), keeps serving
+  the old epoch, and retries after exponential backoff
+  (``CompactionPolicy.retry_backoff_s``,
+  ``serving_maintain_retries_total``).
+- **health()**: ``ok | degraded | overloaded`` plus concrete reasons
+  (quarantined segments, executor fallback, failing maintenance), also
+  exported as the ``serving_health_status`` gauge (0/1/2).
 """
 
 from __future__ import annotations
@@ -57,12 +79,13 @@ from __future__ import annotations
 import dataclasses
 import os
 import time
+import warnings
 from typing import Callable
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro import obs
+from repro import fault, obs
 from repro.core import Retriever, WarpSearchConfig
 from repro.core.distributed import ShardedWarpIndex
 from repro.core.types import WarpIndex
@@ -70,6 +93,7 @@ from repro.serving.admission import (
     AdmissionGate,
     AdmissionPolicy,
     CompactionPolicy,
+    DeadlineExceeded,
 )
 from repro.serving.cache import LRUCache, query_key
 from repro.serving.scheduler import BatchPolicy, BucketScheduler
@@ -116,6 +140,7 @@ class _Pending:
     qmask: np.ndarray
     arrival: float
     qkey: str | None = None  # content hash (None with caching disabled)
+    deadline: float | None = None  # absolute, on the server clock
 
 
 class RetrievalServer:
@@ -132,6 +157,7 @@ class RetrievalServer:
         compaction: CompactionPolicy | None = None,
         store_path: str | None = None,
         registry: obs.MetricsRegistry | None = None,
+        sleep: Callable[[float], None] | None = None,
     ):
         # Serving counters live in a metrics registry — private per server
         # by default so two servers (or two tests) never share counts;
@@ -144,9 +170,20 @@ class RetrievalServer:
         # k_impute / executor against the NEW index, not freeze the old.
         self._requested_config = config
         self.plan = self.retriever.plan(config)
+        # Surface kernel-path failures now (demoting to the bit-identical
+        # reference executor) instead of on the first live request.
+        self.plan.warmup()
         self.config = self.plan.config
         self.policy = policy
         self.clock = clock
+        # ``result`` parks on this between deadline checks. A real sleep
+        # against an injected fake clock would deadlock (wall time passes,
+        # the fake clock doesn't), so it only defaults on when the clock
+        # is the real one; tests with fake clocks keep the force-dispatch
+        # driver unless they inject their own sleep.
+        if sleep is None and clock is time.monotonic:
+            sleep = time.sleep
+        self._sleep = sleep
         self.bucket_aware = bucket_aware
         self.index_epoch = 0
         self._fingerprint = self.plan.fingerprint()
@@ -156,6 +193,12 @@ class RetrievalServer:
         self.compaction = compaction
         self.store_path = store_path
         self._last_compact = -float("inf")
+        self._maintain_failures = 0
+        self._maintain_error: str | None = None
+        self._maintain_backoff_until = -float("inf")
+        self._quarantined: tuple[str, ...] = tuple(
+            getattr(self.retriever.index, "quarantined", ()) or ()
+        )
         if cache_size:
             self.result_cache: LRUCache | None = LRUCache(
                 cache_size, registry=self.metrics, name="result"
@@ -168,6 +211,9 @@ class RetrievalServer:
         self.scheduler = self._make_scheduler()
         self._inflight: set[int] = set()
         self._results: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+        # Typed failure outcomes (e.g. DeadlineExceeded), delivered by
+        # ``poll`` exactly once like any result.
+        self._errors: dict[int, Exception] = {}
         self._next_id = 0
         # Legacy ``stats`` keys -> registry counters; the ``stats``
         # property reconstructs the historical dict view from these.
@@ -193,7 +239,19 @@ class RetrievalServer:
                 "serving_compactions_total",
                 "Store compactions run by maintain()",
             ),
+            "deadline_shed": self.metrics.counter(
+                "serving_deadline_shed_total",
+                "Queued requests shed pre-dispatch at their deadline",
+            ),
+            "maintain_retries": self.metrics.counter(
+                "serving_maintain_retries_total",
+                "Failed maintain() ticks rolled back and scheduled for retry",
+            ),
         }
+        self._g_health = self.metrics.gauge(
+            "serving_health_status",
+            "health() status: 0=ok, 1=degraded, 2=overloaded",
+        )
         self._h_dispatch = self.metrics.histogram(
             "serving_dispatch_seconds",
             "Batch dispatch latency (retrieve + result distribution)",
@@ -245,12 +303,22 @@ class RetrievalServer:
         return self.plan.adaptive_bucket(q, qmask)
 
     # ---- client API ----
-    def submit(self, q: np.ndarray, qmask: np.ndarray | None = None) -> int:
+    def submit(
+        self,
+        q: np.ndarray,
+        qmask: np.ndarray | None = None,
+        *,
+        deadline_s: float | None = None,
+    ) -> int:
         """Admit one query; returns its request id.
 
         Raises ``Overloaded`` (nothing enqueued, no id burned) when the
         admission gate sheds. A result-cache hit completes the request
         immediately — ``poll`` returns its pair on the first call.
+
+        ``deadline_s`` attaches a queueing deadline (seconds from now on
+        the server clock): a request still queued when it expires is shed
+        pre-dispatch and its ``poll`` raises ``DeadlineExceeded``.
         """
         if qmask is None:
             qmask = np.ones(q.shape[:-1], bool)
@@ -275,8 +343,10 @@ class RetrievalServer:
             with obs.span("rung_prepass") as rp:
                 rung = self._rung_for(q, qmask, qkey)
                 rp.set(rung=rung)
+            now = self.clock()
+            deadline = None if deadline_s is None else now + deadline_s
             self.scheduler.push(
-                _Pending(rid, q, qmask, self.clock(), qkey), rung
+                _Pending(rid, q, qmask, now, qkey, deadline), rung
             )
             self._inflight.add(rid)
             return rid
@@ -285,12 +355,16 @@ class RetrievalServer:
         """Non-blocking result check.
 
         Completed -> pops and returns ``(scores, doc_ids)`` (exactly
-        once). Submitted but not yet served -> the ``PENDING`` sentinel.
-        Already-popped id -> ``ResultAlreadyTaken`` (a ``KeyError``);
-        never-submitted id -> plain ``KeyError``.
+        once). Shed (deadline) -> pops and raises its typed error
+        (``DeadlineExceeded``), also exactly once. Submitted but not yet
+        served -> the ``PENDING`` sentinel. Already-popped id ->
+        ``ResultAlreadyTaken`` (a ``KeyError``); never-submitted id ->
+        plain ``KeyError``.
         """
         if req_id in self._results:
             return self._results.pop(req_id)
+        if req_id in self._errors:
+            raise self._errors.pop(req_id)
         if req_id in self._inflight:
             return PENDING
         if 0 <= req_id < self._next_id:
@@ -303,11 +377,17 @@ class RetrievalServer:
     def result(self, req_id: int, timeout: float | None = None):
         """Blocking helper: drive the server loop until ``req_id`` completes.
 
-        Prefers deadline/full-batch dispatch; if no batch is dispatchable
-        yet (queue under-full, deadline not reached) it forces a padded
-        dispatch rather than spin — this is the single-threaded driver, so
-        nobody else will. Raises ``TimeoutError`` if ``timeout`` (measured
-        on the injected clock) elapses first, ``KeyError`` on unknown ids.
+        On the real clock this *parks* between deadline checks — it
+        sleeps until the next batch deadline (capped at
+        ``policy.max_wait_s`` and the remaining timeout) instead of
+        busy-spinning, so a blocking waiter costs no CPU. With an
+        injected fake clock (no usable sleep) it forces a padded dispatch
+        instead — this is the single-threaded driver, so nobody else
+        will. Raises ``TimeoutError`` if ``timeout`` (measured on the
+        injected clock) elapses first; the request stays queued and
+        poll-able — a timed-out wait is not a cancelled request. Raises
+        ``KeyError`` on unknown ids, ``DeadlineExceeded`` if the request
+        was shed at its deadline.
         """
         start = self.clock()
         while True:
@@ -316,10 +396,21 @@ class RetrievalServer:
                 return out
             if timeout is not None and self.clock() - start >= timeout:
                 raise TimeoutError(
-                    f"request {req_id} not served within {timeout}s"
+                    f"request {req_id} not served within {timeout}s "
+                    f"(still queued; poll() can retrieve it later)"
                 )
-            if self.step() == 0:
-                self.step(force=True)
+            if self.step() > 0:
+                continue
+            nd = self.next_deadline()
+            now = self.clock()
+            if self._sleep is not None and nd is not None and nd > now:
+                wait = min(nd - now, self.policy.max_wait_s)
+                if timeout is not None:
+                    wait = min(wait, max(start + timeout - now, 0.0))
+                if wait > 0.0:
+                    self._sleep(wait)
+                    continue
+            self.step(force=True)
 
     # ---- lifecycle ----
     def reload(self, index, *, config: WarpSearchConfig | None = None) -> None:
@@ -335,16 +426,26 @@ class RetrievalServer:
         ladder's rung could truncate against new geometry) — and dispatch
         through the new plan on their next ``step``. The index epoch bump
         invalidates every cache entry keyed against the old index.
+
+        Validate-then-swap: everything that can fail — the store load,
+        plan compilation, kernel warmup — runs *before* any server state
+        is mutated. A failed reload raises (``StoreCorruption``,
+        ``ValueError``, ...) and leaves the server exactly as it was:
+        same epoch, same caches, same backlog, still serving. Store-path
+        reloads quarantine corrupt delta segments rather than failing
+        outright; ``health()`` reports them.
         """
         t0 = time.perf_counter()
-        if config is not None:
-            self._requested_config = config
+        requested = config if config is not None else self._requested_config
         old = self.retriever
+        new_store_path = self.store_path
+        if fault.FAULTS.plan is not None:
+            fault.FAULTS.plan.check("server.reload", index=str(index)[:120])
         if isinstance(index, (str, os.PathLike)):
             from repro.store import load_index  # deferred: store dep on core
 
-            self.store_path = os.fspath(index)
-            index = load_index(self.store_path)
+            new_store_path = os.fspath(index)
+            index = load_index(new_store_path, quarantine_segments=True)
         if isinstance(index, Retriever):
             retriever = index
         else:
@@ -357,7 +458,14 @@ class RetrievalServer:
                 mesh=old.mesh if sharded else None,
                 shard_axes=old.shard_axes if sharded else ("data",),
             )
-        plan = retriever.plan(self._requested_config)
+        plan = retriever.plan(requested)
+        plan.warmup()
+        # ---- commit point: nothing below raises ----
+        self._requested_config = requested
+        self.store_path = new_store_path
+        self._quarantined = tuple(
+            getattr(retriever.index, "quarantined", ()) or ()
+        )
         self.retriever = retriever
         self.plan = plan
         self.config = plan.config
@@ -389,19 +497,58 @@ class RetrievalServer:
         """One background-maintenance tick: compact + reload when the
         compaction policy's delta thresholds are crossed (at most once
         per ``min_interval_s``). Returns True when a compaction ran;
-        call it from the serving loop between batches."""
+        call it from the serving loop between batches.
+
+        A failed tick (compaction or the follow-up reload raised) never
+        takes the server down: the on-disk swap protocol is rolled back
+        to a consistent state via ``recover_interrupted_compact``, the
+        old epoch keeps serving, and the next attempt waits out an
+        exponential backoff (``CompactionPolicy.retry_backoff_s`` ..
+        ``retry_backoff_max_s``)."""
         if self.compaction is None or self.store_path is None:
             return False
-        if self.clock() - self._last_compact < self.compaction.min_interval_s:
+        now = self.clock()
+        if now < self._maintain_backoff_until:
             return False
-        from repro.store import compact, delta_stats  # deferred: store dep
+        if now - self._last_compact < self.compaction.min_interval_s:
+            return False
+        from repro.store import (  # deferred: store dep on core
+            compact,
+            delta_stats,
+            recover_interrupted_compact,
+        )
 
-        if not self.compaction.should_compact(delta_stats(self.store_path)):
+        try:
+            if not self.compaction.should_compact(delta_stats(self.store_path)):
+                return False
+            with obs.span("compaction", store=self.store_path):
+                compact(self.store_path)
+                self._last_compact = self.clock()
+                self.reload(self.store_path)
+        except Exception as e:
+            try:
+                recover_interrupted_compact(self.store_path)
+            except Exception:
+                pass  # recovery is best-effort; old store is untouched
+            self._maintain_failures += 1
+            self._maintain_error = repr(e)
+            backoff = min(
+                self.compaction.retry_backoff_s
+                * 2 ** (self._maintain_failures - 1),
+                self.compaction.retry_backoff_max_s,
+            )
+            self._maintain_backoff_until = now + backoff
+            self._c["maintain_retries"].inc()
+            warnings.warn(
+                f"maintain() failed ({e!r}); still serving epoch "
+                f"{self.index_epoch}, retrying in {backoff:g}s",
+                RuntimeWarning,
+                stacklevel=2,
+            )
             return False
-        with obs.span("compaction", store=self.store_path):
-            compact(self.store_path)
-            self._last_compact = self.clock()
-            self.reload(self.store_path)
+        self._maintain_failures = 0
+        self._maintain_error = None
+        self._maintain_backoff_until = -float("inf")
         self._c["compactions"].inc()
         return True
 
@@ -411,8 +558,29 @@ class RetrievalServer:
         drivers advance their clock to this between arrivals."""
         return self.scheduler.next_deadline()
 
+    def _reap_expired(self) -> int:
+        """Shed queued requests whose deadline has passed — pre-dispatch,
+        so an expired request never occupies a batch slot or pays for
+        retrieval nobody will read. Each shed id gets a typed
+        ``DeadlineExceeded`` delivered by its next ``poll``."""
+        now = self.clock()
+        expired = self.scheduler.reap(
+            lambda p: p.deadline is not None and now >= p.deadline
+        )
+        for p in expired:
+            self._errors[p.req_id] = DeadlineExceeded(
+                f"request {p.req_id} queued past its deadline "
+                f"(waited {max(now - p.arrival, 0.0):.4f}s); "
+                f"shed before dispatch"
+            )
+            self._inflight.discard(p.req_id)
+        if expired:
+            self._c["deadline_shed"].inc(len(expired))
+        return len(expired)
+
     def step(self, *, force: bool = False) -> int:
         """Dispatch at most one batch; returns number of requests served."""
+        self._reap_expired()
         got = self.scheduler.next_batch(force=force)
         if got is None:
             return 0
@@ -491,3 +659,51 @@ class RetrievalServer:
             out["shed"] = self.admission.shed
             out["admitted"] = self.admission.admitted
         return out
+
+    def health(self) -> dict:
+        """Serving health report: ``{"status": "ok" | "degraded" |
+        "overloaded", "reasons": [...], ...}``.
+
+        *degraded* means the server is still answering but with reduced
+        capability or redundancy — quarantined delta segments, the
+        kernel executor demoted to the reference fallback, or failing
+        background maintenance. *overloaded* means the admission gate is
+        at its queue-depth limit and shedding. The status is also set on
+        the ``serving_health_status`` gauge (0=ok, 1=degraded,
+        2=overloaded) so scrapes see what ops would."""
+        reasons = []
+        depth = len(self.scheduler)
+        overloaded = (
+            self.admission is not None
+            and depth >= self.admission.policy.max_queue_depth
+        )
+        if overloaded:
+            reasons.append(
+                f"queue depth {depth} at admission limit "
+                f"{self.admission.policy.max_queue_depth}; shedding"
+            )
+        if self._quarantined:
+            reasons.append(
+                "quarantined delta segment(s): "
+                + ", ".join(self._quarantined)
+            )
+        if self.plan.fallback_active:
+            reasons.append("kernel executor demoted to reference fallback")
+        if self._maintain_failures:
+            reasons.append(
+                f"maintenance failing (x{self._maintain_failures}): "
+                f"{self._maintain_error}"
+            )
+        status = "overloaded" if overloaded else (
+            "degraded" if reasons else "ok"
+        )
+        self._g_health.set({"ok": 0, "degraded": 1, "overloaded": 2}[status])
+        return {
+            "status": status,
+            "reasons": reasons,
+            "queue_depth": depth,
+            "index_epoch": self.index_epoch,
+            "quarantined_segments": list(self._quarantined),
+            "executor_fallback": bool(self.plan.fallback_active),
+            "maintain_failures": self._maintain_failures,
+        }

@@ -159,6 +159,25 @@ class BucketScheduler:
         self._queues.setdefault(rung, deque()).append(item)
         self._g_depth.set(len(self))
 
+    def reap(self, predicate) -> list:
+        """Remove and return every queued item matching ``predicate``.
+
+        This is the pre-dispatch shedding hook: the server reaps
+        deadline-expired requests here so they never occupy a batch slot
+        (shedding *after* batch formation would waste the slot on work
+        nobody will read). FIFO order of the survivors is preserved.
+        """
+        out = []
+        for rung, q in self._queues.items():
+            keep = deque()
+            for p in q:
+                (out if predicate(p) else keep).append(p)
+            if len(keep) != len(q):
+                self._queues[rung] = keep
+        if out:
+            self._g_depth.set(len(self))
+        return out
+
     def next_deadline(self) -> float | None:
         """Earliest instant any queued rung's deadline expires (head
         arrival + max_wait_s), or None when idle — the benchmark's

@@ -1,11 +1,12 @@
 """Index lifecycle subsystem: on-disk store, out-of-core builds, deltas.
 
-  format.py    versioned manifest + raw-binary layout; save_index /
-               load_index with zero-copy np.memmap views
-  builder.py   out-of-core chunked build (bit-identical to the in-memory
-               build_index; O(chunk) peak memory with store_path=)
-  segments.py  append-only delta segments (add_documents), segmented
-               search, and compact()
+  format.py     versioned manifest + raw-binary layout; save_index /
+                load_index with zero-copy np.memmap views
+  builder.py    out-of-core chunked build (bit-identical to the in-memory
+                build_index; O(chunk) peak memory with store_path=)
+  segments.py   append-only delta segments (add_documents), segmented
+                search, and compact()
+  integrity.py  per-array checksums, verify_store(), StoreCorruption
 
 ``launch/build_index.py`` is the CLI over all three.
 """
@@ -24,6 +25,7 @@ from repro.store.format import (
     recover_interrupted_compact,
     save_index,
 )
+from repro.store.integrity import StoreCorruption, verify_store
 from repro.store.segments import (
     SegmentedWarpIndex,
     add_documents,
@@ -37,6 +39,7 @@ from repro.store.segments import (
 __all__ = [
     "FORMAT_VERSION",
     "SegmentedWarpIndex",
+    "StoreCorruption",
     "add_documents",
     "array_chunks",
     "build_index_chunked",
@@ -52,4 +55,5 @@ __all__ = [
     "read_manifest",
     "recover_interrupted_compact",
     "save_index",
+    "verify_store",
 ]

@@ -46,6 +46,7 @@ import numpy as np
 from repro.core import kmeans, quantization
 from repro.core.types import IndexBuildConfig, WarpIndex
 from repro.store import format as store_format
+from repro.store import integrity
 
 __all__ = ["array_chunks", "build_index_chunked", "build_index_to_store"]
 
@@ -275,14 +276,16 @@ def _finalize_store(
         meta = store_format._write_array(os.path.join(path, rel), arr)
         arrays[name] = store_format._entry(rel, meta)
     pb = quantization.packed_bytes(dim, nbits)
-    arrays["packed_codes"] = store_format._entry(
-        f"{store_format.ARRAY_DIR}/packed_codes.bin",
-        {"dtype": "uint8", "shape": [n_tokens, pb]},
-    )
-    arrays["token_doc_ids"] = store_format._entry(
-        f"{store_format.ARRAY_DIR}/token_doc_ids.bin",
-        {"dtype": "int32", "shape": [n_tokens]},
-    )
+    for name, meta in (
+        ("packed_codes", {"dtype": "uint8", "shape": [n_tokens, pb]}),
+        ("token_doc_ids", {"dtype": "int32", "shape": [n_tokens]}),
+    ):
+        rel = f"{store_format.ARRAY_DIR}/{name}.bin"
+        if n_tokens:
+            # These were written through a memmap, chunk by chunk — stream
+            # the file back rather than pulling it into memory.
+            meta["checksum"] = integrity.checksum_file(os.path.join(path, rel))
+        arrays[name] = store_format._entry(rel, meta)
     store_format._write_manifest(path, {
         "format": store_format.FORMAT_NAME,
         "version": store_format.FORMAT_VERSION,

@@ -39,17 +39,20 @@ import json
 import os
 import shutil
 import time
+import warnings
 from typing import Any
 
 import numpy as np
 
-from repro import obs
+from repro import fault, obs
 from repro.core.distributed import ShardedWarpIndex
 from repro.core.types import WarpIndex
+from repro.store.integrity import StoreCorruption, checksum_bytes, verify_head
 
 __all__ = [
     "FORMAT_NAME",
     "FORMAT_VERSION",
+    "StoreCorruption",
     "save_index",
     "load_index",
     "read_manifest",
@@ -60,7 +63,9 @@ __all__ = [
 ]
 
 FORMAT_NAME = "warp-store"
-FORMAT_VERSION = 1
+# v2 added per-array "checksum" blocks (store/integrity.py). v1 manifests
+# load fine — their entries simply have nothing to verify against.
+FORMAT_VERSION = 2
 MANIFEST = "MANIFEST.json"
 ARRAY_DIR = "arrays"
 COMPACT_TMP_SUFFIX = ".compact-tmp"
@@ -119,7 +124,10 @@ SEGMENT_ARRAYS = (
 def _write_array(path: str, arr: np.ndarray) -> dict:
     arr = np.ascontiguousarray(arr)
     arr.tofile(path)
-    return {"dtype": arr.dtype.name, "shape": list(arr.shape)}
+    meta = {"dtype": arr.dtype.name, "shape": list(arr.shape)}
+    if arr.size:
+        meta["checksum"] = checksum_bytes(arr.data)
+    return meta
 
 
 def _entry(file: str, arr_like: dict, offset: int = 0) -> dict:
@@ -142,15 +150,37 @@ def _load_entry(base_dir: str, entry: dict, *, mmap: bool) -> np.ndarray:
     dtype = np.dtype(entry["dtype"])
     shape = tuple(int(s) for s in entry["shape"])
     offset = int(entry.get("offset", 0))
-    if mmap:
-        if 0 in shape:
-            # np.memmap rejects zero-length maps; an empty view is exact.
-            return np.empty(shape, dtype)
-        return np.memmap(path, dtype=dtype, mode="r", offset=offset, shape=shape)
-    with open(path, "rb") as f:
-        f.seek(offset)
-        flat = np.fromfile(f, dtype=dtype, count=int(np.prod(shape)) if shape else 1)
-    return flat.reshape(shape)
+    if 0 in shape:
+        # np.memmap rejects zero-length maps; an empty view is exact.
+        return np.empty(shape, dtype)
+    try:
+        if fault.FAULTS.plan is not None:
+            fault.FAULTS.plan.check("store.array_read", file=path)
+        # Head-sample verification: cheap enough to run on every load,
+        # catches truncation and header-smash corruption without paying a
+        # full-array read (verify_store streams the rest).
+        verify_head(base_dir, entry)
+        if mmap:
+            return np.memmap(
+                path, dtype=dtype, mode="r", offset=offset, shape=shape
+            )
+        with open(path, "rb") as f:
+            f.seek(offset)
+            flat = np.fromfile(
+                f, dtype=dtype, count=int(np.prod(shape)) if shape else 1
+            )
+        if flat.size != int(np.prod(shape)):
+            raise StoreCorruption(
+                f"{path}: truncated ({flat.size} of {int(np.prod(shape))} "
+                "elements)"
+            )
+        return flat.reshape(shape)
+    except StoreCorruption:
+        raise
+    except (OSError, ValueError, fault.InjectedFault) as e:
+        # ValueError covers np.memmap's "length greater than file size"
+        # on a truncated v1 store (no checksum to catch it earlier).
+        raise StoreCorruption(f"{path}: unreadable ({e})") from e
 
 
 def compact_lock_path(path: str) -> str:
@@ -214,8 +244,18 @@ def recover_interrupted_compact(path: str) -> None:
 
 
 def read_manifest(path: str) -> dict:
-    with open(os.path.join(path, MANIFEST)) as f:
-        manifest = json.load(f)
+    # FileNotFoundError propagates untouched — callers distinguish "no
+    # store here" from "store here but broken" (= StoreCorruption).
+    try:
+        fault.check("store.manifest_parse", path=path)
+        with open(os.path.join(path, MANIFEST)) as f:
+            manifest = json.load(f)
+    except FileNotFoundError:
+        raise
+    except (OSError, json.JSONDecodeError, fault.InjectedFault) as e:
+        raise StoreCorruption(
+            f"{path}: unreadable manifest ({e})"
+        ) from e
     if manifest.get("format") != FORMAT_NAME:
         raise ValueError(f"{path}: not a {FORMAT_NAME} directory")
     if int(manifest.get("version", -1)) > FORMAT_VERSION:
@@ -223,13 +263,24 @@ def read_manifest(path: str) -> dict:
             f"{path}: format version {manifest['version']} is newer than "
             f"this reader (v{FORMAT_VERSION})"
         )
+    if int(manifest.get("version", -1)) < FORMAT_VERSION:
+        warnings.warn(
+            f"{path}: pre-checksum store format "
+            f"(v{manifest.get('version')}); arrays load unverified — "
+            "re-save to record checksums",
+            stacklevel=2,
+        )
     return manifest
 
 
 def _write_manifest(path: str, manifest: dict) -> None:
+    # tmp + fsync + atomic rename: a crash mid-write leaves either the old
+    # manifest or the new one, never a torn JSON file.
     tmp = os.path.join(path, MANIFEST + ".tmp")
     with open(tmp, "w") as f:
         json.dump(manifest, f, indent=1, sort_keys=True)
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(tmp, os.path.join(path, MANIFEST))
 
 
@@ -301,10 +352,15 @@ def _save_sharded(
             continue  # scalar-per-shard bookkeeping, no per-shard view
         stride = stacked[0].nbytes
         for s in range(index.n_shards):
+            meta_s = {
+                "dtype": stacked.dtype.name, "shape": list(stacked.shape[1:])
+            }
+            if stacked[s].size:
+                # Per-slice checksum so a lone shard view verifies without
+                # reading the whole stacked binary.
+                meta_s["checksum"] = checksum_bytes(stacked[s].data)
             shard_entries[s][name] = _entry(
-                f"../{rel}",
-                {"dtype": stacked.dtype.name, "shape": list(stacked.shape[1:])},
-                offset=stride * s,
+                f"../{rel}", meta_s, offset=stride * s,
             )
     # Per-shard WarpIndex manifests need codec cutoffs; the sharded stack
     # drops them (encode-only), so shards share one zero-filled table.
@@ -372,7 +428,8 @@ def list_segment_dirs(path: str) -> list[str]:
 
 
 def load_index(
-    path: str, *, mmap: bool = True, with_segments: bool = True
+    path: str, *, mmap: bool = True, with_segments: bool = True,
+    quarantine_segments: bool = False,
 ):
     """Load a store directory back into its in-memory index type.
 
@@ -380,6 +437,12 @@ def load_index(
     holds delta segments and ``with_segments`` — a ``SegmentedWarpIndex``.
     With ``mmap=True`` (default) every array is an ``np.memmap`` view of
     the on-disk binary: no full-file read happens at load time.
+
+    ``quarantine_segments=True`` turns a corrupt *delta segment* from a
+    load failure into a degradation: the bad segment is skipped (recorded
+    in ``SegmentedWarpIndex.quarantined``) and the base + healthy deltas
+    still serve. Corruption in the base index always raises
+    ``StoreCorruption`` — there is nothing left to serve without it.
     """
     t0 = time.perf_counter()
     recover_interrupted_compact(path)
@@ -401,7 +464,9 @@ def load_index(
     if with_segments and seg_dirs:
         from repro.store.segments import load_segmented  # circular-free: lazy
 
-        out = load_segmented(base, seg_dirs, mmap=mmap)
+        out = load_segmented(
+            base, seg_dirs, mmap=mmap, quarantine=quarantine_segments
+        )
         obs.observe("store_load_seconds", time.perf_counter() - t0)
         return out
     obs.observe("store_load_seconds", time.perf_counter() - t0)
@@ -420,6 +485,7 @@ def _load_single(path: str, manifest: dict, mmap: bool) -> WarpIndex:
 
 def load_segment_arrays(seg_dir: str, *, mmap: bool = True) -> tuple[dict, dict]:
     """(manifest, arrays) of one delta-segment directory."""
+    fault.check("store.segment_load", dir=seg_dir)
     manifest = read_manifest(seg_dir)
     if manifest["kind"] != KIND_SEGMENT:
         raise ValueError(f"{seg_dir}: not a delta segment")

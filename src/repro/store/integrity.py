@@ -1,0 +1,301 @@
+"""Store integrity: per-array checksums and full-store verification.
+
+Every array entry written at FORMAT_VERSION >= 2 carries a ``checksum``
+block::
+
+    "checksum": {"algo": "crc32c"|"crc32",
+                 "crc": <full-array checksum>,
+                 "head_crc": <checksum of the first head_bytes>,
+                 "head_bytes": 65536}
+
+Two checksums because the store is mmap-first: a full-array pass at load
+time would defeat the millisecond-load design, so ``load_index`` verifies
+only the *head sample* (cheap, catches truncation and the common
+header-smash corruptions), while ``verify_store()`` — and
+``launch/build_index.py verify`` — streams every byte.
+
+The ``algo`` field is honest about what was computed. We prefer CRC32C
+(Castagnoli) via the optional ``crc32c`` package when it is importable;
+without it, *writes* fall back to ``zlib.crc32`` (fast, C-speed, equally
+good at detecting the flipped-bit faults we care about) rather than a
+pure-Python CRC32C that would make every save O(slow). The pure-Python
+CRC32C here exists so a store recorded as ``"crc32c"`` on another machine
+can still be verified on this one — correctness over speed for the
+offline ``verify_store`` path only.
+
+Layering: this module imports nothing from the rest of ``repro.store``
+(``format.py`` imports *us*), so it reads manifests as plain JSON.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import warnings
+import zlib
+
+import numpy as np
+
+__all__ = [
+    "StoreCorruption",
+    "CHECKSUM_HEAD_BYTES",
+    "crc32c_py",
+    "preferred_algo",
+    "checksum_update",
+    "checksum_bytes",
+    "checksum_file",
+    "verify_entry",
+    "verify_store",
+]
+
+
+class StoreCorruption(RuntimeError):
+    """A store array, manifest, or segment failed an integrity check.
+
+    Raised with a message listing *every* mismatch found (one line per
+    array), so a single verify pass tells the operator the full damage.
+    Operator action: restore the directory from a replica/backup, or —
+    when only delta segments are hit — drop the quarantined segment and
+    re-apply its documents (``docs/operations.md``).
+    """
+
+
+CHECKSUM_HEAD_BYTES = 65536
+_CHUNK = 4 << 20  # streaming read granularity for full-file checksums
+
+try:  # optional C implementation of CRC32C (Castagnoli)
+    import crc32c as _crc32c_mod
+except ImportError:  # pragma: no cover - depends on the environment
+    _crc32c_mod = None
+
+_CRC32C_TABLE: list[int] | None = None
+
+
+def _crc32c_table() -> list[int]:
+    global _CRC32C_TABLE
+    if _CRC32C_TABLE is None:
+        table = []
+        for i in range(256):
+            crc = i
+            for _ in range(8):
+                crc = (crc >> 1) ^ 0x82F63B78 if crc & 1 else crc >> 1
+            table.append(crc)
+        _CRC32C_TABLE = table
+    return _CRC32C_TABLE
+
+
+def crc32c_py(data, crc: int = 0) -> int:
+    """Pure-Python CRC32C (Castagnoli, reflected). Test vector:
+    ``crc32c_py(b"123456789") == 0xE3069283``. Slow — the verify-only
+    fallback for stores recorded with ``algo: crc32c`` when the C
+    extension is absent; never used on the write path."""
+    table = _crc32c_table()
+    crc ^= 0xFFFFFFFF
+    for b in bytes(data):
+        crc = (crc >> 8) ^ table[(crc ^ b) & 0xFF]
+    return crc ^ 0xFFFFFFFF
+
+
+def preferred_algo() -> str:
+    """Checksum algorithm new manifests record (see module docstring)."""
+    return "crc32c" if _crc32c_mod is not None else "crc32"
+
+
+def checksum_update(algo: str, crc: int, data) -> int:
+    """Incrementally extend a checksum over ``data`` (any buffer)."""
+    if algo == "crc32":
+        return zlib.crc32(data, crc) & 0xFFFFFFFF
+    if algo == "crc32c":
+        if _crc32c_mod is not None:
+            return _crc32c_mod.crc32c(bytes(data), crc)
+        return crc32c_py(data, crc)
+    raise ValueError(f"unknown checksum algo {algo!r}")
+
+
+def checksum_bytes(data, *, algo: str | None = None) -> dict:
+    """Checksum block for an in-memory buffer (the small-array path)."""
+    algo = algo or preferred_algo()
+    mv = memoryview(data).cast("B")
+    head = mv[: min(len(mv), CHECKSUM_HEAD_BYTES)]
+    return {
+        "algo": algo,
+        "crc": checksum_update(algo, 0, mv),
+        "head_crc": checksum_update(algo, 0, head),
+        "head_bytes": CHECKSUM_HEAD_BYTES,
+    }
+
+
+def checksum_file(
+    path: str, *, offset: int = 0, nbytes: int | None = None,
+    algo: str | None = None,
+) -> dict:
+    """Checksum block for ``nbytes`` of a file starting at ``offset``,
+    streamed in chunks — the path for memmap-written multi-GB arrays."""
+    algo = algo or preferred_algo()
+    if nbytes is None:
+        nbytes = os.path.getsize(path) - offset
+    crc = head_crc = 0
+    done = 0
+    with open(path, "rb") as f:
+        f.seek(offset)
+        while done < nbytes:
+            chunk = f.read(min(_CHUNK, nbytes - done))
+            if not chunk:
+                raise StoreCorruption(
+                    f"{path}: truncated at {offset + done} bytes "
+                    f"(expected {offset + nbytes})"
+                )
+            if done < CHECKSUM_HEAD_BYTES:
+                head_crc = checksum_update(
+                    algo, head_crc, chunk[: CHECKSUM_HEAD_BYTES - done]
+                )
+            crc = checksum_update(algo, crc, chunk)
+            done += len(chunk)
+    return {
+        "algo": algo, "crc": crc, "head_crc": head_crc,
+        "head_bytes": CHECKSUM_HEAD_BYTES,
+    }
+
+
+def _entry_nbytes(entry: dict) -> int:
+    n = 1
+    for s in entry["shape"]:
+        n *= int(s)
+    return n * np.dtype(entry["dtype"]).itemsize
+
+
+def verify_head(base_dir: str, entry: dict) -> None:
+    """Cheap load-time check: checksum the first ``head_bytes`` of the
+    entry against the recorded ``head_crc``. Raises ``StoreCorruption``."""
+    cs = entry.get("checksum")
+    if cs is None:
+        return
+    path = os.path.normpath(os.path.join(base_dir, entry["file"]))
+    offset = int(entry.get("offset", 0))
+    nbytes = _entry_nbytes(entry)
+    want = min(nbytes, int(cs.get("head_bytes", CHECKSUM_HEAD_BYTES)))
+    try:
+        with open(path, "rb") as f:
+            f.seek(offset)
+            data = f.read(want)
+    except OSError as e:
+        raise StoreCorruption(f"{path}: unreadable ({e})") from e
+    if len(data) < want:
+        raise StoreCorruption(
+            f"{path}: truncated ({offset + len(data)} bytes, expected at "
+            f"least {offset + want})"
+        )
+    got = checksum_update(cs["algo"], 0, data)
+    if got != int(cs["head_crc"]):
+        raise StoreCorruption(
+            f"{path}: head checksum mismatch "
+            f"({cs['algo']} {got:#010x} != recorded {int(cs['head_crc']):#010x})"
+        )
+
+
+def verify_entry(base_dir: str, name: str, entry: dict, *, full: bool = True):
+    """Verify one manifest array entry.
+
+    Returns ``(status, detail)`` with status one of ``ok`` / ``unchecked``
+    (no checksum recorded — v1 store) / ``missing`` / ``truncated`` /
+    ``mismatch``. Never raises: ``verify_store`` aggregates."""
+    path = os.path.normpath(os.path.join(base_dir, entry["file"]))
+    offset = int(entry.get("offset", 0))
+    nbytes = _entry_nbytes(entry)
+    if not os.path.exists(path):
+        return "missing", f"{name}: {path} does not exist"
+    if os.path.getsize(path) < offset + nbytes:
+        return "truncated", (
+            f"{name}: {path} holds {os.path.getsize(path)} bytes, entry "
+            f"needs {offset + nbytes}"
+        )
+    cs = entry.get("checksum")
+    if cs is None:
+        return "unchecked", f"{name}: no checksum recorded (v1 store)"
+    try:
+        if full:
+            got = checksum_file(
+                path, offset=offset, nbytes=nbytes, algo=cs["algo"]
+            )["crc"]
+            want = int(cs["crc"])
+        else:
+            head = min(nbytes, int(cs.get("head_bytes", CHECKSUM_HEAD_BYTES)))
+            got = checksum_file(
+                path, offset=offset, nbytes=head, algo=cs["algo"]
+            )["crc"]
+            want = int(cs["head_crc"])
+    except ValueError as e:  # unknown algo — recorded by a newer writer
+        return "unchecked", f"{name}: {e}"
+    except StoreCorruption as e:
+        return "truncated", f"{name}: {e}"
+    if got != want:
+        which = "" if full else "head "
+        return "mismatch", (
+            f"{name}: {which}checksum mismatch ({cs['algo']} {got:#010x} != "
+            f"recorded {want:#010x}) in {path}"
+        )
+    return "ok", ""
+
+
+def _manifest_dirs(path: str) -> list[str]:
+    """Every manifest-bearing directory under a store root: the root,
+    shard subdirectories, and delta segments — in deterministic order."""
+    dirs = [path]
+    for name in sorted(os.listdir(path)):
+        sub = os.path.join(path, name)
+        if name.startswith("shard_") and os.path.exists(
+            os.path.join(sub, "MANIFEST.json")
+        ):
+            dirs.append(sub)
+    seg_root = os.path.join(path, "segments")
+    if os.path.isdir(seg_root):
+        for name in sorted(os.listdir(seg_root)):
+            sub = os.path.join(seg_root, name)
+            if os.path.exists(os.path.join(sub, "MANIFEST.json")):
+                dirs.append(sub)
+    return dirs
+
+
+def verify_store(path: str, *, full: bool = True) -> dict:
+    """Verify every array of a store directory — base, shard views, and
+    delta segments — against the manifests' recorded checksums.
+
+    ``full=True`` streams every byte; ``full=False`` checks only the head
+    samples (the same check ``load_index`` performs). Raises
+    ``StoreCorruption`` listing all failures; returns a report dict
+    ``{"checked": n, "unchecked": n, "dirs": n}`` when clean. Entries
+    without checksums (v1 stores) are counted and warned about, not
+    failed — see ``read_manifest``'s version handling.
+    """
+    if not os.path.exists(os.path.join(path, "MANIFEST.json")):
+        raise StoreCorruption(f"{path}: no MANIFEST.json — not a store")
+    errors: list[str] = []
+    checked = unchecked = 0
+    dirs = _manifest_dirs(path)
+    for d in dirs:
+        try:
+            with open(os.path.join(d, "MANIFEST.json")) as f:
+                manifest = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            errors.append(f"{d}: unreadable manifest ({e})")
+            continue
+        for name, entry in sorted(manifest.get("arrays", {}).items()):
+            status, detail = verify_entry(d, name, entry, full=full)
+            if status == "ok":
+                checked += 1
+            elif status == "unchecked":
+                unchecked += 1
+            else:
+                errors.append(detail)
+    if errors:
+        raise StoreCorruption(
+            f"{path}: {len(errors)} integrity failure(s):\n  "
+            + "\n  ".join(errors)
+        )
+    if unchecked:
+        warnings.warn(
+            f"{path}: {unchecked} array(s) have no recorded checksum "
+            "(pre-checksum store format); re-save to add them",
+            stacklevel=2,
+        )
+    return {"checked": checked, "unchecked": unchecked, "dirs": len(dirs)}

@@ -62,12 +62,13 @@ import functools
 import os
 import shutil
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import obs
+from repro import fault, obs
 from repro.core import engine, kmeans, quantization
 from repro.core.reduction import TopKResult, two_stage_reduce
 from repro.core.types import WarpIndex, WarpSearchConfig
@@ -75,6 +76,7 @@ from repro.core.warpselect import warp_select
 from repro.core.worklist import build_tile_worklist
 from repro.kernels import ops, ref
 from repro.store import format as store_format
+from repro.store.integrity import StoreCorruption
 
 __all__ = [
     "SegmentedWarpIndex",
@@ -101,6 +103,10 @@ class SegmentedWarpIndex:
     base: WarpIndex
     deltas: tuple[WarpIndex, ...]
     doc_starts: tuple[int, ...]
+    # Segment directory names skipped as corrupt by a quarantining load
+    # (``load_segmented(..., quarantine=True)``). Non-empty means the view
+    # is DEGRADED: exact over base + healthy deltas, blind to these.
+    quarantined: tuple[str, ...] = ()
 
     def __post_init__(self):
         if len(self.doc_starts) != 1 + len(self.deltas):
@@ -116,7 +122,14 @@ class SegmentedWarpIndex:
 
     @property
     def n_docs(self) -> int:
-        return sum(s.n_docs for s in self.segments)
+        # Max global id bound, not a segment-size sum: a quarantined
+        # segment leaves a doc-id gap so healthy later segments keep
+        # their global ids (the reduction's overflow guard needs the
+        # bound, not the count).
+        return max(
+            start + s.n_docs
+            for start, s in zip(self.doc_starts, self.segments)
+        )
 
     @property
     def n_tokens(self) -> int:
@@ -261,15 +274,46 @@ def add_documents(
 
 
 def load_segmented(
-    base: WarpIndex, seg_dirs: list[str], *, mmap: bool = True
+    base: WarpIndex, seg_dirs: list[str], *, mmap: bool = True,
+    quarantine: bool = False,
 ) -> SegmentedWarpIndex:
     """Stitch a base index + delta-segment directories into one searchable
-    view; centroid/codec arrays are shared with the base, not copied."""
+    view; centroid/codec arrays are shared with the base, not copied.
+
+    With ``quarantine=True`` a segment that fails to load (checksum
+    mismatch, truncation, unreadable manifest) is *skipped* instead of
+    raising: its name is recorded in ``.quarantined``, a doc-id gap is
+    left so healthy later segments keep their global ids (when the
+    segment's manifest is still readable), and the result serves base +
+    healthy deltas. The degradation is observable: a warning, the
+    ``store_segments_quarantined_total`` counter, and the server's
+    ``health()`` report all carry it.
+    """
     deltas = []
     doc_starts = [0]
+    quarantined = []
     total = base.n_docs
     for seg_dir in seg_dirs:
-        manifest, arrays = store_format.load_segment_arrays(seg_dir, mmap=mmap)
+        try:
+            manifest, arrays = store_format.load_segment_arrays(
+                seg_dir, mmap=mmap
+            )
+        except (StoreCorruption, fault.InjectedFault) as e:
+            if not quarantine:
+                raise
+            quarantined.append(os.path.basename(seg_dir))
+            warnings.warn(
+                f"quarantined corrupt delta segment {seg_dir}: {e}",
+                stacklevel=2,
+            )
+            obs.count("store_segments_quarantined_total")
+            try:  # keep later segments' global doc ids stable if we can
+                total += int(
+                    store_format.read_manifest(seg_dir)["static"]["n_docs"]
+                )
+            except Exception:
+                pass  # unknowable size: ids after this point shift
+            continue
         static = manifest["static"]
         deltas.append(WarpIndex(
             centroids=base.centroids,
@@ -285,7 +329,8 @@ def load_segmented(
         doc_starts.append(total)
         total += deltas[-1].n_docs
     return SegmentedWarpIndex(
-        base=base, deltas=tuple(deltas), doc_starts=tuple(doc_starts)
+        base=base, deltas=tuple(deltas), doc_starts=tuple(doc_starts),
+        quarantined=tuple(quarantined),
     )
 
 
@@ -601,6 +646,7 @@ def compact(path: str) -> str:
                 f"(lockfile {lock})"
             ) from None
         os.remove(lock)  # stale: crashed writer; take over
+        obs.count("store_lock_takeovers_total")
         fd = os.open(lock, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
     with os.fdopen(fd, "w") as f:
         f.write(str(os.getpid()))
@@ -623,6 +669,11 @@ def _compact_locked(path: str) -> str:
         return path  # no deltas; already compact
     if not isinstance(seg, SegmentedWarpIndex):
         raise NotImplementedError(f"cannot compact kind={manifest['kind']!r}")
+    # ``store.compact_step`` checkpoints mark every distinct on-disk state
+    # of the swap protocol, in order — the kill-point tests interrupt at
+    # each and assert ``recover_interrupted_compact`` lands on exactly the
+    # old or the new store, never a hybrid.
+    fault.check("store.compact_step", step="load", store=path)
 
     base = seg.base
     c = base.n_centroids
@@ -670,6 +721,7 @@ def _compact_locked(path: str) -> str:
     packed.flush()
     doc_ids.flush()
     del packed, doc_ids
+    fault.check("store.compact_step", step="arrays", store=path)
 
     from repro.store.builder import _finalize_store  # no import cycle: builder
     # depends only on core + format
@@ -688,10 +740,13 @@ def _compact_locked(path: str) -> str:
         n_tokens=n_tokens,
         build_config=manifest.get("build_config"),
     )
+    fault.check("store.compact_step", step="finalized", store=path)
     # A stale .compact-old can only be the leftover of a crash after a
     # completed swap (path intact) — clear it so the rename below works.
     shutil.rmtree(old, ignore_errors=True)
     os.rename(path, old)
+    fault.check("store.compact_step", step="old_aside", store=path)
     os.rename(tmp, path)
+    fault.check("store.compact_step", step="promoted", store=path)
     shutil.rmtree(old)
     return path

@@ -53,6 +53,12 @@ def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running test")
     config.addinivalue_line(
         "markers",
+        "chaos: seeded randomized fault-injection test (bounded op count, "
+        "deterministic per seed). On by default in tier-1; deselect with "
+        "-m 'not chaos' when bisecting unrelated failures.",
+    )
+    config.addinivalue_line(
+        "markers",
         "slow_build: large out-of-core index build; deselected from the "
         "tier-1 run unless --slow-build is passed",
     )

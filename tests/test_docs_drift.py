@@ -104,6 +104,22 @@ def test_docs_architecture_covers_innovations():
         assert module in text, f"architecture.md lost the {module} mapping"
 
 
+def test_docs_operations_covers_resilience():
+    """The failure-modes table maps every resilience surface to code."""
+    with open(os.path.join(ROOT, "docs", "operations.md")) as f:
+        text = f.read()
+    for ref in (
+        "fault/plan.py::FaultPlan",
+        "store/integrity.py::StoreCorruption",
+        "store/integrity.py::verify_store",
+        "store/format.py::recover_interrupted_compact",
+        "serving/admission.py::DeadlineExceeded",
+        "serving/batcher.py::RetrievalServer.health",
+        "core/retriever.py::SearchPlan.warmup",
+    ):
+        assert ref in text, f"operations.md lost the {ref} mapping"
+
+
 @pytest.mark.parametrize(
     "rel_path,symbol",
     [

@@ -1,0 +1,640 @@
+"""Fault-injection harness + resilience contracts.
+
+Three layers of hardening, each driven by the deterministic fault plans
+in ``repro.fault``:
+
+- **store integrity**: per-array checksums catch any flipped byte
+  (``verify_store`` full-stream; ``load_index`` head-sampled), v1
+  pre-checksum manifests load with a warning, corrupt delta segments
+  quarantine with their doc-id gap preserved, and the compact() swap
+  protocol is recoverable from a kill at every checkpoint.
+- **serving resilience**: per-request deadlines shed pre-dispatch with a
+  typed ``DeadlineExceeded``; a failed ``reload`` mutates nothing; a
+  failed ``maintain`` rolls back and retries with backoff while the old
+  epoch keeps serving; ``health()`` reports every degradation.
+- **executor fallback**: a kernel-path failure demotes the plan to the
+  bit-identical reference executor instead of failing requests.
+
+The capstone is the seeded chaos test: full serving sessions
+(submit/step/maintain/reload/add_documents) under randomized fault
+schedules, asserting every delivered reply is bit-identical to direct
+retrieval OR a typed error — and the store is always loadable after.
+"""
+
+import json
+import os
+import random
+import shutil
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro import fault, obs
+from repro.core import IndexBuildConfig, Retriever, WarpSearchConfig, build_index
+from repro.data import make_corpus, make_queries
+from repro.fault import FAULTS, SITES, FaultPlan, FaultRule, InjectedFault
+from repro.obs import MetricsRegistry
+from repro.serving import (
+    BatchPolicy,
+    CompactionPolicy,
+    DeadlineExceeded,
+    Overloaded,
+    ResultAlreadyTaken,
+    RetrievalServer,
+)
+from repro.store import (
+    StoreCorruption,
+    add_documents,
+    compact,
+    load_index,
+    read_manifest,
+    recover_interrupted_compact,
+    save_index,
+    verify_store,
+)
+from repro.store.format import ARRAY_DIR, compact_lock_path
+from repro.store.integrity import checksum_bytes, crc32c_py
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BUILD = IndexBuildConfig(n_centroids=16, nbits=4, kmeans_iters=2)
+CFG = WarpSearchConfig(nprobe=8, k=5)
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_faults():
+    """Safety net: no test may leave a fault plan installed."""
+    yield
+    assert FAULTS.plan is None, "test leaked an installed FaultPlan"
+    fault.uninstall()
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(n_docs=100, mean_doc_len=10, seed=11)
+
+
+@pytest.fixture(scope="module")
+def queries(corpus):
+    q, qmask, rel = make_queries(
+        corpus, n_queries=8, tokens_per_query=(2, 16), seed=21
+    )
+    return q, qmask, rel
+
+
+@pytest.fixture(scope="module")
+def local_retriever(corpus):
+    return Retriever.from_index(
+        build_index(corpus.emb, corpus.token_doc_ids, corpus.n_docs, BUILD)
+    )
+
+
+@pytest.fixture(scope="module")
+def base_store(tmp_path_factory, corpus):
+    """A v2 store: base (100 docs) + two delta segments (30 docs each)."""
+    path = str(tmp_path_factory.mktemp("faultstore") / "idx")
+    idx = build_index(corpus.emb, corpus.token_doc_ids, corpus.n_docs, BUILD)
+    save_index(idx, path, build_config=BUILD)
+    for seed in (12, 13):
+        c = make_corpus(n_docs=30, mean_doc_len=10, seed=seed)
+        add_documents(path, c.emb, c.token_doc_ids, c.n_docs)
+    return path
+
+
+def copy_store(src, dst_dir):
+    dst = os.path.join(str(dst_dir), "idx")
+    shutil.copytree(src, dst)
+    return dst
+
+
+def store_array_files(path):
+    """Every (manifest_dir, array_name, file_path) across base + segments."""
+    dirs = [path]
+    seg_root = os.path.join(path, "segments")
+    if os.path.isdir(seg_root):
+        dirs += [
+            os.path.join(seg_root, d) for d in sorted(os.listdir(seg_root))
+        ]
+    out = []
+    for d in dirs:
+        for name, entry in sorted(read_manifest(d)["arrays"].items()):
+            out.append((d, name, os.path.join(d, entry["file"])))
+    return out
+
+
+def flip_byte(file_path, offset):
+    with open(file_path, "r+b") as f:
+        f.seek(offset)
+        b = f.read(1)
+        f.seek(offset)
+        f.write(bytes([b[0] ^ 0xFF]))
+
+
+# ---------------------------------------------------------------------------
+# fault plans
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_scripted_and_seeded():
+    assert len(SITES) == len(set(SITES)) == 6
+    p = FaultPlan([FaultRule("store.array_read", at=1, times=2)])
+    p.check("store.array_read")  # hit 0: before the window
+    for _ in range(2):
+        with pytest.raises(InjectedFault):
+            p.check("store.array_read")
+    p.check("store.array_read")  # hit 3: past the window
+    assert p.hits["store.array_read"] == 4
+    assert p.fired["store.array_read"] == 2
+
+    # Seeded schedules replay exactly from the seed.
+    def firings(seed):
+        pl = FaultPlan(seed=seed, rates={"engine.kernel_call": 0.5})
+        out = []
+        for _ in range(50):
+            try:
+                pl.check("engine.kernel_call")
+                out.append(False)
+            except InjectedFault:
+                out.append(True)
+        return out
+
+    assert firings(7) == firings(7)
+    assert firings(7) != firings(8)
+
+    # Custom error class / instance both raise as given.
+    with pytest.raises(OSError):
+        FaultPlan([FaultRule("store.array_read", error=OSError)]).check(
+            "store.array_read"
+        )
+
+
+def test_disabled_hooks_are_one_attribute_check():
+    """Bench smoke for the zero-cost-when-disabled contract: the guarded
+    hot-path pattern must be orders of magnitude below anything that
+    could show on a retrieve (generous bound — no flakes)."""
+    assert FAULTS.plan is None
+    t0 = time.perf_counter()
+    for _ in range(200_000):
+        if FAULTS.plan is not None:  # the inlined hot-path guard
+            FAULTS.plan.check("store.array_read")
+    assert time.perf_counter() - t0 < 0.5
+
+
+# ---------------------------------------------------------------------------
+# store integrity
+# ---------------------------------------------------------------------------
+
+
+def test_crc32c_known_vector():
+    # The Castagnoli check vector (RFC 3720): crc32c("123456789").
+    assert crc32c_py(b"123456789") == 0xE3069283
+    blk = checksum_bytes(np.arange(64, dtype=np.int32).data)
+    assert set(blk) >= {"algo", "crc", "head_crc", "head_bytes"}
+
+
+def test_verify_store_detects_any_flipped_byte(base_store, tmp_path):
+    path = copy_store(base_store, tmp_path)
+    files = store_array_files(path)
+    assert len(files) >= 10  # base + shard-free segments, all arrays
+    verify_store(path)  # pristine copy is clean
+    for _, name, fp in files:
+        size = os.path.getsize(fp)
+        off = size // 2  # past the head sample for the big arrays
+        flip_byte(fp, off)
+        with pytest.raises(StoreCorruption, match=name):
+            verify_store(path)
+        flip_byte(fp, off)  # restore
+    verify_store(path)
+
+
+def test_load_detects_head_corruption(base_store, tmp_path):
+    path = copy_store(base_store, tmp_path)
+    flip_byte(os.path.join(path, ARRAY_DIR, "packed_codes.bin"), 100)
+    with pytest.raises(StoreCorruption):
+        load_index(path)
+
+
+def test_v1_manifest_loads_with_warning(base_store, tmp_path):
+    path = copy_store(base_store, tmp_path)
+    mpath = os.path.join(path, "MANIFEST.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    manifest["version"] = 1
+    for entry in manifest["arrays"].values():
+        entry.pop("checksum", None)
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.warns(UserWarning, match="pre-checksum"):
+        idx = load_index(path)
+    assert idx.n_docs == 160
+    with pytest.warns(UserWarning, match="no recorded checksum"):
+        report = verify_store(path)
+    assert report["unchecked"] > 0 and report["checked"] > 0
+
+
+def test_corrupt_segment_quarantine_preserves_doc_ids(base_store, tmp_path):
+    path = copy_store(base_store, tmp_path)
+    clean = load_index(path)
+    n_docs, n_segments = clean.n_docs, len(clean.segments)
+    seg_root = os.path.join(path, "segments")
+    first_seg = sorted(os.listdir(seg_root))[0]
+    fp = os.path.join(seg_root, first_seg, ARRAY_DIR, "packed_codes.bin")
+    flip_byte(fp, 10)  # inside the head sample: load-time detection
+    # Default load refuses to serve silently-wrong data.
+    with pytest.raises(StoreCorruption):
+        load_index(path)
+    # Quarantine mode serves what is healthy and REPORTS the hole; the
+    # later segment's doc ids keep their global offsets (gap preserved).
+    reg = obs.enable_metrics(MetricsRegistry())
+    try:
+        with pytest.warns(UserWarning, match="quarantin"):
+            idx = load_index(path, quarantine_segments=True)
+    finally:
+        obs.disable_metrics()
+    assert idx.quarantined == (first_seg,)
+    assert len(idx.segments) == n_segments - 1
+    assert idx.n_docs == n_docs  # max-bound over surviving starts + gap
+    assert reg.counter("store_segments_quarantined_total").value == 1
+    healthy_start = idx.doc_starts[-1]
+    assert healthy_start == 130  # 100 base + 30-doc gap for the quarantined
+
+
+@pytest.mark.parametrize(
+    "at", range(5), ids=["load", "arrays", "finalized", "old_aside", "promoted"]
+)
+def test_compact_killpoints_recoverable(base_store, tmp_path, at):
+    """Kill compact() at every swap-protocol checkpoint: recovery must
+    land on exactly the old or the new store — never a hybrid — with all
+    documents intact and checksums clean."""
+    path = copy_store(base_store, tmp_path)
+    n_docs = load_index(path).n_docs
+    with fault.active(FaultPlan([FaultRule("store.compact_step", at=at)])):
+        with pytest.raises(InjectedFault):
+            compact(path)
+    recover_interrupted_compact(path)
+    verify_store(path)
+    idx = load_index(path)
+    assert idx.n_docs == n_docs
+    seg_root = os.path.join(path, "segments")
+    has_deltas = os.path.isdir(seg_root) and bool(os.listdir(seg_root))
+    promoted = not has_deltas
+    # old XOR new: before old_aside we must roll back, after we may land
+    # on the promoted single-segment base.
+    if at <= 2:
+        assert not promoted
+    # Either way a re-run completes the job.
+    compact(path)
+    verify_store(path)
+    assert load_index(path).n_docs == n_docs
+
+
+def test_stale_lock_takeover_metric(base_store, tmp_path):
+    path = copy_store(base_store, tmp_path)
+    lock = compact_lock_path(path)
+    with open(lock, "w") as f:
+        f.write("0")  # pid 0 is never alive -> stale by construction
+    reg = obs.enable_metrics(MetricsRegistry())
+    try:
+        compact(path)  # takes the lock over instead of refusing
+    finally:
+        obs.disable_metrics()
+    assert reg.counter("store_lock_takeovers_total").value == 1
+    assert not os.path.exists(lock)
+    verify_store(path)
+
+
+# ---------------------------------------------------------------------------
+# serving resilience
+# ---------------------------------------------------------------------------
+
+
+def _server(retriever, clock, **kw):
+    kw.setdefault("cache_size", 0)
+    return RetrievalServer(
+        retriever, CFG, BatchPolicy(max_batch=4, max_wait_s=1.0),
+        clock=clock, **kw,
+    )
+
+
+def test_deadline_shed_typed_error_exactly_once(local_retriever, queries):
+    q, qmask, _ = queries
+    clock = _FakeClock()
+    srv = _server(local_retriever, clock)
+    rid_dl = srv.submit(q[0], qmask[0], deadline_s=0.5)
+    rid_ok = srv.submit(q[1], qmask[1])
+    clock.t = 2.0  # the deadline passed while queued
+    served = srv.step(force=True)
+    assert served == 1  # the expired request never occupied a slot
+    with pytest.raises(DeadlineExceeded):
+        srv.poll(rid_dl)
+    with pytest.raises(ResultAlreadyTaken):  # delivered exactly once
+        srv.poll(rid_dl)
+    scores, docs = srv.poll(rid_ok)
+    direct = srv.plan.retrieve(q[1], qmask[1])
+    np.testing.assert_array_equal(docs, np.asarray(direct.doc_ids))
+    assert srv.stats["deadline_shed"] == 1
+    # An undispatched deadline in the future is NOT shed.
+    rid_live = srv.submit(q[2], qmask[2], deadline_s=10.0)
+    srv.drain()
+    assert srv.poll(rid_live) is not None
+    assert srv.stats["deadline_shed"] == 1
+
+
+def test_result_timeout_keeps_request_pollable(local_retriever, queries):
+    q, qmask, _ = queries
+    srv = _server(local_retriever, _FakeClock())
+    rid = srv.submit(q[0], qmask[0])
+    with pytest.raises(TimeoutError):
+        srv.result(rid, timeout=0.0)
+    assert rid in srv._inflight  # a timed-out wait is not a cancel
+    srv.drain()
+    scores, docs = srv.poll(rid)
+    direct = srv.plan.retrieve(q[0], qmask[0])
+    np.testing.assert_array_equal(docs, np.asarray(direct.doc_ids))
+
+
+def test_result_parks_on_sleep_instead_of_spinning(local_retriever, queries):
+    """The blocking driver must sleep until the batch deadline (capped),
+    not busy-spin or force an immediate under-full dispatch when a sleep
+    is available."""
+    q, qmask, _ = queries
+    clock = _FakeClock()
+    sleeps = []
+
+    def fake_sleep(s):
+        sleeps.append(s)
+        clock.t += s
+
+    srv = RetrievalServer(
+        local_retriever, CFG, BatchPolicy(max_batch=4, max_wait_s=0.25),
+        clock=clock, cache_size=0, sleep=fake_sleep,
+    )
+    rid = srv.submit(q[0], qmask[0])
+    scores, docs = srv.result(rid, timeout=10.0)
+    assert sleeps and sleeps[0] == pytest.approx(0.25)
+    direct = srv.plan.retrieve(q[0], qmask[0])
+    np.testing.assert_array_equal(docs, np.asarray(direct.doc_ids))
+
+
+def test_reload_failure_leaves_server_intact(base_store, tmp_path, queries):
+    q, qmask, _ = queries
+    path = copy_store(base_store, tmp_path)
+    srv = _server(Retriever.from_store(path), _FakeClock(), store_path=path)
+    epoch0, fp0, cfg0 = srv.index_epoch, srv._fingerprint, srv._requested_config
+    rid = srv.submit(q[0], qmask[0])  # queued across the failed reloads
+
+    with pytest.raises(FileNotFoundError):
+        srv.reload(str(tmp_path / "no-such-store"))
+    bad = tmp_path / "broken-store"
+    bad.mkdir()
+    (bad / "MANIFEST.json").write_text("{not json")
+    with pytest.raises(StoreCorruption):
+        srv.reload(str(bad))
+    with fault.active(FaultPlan([FaultRule("server.reload")])):
+        with pytest.raises(InjectedFault):
+            srv.reload(path)
+
+    # Nothing moved: same epoch, same plan, same store, backlog intact.
+    assert srv.index_epoch == epoch0
+    assert srv._fingerprint == fp0
+    assert srv._requested_config is cfg0
+    assert srv.store_path == path
+    assert len(srv.scheduler) == 1
+    srv.drain()
+    scores, docs = srv.poll(rid)
+    direct = srv.plan.retrieve(q[0], qmask[0])
+    np.testing.assert_array_equal(docs, np.asarray(direct.doc_ids))
+    # And a clean reload still works afterwards.
+    srv.reload(path)
+    assert srv.index_epoch == epoch0 + 1
+
+
+def test_maintain_retry_backoff_keeps_serving(base_store, tmp_path, queries):
+    q, qmask, _ = queries
+    path = copy_store(base_store, tmp_path)
+    clock = _FakeClock()
+    clock.t = 100.0
+    srv = _server(
+        Retriever.from_store(path), clock, store_path=path,
+        compaction=CompactionPolicy(
+            max_delta_segments=0, min_interval_s=0.0,
+            retry_backoff_s=5.0, retry_backoff_max_s=8.0,
+        ),
+    )
+    epoch0 = srv.index_epoch
+    plan = FaultPlan([FaultRule("store.compact_step", at=0, times=100)])
+    with fault.active(plan):
+        with pytest.warns(RuntimeWarning, match="maintain"):
+            assert srv.maintain() is False
+        assert srv.stats["maintain_retries"] == 1
+        fired0 = plan.fired["store.compact_step"]
+        # Inside the backoff window: no new attempt is even made.
+        assert srv.maintain() is False
+        assert plan.fired["store.compact_step"] == fired0
+        h = srv.health()
+        assert h["status"] == "degraded"
+        assert any("maintenance failing" in r for r in h["reasons"])
+        # Past the backoff: retried (and failed again -> doubled backoff).
+        clock.t += 5.0
+        with pytest.warns(RuntimeWarning):
+            assert srv.maintain() is False
+        assert plan.fired["store.compact_step"] == fired0 + 1
+        assert srv.stats["maintain_retries"] == 2
+    # Old epoch kept serving throughout; store still consistent on disk.
+    assert srv.index_epoch == epoch0
+    verify_store(path)
+    rid = srv.submit(q[0], qmask[0])
+    srv.drain()
+    assert srv.poll(rid) is not None
+    # Faults gone + backoff elapsed: the tick succeeds end-to-end.
+    clock.t += 10.0
+    assert srv.maintain() is True
+    assert srv.stats["compactions"] == 1
+    assert srv.index_epoch == epoch0 + 1
+    assert srv.health()["status"] == "ok"
+
+
+def test_health_reports_quarantine_and_overload(base_store, tmp_path, queries):
+    from repro.serving import AdmissionPolicy
+
+    q, qmask, _ = queries
+    path = copy_store(base_store, tmp_path)
+    seg_root = os.path.join(path, "segments")
+    first_seg = sorted(os.listdir(seg_root))[0]
+    flip_byte(
+        os.path.join(seg_root, first_seg, ARRAY_DIR, "packed_codes.bin"), 10
+    )
+    clock = _FakeClock()
+    with pytest.warns(UserWarning, match="quarantin"):
+        retriever = Retriever.from_index(
+            load_index(path, quarantine_segments=True)
+        )
+    srv = _server(
+        retriever, clock, store_path=path,
+        admission=AdmissionPolicy(max_queue_depth=2),
+    )
+    h = srv.health()
+    assert h["status"] == "degraded"
+    assert h["quarantined_segments"] == [first_seg]
+    # Queue at the admission limit dominates: overloaded.
+    srv.submit(q[0], qmask[0])
+    srv.submit(q[1], qmask[1])
+    with pytest.raises(Overloaded):
+        srv.submit(q[2], qmask[2])
+    assert srv.health()["status"] == "overloaded"
+    srv.drain()
+    assert srv.health()["status"] == "degraded"  # quarantine persists
+
+
+# ---------------------------------------------------------------------------
+# executor fallback
+# ---------------------------------------------------------------------------
+
+
+def test_executor_fallback_bit_identical(local_retriever, queries):
+    q, qmask, _ = queries
+    ref = local_retriever.plan(
+        WarpSearchConfig(nprobe=8, k=5, executor="reference")
+    )
+    # Fresh Retrievers: ``Retriever.plan`` memoizes per config, and this
+    # test must not leave a demoted kernel plan in the shared fixture's
+    # cache (nor read one out of it).
+    faulted = Retriever.from_index(local_retriever.index)
+    reg = obs.enable_metrics(MetricsRegistry())
+    try:
+        with fault.active(FaultPlan(rates={"engine.kernel_call": 1.0})):
+            kplan = faulted.plan(
+                WarpSearchConfig(nprobe=8, k=5, executor="kernel")
+            )
+            with pytest.warns(UserWarning, match="reference executor"):
+                assert kplan.warmup() is True
+            assert kplan.fallback_active
+            out = kplan.retrieve(q[0], qmask[0])
+    finally:
+        obs.disable_metrics()
+    expect = ref.retrieve(q[0], qmask[0])
+    np.testing.assert_array_equal(
+        np.asarray(out.doc_ids), np.asarray(expect.doc_ids)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(out.scores), np.asarray(expect.scores)
+    )
+    assert reg.counter("warp_executor_fallbacks_total").value == 1
+    # A clean kernel plan (no faults) does NOT fall back.
+    clean = Retriever.from_index(local_retriever.index).plan(
+        WarpSearchConfig(nprobe=8, k=5, executor="kernel")
+    )
+    assert clean.warmup() is False
+    assert not clean.fallback_active
+
+
+# ---------------------------------------------------------------------------
+# lint + chaos capstone
+# ---------------------------------------------------------------------------
+
+
+def test_typed_errors_lint_passes():
+    out = subprocess.run(
+        [sys.executable, os.path.join(REPO, "scripts", "check_typed_errors.py")],
+        capture_output=True, text=True,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "all exported" in out.stdout
+
+
+@pytest.mark.chaos
+@pytest.mark.filterwarnings("ignore::RuntimeWarning")  # maintain retries
+@pytest.mark.filterwarnings("ignore::UserWarning")  # quarantine notices
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_chaos_serving_sessions(base_store, tmp_path, queries, seed):
+    """Seeded chaos: a full serving session under a randomized fault
+    schedule. Invariants — every delivered reply is bit-identical to a
+    direct retrieval on the serving plan OR surfaced as a typed error;
+    ``health()`` never raises; and the store is loadable (and passes a
+    full checksum verify) when the dust settles."""
+    q, qmask, _ = queries
+    path = copy_store(base_store, tmp_path)
+    rng = random.Random(1000 + seed)
+    clock = _FakeClock()
+    srv = RetrievalServer(
+        Retriever.from_store(path), CFG,
+        BatchPolicy(max_batch=4, max_wait_s=1.0),
+        clock=clock, cache_size=16, store_path=path,
+        compaction=CompactionPolicy(
+            max_delta_segments=0, min_interval_s=0.0, retry_backoff_s=1.0
+        ),
+    )
+    rates = {
+        "store.array_read": 0.02,
+        "store.manifest_parse": 0.05,
+        "store.segment_load": 0.10,
+        "store.compact_step": 0.30,
+        "server.reload": 0.25,
+    }
+    plan = FaultPlan(seed=seed, rates=rates)
+    delivered = shed = 0
+    with fault.active(plan):
+        for round_ in range(8):
+            clock.t += 1.0
+            batch = []
+            for _ in range(rng.randint(1, 3)):
+                i = rng.randrange(len(q))
+                dl = 0.5 if rng.random() < 0.3 else None
+                try:
+                    batch.append((srv.submit(q[i], qmask[i], deadline_s=dl), i))
+                except Overloaded:
+                    pass
+            if rng.random() < 0.3:
+                clock.t += 2.0  # expire any attached deadlines
+            srv.drain()
+            for rid, i in batch:
+                try:
+                    scores, docs = srv.poll(rid)
+                except DeadlineExceeded:
+                    shed += 1
+                    continue
+                direct = srv.plan.retrieve(q[i], qmask[i])
+                np.testing.assert_array_equal(
+                    docs, np.asarray(direct.doc_ids)
+                )
+                np.testing.assert_array_equal(
+                    scores, np.asarray(direct.scores)
+                )
+                delivered += 1
+            op = rng.random()
+            if op < 0.35:
+                srv.maintain()  # contract: never raises, never kills serving
+            elif op < 0.60:
+                try:
+                    srv.reload(path)
+                except (StoreCorruption, InjectedFault):
+                    pass  # typed/pre-mutation: server must stay intact
+            elif op < 0.75:
+                extra = make_corpus(
+                    n_docs=10, mean_doc_len=8,
+                    seed=900 + seed * 100 + round_,
+                )
+                try:
+                    add_documents(
+                        path, extra.emb, extra.token_doc_ids, extra.n_docs
+                    )
+                except (StoreCorruption, InjectedFault):
+                    pass
+            srv.health()
+    assert delivered > 0  # the session actually served under fire
+    assert plan.fired  # ...and the schedule actually injected faults
+    # The store survives the session: recoverable, loadable, checksums ok.
+    recover_interrupted_compact(path)
+    verify_store(path)
+    idx = load_index(path)
+    assert idx.n_docs >= 160

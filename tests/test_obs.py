@@ -409,7 +409,8 @@ def test_server_stats_backcompat_and_registry(setup):
     st = server.stats
     assert st["served"] == 3 and st["batches"] >= 1
     assert set(st) == {"batches", "padded_slots", "served", "reloads",
-                       "cache_hits", "compactions"}
+                       "cache_hits", "compactions", "deadline_shed",
+                       "maintain_retries"}
     # The same numbers are Prometheus-visible through the registry.
     text = server.metrics.to_prometheus()
     assert "serving_requests_served_total 3" in text
