@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, get_setup
-from repro.core import Retriever, WarpSearchConfig
+from repro.core import DocFilter, Retriever, WarpSearchConfig
 
 
 def _check_tier(tier: str, *, require_adaptive_win: bool) -> None:
@@ -82,8 +82,63 @@ def _check_tier(tier: str, *, require_adaptive_win: bool) -> None:
         )
 
 
+def _check_filtered_rung(tier: str) -> None:
+    """Filter pushdown must shrink adaptive worklist demand: probe runs
+    on clusters with zero surviving tokens drop out of the tile count
+    *before* bucket choice, so a selective filter lowers the rung the
+    dispatcher runs at.
+
+    The filter is 90%-selective and topic-aligned (the docs of the
+    Zipf head topic — the shape of a tenant or category restriction):
+    cluster routing follows topics, so the filtered-out tail goes dead
+    at cluster granularity and demand actually falls. A uniformly
+    random 10% sample would leave a survivor in nearly every cluster —
+    selectivity alone doesn't shrink run-granular demand, alignment
+    with the routing does. nprobe is sized so the unfiltered demand
+    sits above the bottom ladder rung (the rung floor is ~nprobe tiles;
+    below it there is no room to drop)."""
+    corpus, index, q, qmask, _ = get_setup(tier)
+    retriever = Retriever.from_index(index)
+    cfg = WarpSearchConfig(
+        nprobe=96, k=100, t_prime=2000, k_impute=64, layout="ragged"
+    )
+    unf = retriever.plan(cfg)
+    tod = corpus.topic_of_doc
+    head = np.bincount(tod, minlength=int(tod.max()) + 1).argmax()
+    keep = np.flatnonzero(tod == head)[: corpus.n_docs // 10]
+    assert len(keep) == corpus.n_docs // 10  # 90%-selective
+    filt = retriever.plan(
+        cfg, dfilter=DocFilter.allow([int(d) for d in keep], corpus.n_docs)
+    )
+    pairs = []
+    for i in range(4):
+        bf = filt.adaptive_bucket(q[i], qmask[i])
+        bu = unf.adaptive_bucket(q[i], qmask[i])
+        assert bf is not None and bu is not None, (tier, i)
+        assert bf <= bu, (
+            f"{tier}: filtered bucket {bf} above unfiltered {bu} on "
+            f"query {i} — pushdown must never raise demand"
+        )
+        pairs.append((bf, bu))
+    total_f = sum(f for f, _ in pairs)
+    total_u = sum(u for _, u in pairs)
+    assert total_f < total_u, (
+        f"{tier}: 90%-selective filter left adaptive demand unchanged "
+        f"({pairs}) — worklist pushdown is not dropping filtered runs"
+    )
+    emit(
+        f"parity/filtered_rung/{tier}",
+        0.0,
+        f"ok;buckets_filtered={[f for f, _ in pairs]};"
+        f"buckets_unfiltered={[u for _, u in pairs]};"
+        f"demand_ratio={total_f / total_u:.3f}",
+    )
+
+
 def run() -> None:
     # Balanced tier: parity + ragged-undercuts-dense. Zipf tier: the same,
-    # plus the adaptive bucket strictly below the static ragged bound.
+    # plus the adaptive bucket strictly below the static ragged bound and
+    # the filter-pushdown demand reduction.
     _check_tier("nfcorpus_like", require_adaptive_win=False)
     _check_tier("zipf_like", require_adaptive_win=True)
+    _check_filtered_rung("zipf_like")

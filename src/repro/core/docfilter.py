@@ -1,0 +1,296 @@
+"""Doc-id filtering: ``DocFilter`` + plan-time resolution to ``FilterView``.
+
+The reference WARP searcher restricts retrieval with ``pids=`` /
+``filter_fn=``; production multi-vector serving is almost always
+filtered (tenant scoping, freshness windows, tombstoned deletes). A
+``DocFilter`` is the user-facing spec — allowlist, denylist, bitmap, or
+a tombstone view over deleted ids — normalized to one survivor bitmap
+``bool[n_docs]`` (True = doc survives the filter).
+
+At plan time the bitmap is *resolved* against a concrete index geometry
+into a ``FilterView``: the survivor bitmap as a device array plus a
+per-cluster liveness vector (``cluster_live[c]`` is True iff cluster
+``c`` contains at least one surviving token). The view is threaded
+through the engine as a runtime operand (a pytree argument, never a
+closure — closing over it would bake the arrays into the jit program as
+constants), where it does two things:
+
+- **worklist pushdown**: probe runs whose cluster holds zero survivors
+  get their probe size zeroed before ``build_tile_worklist``, so they
+  contribute no tiles — adaptive worklist demand (and therefore the
+  chosen ladder rung) tracks only surviving candidates;
+- **reduction masking**: ``two_stage_reduce`` masks filtered documents'
+  totals to ``-inf`` before top-k.
+
+Exactness: WARP's missing-similarity imputation ``m_i`` depends only on
+centroid scores and cluster sizes — never on which candidates survive —
+so masking some documents cannot change any *surviving* document's
+score. Filtered top-k doc ids are therefore bit-identical to post-hoc
+filtering of an unfiltered retrieval at inflated k (the property pinned
+by ``tests/test_filtered_retrieval.py``).
+"""
+
+from __future__ import annotations
+
+import hashlib
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "DocFilter",
+    "FilterView",
+    "cluster_survivor_counts",
+    "resolve_local",
+    "resolve_segmented",
+    "resolve_sharded",
+]
+
+
+class FilterView(NamedTuple):
+    """A ``DocFilter`` resolved against one index geometry (a pytree, so
+    it rides through ``jax.jit`` as a runtime operand).
+
+    doc_mask      bool[n_docs_local] — True where the doc survives. For
+                  sharded resolution the arrays are stacked per shard
+                  (``[S, local_docs + 1]`` — the +1 slot is the padding
+                  doc id, always False).
+    cluster_live  bool[C] — True where the cluster holds >= 1 surviving
+                  token (``[S, C]`` stacked for sharded).
+    """
+
+    doc_mask: jax.Array
+    cluster_live: jax.Array
+
+
+def _as_id_array(ids) -> np.ndarray:
+    arr = np.asarray(sorted(set(int(i) for i in ids)), dtype=np.int64)
+    return arr.reshape(-1)
+
+
+class DocFilter:
+    """Immutable survivor bitmap over global doc ids.
+
+    Constructors (all normalize to the same representation, so an
+    allowlist and the complementary denylist compare/digest equal):
+
+      DocFilter.allow(ids, n_docs)       only ``ids`` survive
+      DocFilter.deny(ids, n_docs)        everything but ``ids`` survives
+      DocFilter.from_bitmap(mask)        explicit bool[n_docs]
+      DocFilter.tombstones(ids, n_docs)  deny view over deleted ids
+
+    Ids outside ``[0, n_docs)`` are silently dropped (a filter built
+    against a larger corpus snapshot stays valid on an older index).
+    """
+
+    __slots__ = ("_mask", "_kind", "_digest")
+
+    def __init__(self, mask: np.ndarray, *, kind: str = "bitmap"):
+        mask = np.ascontiguousarray(np.asarray(mask, dtype=bool).reshape(-1))
+        mask.setflags(write=False)
+        self._mask = mask
+        self._kind = kind
+        h = hashlib.sha1()
+        h.update(str(mask.shape[0]).encode())
+        h.update(np.packbits(mask).tobytes())
+        self._digest = h.hexdigest()[:16]
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def allow(cls, ids, n_docs: int) -> "DocFilter":
+        mask = np.zeros(int(n_docs), dtype=bool)
+        arr = _as_id_array(ids)
+        arr = arr[(arr >= 0) & (arr < n_docs)]
+        mask[arr] = True
+        return cls(mask, kind="allow")
+
+    @classmethod
+    def deny(cls, ids, n_docs: int) -> "DocFilter":
+        mask = np.ones(int(n_docs), dtype=bool)
+        arr = _as_id_array(ids)
+        arr = arr[(arr >= 0) & (arr < n_docs)]
+        mask[arr] = False
+        return cls(mask, kind="deny")
+
+    @classmethod
+    def from_bitmap(cls, mask) -> "DocFilter":
+        return cls(mask, kind="bitmap")
+
+    @classmethod
+    def tombstones(cls, deleted_ids, n_docs: int) -> "DocFilter":
+        f = cls.deny(deleted_ids, n_docs)
+        f._kind = "tombstone"
+        return f
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def kind(self) -> str:
+        return self._kind
+
+    @property
+    def n_docs(self) -> int:
+        return int(self._mask.shape[0])
+
+    @property
+    def n_survivors(self) -> int:
+        return int(self._mask.sum())
+
+    @property
+    def survivor_mask(self) -> np.ndarray:
+        """The (read-only) survivor bitmap, bool[n_docs]."""
+        return self._mask
+
+    @property
+    def digest(self) -> str:
+        """Content hash of (n_docs, bitmap) — the plan/cache-key handle.
+        Two filters with identical survivors share a digest regardless of
+        how they were spelled (allow vs deny vs bitmap)."""
+        return self._digest
+
+    @property
+    def is_noop(self) -> bool:
+        return bool(self._mask.all())
+
+    def intersect(self, other: "DocFilter") -> "DocFilter":
+        """AND of two filters (e.g. a request allowlist over a tenant's
+        tombstone view). Lengths must match."""
+        if other.n_docs != self.n_docs:
+            raise ValueError(
+                f"DocFilter.intersect: length mismatch "
+                f"({self.n_docs} vs {other.n_docs})"
+            )
+        return DocFilter(self._mask & other._mask, kind="bitmap")
+
+    def describe(self) -> dict:
+        return {
+            "kind": self._kind,
+            "n_docs": self.n_docs,
+            "n_survivors": self.n_survivors,
+            "digest": self._digest,
+        }
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, DocFilter) and other._digest == self._digest
+
+    def __hash__(self) -> int:
+        return hash(self._digest)
+
+    def __repr__(self) -> str:
+        return (
+            f"DocFilter(kind={self._kind!r}, n_docs={self.n_docs}, "
+            f"n_survivors={self.n_survivors}, digest={self._digest!r})"
+        )
+
+
+# ---------------------------------------------------------------------------
+# plan-time resolution against index geometries (host-side numpy)
+# ---------------------------------------------------------------------------
+
+
+def cluster_survivor_counts(
+    mask: np.ndarray, token_doc_ids, cluster_offsets
+) -> np.ndarray:
+    """Per-cluster count of tokens whose doc survives ``mask``.
+
+    ``token_doc_ids`` is the CSR-ordered token→doc map, ``cluster_offsets``
+    its ``[C + 1]`` cluster boundaries. Token doc ids outside
+    ``[0, len(mask))`` (e.g. shard padding rows) count as filtered.
+    """
+    mask = np.asarray(mask, dtype=bool).reshape(-1)
+    tok = np.asarray(token_doc_ids, dtype=np.int64).reshape(-1)
+    off = np.asarray(cluster_offsets, dtype=np.int64).reshape(-1)
+    in_range = (tok >= 0) & (tok < mask.shape[0])
+    surv = np.zeros(tok.shape[0], dtype=np.int64)
+    surv[in_range] = mask[tok[in_range]]
+    csum = np.concatenate([[0], np.cumsum(surv)])
+    return (csum[off[1:]] - csum[off[:-1]]).astype(np.int64)
+
+
+def resolve_local(dfilter: DocFilter, index) -> FilterView:
+    """Resolve against a single ``WarpIndex`` (token_doc_ids +
+    cluster_offsets attrs)."""
+    mask = dfilter.survivor_mask
+    counts = cluster_survivor_counts(
+        mask, index.token_doc_ids, index.cluster_offsets
+    )
+    return FilterView(
+        doc_mask=jnp.asarray(mask),
+        cluster_live=jnp.asarray(counts > 0),
+    )
+
+
+def local_shard_mask(mask: np.ndarray, start: int, local_docs: int) -> np.ndarray:
+    """Slice a global survivor bitmap to one shard's local id space:
+    ``bool[local_docs + 1]`` — the final slot is the shard's padding doc
+    id and is always False."""
+    out = np.zeros(int(local_docs) + 1, dtype=bool)
+    lo = int(start)
+    hi = min(lo + int(local_docs), mask.shape[0])
+    if hi > lo:
+        out[: hi - lo] = mask[lo:hi]
+    return out
+
+
+def resolve_sharded(dfilter: DocFilter, sidx) -> FilterView:
+    """Resolve against a ``ShardedWarpIndex``: stacked per-shard arrays
+    (``doc_mask [S, local_docs + 1]``, ``cluster_live [S, C]``) suitable
+    as a ``shard_map`` operand partitioned over the shard axis."""
+    mask = dfilter.survivor_mask
+    starts = np.asarray(sidx.doc_start, dtype=np.int64).reshape(-1)
+    doc_masks, lives = [], []
+    for s in range(starts.shape[0]):
+        lm = local_shard_mask(mask, starts[s], sidx.local_docs)
+        counts = cluster_survivor_counts(
+            lm, sidx.token_doc_ids[s], sidx.cluster_offsets[s]
+        )
+        doc_masks.append(lm)
+        lives.append(counts > 0)
+    return FilterView(
+        doc_mask=jnp.asarray(np.stack(doc_masks)),
+        cluster_live=jnp.asarray(np.stack(lives)),
+    )
+
+
+def resolve_segmented(dfilter: DocFilter, seg):
+    """Resolve against a ``SegmentedWarpIndex`` (base + deltas).
+
+    Returns ``(global_view, per_segment_views, per_segment_live)``:
+
+      global_view        FilterView over GLOBAL doc ids; its cluster_live
+                         is the combined any-segment liveness (used by the
+                         flat ragged worklist's demand accounting).
+      per_segment_views  tuple of FilterViews in each segment's LOCAL doc
+                         id space (used by the dense per-segment grids).
+      per_segment_live   np.bool_[n_segments, C] — per-segment cluster
+                         liveness, host-side (demand/bucket accounting).
+    """
+    mask = dfilter.survivor_mask
+    starts = [int(s) for s in seg.doc_starts]
+    seg_views, seg_live = [], []
+    for sub, start in zip(seg.segments, starts):
+        lm = np.zeros(int(sub.n_docs), dtype=bool)
+        hi = min(start + int(sub.n_docs), mask.shape[0])
+        if hi > start:
+            lm[: hi - start] = mask[start:hi]
+        counts = cluster_survivor_counts(
+            lm, sub.token_doc_ids, sub.cluster_offsets
+        )
+        live = counts > 0
+        seg_views.append(
+            FilterView(
+                doc_mask=jnp.asarray(lm), cluster_live=jnp.asarray(live)
+            )
+        )
+        seg_live.append(live)
+    per_segment_live = np.stack(seg_live) if seg_live else np.zeros(
+        (0, 0), dtype=bool
+    )
+    global_view = FilterView(
+        doc_mask=jnp.asarray(mask),
+        cluster_live=jnp.asarray(per_segment_live.any(axis=0)),
+    )
+    return global_view, tuple(seg_views), per_segment_live

@@ -30,12 +30,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.docfilter import DocFilter, FilterView, resolve_local
 from repro.core.reduction import TopKResult, two_stage_reduce
 from repro.core.types import WarpIndex, WarpSearchConfig
 from repro.core.warpselect import warp_select
 from repro.core.worklist import (
     bucket_ladder,
     build_tile_worklist,
+    filtered_probe_sizes,
     worklist_bound,
     worklist_slot_positions,
 )
@@ -433,6 +435,7 @@ def score_candidates(
     config: WarpSearchConfig,
     *,
     probe_sizes: jax.Array | None = None,
+    dfilter: FilterView | None = None,
 ):
     """Stage 2 alone: implicit decompression over the probe set down to a
     flat candidate stream ``(doc_ids, qtok, scores, valid)``, each [N] —
@@ -444,12 +447,24 @@ def score_candidates(
     the mask either way) while worklist demand (and the adaptive bucket
     the dispatcher picks) tracks the *active* token count instead of the
     padded query length.
+
+    ``dfilter`` (a resolved ``FilterView``, see ``core/docfilter.py``)
+    gets the same pushdown: probe runs over clusters with zero surviving
+    tokens are zeroed before the worklist is built, so filtered search
+    keeps the ragged win. Document-level exclusion happens downstream in
+    ``reduce_candidates`` (the two-stage reduction masks filtered docs'
+    totals to -inf), which is exact because imputation never depends on
+    which candidates survive.
     """
     qm = q.shape[0]
     if config.layout == "ragged":
         if probe_sizes is None:
             probe_sizes = index.cluster_sizes[probe_cids]
         probe_sizes = jnp.where(qmask[:, None], probe_sizes, 0)
+        if dfilter is not None:
+            probe_sizes = filtered_probe_sizes(
+                probe_sizes, probe_cids, dfilter.cluster_live
+            )
         scores, doc_ids, qtok, valid = ragged_flat_candidates(
             index, q, probe_scores, probe_cids, config, probe_sizes
         )
@@ -481,18 +496,22 @@ def reduce_candidates(
     config: WarpSearchConfig,
     *,
     q_max: int,
+    dfilter: FilterView | None = None,
 ) -> TopKResult:
     """Stage 3 alone: the two-stage reduction over a flat candidate
     stream. ``index.n_docs`` (shard-local on the distributed path) arms
     the reduction's int32-overflow fallback. The ragged worklist may
     bound fewer than ``k`` slots on skew-free tiny indexes, so that
-    layout pads the reduction to k (all-invalid slots)."""
+    layout pads the reduction to k (all-invalid slots). ``dfilter``'s
+    doc mask (local id space of THIS index) masks filtered documents to
+    -inf before top-k — the exactness point of the filter pushdown."""
     return two_stage_reduce(
         doc_ids,
         qtok,
         scores,
         valid,
         mse,
+        dfilter.doc_mask if dfilter is not None else None,
         q_max=q_max,
         k=config.k,
         impl=config.reduce_impl,
@@ -511,6 +530,7 @@ def score_and_reduce(
     config: WarpSearchConfig,
     *,
     probe_sizes: jax.Array | None = None,
+    dfilter: FilterView | None = None,
 ) -> TopKResult:
     """Stages 2+3 of the pipeline: implicit decompression over the probe
     set, then the two-stage reduction to top-k — the composition of
@@ -526,13 +546,19 @@ def score_and_reduce(
     worklist (``ragged_flat_candidates``) straight into the reduction — no
     [Q, nprobe, cap] tensor, and a sort over the worklist bound instead of
     the padded capacity.
+
+    ``dfilter`` is a resolved ``FilterView`` in THIS index's doc-id space
+    (shard-local on the distributed path, segment-local on the dense
+    segmented path): worklist pushdown in stage 2, -inf masking in
+    stage 3.
     """
     doc_ids, qtok, scores, valid = score_candidates(
         index, q, qmask, probe_scores, probe_cids, config,
-        probe_sizes=probe_sizes,
+        probe_sizes=probe_sizes, dfilter=dfilter,
     )
     return reduce_candidates(
-        index, doc_ids, qtok, scores, valid, mse, config, q_max=q.shape[0]
+        index, doc_ids, qtok, scores, valid, mse, config, q_max=q.shape[0],
+        dfilter=dfilter,
     )
 
 
@@ -562,25 +588,31 @@ def select_probes(index, q, qmask, config, query_batch: bool = False):
 
 
 @functools.partial(jax.jit, static_argnames=("config", "query_batch"))
-def finish_from_probes(index, q, qmask, sel, config, query_batch: bool = False) -> TopKResult:
+def finish_from_probes(
+    index, q, qmask, sel, config, query_batch: bool = False, dfilter=None
+) -> TopKResult:
     """Stages 2+3 from a precomputed WARP_SELECT output, jit'd per config.
 
     ``select_probes`` -> ``finish_from_probes`` composes to exactly
     ``_search_one`` (same stage functions, same order), so adaptive
-    dispatch inherits the dense==ragged parity guarantees.
+    dispatch inherits the dense==ragged parity guarantees. ``dfilter`` is
+    a runtime ``FilterView`` operand shared across the batch (queries in
+    one dispatch see one filter).
     """
 
     def one(q_i, m_i, sel_i):
         return score_and_reduce(
             index, q_i, m_i, sel_i.probe_scores, sel_i.probe_cids, sel_i.mse,
-            config, probe_sizes=sel_i.probe_sizes,
+            config, probe_sizes=sel_i.probe_sizes, dfilter=dfilter,
         )
 
     return jax.vmap(one)(q, qmask, sel) if query_batch else one(q, qmask, sel)
 
 
 @functools.partial(jax.jit, static_argnames=("config", "query_batch"))
-def score_from_probes(index, q, qmask, sel, config, query_batch: bool = False):
+def score_from_probes(
+    index, q, qmask, sel, config, query_batch: bool = False, dfilter=None
+):
     """Stage 2 from a precomputed WARP_SELECT output, jit'd per config.
 
     Returns the flat candidate stream ``(doc_ids, qtok, scores, valid)``
@@ -594,14 +626,16 @@ def score_from_probes(index, q, qmask, sel, config, query_batch: bool = False):
     def one(q_i, m_i, sel_i):
         return score_candidates(
             index, q_i, m_i, sel_i.probe_scores, sel_i.probe_cids, config,
-            probe_sizes=sel_i.probe_sizes,
+            probe_sizes=sel_i.probe_sizes, dfilter=dfilter,
         )
 
     return jax.vmap(one)(q, qmask, sel) if query_batch else one(q, qmask, sel)
 
 
 @functools.partial(jax.jit, static_argnames=("config", "query_batch"))
-def reduce_from_scored(index, scored, mse, config, query_batch: bool = False) -> TopKResult:
+def reduce_from_scored(
+    index, scored, mse, config, query_batch: bool = False, dfilter=None
+) -> TopKResult:
     """Stage 3 from ``score_from_probes`` output, jit'd per config.
 
     ``mse`` is the WARP_SELECT missing-similarity estimate (f32[Q], or
@@ -613,7 +647,8 @@ def reduce_from_scored(index, scored, mse, config, query_batch: bool = False) ->
     def one(sc_i, m_i):
         doc_ids, qtok, scores, valid = sc_i
         return reduce_candidates(
-            index, doc_ids, qtok, scores, valid, m_i, config, q_max=q_max
+            index, doc_ids, qtok, scores, valid, m_i, config, q_max=q_max,
+            dfilter=dfilter,
         )
 
     return jax.vmap(one)(scored, mse) if query_batch else one(scored, mse)
@@ -731,7 +766,13 @@ def kernel_dma_compute_split(
 
 
 @functools.partial(jax.jit, static_argnames=("config",))
-def _search_one(index: WarpIndex, q: jax.Array, qmask: jax.Array, config: WarpSearchConfig) -> TopKResult:
+def _search_one(
+    index: WarpIndex,
+    q: jax.Array,
+    qmask: jax.Array,
+    config: WarpSearchConfig,
+    dfilter: FilterView | None = None,
+) -> TopKResult:
     sel = warp_select(
         q,
         index.centroids,
@@ -743,7 +784,25 @@ def _search_one(index: WarpIndex, q: jax.Array, qmask: jax.Array, config: WarpSe
     )
     return score_and_reduce(
         index, q, qmask, sel.probe_scores, sel.probe_cids, sel.mse, config,
-        probe_sizes=sel.probe_sizes,
+        probe_sizes=sel.probe_sizes, dfilter=dfilter,
+    )
+
+
+def _as_filter_view(dfilter, index) -> FilterView | None:
+    """Accept either a ``DocFilter`` (resolved here against the index) or
+    an already-resolved ``FilterView`` (passed through)."""
+    if dfilter is None or isinstance(dfilter, FilterView):
+        return dfilter
+    if isinstance(dfilter, DocFilter):
+        if dfilter.n_docs != index.n_docs:
+            raise ValueError(
+                f"DocFilter covers {dfilter.n_docs} docs but the index "
+                f"holds {index.n_docs} — build the filter against this "
+                "index's doc-id space"
+            )
+        return resolve_local(dfilter, index)
+    raise TypeError(
+        f"dfilter must be a DocFilter or FilterView, got {type(dfilter)!r}"
     )
 
 
@@ -752,21 +811,27 @@ def search(
     q: jax.Array,
     qmask: jax.Array | None = None,
     config: WarpSearchConfig = WarpSearchConfig(),
+    *,
+    dfilter=None,
 ) -> TopKResult:
     """Single query: q f32[Q, D] (rows L2-normalized by caller or encoder).
 
     Convenience wrapper over the planned pipeline; equivalent to
     ``Retriever.from_index(index).retrieve(q, qmask, config=config)``.
+    ``dfilter`` restricts retrieval to a ``DocFilter``'s survivors.
     """
     config = resolve_config(index, config)
     if qmask is None:
         qmask = jnp.ones((q.shape[0],), bool)
-    return _search_one(index, jnp.asarray(q, jnp.float32), qmask, config)
+    fv = _as_filter_view(dfilter, index)
+    return _search_one(index, jnp.asarray(q, jnp.float32), qmask, config, fv)
 
 
 @functools.partial(jax.jit, static_argnames=("config",))
-def _search_many(index, q, qmask, config):
-    return jax.vmap(lambda qq, mm: _search_one(index, qq, mm, config))(q, qmask)
+def _search_many(index, q, qmask, config, dfilter=None):
+    return jax.vmap(
+        lambda qq, mm: _search_one(index, qq, mm, config, dfilter)
+    )(q, qmask)
 
 
 def search_batch(
@@ -774,6 +839,8 @@ def search_batch(
     q: jax.Array,
     qmask: jax.Array | None = None,
     config: WarpSearchConfig = WarpSearchConfig(),
+    *,
+    dfilter=None,
 ) -> TopKResult:
     """Batched queries: q f32[B, Q, D] -> TopKResult with leading batch dim.
 
@@ -783,4 +850,5 @@ def search_batch(
     config = resolve_config(index, config)
     if qmask is None:
         qmask = jnp.ones(q.shape[:2], bool)
-    return _search_many(index, jnp.asarray(q, jnp.float32), qmask, config)
+    fv = _as_filter_view(dfilter, index)
+    return _search_many(index, jnp.asarray(q, jnp.float32), qmask, config, fv)

@@ -66,6 +66,7 @@ def two_stage_reduce(
     scores: jax.Array,
     valid: jax.Array,
     mse: jax.Array,
+    doc_mask: jax.Array | None = None,
     *,
     q_max: int,
     k: int,
@@ -80,6 +81,11 @@ def two_stage_reduce(
     scores:   f32[N] token-level scores (centroid + selective residual sum).
     valid:    bool[N] padding / masked-query-token indicator.
     mse:      f32[q_max] missing similarity estimates (0 at masked tokens).
+    doc_mask: optional bool[n_docs] survivor bitmap (see
+              ``core/docfilter.py``): filtered documents' totals are
+              masked to -inf before top-k. Because the imputation ``mse``
+              never depends on which candidates survive, masking here is
+              exact — surviving documents keep bit-identical scores.
 
     impl: "scan" — tuple segmented scans (baseline; O(log N) full passes);
           "segment" — cumsum run indices + segment_max/segment_sum scatters
@@ -168,6 +174,12 @@ def two_stage_reduce(
         dsum = _segmented_scan(jnp.add, doc_start, adj)
         total = dsum + jnp.sum(mse)
 
+    if doc_mask is not None:
+        # Filter pushdown endpoint: a filtered doc's run-end total becomes
+        # -inf, so it cannot enter top-k. Invalid rows carry KEY_SENTINEL
+        # doc ids — clip for the gather; doc_end is already False there.
+        survives = doc_mask[jnp.clip(docid, 0, doc_mask.shape[0] - 1)]
+        doc_end = doc_end & survives
     final = jnp.where(doc_end, total, -jnp.inf)
     top_scores, top_idx = jax.lax.top_k(final, k)
     top_docs = jnp.where(

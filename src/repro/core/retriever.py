@@ -63,6 +63,7 @@ import numpy as np
 
 from repro import obs
 from repro.core import distributed as dist
+from repro.core import docfilter as df
 from repro.core import engine
 from repro.core import worklist as wl
 from repro.core.index import build_index
@@ -71,7 +72,66 @@ from repro.core.types import IndexBuildConfig, WarpIndex, WarpSearchConfig
 from repro.kernels import ops
 from repro.obs import STATE as _OBS
 
-__all__ = ["Retriever", "SearchPlan"]
+__all__ = ["Retriever", "SearchPlan", "K_LADDER", "ladder_rung", "laddered_config"]
+
+
+# ---------------------------------------------------------------------------
+# k-laddered config resolution
+# ---------------------------------------------------------------------------
+
+# Per-k retrieval hyperparameter ladder, mirroring the reference searcher's
+# k-laddered defaults: small k needs few probes; deep result lists need a
+# wider probe set, a deeper imputation scan, and a larger t' so the missing
+# similarity estimate stays calibrated over more candidates. Each rung is
+# (k upper bound inclusive — None = unbounded, rung name, overrides).
+K_LADDER = (
+    (10, "small", dict(nprobe=16, k_impute=32, t_prime_scale=0.5)),
+    (100, "medium", dict(nprobe=32, k_impute=64, t_prime_scale=1.0)),
+    (None, "large", dict(nprobe=64, k_impute=128, t_prime_scale=2.0)),
+)
+
+
+def ladder_rung(k: int) -> tuple[str, dict]:
+    """(rung name, parameter overrides) for a requested result depth."""
+    for bound, name, params in K_LADDER:
+        if bound is None or k <= bound:
+            return name, params
+    raise AssertionError("unreachable: ladder has an unbounded rung")
+
+
+def laddered_config(
+    k: int,
+    config: WarpSearchConfig | None = None,
+    *,
+    n_tokens: int | None = None,
+    n_centroids: int | None = None,
+) -> WarpSearchConfig:
+    """Resolve per-request retrieval hyperparameters from the requested
+    ``k`` (``K_LADDER``), with explicit settings taking precedence.
+
+    A field of ``config`` that differs from the ``WarpSearchConfig``
+    dataclass default is treated as pinned by the caller and never
+    overridden; fields left at their defaults take the ladder value for
+    ``k``'s rung. With index geometry (``n_tokens`` / ``n_centroids``) the
+    ladder also concretizes ``t_prime`` (``t_prime_scale * sqrt(n_tokens)``,
+    clamped) and clamps ``nprobe`` to the centroid count — without it those
+    stay data-dependent and resolve at plan time as before.
+    """
+    base = config if config is not None else WarpSearchConfig()
+    default = WarpSearchConfig()
+    _, params = ladder_rung(int(k))
+    kw: dict = {"k": int(k)}
+    if base.nprobe == default.nprobe:
+        nprobe = int(params["nprobe"])
+        if n_centroids is not None:
+            nprobe = max(1, min(nprobe, int(n_centroids)))
+        kw["nprobe"] = nprobe
+    if base.k_impute == default.k_impute:
+        kw["k_impute"] = int(params["k_impute"])
+    if base.t_prime is None and n_tokens:
+        tp = int(params["t_prime_scale"] * (int(n_tokens) ** 0.5))
+        kw["t_prime"] = max(1, min(tp, base.t_prime_max, int(n_tokens)))
+    return dataclasses.replace(base, **kw)
 
 
 class _StagedLocal:
@@ -89,12 +149,16 @@ class _StagedLocal:
     ``shard_map``/per-segment merges and trace as one engine span.
     """
 
-    __slots__ = ("base_cfg", "pick", "cfg_at")
+    __slots__ = ("base_cfg", "pick", "cfg_at", "fview")
 
-    def __init__(self, base_cfg, pick, cfg_at):
+    def __init__(self, base_cfg, pick, cfg_at, fview=None):
         self.base_cfg = base_cfg
         self.pick = pick
         self.cfg_at = cfg_at
+        # Resolved FilterView of a filtered plan (None unfiltered): the
+        # traced stages must thread the same filter the untraced dispatch
+        # runs with, or traced results would silently ignore it.
+        self.fview = fview
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -133,6 +197,10 @@ class SearchPlan:
     # Mutable fallback state (the dataclass is frozen; the dict is not):
     # {"active", "warned", "error", "single", "batch", "batch_at"}.
     _fallback: dict = dataclasses.field(repr=False, default_factory=dict)
+    # ``DocFilter.describe()`` of a filtered plan (None unfiltered) — part
+    # of the describe()/fingerprint() snapshot, so a filtered plan can
+    # never alias an unfiltered (or differently filtered) one in caches.
+    filter_info: dict | None = None
 
     @property
     def t_prime(self) -> int:
@@ -329,7 +397,8 @@ class SearchPlan:
                     worklist_tiles=run_cfg.worklist_tiles,
                 ) as sp:
                     scored = engine.score_from_probes(
-                        self._index, q, qmask, sel, run_cfg, query_batch
+                        self._index, q, qmask, sel, run_cfg, query_batch,
+                        dfilter=stg.fview,
                     )
                     jax.block_until_ready(scored)
                     if _OBS.kernel_probes:
@@ -342,7 +411,8 @@ class SearchPlan:
                     k=run_cfg.k, impl=run_cfg.reduce_impl,
                 ) as sp:
                     out = engine.reduce_from_scored(
-                        self._index, scored, sel.mse, run_cfg, query_batch
+                        self._index, scored, sel.mse, run_cfg, query_batch,
+                        dfilter=stg.fview,
                     )
                     jax.block_until_ready(out)
                 self._obs_stage(reg, "reduce", sp)
@@ -481,9 +551,17 @@ class SearchPlan:
             "nprobe": cfg.nprobe,
             "t_prime": cfg.t_prime,
             "k": cfg.k,
+            # The K_LADDER rung this plan's k falls in — the label
+            # ``plan_for_k`` resolved defaults from (explicit settings
+            # still override; see ``laddered_config``).
+            "k_ladder": ladder_rung(cfg.k)[0],
             "k_impute": cfg.k_impute,
             "n_shards": self.n_shards,
             "backend": self.backend,
+            # Filter identity (None unfiltered): kind/survivors/digest —
+            # fingerprints of a filtered and an unfiltered plan (or two
+            # different filters) can never collide.
+            "filter": self.filter_info,
             **geo,
         }
 
@@ -513,7 +591,9 @@ class Retriever:
     ):
         self.index = index
         self.shard_axes = shard_axes
-        self._plans: dict[WarpSearchConfig, SearchPlan] = {}
+        # Keyed by (config, filter digest | None): filtered plans never
+        # alias unfiltered ones, and equal-survivor filters share a plan.
+        self._plans: dict[tuple, SearchPlan] = {}
         if self.is_segmented and mesh is not None:
             raise ValueError("mesh= does not apply to a SegmentedWarpIndex")
         if self.is_sharded:
@@ -610,26 +690,46 @@ class Retriever:
         return self.index.n_shards if self.is_sharded else 1
 
     # ---- plan/execute ----
-    def plan(self, config: WarpSearchConfig = WarpSearchConfig()) -> SearchPlan:
+    def plan(
+        self,
+        config: WarpSearchConfig = WarpSearchConfig(),
+        *,
+        dfilter: "df.DocFilter | None" = None,
+    ) -> SearchPlan:
         """Validate ``config`` against index geometry + backend capabilities
         and compile the pipeline. Raises ValueError on an unsatisfiable
-        config; returns a cached plan for a previously planned config."""
-        cached = self._plans.get(config)
+        config; returns a cached plan for a previously planned config.
+
+        ``dfilter`` restricts retrieval to the filter's surviving doc ids
+        (``core/docfilter.py``): the filter is resolved against the index
+        geometry once here and threaded through the pipeline as a runtime
+        operand — filtered plans are cached per (config, filter digest),
+        and two filters with the same survivor set share a plan. Filtered
+        top-k doc ids are bit-identical to post-hoc-filtering an
+        unfiltered retrieval at inflated k (see the docfilter module for
+        the exactness argument)."""
+        if dfilter is not None and not isinstance(dfilter, df.DocFilter):
+            raise TypeError(
+                f"dfilter must be a DocFilter, got {type(dfilter).__name__}"
+            )
+        key = (config, dfilter.digest if dfilter is not None else None)
+        cached = self._plans.get(key)
         if cached is not None:
             return cached
+        fctx = self._resolve_filter(dfilter)
         resolved = self._resolve(config)
         self._validate(resolved)
-        single, bucket_for = self._compile_single(resolved)
-        batch, batch_at = self._compile_batch(resolved)
+        single, bucket_for = self._compile_single(resolved, fctx)
+        batch, batch_at = self._compile_batch(resolved, fctx)
 
         fallback_factory = None
         if resolved.executor == "kernel":
-            def fallback_factory(_self=self, _cfg=resolved):
+            def fallback_factory(_self=self, _cfg=resolved, _fctx=fctx):
                 # Same resolved pipeline, reference executor: identical
                 # candidate sets + summation order -> bit-identical top-k.
                 ref_cfg = dataclasses.replace(_cfg, executor="reference")
-                fb_single, _ = _self._compile_single(ref_cfg)
-                fb_batch, fb_batch_at = _self._compile_batch(ref_cfg)
+                fb_single, _ = _self._compile_single(ref_cfg, _fctx)
+                fb_batch, fb_batch_at = _self._compile_batch(ref_cfg, _fctx)
                 return fb_single, fb_batch, fb_batch_at
 
         plan = SearchPlan(
@@ -642,30 +742,85 @@ class Retriever:
             _index=self.index,
             _bucket_for=bucket_for,
             _batch_at=batch_at,
-            _staged=self._staged_recipe(resolved),
+            _staged=self._staged_recipe(resolved, fctx),
             _fallback_factory=fallback_factory,
+            filter_info=(
+                dfilter.describe() if dfilter is not None else None
+            ),
         )
-        self._plans[config] = plan
-        self._plans[resolved] = plan
+        self._plans[key] = plan
+        self._plans[(resolved, key[1])] = plan
         return plan
+
+    def plan_for_k(
+        self,
+        k: int,
+        config: WarpSearchConfig | None = None,
+        *,
+        dfilter: "df.DocFilter | None" = None,
+    ) -> SearchPlan:
+        """Plan with per-request k-laddered defaults: resolve retrieval
+        hyperparameters from the requested result depth (``K_LADDER`` via
+        ``laddered_config`` — explicit ``config`` settings still win),
+        then plan as usual. The chosen rung is visible as ``k_ladder`` in
+        ``describe()``; plans at different rungs carry distinct
+        fingerprints."""
+        n_tokens = (
+            self.index.resolved_n_tokens()
+            if self.is_sharded
+            else self.index.n_tokens
+        )
+        cfg = laddered_config(
+            k,
+            config,
+            n_tokens=n_tokens,
+            n_centroids=self.index.n_centroids,
+        )
+        return self.plan(cfg, dfilter=dfilter)
 
     def retrieve(
         self,
         q: jax.Array,
         qmask: jax.Array | None = None,
         config: WarpSearchConfig = WarpSearchConfig(),
+        *,
+        dfilter: "df.DocFilter | None" = None,
     ) -> TopKResult:
         """Plan (cached) + single-query dispatch."""
-        return self.plan(config).retrieve(q, qmask)
+        return self.plan(config, dfilter=dfilter).retrieve(q, qmask)
 
     def retrieve_batch(
         self,
         q: jax.Array,
         qmask: jax.Array | None = None,
         config: WarpSearchConfig = WarpSearchConfig(),
+        *,
+        dfilter: "df.DocFilter | None" = None,
     ) -> TopKResult:
         """Plan (cached) + batched dispatch."""
-        return self.plan(config).retrieve_batch(q, qmask)
+        return self.plan(config, dfilter=dfilter).retrieve_batch(q, qmask)
+
+    def _resolve_filter(self, dfilter):
+        """Resolve a ``DocFilter`` against this index's geometry: a local
+        ``FilterView``, a stacked per-shard view, or the segmented triple
+        (see ``core/docfilter.py``). None passes through."""
+        if dfilter is None:
+            return None
+        if not isinstance(dfilter, df.DocFilter):
+            raise TypeError(
+                f"dfilter must be a DocFilter, got {type(dfilter).__name__}"
+            )
+        if dfilter.n_docs != self.n_docs:
+            raise ValueError(
+                f"DocFilter covers {dfilter.n_docs} docs but the index "
+                f"holds {self.n_docs}; rebuild the filter against this "
+                "corpus snapshot"
+            )
+        if self.is_sharded:
+            return df.resolve_sharded(dfilter, self.index)
+        if self.is_segmented:
+            return df.resolve_segmented(dfilter, self.index)
+        return df.resolve_local(dfilter, self.index)
 
     # ---- internals ----
     def _resolve(self, config: WarpSearchConfig) -> WarpSearchConfig:
@@ -786,14 +941,14 @@ class Retriever:
             and len(cfg.worklist_buckets) > 1
         )
 
-    def _staged_recipe(self, cfg: WarpSearchConfig):
+    def _staged_recipe(self, cfg: WarpSearchConfig, fctx=None):
         """The ``_StagedLocal`` recipe the traced path re-composes the
         pipeline from, or None on sharded/segmented indexes (their stages
         run inside ``shard_map`` / per-segment merges — one engine span)."""
         if self.is_sharded or self.is_segmented:
             return None
         if self._is_adaptive(cfg):
-            pick = self._local_sel_picker(cfg)
+            pick = self._local_sel_picker(cfg, fview=fctx)
 
             def cfg_at(b, _cfg=cfg):
                 if b is None:
@@ -808,19 +963,24 @@ class Retriever:
             def cfg_at(b, _cfg=cfg):
                 return _cfg
 
-        return _StagedLocal(cfg, pick, cfg_at)
+        return _StagedLocal(cfg, pick, cfg_at, fview=fctx)
 
-    def _local_sel_picker(self, cfg: WarpSearchConfig):
+    def _local_sel_picker(self, cfg: WarpSearchConfig, fview=None):
         """``(sel, qmask) -> smallest ladder rung`` fitting the masked
         probe tile demand of a WARP_SELECT output — shared by the
         adaptive dispatcher and the traced staged path so the two rung
-        choices cannot drift."""
+        choices cannot drift. With ``fview`` probe runs whose cluster
+        holds no surviving tokens count zero tiles (the worklist drops
+        them), so a selective filter lowers the chosen rung."""
         buckets = cfg.worklist_buckets
         tile = ops.resolve_tile_c(self.index.cap, cfg.tile_c, layout="ragged")
         # memory="full" builds one flat worklist over all Q query tokens
         # (demand amortizes across tokens); "scan_qtokens" builds one per
         # token, so the bucket must fit the worst single token.
         amortized = cfg.memory == "full"
+        live_np = (
+            np.asarray(fview.cluster_live, bool) if fview is not None else None
+        )
 
         def pick(sel, qmask):
             # Masked query tokens build no worklist tiles (the engine
@@ -828,45 +988,67 @@ class Retriever:
             # demand is computed over active tokens only; otherwise short
             # queries and batch padding rows would inflate the rung.
             m = np.asarray(qmask, bool)
-            tiles = wl.probe_tile_counts(sel.probe_sizes, tile) * m[..., None]
+            sizes = np.asarray(sel.probe_sizes)
+            if live_np is not None:
+                sizes = wl.filtered_probe_sizes(
+                    sizes, np.asarray(sel.probe_cids), live_np
+                )
+            tiles = wl.probe_tile_counts(sizes, tile) * m[..., None]
             needed = wl.needed_worklist_tiles(tiles, amortized=amortized)
             return wl.pick_bucket(buckets, needed)
 
         return pick
 
-    def _compile_single(self, cfg: WarpSearchConfig):
+    def _compile_single(self, cfg: WarpSearchConfig, fctx=None):
         """-> (search fn, bucket probe | None) for single-query dispatch."""
         if self._is_adaptive(cfg):
-            run, bucket_for, _ = self._adaptive_dispatch(cfg, query_batch=False)
+            run, bucket_for, _ = self._adaptive_dispatch(
+                cfg, query_batch=False, fctx=fctx
+            )
             return run, bucket_for
-        return self._static_fn(cfg, query_batch=False), None
+        return self._static_fn(cfg, query_batch=False, fctx=fctx), None
 
-    def _compile_batch(self, cfg: WarpSearchConfig):
+    def _compile_batch(self, cfg: WarpSearchConfig, fctx=None):
         """-> (batch fn, forced-rung accessor | None)."""
         if self._is_adaptive(cfg):
             # The batch dispatcher picks one bucket covering the whole
             # batch (max demand over batch elements): one program per call.
-            run, _, fn_at = self._adaptive_dispatch(cfg, query_batch=True)
-            return run, fn_at
-        return self._static_fn(cfg, query_batch=True), None
-
-    def _static_fn(self, cfg: WarpSearchConfig, *, query_batch: bool):
-        if self.is_sharded:
-            return dist.make_sharded_search_fn(
-                self.index, cfg, self.mesh, self.shard_axes,
-                query_batch=query_batch,
+            run, _, fn_at = self._adaptive_dispatch(
+                cfg, query_batch=True, fctx=fctx
             )
+            return run, fn_at
+        return self._static_fn(cfg, query_batch=True, fctx=fctx), None
+
+    def _static_fn(self, cfg: WarpSearchConfig, *, query_batch: bool, fctx=None):
+        if self.is_sharded:
+            fn = dist.make_sharded_search_fn(
+                self.index, cfg, self.mesh, self.shard_axes,
+                query_batch=query_batch, with_filter=fctx is not None,
+            )
+            if fctx is not None:
+                return lambda index, q, qmask: fn(index, q, qmask, fctx)
+            return fn
         if self.is_segmented:
             from repro.store.segments import make_segmented_search_fn
 
-            return make_segmented_search_fn(
-                self.index, cfg, query_batch=query_batch
+            run = make_segmented_search_fn(
+                self.index, cfg, query_batch=query_batch,
+                with_filter=fctx is not None,
             )
+            if fctx is not None:
+                return lambda index, q, qmask: run(index, q, qmask, fctx)
+            return run
         if query_batch:
-            return lambda index, q, qmask: engine._search_many(index, q, qmask, cfg)
-        return lambda index, q, qmask: engine._search_one(index, q, qmask, cfg)
+            return lambda index, q, qmask: engine._search_many(
+                index, q, qmask, cfg, dfilter=fctx
+            )
+        return lambda index, q, qmask: engine._search_one(
+            index, q, qmask, cfg, dfilter=fctx
+        )
 
-    def _adaptive_dispatch(self, cfg: WarpSearchConfig, *, query_batch: bool):
+    def _adaptive_dispatch(
+        self, cfg: WarpSearchConfig, *, query_batch: bool, fctx=None
+    ):
         """Build the query-adaptive ragged dispatcher.
 
         Returns (run fn, bucket probe). Per call the probe computes the
@@ -876,6 +1058,11 @@ class Retriever:
         compilation per rung is lazy and cached, so steady state is one
         cheap stage-1 (or none: the local path reuses its probe output)
         plus one compiled call.
+
+        With ``fctx`` (a resolved filter view) demand counts only probe
+        runs whose cluster holds surviving tokens — the same runs the
+        filtered worklist keeps — so a selective filter lowers the chosen
+        rung, and the compiled pipelines thread the filter operand.
         """
         buckets = cfg.worklist_buckets
         tile = ops.resolve_tile_c(self.index.cap, cfg.tile_c, layout="ragged")
@@ -929,13 +1116,27 @@ class Retriever:
             return tiles * m[..., None]
 
         if self.is_sharded:
+            shard_live = (
+                np.asarray(fctx.cluster_live, bool)
+                if fctx is not None
+                else None
+            )
 
             def bucket_for(q, qmask):
                 # One bucket for all shards (max demand): the shard_map
                 # body is a single program and stays unbranched.
-                sizes = dist.sharded_probe_sizes(
+                sizes, cids = dist.sharded_probe_sizes(
                     self.index, q, qmask, cfg, query_batch
                 )
+                sizes = np.asarray(sizes)
+                if shard_live is not None:
+                    # Per-shard liveness gather: probe runs on clusters
+                    # with no surviving tokens build no worklist tiles.
+                    cids_np = np.asarray(cids)
+                    shard_idx = np.arange(shard_live.shape[0]).reshape(
+                        (-1,) + (1,) * (cids_np.ndim - 1)
+                    )
+                    sizes = np.where(shard_live[shard_idx, cids_np], sizes, 0)
                 tiles = masked_tiles(
                     wl.probe_tile_counts(sizes, tile),
                     np.asarray(qmask, bool)[None],  # broadcast over shards
@@ -943,13 +1144,16 @@ class Retriever:
                 needed = wl.needed_worklist_tiles(tiles, amortized=amortized)
                 return wl.pick_bucket(buckets, needed + PREPASS_SLACK)
 
-            return lazy_bucket_runner(
-                bucket_for,
-                lambda b: dist.make_sharded_search_fn(
+            def make_sharded_fn(b):
+                fn = dist.make_sharded_search_fn(
                     self.index, bucket_cfg(b), self.mesh, self.shard_axes,
-                    query_batch=query_batch,
-                ),
-            )
+                    query_batch=query_batch, with_filter=fctx is not None,
+                )
+                if fctx is not None:
+                    return lambda index, q, qmask: fn(index, q, qmask, fctx)
+                return fn
+
+            return lazy_bucket_runner(bucket_for, make_sharded_fn)
 
         if self.is_segmented:
             from repro.store.segments import (
@@ -961,9 +1165,13 @@ class Retriever:
             combined_sizes = idx.combined_cluster_sizes()
             # Combined per-cluster tile demand: one flat worklist spans
             # the segments, so a probed cluster costs the SUM of its
-            # per-segment tile counts.
-            per_seg = idx.per_segment_cluster_sizes()
-            cluster_tiles = ((per_seg + tile - 1) // tile).sum(axis=0)
+            # per-segment tile counts. Filtered plans zero the
+            # (segment, cluster) cells with no surviving tokens — those
+            # runs never enter the worklist.
+            per_seg_tiles = (idx.per_segment_cluster_sizes() + tile - 1) // tile
+            if fctx is not None:
+                per_seg_tiles = per_seg_tiles * fctx[2]
+            cluster_tiles = per_seg_tiles.sum(axis=0)
             centroids = idx.base.centroids
 
             def bucket_for(q, qmask):
@@ -976,19 +1184,23 @@ class Retriever:
                 needed = wl.needed_worklist_tiles(tiles, amortized=True)
                 return wl.pick_bucket(buckets, needed + PREPASS_SLACK)
 
-            return lazy_bucket_runner(
-                bucket_for,
-                lambda b: make_segmented_search_fn(
-                    idx, bucket_cfg(b), query_batch=query_batch
-                ),
-            )
+            def make_segmented_fn(b):
+                run = make_segmented_search_fn(
+                    idx, bucket_cfg(b), query_batch=query_batch,
+                    with_filter=fctx is not None,
+                )
+                if fctx is not None:
+                    return lambda index, q, qmask: run(index, q, qmask, fctx)
+                return run
+
+            return lazy_bucket_runner(bucket_for, make_segmented_fn)
 
         # Local path: stage 1 runs ONCE (select_probes), the bucket is
         # read off its probe sizes, and stages 2+3 finish under the
         # bucket's static bound — no duplicated work at all. The picker is
         # shared with the traced staged path (``_local_sel_picker``) so
         # traced and untraced rung choices cannot drift.
-        bucket_from_sel = self._local_sel_picker(cfg)
+        bucket_from_sel = self._local_sel_picker(cfg, fview=fctx)
 
         def bucket_for(q, qmask):
             sel = engine.select_probes(self.index, q, qmask, cfg, query_batch)
@@ -1003,7 +1215,7 @@ class Retriever:
             def fn(index, q, qmask):
                 sel = engine.select_probes(index, q, qmask, cfg, query_batch)
                 return engine.finish_from_probes(
-                    index, q, qmask, sel, fcfg, query_batch
+                    index, q, qmask, sel, fcfg, query_batch, dfilter=fctx
                 )
 
             return fn
@@ -1012,7 +1224,7 @@ class Retriever:
             sel = engine.select_probes(index, q, qmask, cfg, query_batch)
             b = bucket_from_sel(sel, qmask)
             return engine.finish_from_probes(
-                index, q, qmask, sel, bucket_cfg(b), query_batch
+                index, q, qmask, sel, bucket_cfg(b), query_batch, dfilter=fctx
             )
 
         return run, bucket_for, lazy_fn_at(make_fn)

@@ -94,6 +94,7 @@ __all__ = [
     "probe_tile_counts",
     "needed_worklist_tiles",
     "pick_bucket",
+    "filtered_probe_sizes",
 ]
 
 # Default number of rungs in the adaptive bucket ladder (incl. the static
@@ -213,6 +214,24 @@ def needed_worklist_tiles(tiles, *, amortized: bool = True) -> int:
     else:
         need = per_qtok
     return max(1, int(need.max()) if need.size else 1)
+
+
+def filtered_probe_sizes(probe_sizes, probe_cids, cluster_live):
+    """Zero the probe sizes of clusters with no surviving tokens.
+
+    The doc-filter pushdown point for the worklist (``core/docfilter.py``):
+    a probed cluster whose every token belongs to a filtered doc is dead —
+    zeroing its size makes it contribute no tiles to
+    ``build_tile_worklist`` *and* no demand to ``needed_worklist_tiles``,
+    so the adaptive rung choice tracks surviving candidates only. Works on
+    both jnp tracers (inside the jit pipeline) and host numpy (the
+    dispatcher's demand accounting); shapes broadcast ``[..., Q, P]``
+    against ``cluster_live[C]``.
+    """
+    if isinstance(probe_sizes, np.ndarray):
+        live = np.asarray(cluster_live, bool)[np.asarray(probe_cids)]
+        return np.where(live, probe_sizes, 0)
+    return jnp.where(cluster_live[probe_cids], probe_sizes, 0)
 
 
 def pick_bucket(buckets: tuple[int, ...], needed: int) -> int:

@@ -27,6 +27,15 @@ On top of that deadline core the server composes the serving subsystem:
   SLO gate that sheds load with a typed ``Overloaded`` instead of
   queueing unboundedly, and a compaction-trigger policy that runs
   ``store.compact()`` + ``reload()`` from the server loop.
+- **multi-index routing + filtered retrieval**: ``add_tenant`` registers
+  additional served indexes behind ``submit(tenant=...)`` — each tenant
+  gets an independent (index, plan ladder, cache namespace, metrics
+  labels) tuple behind the one ``BucketScheduler``; ``submit(dfilter=)``
+  pushes a ``DocFilter`` into the pipeline (bit-identical to post-hoc
+  filtering, see ``core/docfilter.py``); ``delete_documents`` tombstones
+  doc ids — filtered out of every reply immediately, reclaimed at the
+  next compaction. Tenant and filter are folded into cache keys and
+  batch groups, so no reply, cache entry, or batch ever crosses them.
 
 The server dispatches through the unified ``Retriever`` plan, so it
 serves single-device, document-sharded, AND segmented indexes with the
@@ -88,6 +97,7 @@ import numpy as np
 from repro import fault, obs
 from repro.core import Retriever, WarpSearchConfig
 from repro.core.distributed import ShardedWarpIndex
+from repro.core.docfilter import DocFilter
 from repro.core.types import WarpIndex
 from repro.serving.admission import (
     AdmissionGate,
@@ -141,6 +151,55 @@ class _Pending:
     arrival: float
     qkey: str | None = None  # content hash (None with caching disabled)
     deadline: float | None = None  # absolute, on the server clock
+    tenant: str | None = None  # routing handle (None = default index)
+    dfilter: DocFilter | None = None  # request filter, pre-tombstone merge
+    plan: object | None = None  # resolved (possibly filtered) SearchPlan
+    fp: str | None = None  # that plan's fingerprint (cache-key component)
+    group: tuple | None = None  # scheduler batch-homogeneity key
+
+
+@dataclasses.dataclass
+class _Tenant:
+    """Per-index serving state behind one ``tenant=`` routing handle.
+
+    The server keeps one record per served index — the default tenant
+    (key ``None``, the index the server was constructed with) plus any
+    ``add_tenant`` extras — each with its own retriever, plan ladder,
+    cache namespace (tenant + filter digest are folded into every cache
+    key), and metrics labels, all multiplexed behind the one
+    ``BucketScheduler``.
+
+    ``deleted`` / ``tomb`` are the tombstone view: doc ids removed by
+    ``delete_documents`` keep occupying the index until the next
+    compaction, but every request against this tenant is intersected
+    with the ``DocFilter.tombstones`` view so they can never appear in a
+    reply. A reload from a store path re-reads ``tombstones.json`` (a
+    post-compact store carries none, closing the lifecycle).
+    """
+
+    name: str | None = None
+    retriever: Retriever | None = None
+    requested_config: WarpSearchConfig | None = None
+    plan: object | None = None  # base (unfiltered) SearchPlan
+    config: WarpSearchConfig | None = None  # the plan's resolved config
+    fingerprint: str | None = None
+    store_path: str | None = None
+    quarantined: tuple = ()
+    deleted: frozenset = dataclasses.field(default_factory=frozenset)
+    tomb: DocFilter | None = None  # DocFilter.tombstones over ``deleted``
+
+
+def _default_tenant_field(field: str):
+    """Legacy single-index attribute (``server.retriever`` & co.) as a
+    read/write view onto the default tenant's record."""
+
+    def _get(self):
+        return getattr(self._tenants[None], field)
+
+    def _set(self, value):
+        setattr(self._tenants[None], field, value)
+
+    return property(_get, _set)
 
 
 class RetrievalServer:
@@ -163,6 +222,14 @@ class RetrievalServer:
         # by default so two servers (or two tests) never share counts;
         # launch/serve.py passes the process registry for exposition.
         self.metrics = registry if registry is not None else obs.MetricsRegistry()
+        # All per-index serving state lives in per-tenant records: the
+        # default tenant (key None) is the index this server was built
+        # with; ``add_tenant`` registers more. The legacy single-index
+        # attributes (``retriever``/``plan``/``config``/...) are property
+        # views onto the default record, so existing callers are
+        # untouched.
+        self._tenants: dict = {None: _Tenant()}
+        self._tenant_c: dict = {}
         self.retriever = (
             index if isinstance(index, Retriever) else Retriever.from_index(index)
         )
@@ -260,11 +327,208 @@ class RetrievalServer:
             "serving_index_epoch", "Current served index epoch"
         )
 
+    # ---- default-tenant views (legacy single-index attribute API) ----
+    retriever = _default_tenant_field("retriever")
+    plan = _default_tenant_field("plan")
+    config = _default_tenant_field("config")
+    store_path = _default_tenant_field("store_path")
+    _requested_config = _default_tenant_field("requested_config")
+    _fingerprint = _default_tenant_field("fingerprint")
+    _quarantined = _default_tenant_field("quarantined")
+
     @property
     def stats(self) -> dict:
         """Legacy counter dict (batches/padded_slots/served/reloads/
         cache_hits/compactions), reconstructed from the registry."""
         return {k: int(c.value) for k, c in self._c.items()}
+
+    # ---- multi-tenant routing ----
+    def _state(self, tenant) -> _Tenant:
+        try:
+            return self._tenants[tenant]
+        except KeyError:
+            known = sorted(t for t in self._tenants if t is not None)
+            raise KeyError(
+                f"unknown tenant {tenant!r} (registered: {known or 'none'}; "
+                f"None is the default index)"
+            ) from None
+
+    def _tenant_counters(self, tenant) -> dict:
+        lab = "default" if tenant is None else tenant
+        tc = self._tenant_c.get(lab)
+        if tc is None:
+            tc = self._tenant_c[lab] = {
+                "submitted": self.metrics.counter(
+                    "serving_tenant_submitted_total",
+                    "Requests admitted for this tenant", tenant=lab,
+                ),
+                "served": self.metrics.counter(
+                    "serving_tenant_served_total",
+                    "Requests completed for this tenant", tenant=lab,
+                ),
+                "cache_hits": self.metrics.counter(
+                    "serving_tenant_cache_hits_total",
+                    "Submit-time result-cache hits for this tenant",
+                    tenant=lab,
+                ),
+            }
+        return tc
+
+    @staticmethod
+    def _effective_filter(state: _Tenant, dfilter):
+        """The filter a request actually runs under: the request's own
+        ``dfilter`` intersected with the tenant's tombstone view (deleted
+        docs must stay invisible no matter what the caller asked for)."""
+        if dfilter is not None and not isinstance(dfilter, DocFilter):
+            raise TypeError(
+                f"dfilter must be a DocFilter, got {type(dfilter).__name__}"
+            )
+        if dfilter is None:
+            return state.tomb
+        if state.tomb is None:
+            return dfilter
+        return dfilter.intersect(state.tomb)
+
+    def _plan_for(self, state: _Tenant, dfilter):
+        """-> ``(plan, fingerprint, effective_filter)`` for one request.
+
+        Unfiltered requests reuse the tenant's pre-warmed base plan;
+        filtered ones go through ``Retriever.plan(dfilter=)``, which
+        caches per (config, filter digest) — repeat filters compile
+        once."""
+        eff = self._effective_filter(state, dfilter)
+        if eff is None:
+            return state.plan, state.fingerprint, None
+        plan = state.retriever.plan(state.requested_config, dfilter=eff)
+        return plan, plan.fingerprint(), eff
+
+    @staticmethod
+    def _group_for(tenant, eff) -> tuple | None:
+        """Scheduler batch-homogeneity key: None for the default tenant
+        unfiltered (exact legacy scheduling), else (tenant, filter
+        digest) — a batch executes one plan against one index, so
+        tenant and filter must match across its members."""
+        if tenant is None and eff is None:
+            return None
+        return (tenant, eff.digest if eff is not None else None)
+
+    def _build_state(self, name, index, requested: WarpSearchConfig) -> _Tenant:
+        """Load/plan/warm one tenant's index — everything that can fail
+        runs here, before any server state is touched."""
+        store_path = None
+        if isinstance(index, (str, os.PathLike)):
+            from repro.store import load_index  # deferred: store dep on core
+
+            store_path = os.fspath(index)
+            index = load_index(store_path, quarantine_segments=True)
+        retriever = (
+            index if isinstance(index, Retriever) else Retriever.from_index(index)
+        )
+        plan = retriever.plan(requested)
+        plan.warmup()
+        deleted = frozenset()
+        if store_path is not None:
+            from repro.store import read_tombstones
+
+            deleted = frozenset(read_tombstones(store_path))
+        return _Tenant(
+            name=name,
+            retriever=retriever,
+            requested_config=requested,
+            plan=plan,
+            config=plan.config,
+            fingerprint=plan.fingerprint(),
+            store_path=store_path,
+            quarantined=tuple(
+                getattr(retriever.index, "quarantined", ()) or ()
+            ),
+            deleted=deleted,
+            tomb=(
+                DocFilter.tombstones(sorted(deleted), retriever.n_docs)
+                if deleted
+                else None
+            ),
+        )
+
+    def add_tenant(
+        self,
+        name: str,
+        index,
+        config: WarpSearchConfig | None = None,
+    ) -> None:
+        """Register a second (third, ...) served index under ``name``.
+
+        ``index`` accepts everything the constructor does plus a store
+        path. The tenant gets its own plan ladder (``config`` defaults to
+        the server's requested config), its own cache namespace (tenant +
+        filter are folded into every cache key), and its own metrics
+        labels — all behind the one scheduler, so cross-tenant deadline
+        fairness is most-overdue-first. Validate-then-swap: a failing
+        load/plan/warmup raises and registers nothing.
+        """
+        if not isinstance(name, str) or not name:
+            raise TypeError(
+                f"tenant name must be a non-empty string, got {name!r}"
+            )
+        if name in self._tenants:
+            raise ValueError(f"tenant {name!r} already registered")
+        requested = config if config is not None else self._requested_config
+        self._tenants[name] = self._build_state(name, index, requested)
+        self._tenant_counters(name)
+
+    @property
+    def tenants(self) -> tuple:
+        """Registered tenant handles (the default index is ``None``)."""
+        return tuple(sorted(
+            self._tenants, key=lambda t: ("" if t is None else "\x01" + t)
+        ))
+
+    def delete_documents(self, doc_ids, *, tenant=None) -> tuple:
+        """Tombstone ``doc_ids`` on ``tenant`` — visible immediately,
+        reclaimed at the next compaction.
+
+        Store-backed tenants persist the tombstones (``repro.store.
+        delete_documents``) so ``compact()`` drops the rows and the
+        post-compact reload clears the in-memory view; pure in-memory
+        tenants keep the view until the next ``reload``. Three things
+        make deletes immediate despite the rows still being resident:
+        the tenant's tombstone filter joins every subsequent request,
+        the epoch bump purges every cached result that might contain a
+        deleted id, and queued requests are re-homed under the new
+        filter so even pre-delete submissions can't resurface one.
+        Returns the tenant's full tombstone set."""
+        st = self._state(tenant)
+        ids = {int(i) for i in np.asarray(list(doc_ids), dtype=np.int64).ravel()}
+        if st.store_path is not None:
+            from repro.store import delete_documents as store_delete
+
+            st.deleted = frozenset(store_delete(st.store_path, sorted(ids)))
+        else:
+            st.deleted = frozenset(st.deleted | ids)
+        st.tomb = (
+            DocFilter.tombstones(sorted(st.deleted), st.retriever.n_docs)
+            if st.deleted
+            else None
+        )
+        self.metrics.counter(
+            "serving_tenant_deletes_total",
+            "delete_documents calls for this tenant",
+            tenant="default" if tenant is None else tenant,
+        ).inc()
+        # Cached results (and rungs) may reference now-deleted ids;
+        # epoch-bump them out rather than enumerating.
+        self.index_epoch += 1
+        self._g_epoch.set(self.index_epoch)
+        if self.result_cache is not None:
+            self.result_cache.purge_epochs_below(self.index_epoch)
+            self._rung_cache.purge_epochs_below(self.index_epoch)
+        self._rehome()
+        obs.tracer().instant(
+            "delete_documents",
+            tenant="default" if tenant is None else tenant,
+            tombstones=len(st.deleted),
+        )
+        return tuple(sorted(st.deleted))
 
     def _make_scheduler(self) -> BucketScheduler:
         """One FIFO per ladder rung on bucket-aware adaptive plans; a
@@ -283,24 +547,37 @@ class RetrievalServer:
             and len(self.config.worklist_buckets) > 1
         )
 
-    def _cache_key(self, qkey: str) -> tuple:
-        return (qkey, self._fingerprint, self.index_epoch)
+    def _cache_key(self, qkey: str, fp: str | None = None) -> tuple:
+        # The epoch stays the trailing element — purge_epochs_below
+        # keys off k[-1].
+        return (qkey, fp if fp is not None else self._fingerprint,
+                self.index_epoch)
 
-    def _rung_for(self, q, qmask, qkey: str | None):
+    def _rung_for(self, q, qmask, qkey: str | None, *, plan=None, fp=None):
         """Admission-time probe pre-pass (level-1 cached): the worklist
-        rung this query needs, or None off the bucket-aware path."""
-        if not (self.bucket_aware and self._is_adaptive()):
+        rung this query needs on ``plan`` (default: the default tenant's
+        base plan), or None off the bucket-aware path."""
+        if plan is None:
+            plan = self.plan
+        cfg = plan.config
+        adaptive = (
+            cfg.layout == "ragged"
+            and cfg.worklist_buckets is not None
+            and len(cfg.worklist_buckets) > 1
+        )
+        if not (self.bucket_aware and adaptive):
             return None
         if self._rung_cache is not None and qkey is not None:
-            hit = self._rung_cache.get(self._cache_key(qkey))
+            key = self._cache_key(qkey, fp)
+            hit = self._rung_cache.get(key)
             if hit is not None:
                 return hit[0]
-            rung = self.plan.adaptive_bucket(q, qmask)
+            rung = plan.adaptive_bucket(q, qmask)
             # Tupled so a legitimately-None rung is distinguishable from
             # a cache miss.
-            self._rung_cache.put(self._cache_key(qkey), (rung,))
+            self._rung_cache.put(key, (rung,))
             return rung
-        return self.plan.adaptive_bucket(q, qmask)
+        return plan.adaptive_bucket(q, qmask)
 
     # ---- client API ----
     def submit(
@@ -309,6 +586,8 @@ class RetrievalServer:
         qmask: np.ndarray | None = None,
         *,
         deadline_s: float | None = None,
+        tenant: str | None = None,
+        dfilter: DocFilter | None = None,
     ) -> int:
         """Admit one query; returns its request id.
 
@@ -319,6 +598,15 @@ class RetrievalServer:
         ``deadline_s`` attaches a queueing deadline (seconds from now on
         the server clock): a request still queued when it expires is shed
         pre-dispatch and its ``poll`` raises ``DeadlineExceeded``.
+
+        ``tenant`` routes to a registered index (``add_tenant``; None =
+        the default). ``dfilter`` restricts retrieval to the filter's
+        surviving doc ids, in-pipeline and bit-identical to post-hoc
+        filtering (``core/docfilter.py``); it is intersected with the
+        tenant's tombstone view, and both tenant and filter are folded
+        into the cache key and the scheduler's batch group, so requests
+        under different filters or tenants never share a cache entry or
+        a batch.
         """
         if qmask is None:
             qmask = np.ones(q.shape[:-1], bool)
@@ -326,27 +614,44 @@ class RetrievalServer:
             if self.admission is not None:
                 with obs.span("admission"):
                     self.admission.check(len(self.scheduler))
+            # Resolve routing before burning an id: unknown tenant /
+            # mis-sized filter raises with nothing enqueued.
+            state = self._state(tenant)
+            plan, fp, eff = self._plan_for(state, dfilter)
             qkey = (
-                query_key(q, qmask) if self.result_cache is not None else None
+                query_key(q, qmask, dfilter=eff, tenant=tenant)
+                if self.result_cache is not None
+                else None
             )
             rid = self._next_id
             self._next_id += 1
-            sp.set(rid=rid)
+            sp.set(rid=rid, tenant="default" if tenant is None else tenant)
+            tc = self._tenant_counters(tenant)
+            tc["submitted"].inc()
             if qkey is not None:
-                hit = self.result_cache.get(self._cache_key(qkey))
+                hit = self.result_cache.get(self._cache_key(qkey, fp))
                 if hit is not None:
                     self._results[rid] = hit
                     self._c["cache_hits"].inc()
                     self._c["served"].inc()
+                    tc["cache_hits"].inc()
+                    tc["served"].inc()
                     sp.set(cache_hit=True)
                     return rid
             with obs.span("rung_prepass") as rp:
-                rung = self._rung_for(q, qmask, qkey)
+                rung = self._rung_for(q, qmask, qkey, plan=plan, fp=fp)
                 rp.set(rung=rung)
             now = self.clock()
             deadline = None if deadline_s is None else now + deadline_s
+            group = self._group_for(tenant, eff)
             self.scheduler.push(
-                _Pending(rid, q, qmask, now, qkey, deadline), rung
+                _Pending(
+                    rid, q, qmask, now, qkey, deadline,
+                    tenant=tenant, dfilter=dfilter,
+                    plan=plan, fp=fp, group=group,
+                ),
+                rung,
+                group=group,
             )
             self._inflight.add(rid)
             return rid
@@ -413,7 +718,57 @@ class RetrievalServer:
             self.step(force=True)
 
     # ---- lifecycle ----
-    def reload(self, index, *, config: WarpSearchConfig | None = None) -> None:
+    def _rehome(self) -> None:
+        """Drain the scheduler and re-admit every queued request against
+        the *current* tenant states: rung (old ladder/geometry), qkey
+        (old filter digest), and group are all stale after a reload or a
+        delete. A request whose filter no longer fits its tenant's index
+        (e.g. a reload changed the corpus size) gets its error delivered
+        typed via ``poll`` instead of poisoning the queue."""
+        pending = []
+        old_sched = self.scheduler
+        while len(old_sched):
+            got = old_sched.next_batch(force=True)
+            if got is None:
+                break
+            pending.extend(got[1])
+        self.scheduler = self._make_scheduler()
+        for p in sorted(pending, key=lambda p: p.arrival):
+            self._readmit(p)
+
+    def _readmit(self, p: _Pending) -> None:
+        state = self._tenants.get(p.tenant)
+        err = None
+        if state is None:
+            err = KeyError(
+                f"tenant {p.tenant!r} was removed while request "
+                f"{p.req_id} was queued"
+            )
+        else:
+            try:
+                p.plan, p.fp, eff = self._plan_for(state, p.dfilter)
+            except (TypeError, ValueError) as e:
+                err = e
+        if err is not None:
+            self._errors[p.req_id] = err
+            self._inflight.discard(p.req_id)
+            return
+        p.qkey = (
+            query_key(p.q, p.qmask, dfilter=eff, tenant=p.tenant)
+            if self.result_cache is not None
+            else None
+        )
+        p.group = self._group_for(p.tenant, eff)
+        rung = self._rung_for(p.q, p.qmask, p.qkey, plan=p.plan, fp=p.fp)
+        self.scheduler.push(p, rung, group=p.group)
+
+    def reload(
+        self,
+        index,
+        *,
+        config: WarpSearchConfig | None = None,
+        tenant: str | None = None,
+    ) -> None:
         """Hot-swap the served index without downtime.
 
         ``index`` may be a ``WarpIndex`` / ``ShardedWarpIndex`` /
@@ -434,58 +789,79 @@ class RetrievalServer:
         same epoch, same caches, same backlog, still serving. Store-path
         reloads quarantine corrupt delta segments rather than failing
         outright; ``health()`` reports them.
+
+        ``tenant`` reloads a registered tenant's index instead of the
+        default. Any reload re-reads the store's tombstones (a
+        post-compact store carries none, so the tombstone view clears)
+        and re-homes *all* queued requests — their rungs, cache keys and
+        batch groups were resolved against pre-reload state.
         """
         t0 = time.perf_counter()
-        requested = config if config is not None else self._requested_config
-        old = self.retriever
-        new_store_path = self.store_path
         if fault.FAULTS.plan is not None:
             fault.FAULTS.plan.check("server.reload", index=str(index)[:120])
-        if isinstance(index, (str, os.PathLike)):
-            from repro.store import load_index  # deferred: store dep on core
-
-            new_store_path = os.fspath(index)
-            index = load_index(new_store_path, quarantine_segments=True)
-        if isinstance(index, Retriever):
-            retriever = index
-        else:
-            # Preserve the serving topology: a sharded reload reuses the
-            # current mesh/shard_axes rather than a default 1-D mesh; a
-            # reload onto a single-device index drops them.
-            sharded = isinstance(index, ShardedWarpIndex)
-            retriever = Retriever.from_index(
-                index,
-                mesh=old.mesh if sharded else None,
-                shard_axes=old.shard_axes if sharded else ("data",),
+        if tenant is not None:
+            old_state = self._state(tenant)
+            requested = (
+                config if config is not None else old_state.requested_config
             )
-        plan = retriever.plan(requested)
-        plan.warmup()
-        # ---- commit point: nothing below raises ----
-        self._requested_config = requested
-        self.store_path = new_store_path
-        self._quarantined = tuple(
-            getattr(retriever.index, "quarantined", ()) or ()
-        )
-        self.retriever = retriever
-        self.plan = plan
-        self.config = plan.config
+            state = self._build_state(tenant, index, requested)
+            # ---- commit point: nothing below raises ----
+            self._tenants[tenant] = state
+        else:
+            requested = config if config is not None else self._requested_config
+            old = self.retriever
+            new_store_path = self.store_path
+            if isinstance(index, (str, os.PathLike)):
+                from repro.store import load_index  # deferred: store dep on core
+
+                new_store_path = os.fspath(index)
+                index = load_index(new_store_path, quarantine_segments=True)
+            if isinstance(index, Retriever):
+                retriever = index
+            else:
+                # Preserve the serving topology: a sharded reload reuses
+                # the current mesh/shard_axes rather than a default 1-D
+                # mesh; a reload onto a single-device index drops them.
+                sharded = isinstance(index, ShardedWarpIndex)
+                retriever = Retriever.from_index(
+                    index,
+                    mesh=old.mesh if sharded else None,
+                    shard_axes=old.shard_axes if sharded else ("data",),
+                )
+            plan = retriever.plan(requested)
+            plan.warmup()
+            # Disk is the source of truth for tombstones on store-backed
+            # reloads: a post-compact store carries none (deletes were
+            # reclaimed), a pre-compact one re-yields the persisted set.
+            deleted = frozenset()
+            if new_store_path is not None:
+                from repro.store import read_tombstones
+
+                deleted = frozenset(read_tombstones(new_store_path))
+            # ---- commit point: nothing below raises ----
+            self._requested_config = requested
+            self.store_path = new_store_path
+            self._quarantined = tuple(
+                getattr(retriever.index, "quarantined", ()) or ()
+            )
+            self.retriever = retriever
+            self.plan = plan
+            self.config = plan.config
+            self._fingerprint = plan.fingerprint()
+            st = self._tenants[None]
+            st.deleted = deleted
+            st.tomb = (
+                DocFilter.tombstones(sorted(deleted), retriever.n_docs)
+                if deleted
+                else None
+            )
         self.index_epoch += 1
-        self._fingerprint = plan.fingerprint()
         if self.result_cache is not None:
             self.result_cache.purge_epochs_below(self.index_epoch)
             self._rung_cache.purge_epochs_below(self.index_epoch)
-        # Re-home queued requests: their rungs were probed against the
-        # old plan's ladder and geometry.
-        pending = []
-        old_sched = self.scheduler
-        while len(old_sched):
-            got = old_sched.next_batch(force=True)
-            if got is None:
-                break
-            pending.extend(got[1])
-        self.scheduler = self._make_scheduler()
-        for p in sorted(pending, key=lambda p: p.arrival):
-            self.scheduler.push(p, self._rung_for(p.q, p.qmask, p.qkey))
+        # Re-home queued requests: their rungs, cache keys and groups
+        # were resolved against the old plans' ladders and filters.
+        self._rehome()
         self._c["reloads"].inc()
         self._g_epoch.set(self.index_epoch)
         self.metrics.histogram(
@@ -600,9 +976,15 @@ class RetrievalServer:
                     rung="none" if rung is None else rung,
                 )
         t0 = time.perf_counter()
+        # Every member shares the batch group (tenant + filter), so the
+        # head's resolved plan serves the whole batch; legacy pendings
+        # (pre-multi-tenant pickles/tests) fall back to the default plan.
+        plan = batch[0].plan if batch[0].plan is not None else self.plan
+        tenant = batch[0].tenant
         with obs.span(
             "batch_dispatch",
             rung="none" if rung is None else rung,
+            tenant="default" if tenant is None else tenant,
             batch_size=len(batch), rids=[p.req_id for p in batch],
         ):
             b = self.policy.max_batch
@@ -614,21 +996,25 @@ class RetrievalServer:
                 mask[i] = p.qmask
             qd, md = jnp.asarray(q), jnp.asarray(mask)
             if rung is None:
-                res = self.plan.retrieve_batch(qd, md)
+                res = plan.retrieve_batch(qd, md)
             else:
                 # The batch executes at its rung — every member (and each
                 # backfilled lower-rung rider) fits it, and padding rows
                 # are fully masked so they add no worklist demand.
-                res = self.plan.retrieve_batch_at(qd, md, bucket=rung)
+                res = plan.retrieve_batch_at(qd, md, bucket=rung)
             with obs.span("reply"):
                 scores = np.asarray(res.scores)
                 docs = np.asarray(res.doc_ids)
+                tc = self._tenant_counters(tenant)
                 for i, p in enumerate(batch):
                     pair = (scores[i], docs[i])
                     self._results[p.req_id] = pair
                     self._inflight.discard(p.req_id)
+                    tc["served"].inc()
                     if self.result_cache is not None and p.qkey is not None:
-                        self.result_cache.put(self._cache_key(p.qkey), pair)
+                        self.result_cache.put(
+                            self._cache_key(p.qkey, p.fp), pair
+                        )
         self._h_dispatch.observe(time.perf_counter() - t0)
         self._c["batches"].inc()
         self._c["padded_slots"].inc(b - len(batch))
@@ -658,6 +1044,21 @@ class RetrievalServer:
         if self.admission is not None:
             out["shed"] = self.admission.shed
             out["admitted"] = self.admission.admitted
+        if len(self._tenants) > 1 or self._tenants[None].deleted:
+            out["tenants"] = {
+                ("default" if t is None else t): {
+                    "submitted": int(
+                        self._tenant_counters(t)["submitted"].value
+                    ),
+                    "served": int(self._tenant_counters(t)["served"].value),
+                    "cache_hits": int(
+                        self._tenant_counters(t)["cache_hits"].value
+                    ),
+                    "tombstones": len(st.deleted),
+                    "n_docs": st.retriever.n_docs,
+                }
+                for t, st in self._tenants.items()
+            }
         return out
 
     def health(self) -> dict:
@@ -682,13 +1083,17 @@ class RetrievalServer:
                 f"queue depth {depth} at admission limit "
                 f"{self.admission.policy.max_queue_depth}; shedding"
             )
-        if self._quarantined:
-            reasons.append(
-                "quarantined delta segment(s): "
-                + ", ".join(self._quarantined)
-            )
-        if self.plan.fallback_active:
-            reasons.append("kernel executor demoted to reference fallback")
+        for t, st in self._tenants.items():
+            lab = "" if t is None else f" (tenant {t!r})"
+            if st.quarantined:
+                reasons.append(
+                    f"quarantined delta segment(s){lab}: "
+                    + ", ".join(st.quarantined)
+                )
+            if st.plan.fallback_active:
+                reasons.append(
+                    f"kernel executor demoted to reference fallback{lab}"
+                )
         if self._maintain_failures:
             reasons.append(
                 f"maintenance failing (x{self._maintain_failures}): "
@@ -706,4 +1111,7 @@ class RetrievalServer:
             "quarantined_segments": list(self._quarantined),
             "executor_fallback": bool(self.plan.fallback_active),
             "maintain_failures": self._maintain_failures,
+            "tenants": [
+                "default" if t is None else t for t in self.tenants
+            ],
         }

@@ -40,13 +40,20 @@ import numpy as np
 __all__ = ["query_key", "LRUCache"]
 
 
-def query_key(q, qmask) -> str:
+def query_key(q, qmask, *, dfilter=None, tenant=None) -> str:
     """Canonical content hash of one query.
 
     Masked rows are zeroed before hashing — their embedding values never
     reach the pipeline (the engine drops masked candidates and suppresses
     their worklist tiles), so two queries that differ only in masked-row
     garbage are the same query.
+
+    ``dfilter`` (a ``DocFilter``, or any object with a ``digest`` str) and
+    ``tenant`` fold the request's filter identity and routing handle into
+    the hash: the same embedding under different filters (or different
+    tenants) retrieves different documents, so the entries must never
+    alias — a filtered request hitting an unfiltered entry would leak
+    filtered-out (or cross-tenant) doc ids straight out of the cache.
     """
     q = np.ascontiguousarray(np.asarray(q, np.float32))
     m = np.ascontiguousarray(np.asarray(qmask, bool))
@@ -55,6 +62,12 @@ def query_key(q, qmask) -> str:
     h.update(str(canon.shape).encode())
     h.update(canon.tobytes())
     h.update(m.tobytes())
+    if dfilter is not None:
+        h.update(b"|filter:")
+        h.update(str(getattr(dfilter, "digest", dfilter)).encode())
+    if tenant is not None:
+        h.update(b"|tenant:")
+        h.update(str(tenant).encode())
     return h.hexdigest()[:20]
 
 

@@ -28,6 +28,17 @@ Dispatch rules (``next_batch``):
 Each dispatched batch is tagged with its rung so the server can route it
 through ``retrieve_batch_at`` (or ``retrieve_batch`` when the plan has no
 ladder — ``rung=None`` degenerates to the classic single-FIFO batcher).
+
+**Groups** (multi-index routing): ``push(item, rung, group=...)`` queues
+the item under ``(group, rung)``. A group names everything that must be
+homogeneous within one dispatched batch — the server uses
+``(tenant, filter digest)``, since a batch executes exactly one plan
+against exactly one index. Batches never mix groups: backfill and
+promotion stay within a group, so a tenant-A request can never ride in a
+tenant-B batch (the isolation invariant the multi-tenant chaos suite
+asserts). ``group=None`` is the legacy single-index scheduler,
+bit-identical to the pre-group behavior. Deadline dispatch picks the
+most-overdue head across *all* groups, so no tenant can starve another.
 """
 
 from __future__ import annotations
@@ -151,12 +162,23 @@ class BucketScheduler:
     def depth(self) -> int:
         return len(self)
 
-    def push(self, item, rung=None) -> None:
-        """Enqueue ``item`` under ``rung`` (a ladder bucket, or None on
-        non-adaptive plans)."""
-        if rung is not None and self.rungs is not None and rung not in self.rungs:
+    def push(self, item, rung=None, group=None) -> None:
+        """Enqueue ``item`` under ``(group, rung)``.
+
+        ``rung`` is a ladder bucket (or None on non-adaptive plans);
+        ``group`` names the batch-homogeneity domain (tenant + filter on
+        the multi-tenant server; None = the single legacy group). Rung
+        membership is only validated against the constructor ladder for
+        the legacy group — a named group routes to its own index and may
+        carry its own ladder."""
+        if (
+            group is None
+            and rung is not None
+            and self.rungs is not None
+            and rung not in self.rungs
+        ):
             raise ValueError(f"rung {rung} not in ladder {self.rungs}")
-        self._queues.setdefault(rung, deque()).append(item)
+        self._queues.setdefault((group, rung), deque()).append(item)
         self._g_depth.set(len(self))
 
     def reap(self, predicate) -> list:
@@ -168,12 +190,12 @@ class BucketScheduler:
         nobody will read). FIFO order of the survivors is preserved.
         """
         out = []
-        for rung, q in self._queues.items():
+        for key, q in self._queues.items():
             keep = deque()
             for p in q:
                 (out if predicate(p) else keep).append(p)
             if len(keep) != len(q):
-                self._queues[rung] = keep
+                self._queues[key] = keep
         if out:
             self._g_depth.set(len(self))
         return out
@@ -192,34 +214,38 @@ class BucketScheduler:
         """Starvation guard: move items that have waited ``promote_after_s``
         since arrival (or since their last promotion — the climb is a
         ratchet, one rung per interval, not a jump to the top) one ladder
-        rung up, merging by arrival so FIFO age order survives."""
+        rung up, merging by arrival so FIFO age order survives. Promotion
+        never crosses groups — a starved tenant-A request climbs tenant
+        A's own ladder."""
         if self.rungs is None or len(self.rungs) < 2:
             return
+        groups = {g for (g, _) in self._queues}
         # Top-down so a just-promoted item is not re-examined in the same
         # pass.
-        for i, rung in reversed(list(enumerate(self.rungs[:-1]))):
-            q = self._queues.get(rung)
-            if not q:
-                continue
-            stale, keep = [], []
-            for p in q:
-                last = getattr(p, "_promote_stamp", p.arrival)
-                old = now - last >= self.policy.promote_after_s
-                (stale if old else keep).append(p)
-            if not stale:
-                continue
-            self._queues[rung] = deque(keep)
-            up = self.rungs[i + 1]
-            merged = sorted(
-                [*self._queues.get(up, ()), *stale], key=lambda p: p.arrival
-            )
-            self._queues[up] = deque(merged)
-            for p in stale:
-                p._promote_stamp = now
-            self._c_promoted.inc(len(stale))
+        for group in groups:
+            for i, rung in reversed(list(enumerate(self.rungs[:-1]))):
+                q = self._queues.get((group, rung))
+                if not q:
+                    continue
+                stale, keep = [], []
+                for p in q:
+                    last = getattr(p, "_promote_stamp", p.arrival)
+                    old = now - last >= self.policy.promote_after_s
+                    (stale if old else keep).append(p)
+                if not stale:
+                    continue
+                self._queues[(group, rung)] = deque(keep)
+                up = (group, self.rungs[i + 1])
+                merged = sorted(
+                    [*self._queues.get(up, ()), *stale], key=lambda p: p.arrival
+                )
+                self._queues[up] = deque(merged)
+                for p in stale:
+                    p._promote_stamp = now
+                self._c_promoted.inc(len(stale))
 
-    def _dispatchable(self, rung, now: float, force: bool) -> bool:
-        q = self._queues.get(rung)
+    def _dispatchable(self, key, now: float, force: bool) -> bool:
+        q = self._queues.get(key)
         if not q:
             return False
         if force or len(q) >= self.policy.max_batch:
@@ -229,37 +255,46 @@ class BucketScheduler:
     def next_batch(self, *, force: bool = False):
         """-> ``(rung, items)`` for at most one batch, or None.
 
-        ``items`` is FIFO from the chosen rung, backfilled from lower
-        rungs' heads when slots remain (exact: a lower-rung query fits
-        any higher rung). ``force`` dispatches the oldest-head rung even
-        if under-full and before its deadline (the blocking ``result``
-        driver and ``drain`` use this).
+        ``items`` is FIFO from the chosen ``(group, rung)`` queue,
+        backfilled from the *same group's* lower rungs' heads when slots
+        remain (exact: a lower-rung query fits any higher rung of the
+        same plan; a different group is a different index/filter and
+        never rides along). ``force`` dispatches the oldest-head queue
+        even if under-full and before its deadline (the blocking
+        ``result`` driver and ``drain`` use this). All items in the
+        returned batch share one group — the server reads it off
+        ``items[0]``.
         """
         now = self.clock()
         self._promote(now)
         ready = [
-            r for r in self._queues
-            if self._dispatchable(r, now, force)
+            k for k in self._queues
+            if self._dispatchable(k, now, force)
         ]
         if not ready:
             return None
         # Most-overdue head first; ties break toward the smaller rung
         # (cheaper program). None sorts as rung -1 (non-adaptive queue).
-        rung = min(
+        group, rung = min(
             ready,
-            key=lambda r: (self._queues[r][0].arrival, -1 if r is None else r),
+            key=lambda k: (
+                self._queues[k][0].arrival, -1 if k[1] is None else k[1]
+            ),
         )
-        q = self._queues[rung]
+        q = self._queues[(group, rung)]
         take = min(len(q), self.policy.max_batch)
         items = [q.popleft() for _ in range(take)]
         backfilled = 0
         if rung is not None:
             lower = sorted(
-                (r for r in self._queues if r is not None and r < rung),
+                (
+                    r for (g, r) in self._queues
+                    if g == group and r is not None and r < rung
+                ),
                 reverse=True,
             )
             for r in lower:
-                lq = self._queues[r]
+                lq = self._queues[(group, r)]
                 while lq and len(items) < self.policy.max_batch:
                     items.append(lq.popleft())
                     backfilled += 1

@@ -4,8 +4,8 @@
                 load_index with zero-copy np.memmap views
   builder.py    out-of-core chunked build (bit-identical to the in-memory
                 build_index; O(chunk) peak memory with store_path=)
-  segments.py   append-only delta segments (add_documents), segmented
-                search, and compact()
+  segments.py   append-only delta segments (add_documents), tombstoned
+                deletes (delete_documents), segmented search, compact()
   integrity.py  per-array checksums, verify_store(), StoreCorruption
 
 ``launch/build_index.py`` is the CLI over all three.
@@ -30,10 +30,12 @@ from repro.store.segments import (
     SegmentedWarpIndex,
     add_documents,
     compact,
+    delete_documents,
     delta_stats,
     load_segmented,
     make_segmented_search_fn,
     quantize_segment,
+    read_tombstones,
 )
 
 __all__ = [
@@ -45,6 +47,7 @@ __all__ = [
     "build_index_chunked",
     "build_index_to_store",
     "compact",
+    "delete_documents",
     "delta_stats",
     "inspect_index",
     "list_segment_dirs",
@@ -53,6 +56,7 @@ __all__ = [
     "make_segmented_search_fn",
     "quantize_segment",
     "read_manifest",
+    "read_tombstones",
     "recover_interrupted_compact",
     "save_index",
     "verify_store",

@@ -70,6 +70,7 @@ import numpy as np
 
 from repro import fault, obs
 from repro.core import engine, kmeans, quantization
+from repro.core.docfilter import FilterView, cluster_survivor_counts
 from repro.core.reduction import TopKResult, two_stage_reduce
 from repro.core.types import WarpIndex, WarpSearchConfig
 from repro.core.warpselect import warp_select
@@ -82,6 +83,8 @@ __all__ = [
     "SegmentedWarpIndex",
     "quantize_segment",
     "add_documents",
+    "delete_documents",
+    "read_tombstones",
     "load_segmented",
     "compact",
     "delta_stats",
@@ -370,6 +373,58 @@ def delta_stats(path: str) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# deletes: tombstone-until-next-compact
+# ---------------------------------------------------------------------------
+
+TOMBSTONES_FILE = "tombstones.json"
+
+
+def read_tombstones(path: str) -> tuple[int, ...]:
+    """Sorted global doc ids tombstoned at the store ``path`` (empty when
+    none). Loading stays tombstone-agnostic — serving layers turn this set
+    into a ``DocFilter.tombstones`` view per request; ``compact()`` is
+    what physically drops the rows."""
+    p = os.path.join(path, TOMBSTONES_FILE)
+    if not os.path.exists(p):
+        return ()
+    import json
+
+    with open(p) as f:
+        data = json.load(f)
+    return tuple(sorted({int(i) for i in data.get("deleted", ())}))
+
+
+def delete_documents(path: str, doc_ids) -> tuple[int, ...]:
+    """Tombstone global doc ids at the store ``path``; returns the full
+    (merged, sorted) tombstone set.
+
+    Deletion is logical until the next ``compact()``: the ids are appended
+    to ``tombstones.json`` (atomic tmp + rename, like the manifest) and it
+    is the caller's job to exclude them at query time
+    (``DocFilter.tombstones(read_tombstones(path), n_docs)``). Compaction
+    rewrites the store without the tombstoned rows — their doc ids are
+    never reused, so surviving documents keep their global ids (doc-id
+    gaps, exactly like a quarantined segment) — and the fresh directory
+    carries no ``tombstones.json``.
+    """
+    import json
+
+    store_format.read_manifest(path)  # raises on a non-store path
+    existing = set(read_tombstones(path))
+    merged = existing | {int(i) for i in doc_ids}
+    out = tuple(sorted(merged))
+    tmp = os.path.join(path, TOMBSTONES_FILE + ".tmp")
+    with open(tmp, "w") as f:
+        json.dump({"deleted": list(out)}, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, os.path.join(path, TOMBSTONES_FILE))
+    obs.count("store_documents_deleted_total", len(merged) - len(existing))
+    obs.gauge("store_tombstones", len(out))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # search
 # ---------------------------------------------------------------------------
 
@@ -427,7 +482,8 @@ def _segmented_slot_doc_ids(
 
 
 def make_segmented_search_fn(
-    seg: SegmentedWarpIndex, config: WarpSearchConfig, *, query_batch: bool
+    seg: SegmentedWarpIndex, config: WarpSearchConfig, *, query_batch: bool,
+    with_filter: bool = False,
 ):
     """Compile the staged pipeline over base + deltas.
 
@@ -437,14 +493,24 @@ def make_segmented_search_fn(
     offsets, or one flat segmented tile worklist reduced globally (see
     the module docstring) — ``config`` must be resolved (concrete
     t'/k_impute/executor; ``worklist_tiles`` when ragged).
+
+    With ``with_filter`` the returned callable takes a fourth argument:
+    the ``core.docfilter.resolve_segmented`` triple for this index. The
+    dense path threads each segment's LOCAL ``FilterView`` into its
+    ``score_and_reduce``; the ragged path zeroes per-(segment, cluster)
+    worklist runs with no surviving tokens and masks the GLOBAL survivor
+    bitmap inside the single ``two_stage_reduce``. Either way the filter
+    is a runtime operand (one compiled program per geometry, any filter).
     """
     doc_starts = seg.doc_starts
     combined_sizes = seg.combined_cluster_sizes()
     cfg = config
     if cfg.layout == "ragged":
-        return _make_segmented_ragged_fn(seg, cfg, query_batch=query_batch)
+        return _make_segmented_ragged_fn(
+            seg, cfg, query_batch=query_batch, with_filter=with_filter
+        )
 
-    def single(segments, sizes, q, qmask):
+    def single(segments, sizes, q, qmask, fvs=None):
         sel = warp_select(
             q,
             segments[0].centroids,
@@ -455,7 +521,7 @@ def make_segmented_search_fn(
             qmask=qmask,
         )
         scores_l, docs_l = [], []
-        for sub, start in zip(segments, doc_starts):
+        for i, (sub, start) in enumerate(zip(segments, doc_starts)):
             if sub.cap == 0 or sub.n_tokens == 0:
                 continue  # token-less segment: no candidates to score
             # A small delta may hold fewer candidate slots than k.
@@ -463,6 +529,7 @@ def make_segmented_search_fn(
             r = engine.score_and_reduce(
                 sub, q, qmask, sel.probe_scores, sel.probe_cids, sel.mse,
                 dataclasses.replace(cfg, k=k_sub),
+                dfilter=fvs[i] if fvs is not None else None,
             )
             scores_l.append(r.scores)
             docs_l.append(jnp.where(r.doc_ids >= 0, r.doc_ids + start, -1))
@@ -477,6 +544,22 @@ def make_segmented_search_fn(
             jnp.isfinite(top_scores), all_docs[top_idx], jnp.int32(-1)
         )
         return TopKResult(scores=top_scores, doc_ids=top_docs)
+
+    if with_filter:
+        if query_batch:
+            body = lambda segments, sizes, q, qmask, fvs: jax.vmap(
+                lambda qq, mm: single(segments, sizes, qq, mm, fvs)
+            )(q, qmask)
+        else:
+            body = single
+        compiled = jax.jit(body)
+
+        def run_filtered(index: SegmentedWarpIndex, q, qmask, resolved):
+            _, seg_views, _ = resolved
+            return compiled(index.segments, combined_sizes, q, qmask,
+                            tuple(seg_views))
+
+        return run_filtered
 
     if query_batch:
         body = lambda segments, sizes, q, qmask: jax.vmap(
@@ -493,7 +576,8 @@ def make_segmented_search_fn(
 
 
 def _make_segmented_ragged_fn(
-    seg: SegmentedWarpIndex, cfg: WarpSearchConfig, *, query_batch: bool
+    seg: SegmentedWarpIndex, cfg: WarpSearchConfig, *, query_batch: bool,
+    with_filter: bool = False,
 ):
     """Ragged stage 2+3 over base + deltas: one flat segmented worklist.
 
@@ -501,6 +585,10 @@ def _make_segmented_ragged_fn(
     probe axis becomes ``nprobe * n_active_segments``, empty runs
     contribute no tiles), scored in one pass, doc ids globalized per slot,
     and reduced by a single ``two_stage_reduce`` — no per-segment merge.
+
+    With ``with_filter`` the worklist drops (segment, cluster) runs with
+    zero surviving tokens and the reduction masks the global survivor
+    bitmap (both runtime operands; exactness per ``core/docfilter.py``).
     """
     if cfg.worklist_tiles is None:
         raise ValueError(
@@ -520,7 +608,7 @@ def _make_segmented_ragged_fn(
     n_docs_total = seg.n_docs
     nprobe = cfg.nprobe
 
-    def single(segments, sizes, q, qmask):
+    def single(segments, sizes, q, qmask, fv=None):
         qm = q.shape[0]
         n_seg = len(segments)
         sel = warp_select(
@@ -545,6 +633,14 @@ def _make_segmented_ragged_fn(
         # suppression in ``engine.score_and_reduce`` so demand tracks
         # active tokens on the segmented path too.
         run_sizes = jnp.where(qmask[:, None, None], run_sizes, 0)
+        if fv is not None:
+            # Filter pushdown: a (segment, cluster) run with zero surviving
+            # tokens contributes no tiles — worklist demand (and the
+            # adaptive rung upstream) tracks survivors only.
+            live = jnp.moveaxis(
+                fv.cluster_live[:, sel.probe_cids], 0, -1
+            )  # [Q, P, S]
+            run_sizes = jnp.where(live, run_sizes, 0)
         seg_ids = jnp.broadcast_to(
             jnp.arange(n_seg, dtype=jnp.int32), (qm, nprobe, n_seg)
         )
@@ -591,12 +687,35 @@ def _make_segmented_ragged_fn(
             scores,
             valid,
             sel.mse,
+            fv.doc_mask if fv is not None else None,
             q_max=qm,
             k=cfg.k,
             impl=cfg.reduce_impl,
             n_docs=n_docs_total or None,
             pad_to_k=True,
         )
+
+    if with_filter:
+        if query_batch:
+            body = lambda segments, sizes, q, qmask, fv: jax.vmap(
+                lambda qq, mm: single(segments, sizes, qq, mm, fv)
+            )(q, qmask)
+        else:
+            body = single
+        compiled = jax.jit(body)
+
+        def run_filtered(index: SegmentedWarpIndex, q, qmask, resolved):
+            active = tuple(index.segments[i] for i in active_ids)
+            global_view, _, per_segment_live = resolved
+            fv = FilterView(
+                doc_mask=global_view.doc_mask,
+                cluster_live=jnp.asarray(
+                    np.stack([per_segment_live[i] for i in active_ids])
+                ),
+            )
+            return compiled(active, combined_sizes, q, qmask, fv)
+
+        return run_filtered
 
     if query_batch:
         body = lambda segments, sizes, q, qmask: jax.vmap(
@@ -665,8 +784,13 @@ def _compact_locked(path: str) -> str:
     store_format.recover_interrupted_compact(path)
     manifest = store_format.read_manifest(path)
     seg = store_format.load_index(path, mmap=True)
+    tomb_ids = read_tombstones(path)
     if isinstance(seg, WarpIndex):
-        return path  # no deltas; already compact
+        if not tomb_ids:
+            return path  # no deltas, no tombstones; already compact
+        # Tombstones on a delta-less store still force a rewrite (that is
+        # what clears them); fold the base through the segment loop below.
+        seg = SegmentedWarpIndex(base=seg, deltas=(), doc_starts=(0,))
     if not isinstance(seg, SegmentedWarpIndex):
         raise NotImplementedError(f"cannot compact kind={manifest['kind']!r}")
     # ``store.compact_step`` checkpoints mark every distinct on-disk state
@@ -677,7 +801,25 @@ def _compact_locked(path: str) -> str:
 
     base = seg.base
     c = base.n_centroids
-    sizes = np.asarray(seg.combined_cluster_sizes())
+    n_docs_bound = seg.n_docs
+    # Tombstoned rows are dropped during the rewrite; surviving documents
+    # keep their global ids (the bound stays, deleted ids become gaps) so
+    # post-compact results are bit-identical to tombstone-filtered
+    # pre-compact results. The fresh directory carries no tombstones.json.
+    tomb = np.zeros((n_docs_bound,), dtype=bool)
+    for t in tomb_ids:
+        if 0 <= t < n_docs_bound:
+            tomb[t] = True
+    if tomb.any():
+        sizes = np.zeros((c,), np.int64)
+        for sub, start in zip(seg.segments, seg.doc_starts):
+            keep_local = ~tomb[start : start + sub.n_docs]
+            sizes += cluster_survivor_counts(
+                keep_local, sub.token_doc_ids, sub.cluster_offsets
+            )
+        sizes = sizes.astype(np.int64)
+    else:
+        sizes = np.asarray(seg.combined_cluster_sizes(), np.int64)
     offsets = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int32)
     n_tokens = int(sizes.sum())
     pb = quantization.packed_bytes(base.dim, base.nbits)
@@ -700,6 +842,7 @@ def _compact_locked(path: str) -> str:
     )
     fill = np.zeros((c,), np.int64)
     step = 1 << 18
+    drop_rows = tomb.any()
     for sub, start in zip(seg.segments, seg.doc_starts):
         sub_sizes = np.asarray(sub.cluster_sizes, np.int64)
         sub_offsets = np.asarray(sub.cluster_offsets, np.int64)
@@ -711,13 +854,32 @@ def _compact_locked(path: str) -> str:
             # Owning cluster of CSR position p: last offset <= p ('right'
             # handles empty clusters whose offsets collapse).
             cluster_of = np.searchsorted(sub_offsets, pos, side="right") - 1
-            within = pos - sub_offsets[cluster_of]
-            d = offsets[cluster_of].astype(np.int64) + fill[cluster_of] + within
-            packed[d] = sub.packed_codes[lo:hi]
-            doc_ids[d] = (
-                np.asarray(sub.token_doc_ids[lo:hi], np.int32) + np.int32(start)
+            gids = (
+                np.asarray(sub.token_doc_ids[lo:hi], np.int64) + int(start)
             )
-        fill += sub_sizes
+            if drop_rows:
+                # Kept-rank destination math: each kept row lands at its
+                # cluster's base offset + rows already written (previous
+                # chunks/segments, ``fill``) + its kept-rank within this
+                # chunk. Tombstoned rows are simply never written.
+                keep = ~tomb[np.clip(gids, 0, n_docs_bound - 1)]
+                ck = np.cumsum(keep)
+                _, first_idx, inv = np.unique(
+                    cluster_of, return_index=True, return_inverse=True
+                )
+                prior = ck[first_idx] - keep[first_idx]
+                rank = ck - 1 - prior[inv]
+                d = offsets[cluster_of].astype(np.int64) + fill[cluster_of] + rank
+                packed[d[keep]] = np.asarray(sub.packed_codes[lo:hi])[keep]
+                doc_ids[d[keep]] = gids[keep].astype(np.int32)
+                fill += np.bincount(cluster_of[keep], minlength=c)
+            else:
+                within = pos - sub_offsets[cluster_of]
+                d = offsets[cluster_of].astype(np.int64) + fill[cluster_of] + within
+                packed[d] = sub.packed_codes[lo:hi]
+                doc_ids[d] = gids.astype(np.int32)
+        if not drop_rows:
+            fill += sub_sizes
     packed.flush()
     doc_ids.flush()
     del packed, doc_ids

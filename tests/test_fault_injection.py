@@ -552,6 +552,16 @@ def test_typed_errors_lint_passes():
     assert "all exported" in out.stdout
 
 
+def test_parity_matrix_lint_passes():
+    out = subprocess.run(
+        [sys.executable,
+         os.path.join(REPO, "scripts", "check_parity_matrix.py")],
+        capture_output=True, text=True,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "full matrix covered" in out.stdout
+
+
 @pytest.mark.chaos
 @pytest.mark.filterwarnings("ignore::RuntimeWarning")  # maintain retries
 @pytest.mark.filterwarnings("ignore::UserWarning")  # quarantine notices
@@ -638,3 +648,156 @@ def test_chaos_serving_sessions(base_store, tmp_path, queries, seed):
     verify_store(path)
     idx = load_index(path)
     assert idx.n_docs >= 160
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant + tombstone chaos
+# ---------------------------------------------------------------------------
+
+
+def test_server_tombstone_compact_parity(base_store, tmp_path, queries):
+    """Tombstone lifecycle on a store-backed server: deletes are visible
+    immediately (filter-until-compact), and the post-compact replies are
+    bit-identical to the tombstone-filtered pre-compact replies — the
+    compaction physically reclaims exactly what the filter was hiding,
+    nothing else."""
+    q, qmask, _ = queries
+    path = copy_store(base_store, tmp_path)
+    clock = _FakeClock()
+    srv = RetrievalServer(
+        Retriever.from_store(path), CFG,
+        BatchPolicy(max_batch=4, max_wait_s=1.0),
+        clock=clock, cache_size=16, store_path=path,
+        compaction=CompactionPolicy(
+            max_delta_segments=0, min_interval_s=0.0
+        ),
+    )
+    # Delete the unfiltered winners of the first two queries.
+    victims = set()
+    for i in range(2):
+        rid = srv.submit(q[i], qmask[i])
+        srv.drain()
+        _, docs = srv.poll(rid)
+        victims.add(int(docs[0]))
+    srv.delete_documents(sorted(victims))
+    from repro.store import read_tombstones
+
+    assert set(read_tombstones(path)) == victims  # persisted...
+    assert (  # ...and visible in the serving summary
+        srv.summary()["tenants"]["default"]["tombstones"] == len(victims)
+    )
+    pre = []
+    for i in range(4):
+        rid = srv.submit(q[i], qmask[i])
+        srv.drain()
+        scores, docs = srv.poll(rid)
+        assert not victims & {int(d) for d in docs}
+        pre.append((scores, docs))
+    # Compact + reload through the maintenance path.
+    assert srv.maintain() is True
+    assert read_tombstones(path) == ()  # reclaimed on disk, and the
+    # summary's tombstone section retires with the last tombstone:
+    assert "tenants" not in srv.summary()
+    for i in range(4):
+        rid = srv.submit(q[i], qmask[i])
+        srv.drain()
+        scores, docs = srv.poll(rid)
+        np.testing.assert_array_equal(docs, pre[i][1])
+        np.testing.assert_array_equal(scores, pre[i][0])
+
+
+@pytest.mark.chaos
+@pytest.mark.filterwarnings("ignore::RuntimeWarning")  # maintain retries
+@pytest.mark.filterwarnings("ignore::UserWarning")  # quarantine notices
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_chaos_multitenant_sessions(base_store, tmp_path, queries, seed):
+    """Seeded chaos over two tenants with interleaved per-tenant submits,
+    ``delete_documents`` tombstones, compaction, and reloads under a
+    randomized fault schedule. Invariants: no delivered reply ever
+    contains a doc id deleted on its tenant, or a doc id outside its
+    tenant's corpus (cross-tenant leak); every reply is bit-identical to
+    a direct retrieval on that tenant's tombstone-filtered plan OR a
+    typed error; the store survives."""
+    B_DOCS = 60
+    q, qmask, _ = queries
+    path = copy_store(base_store, tmp_path)
+    rng = random.Random(3000 + seed)
+    clock = _FakeClock()
+    srv = RetrievalServer(
+        Retriever.from_store(path), CFG,
+        BatchPolicy(max_batch=4, max_wait_s=1.0),
+        clock=clock, cache_size=16, store_path=path,
+        compaction=CompactionPolicy(
+            max_delta_segments=0, min_interval_s=0.0, retry_backoff_s=1.0
+        ),
+    )
+    bcorp = make_corpus(n_docs=B_DOCS, mean_doc_len=10, seed=77)
+    srv.add_tenant(
+        "b",
+        Retriever.from_index(
+            build_index(bcorp.emb, bcorp.token_doc_ids, B_DOCS, BUILD)
+        ),
+    )
+    rates = {
+        "store.array_read": 0.02,
+        "store.compact_step": 0.25,
+        "server.reload": 0.20,
+    }
+    plan = FaultPlan(seed=seed, rates=rates)
+    delivered = 0
+    with fault.active(plan):
+        for round_ in range(8):
+            clock.t += 1.0
+            batch = []
+            for _ in range(rng.randint(1, 3)):
+                i = rng.randrange(len(q))
+                t = rng.choice([None, "b"])
+                try:
+                    batch.append((srv.submit(q[i], qmask[i], tenant=t), i, t))
+                except Overloaded:
+                    pass
+            srv.drain()
+            for rid, i, t in batch:
+                scores, docs = srv.poll(rid)
+                st = srv._tenants[t]
+                finite = {int(d) for d in docs if d >= 0}
+                assert not finite & set(st.deleted), (t, st.deleted)
+                assert all(d < st.retriever.n_docs for d in finite), t
+                dplan = (
+                    st.retriever.plan(st.requested_config, dfilter=st.tomb)
+                    if st.tomb is not None
+                    else st.plan
+                )
+                direct = dplan.retrieve(q[i], qmask[i])
+                np.testing.assert_array_equal(
+                    docs, np.asarray(direct.doc_ids)
+                )
+                np.testing.assert_array_equal(
+                    scores, np.asarray(direct.scores)
+                )
+                delivered += 1
+            op = rng.random()
+            if op < 0.30:
+                t = rng.choice([None, "b"])
+                bound = srv._tenants[t].retriever.n_docs
+                srv.delete_documents(
+                    rng.sample(range(bound), rng.randint(1, 3)), tenant=t
+                )
+            elif op < 0.55:
+                srv.maintain()  # compaction reclaims default tombstones
+            elif op < 0.75:
+                try:
+                    srv.reload(path)
+                except (StoreCorruption, InjectedFault):
+                    pass  # typed/pre-mutation: server must stay intact
+            srv.health()
+    assert delivered > 0
+    assert plan.fired
+    recover_interrupted_compact(path)
+    verify_store(path)
+    # Tenant b's tombstones live purely in memory and must have survived
+    # every default-tenant reload/compaction that happened above.
+    rid = srv.submit(q[0], qmask[0], tenant="b")
+    srv.drain()
+    _, docs = srv.poll(rid)
+    assert not {int(d) for d in docs if d >= 0} & set(srv._tenants["b"].deleted)

@@ -1,0 +1,410 @@
+"""Filtered retrieval: property-based parity against the post-hoc oracle.
+
+The exactness contract (``core/docfilter.py``): retrieving with a
+``DocFilter`` pushed into the pipeline returns **bit-identical** top-k
+doc ids and scores to retrieving *unfiltered* at inflated k and dropping
+filtered docs post hoc. The filter changes no surviving doc's score —
+imputation (m_i) depends only on centroid geometry, and the single
+masking point flips filtered docs' run-end totals to -inf before top-k.
+
+One carve-out, inherited from the adaptive worklist (not introduced by
+filtering): a ragged plan picks its bucket from *surviving* demand, so
+the filtered plan may execute at a smaller rung than the k=n_docs
+oracle. Different rung => different tile packing => different float
+summation association. Cross-rung runs were never bit-identical —
+``tests/test_adaptive_worklist.py`` pins exact ids + allclose scores
+for them — and this suite asserts the same split: doc ids exact in
+every cell, scores bit-equal on dense layouts and ulp-tolerance
+allclose on ragged ones.
+
+``PARITY_CELLS`` below is the support-matrix cross product this suite
+pins — ``scripts/check_parity_matrix.py`` (tier-1, via
+``tests/test_fault_injection.py``) lints that every cell keeps at least
+one filtered and one unfiltered parity test in this module, and that the
+cells cover every index-kind row of the README support matrix.
+
+The multi-shard sharded cell runs in a subprocess with two forced host
+devices (the in-process ``sharded`` cells exercise the ``shard_map``
+path on however many devices the test host has).
+"""
+
+import dataclasses
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    DocFilter,
+    IndexBuildConfig,
+    Retriever,
+    WarpSearchConfig,
+    build_index,
+    build_sharded_index,
+)
+from repro.data import make_corpus, make_queries
+from repro.serving.cache import query_key
+from repro.store import add_documents, load_index, save_index
+
+N_DOCS = 160
+
+# The support-matrix cross product pinned by this suite. The lint script
+# (scripts/check_parity_matrix.py) AST-reads this literal — keep it a
+# plain tuple of (layout, executor, index_kind) string triples.
+PARITY_CELLS = (
+    ("dense", "reference", "local"),
+    ("dense", "kernel", "local"),
+    ("ragged", "reference", "local"),
+    ("ragged", "kernel", "local"),
+    ("dense", "reference", "batched"),
+    ("dense", "kernel", "batched"),
+    ("ragged", "reference", "batched"),
+    ("ragged", "kernel", "batched"),
+    ("dense", "reference", "segmented"),
+    ("dense", "kernel", "segmented"),
+    ("ragged", "reference", "segmented"),
+    ("ragged", "kernel", "segmented"),
+    ("dense", "reference", "sharded"),
+    ("dense", "kernel", "sharded"),
+    ("ragged", "reference", "sharded"),
+    ("ragged", "kernel", "sharded"),
+)
+
+BUILD_CFG = IndexBuildConfig(n_centroids=32, nbits=4, kmeans_iters=2)
+BASE = dict(nprobe=8, k=10, t_prime=600, k_impute=16)
+
+
+def _cfg(layout: str, executor: str) -> WarpSearchConfig:
+    return WarpSearchConfig(**BASE, layout=layout, executor=executor)
+
+
+@pytest.fixture(scope="module")
+def rigs(tmp_path_factory):
+    """One corpus, four index kinds over it — filters are shared across
+    kinds, so every cell answers the same question about the same docs."""
+    corpus = make_corpus(
+        n_docs=N_DOCS, mean_doc_len=10, seed=41,
+        topic_strength=3.0, n_topics=64,
+    )
+    q, qmask, _ = make_queries(corpus, n_queries=4, seed=42)
+    local = Retriever.from_index(
+        build_index(corpus.emb, corpus.token_doc_ids, corpus.n_docs, BUILD_CFG)
+    )
+    # Segmented: base over the first docs, one delta with the rest.
+    n1 = N_DOCS - 40
+    head = corpus.token_doc_ids < n1
+    path = str(tmp_path_factory.mktemp("fstore") / "idx")
+    save_index(
+        build_index(corpus.emb[head], corpus.token_doc_ids[head], n1, BUILD_CFG),
+        path, build_config=BUILD_CFG,
+    )
+    add_documents(
+        path, corpus.emb[~head], corpus.token_doc_ids[~head] - n1, N_DOCS - n1
+    )
+    segmented = Retriever.from_index(load_index(path))
+    import jax
+
+    sharded = Retriever.from_index(
+        build_sharded_index(
+            corpus.emb, corpus.token_doc_ids, corpus.n_docs,
+            len(jax.devices()), BUILD_CFG,
+        )
+    )
+    return {
+        "local": local, "batched": local,
+        "segmented": segmented, "sharded": sharded,
+        "q": q, "qmask": qmask,
+    }
+
+
+def _posthoc(doc_ids, scores, survivor_mask, k):
+    """The oracle: keep the first k surviving docs of an unfiltered
+    ranking, pad with (-1, -inf) like the pipeline does."""
+    ids, scs = [], []
+    for d, s in zip(doc_ids, scores):
+        if d >= 0 and survivor_mask[d]:
+            ids.append(int(d))
+            scs.append(s)
+            if len(ids) == k:
+                break
+    while len(ids) < k:
+        ids.append(-1)
+        scs.append(-np.inf)
+    return np.asarray(ids, doc_ids.dtype), np.asarray(scs, np.float32)
+
+
+def _assert_scores(layout, got, want):
+    """Dense layouts compare bit-for-bit. Ragged plans may run at a
+    different worklist rung than the oracle (bucket tracks surviving
+    demand), so scores carry cross-rung float association — same split
+    as tests/test_adaptive_worklist.py, at a few-ulp tolerance."""
+    if layout == "dense":
+        np.testing.assert_array_equal(got, want)
+    else:
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def _assert_cell_parity(rigs, cell, dfl):
+    layout, executor, kind = cell
+    r = rigs[kind]
+    q, qmask = rigs["q"], rigs["qmask"]
+    cfg = _cfg(layout, executor)
+    fplan = r.plan(cfg, dfilter=dfl)
+    # Unfiltered oracle at k = n_docs: ranks every scored candidate, so
+    # post-hoc filtering is exact even for near-empty survivor sets.
+    oplan = r.plan(dataclasses.replace(cfg, k=N_DOCS))
+    mask = dfl.survivor_mask
+    if kind == "batched":
+        got = fplan.retrieve_batch(q[:3], qmask[:3])
+        oracle = oplan.retrieve_batch(q[:3], qmask[:3])
+        gd, gs = np.asarray(got.doc_ids), np.asarray(got.scores)
+        od, osc = np.asarray(oracle.doc_ids), np.asarray(oracle.scores)
+        for i in range(3):
+            eids, escs = _posthoc(od[i], osc[i], mask, cfg.k)
+            np.testing.assert_array_equal(gd[i], eids)
+            _assert_scores(layout, gs[i], escs)
+    else:
+        for i in range(2):
+            got = fplan.retrieve(q[i], qmask[i])
+            oracle = oplan.retrieve(q[i], qmask[i])
+            eids, escs = _posthoc(
+                np.asarray(oracle.doc_ids), np.asarray(oracle.scores),
+                mask, cfg.k,
+            )
+            np.testing.assert_array_equal(np.asarray(got.doc_ids), eids)
+            _assert_scores(layout, np.asarray(got.scores), escs)
+
+
+_CELL_ID = lambda c: "-".join(c)  # noqa: E731
+
+
+@pytest.mark.parametrize("cell", PARITY_CELLS, ids=_CELL_ID)
+def test_unfiltered_parity_cell(rigs, cell):
+    """A no-op filter (every doc allowed) is bit-identical to no filter —
+    the filtered pipeline adds masking, never perturbation."""
+    layout, executor, kind = cell
+    r = rigs[kind]
+    q, qmask = rigs["q"], rigs["qmask"]
+    cfg = _cfg(layout, executor)
+    plain = r.plan(cfg)
+    noop = r.plan(cfg, dfilter=DocFilter.allow(np.arange(N_DOCS), N_DOCS))
+    if kind == "batched":
+        a = plain.retrieve_batch(q[:3], qmask[:3])
+        b = noop.retrieve_batch(q[:3], qmask[:3])
+    else:
+        a = plain.retrieve(q[0], qmask[0])
+        b = noop.retrieve(q[0], qmask[0])
+    np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+    np.testing.assert_array_equal(np.asarray(a.scores), np.asarray(b.scores))
+
+
+@pytest.mark.parametrize("cell", PARITY_CELLS, ids=_CELL_ID)
+@settings(max_examples=4, deadline=None)
+@given(
+    ids=st.sets(st.integers(0, N_DOCS - 1), min_size=0, max_size=N_DOCS),
+    deny=st.booleans(),
+)
+def test_filtered_parity_cell(rigs, cell, ids, deny):
+    """Property: for random allow/deny sets (any size, incl. empty and
+    full), in-pipeline filtering == post-hoc filtering of the unfiltered
+    oracle, bit-for-bit, in every support-matrix cell."""
+    build = DocFilter.deny if deny else DocFilter.allow
+    _assert_cell_parity(rigs, cell, build(sorted(ids), N_DOCS))
+
+
+# ---- directed edge cases (cheap: local cell only) ----
+
+
+def test_empty_survivor_set_returns_padding(rigs):
+    plan = rigs["local"].plan(_cfg("dense", "reference"),
+                              dfilter=DocFilter.allow([], N_DOCS))
+    out = plan.retrieve(rigs["q"][0], rigs["qmask"][0])
+    assert np.all(np.asarray(out.doc_ids) == -1)
+    assert np.all(np.asarray(out.scores) == -np.inf)
+
+
+def test_deny_everything_equals_empty_allow(rigs):
+    r = rigs["local"]
+    cfg = _cfg("dense", "reference")
+    a = r.plan(cfg, dfilter=DocFilter.deny(np.arange(N_DOCS), N_DOCS))
+    b = r.plan(cfg, dfilter=DocFilter.allow([], N_DOCS))
+    # Same survivor set -> same digest -> the same cached plan object.
+    assert a is b
+
+
+def test_singleton_allow_matches_posthoc(rigs):
+    for doc in (0, N_DOCS // 2, N_DOCS - 1):
+        _assert_cell_parity(
+            rigs, ("dense", "reference", "local"),
+            DocFilter.allow([doc], N_DOCS),
+        )
+
+
+def test_out_of_range_ids_silently_dropped():
+    a = DocFilter.allow([1, 5, N_DOCS + 99, -3], N_DOCS)
+    b = DocFilter.allow([1, 5], N_DOCS)
+    assert a.digest == b.digest
+
+
+def test_filter_larger_than_corpus_rejected(rigs):
+    with pytest.raises(ValueError, match="rebuild the filter"):
+        rigs["local"].plan(
+            _cfg("dense", "reference"),
+            dfilter=DocFilter.allow([1], N_DOCS + 7),
+        )
+    with pytest.raises(TypeError, match="DocFilter"):
+        rigs["local"].plan(_cfg("dense", "reference"), dfilter="nope")
+
+
+def test_allow_deny_complement_share_plan(rigs):
+    r = rigs["local"]
+    cfg = _cfg("dense", "reference")
+    keep = list(range(0, N_DOCS, 3))
+    drop = sorted(set(range(N_DOCS)) - set(keep))
+    assert r.plan(cfg, dfilter=DocFilter.allow(keep, N_DOCS)) is r.plan(
+        cfg, dfilter=DocFilter.deny(drop, N_DOCS)
+    )
+
+
+def test_adaptive_rung_tracks_surviving_demand(rigs):
+    """A selective filter must not *raise* adaptive worklist demand: the
+    filtered rung is <= the unfiltered rung (filtered probe runs are
+    dropped from the tile count before bucket choice)."""
+    r = rigs["local"]
+    cfg = _cfg("ragged", "reference")
+    unf = r.plan(cfg)
+    if unf.config.worklist_buckets is None or len(unf.config.worklist_buckets) < 2:
+        pytest.skip("ladder resolved to a single bucket on this geometry")
+    keep = list(range(0, N_DOCS, 10))  # 90%-selective
+    filt = r.plan(cfg, dfilter=DocFilter.allow(keep, N_DOCS))
+    for i in range(3):
+        bf = filt.adaptive_bucket(rigs["q"][i], rigs["qmask"][i])
+        bu = unf.adaptive_bucket(rigs["q"][i], rigs["qmask"][i])
+        assert bf <= bu, (bf, bu)
+
+
+# ---- serving cache keys: filters and tenants must never alias ----
+
+
+def test_query_key_filter_and_tenant_never_alias():
+    rng = np.random.default_rng(3)
+    q = rng.standard_normal((4, 16)).astype(np.float32)
+    m = np.ones(4, bool)
+    f1 = DocFilter.allow([1, 2], N_DOCS)
+    f2 = DocFilter.allow([1, 3], N_DOCS)
+    keys = {
+        query_key(q, m),
+        query_key(q, m, dfilter=f1),
+        query_key(q, m, dfilter=f2),
+        query_key(q, m, tenant="a"),
+        query_key(q, m, tenant="b"),
+        query_key(q, m, dfilter=f1, tenant="a"),
+    }
+    assert len(keys) == 6  # all distinct
+    # Same filter content (different object) -> same key: hits still work.
+    assert query_key(q, m, dfilter=f1) == query_key(
+        q, m, dfilter=DocFilter.allow([2, 1], N_DOCS)
+    )
+
+
+def test_result_cache_poisoning_regression(rigs):
+    """Directed regression: identical query bytes under different filters
+    must not alias in the serving result cache — a hit across filters
+    would leak filtered-out doc ids straight out of the cache."""
+    from repro.serving.batcher import RetrievalServer
+    from repro.serving.scheduler import BatchPolicy
+
+    t = [0.0]
+    srv = RetrievalServer(
+        rigs["local"], _cfg("dense", "reference"),
+        BatchPolicy(max_batch=2, max_wait_s=0.0),
+        clock=lambda: t[0], cache_size=64,
+    )
+    q, qmask = rigs["q"][0], rigs["qmask"][0]
+    r1 = srv.submit(q, qmask)
+    unfiltered = srv.result(r1, timeout=5)
+    top = int(unfiltered[1][0])
+    # Same query, filter that bans the unfiltered winner: must MISS the
+    # cache and must not contain the banned doc.
+    r2 = srv.submit(q, qmask, dfilter=DocFilter.deny([top], N_DOCS))
+    filtered = srv.result(r2, timeout=5)
+    assert top not in set(int(x) for x in filtered[1])
+    # And the filtered entry now hits for a repeat of the same filter...
+    before = srv.stats["cache_hits"]
+    r3 = srv.submit(q, qmask, dfilter=DocFilter.deny([top], N_DOCS))
+    assert srv.stats["cache_hits"] == before + 1
+    np.testing.assert_array_equal(srv.result(r3, timeout=5)[1], filtered[1])
+    # ...while the unfiltered entry still serves the unfiltered query.
+    r4 = srv.submit(q, qmask)
+    np.testing.assert_array_equal(srv.result(r4, timeout=5)[1], unfiltered[1])
+
+
+# ---- two-shard sharded cell (forced host devices, subprocess) ----
+
+TWO_SHARD_FILTER_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import dataclasses
+import numpy as np
+from repro.core import (DocFilter, Retriever, WarpSearchConfig,
+                        IndexBuildConfig, build_sharded_index)
+from repro.data import make_corpus, make_queries
+
+N = 160
+corpus = make_corpus(n_docs=N, mean_doc_len=10, seed=41,
+                     topic_strength=3.0, n_topics=64)
+q, qmask, _ = make_queries(corpus, n_queries=2, seed=42)
+sidx = build_sharded_index(corpus.emb, corpus.token_doc_ids, N, 2,
+                           IndexBuildConfig(n_centroids=32, nbits=4,
+                                            kmeans_iters=2))
+r = Retriever.from_index(sidx)
+rng = np.random.default_rng(7)
+for layout in ("dense", "ragged"):
+    cfg = WarpSearchConfig(nprobe=8, k=10, t_prime=600, k_impute=16,
+                           layout=layout)
+    oplan = r.plan(dataclasses.replace(cfg, k=N))
+    for trial in range(3):
+        ids = rng.choice(N, size=rng.integers(1, N), replace=False)
+        dfl = (DocFilter.allow if trial % 2 else DocFilter.deny)(ids, N)
+        fplan = r.plan(cfg, dfilter=dfl)
+        mask = dfl.survivor_mask
+        for i in range(2):
+            got = fplan.retrieve(q[i], qmask[i])
+            oracle = oplan.retrieve(q[i], qmask[i])
+            od = np.asarray(oracle.doc_ids); osc = np.asarray(oracle.scores)
+            eids, escs = [], []
+            for d, s in zip(od, osc):
+                if d >= 0 and mask[d]:
+                    eids.append(int(d)); escs.append(s)
+                    if len(eids) == cfg.k: break
+            while len(eids) < cfg.k:
+                eids.append(-1); escs.append(-np.inf)
+            assert np.array_equal(np.asarray(got.doc_ids), np.asarray(eids, od.dtype)), (layout, trial, i)
+            escs = np.asarray(escs, np.float32)
+            if layout == "dense":
+                assert np.array_equal(np.asarray(got.scores), escs), (layout, trial, i)
+            else:  # cross-rung float association, see module docstring
+                np.testing.assert_allclose(np.asarray(got.scores), escs,
+                                           rtol=1e-5, atol=1e-6)
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_two_shard_filtered_parity_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run(
+        [sys.executable, "-c", TWO_SHARD_FILTER_SCRIPT],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout

@@ -291,3 +291,58 @@ def test_two_shard_fused_parity_subprocess():
     )
     assert out.returncode == 0, out.stderr[-2000:]
     assert "OK" in out.stdout
+
+
+# ---- per-request k-laddered config resolution ----
+
+
+def test_k_ladder_goldens():
+    """Golden ladder: requested k -> (nprobe, k_impute, t')."""
+    from repro.core.retriever import ladder_rung, laddered_config
+
+    small = laddered_config(10, n_tokens=1000, n_centroids=256)
+    assert (small.nprobe, small.k_impute) == (16, 32)
+    assert small.t_prime == int(0.5 * 1000**0.5)
+    medium = laddered_config(100, n_tokens=1000, n_centroids=256)
+    assert (medium.nprobe, medium.k_impute) == (32, 64)
+    large = laddered_config(1000, n_tokens=1000, n_centroids=256)
+    assert (large.nprobe, large.k_impute) == (64, 128)
+    assert ladder_rung(10)[0] == "small"
+    assert ladder_rung(11)[0] == "medium"
+    assert ladder_rung(100)[0] == "medium"
+    assert ladder_rung(101)[0] == "large"
+    # Laddered nprobe never exceeds the index's centroid count.
+    tiny = laddered_config(1000, n_tokens=1000, n_centroids=48)
+    assert tiny.nprobe == 48
+
+
+def test_k_ladder_explicit_config_beats_ladder():
+    """Override precedence: any field pinned away from its dataclass
+    default wins over the ladder value for that field — the ladder only
+    fills defaults."""
+    from repro.core.retriever import laddered_config
+
+    pinned = laddered_config(
+        10, WarpSearchConfig(nprobe=8), n_tokens=1000, n_centroids=256
+    )
+    assert pinned.nprobe == 8  # explicit wins
+    assert pinned.k_impute == 32  # unpinned field still laddered
+    both = laddered_config(
+        10, WarpSearchConfig(nprobe=8, k_impute=96, t_prime=333),
+        n_tokens=1000, n_centroids=256,
+    )
+    assert (both.nprobe, both.k_impute, both.t_prime) == (8, 96, 333)
+
+
+def test_plan_for_k_describe_and_fingerprints(setup):
+    """k=10 and k=100 plans resolve different rungs, expose them in
+    describe(), and carry distinct fingerprints (the serving cache must
+    never alias them)."""
+    _, idx, *_ = setup
+    r = Retriever.from_index(idx)
+    p10 = r.plan_for_k(10)
+    p100 = r.plan_for_k(100)
+    assert p10.describe()["k_ladder"] == "small"
+    assert p100.describe()["k_ladder"] == "medium"
+    assert p10.fingerprint() != p100.fingerprint()
+    assert p10.config.nprobe < p100.config.nprobe

@@ -390,3 +390,12 @@ def test_bench_serving_smoke(tmp_path):
         assert key in full
     assert full["cache_hit_rate"] > 0.0
     assert full["distinct_rungs"] >= 2
+    # Two-tenant filtered arm: per-tenant latency + hit rate, and the
+    # cross-tenant isolation counter pinned at zero.
+    tt = snap["arms"]["two_tenant_filtered"]
+    assert tt["cross_tenant_cache_hits"] == 0
+    for label in ("default", "b"):
+        tenant = tt["tenants"][label]
+        for key in ("p50_ms", "p95_ms", "cache_hit_rate", "submitted"):
+            assert key in tenant, (label, key)
+        assert tenant["cache_hit_rate"] > 0.0, (label, tenant)
